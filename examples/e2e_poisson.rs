@@ -1,0 +1,100 @@
+//! End-to-end driver: the full three-layer stack on a real workload.
+//!
+//! A 2-D Poisson problem (N = 10 000) is solved twice:
+//!
+//! 1. **PJRT path** — the Rust global controller (L3) drives the JPCG
+//!    phases by executing AOT-compiled JAX/Pallas HLO artifacts (L2/L1)
+//!    on the CPU PJRT client. Python is NOT involved at runtime.
+//! 2. **Native path** — the same controller drives the native module
+//!    implementations.
+//!
+//! The two must agree on the solution and (almost exactly) on iteration
+//! count; the run also reports the cycle model's solver-time estimate
+//! for the simulated U280 build.  Results recorded in EXPERIMENTS.md
+//! §E-E2E.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_poisson
+//! ```
+
+use callipepla::coordinator::{Coordinator, CoordinatorConfig, NativeExecutor};
+use callipepla::precision::Scheme;
+use callipepla::runtime::{default_artifact_dir, PjrtExecutor, PjrtRuntime};
+use callipepla::sim::{self, AccelSimConfig};
+use callipepla::sparse::synth;
+
+fn main() -> anyhow::Result<()> {
+    let a = synth::laplace2d_shifted(10_000, 0.02);
+    let b = vec![1.0; a.n];
+    let x0 = vec![0.0; a.n];
+    println!("e2e Poisson: n={} nnz={}", a.n, a.nnz());
+
+    // ---- Path 1: coordinator -> PJRT artifacts (the 3-layer stack) ----
+    let t0 = std::time::Instant::now();
+    let mut rt = PjrtRuntime::new(default_artifact_dir())?;
+    let mut exec = PjrtExecutor::new(&mut rt, &a, Scheme::MixV3)?;
+    let cfg = CoordinatorConfig { record_trace: true, ..Default::default() };
+    let mut coord = Coordinator::new(cfg);
+    let pjrt = coord.solve(&mut exec, &b, &x0);
+    let pjrt_calls = exec.calls;
+    let pjrt_wall = t0.elapsed();
+    println!(
+        "PJRT  path: converged={} iters={} |r|^2={:.3e} executable_calls={} wall={pjrt_wall:?}",
+        pjrt.converged, pjrt.iters, pjrt.final_rr, pjrt_calls
+    );
+    assert!(pjrt.converged, "PJRT path must converge");
+
+    // Loss-curve analogue: residual trace (log it sparsely).
+    let tr = pjrt.trace.values();
+    println!("residual curve (iter, |r|^2):");
+    let stride = (tr.len() / 10).max(1);
+    for (i, rr) in tr.iter().enumerate() {
+        if i % stride == 0 || i + 1 == tr.len() {
+            println!("  {i:>6}  {rr:.6e}");
+        }
+    }
+
+    // ---- Path 2: coordinator -> native modules ------------------------
+    let t1 = std::time::Instant::now();
+    let mut coord2 = Coordinator::new(CoordinatorConfig::default());
+    let mut native_exec = NativeExecutor::new(&a, Scheme::MixV3);
+    let native = coord2.solve(&mut native_exec, &b, &x0);
+    let native_wall = t1.elapsed();
+    println!(
+        "native path: converged={} iters={} |r|^2={:.3e} wall={native_wall:?}",
+        native.converged, native.iters, native.final_rr
+    );
+
+    // ---- Cross-check the two value planes -----------------------------
+    let iter_gap = (pjrt.iters as i64 - native.iters as i64).abs();
+    assert!(iter_gap <= 2, "PJRT vs native iteration gap {iter_gap}");
+    let max_dx = pjrt
+        .x
+        .iter()
+        .zip(&native.x)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!("solution agreement: max |x_pjrt - x_native| = {max_dx:.3e}");
+    assert!(max_dx < 1e-6, "planes diverged: {max_dx}");
+
+    // And against the ground truth A x = b.
+    let mut ax = vec![0.0; a.n];
+    a.spmv_f64(&pjrt.x, &mut ax);
+    let res_err = ax.iter().map(|v| (v - 1.0).abs()).fold(0.0, f64::max);
+    println!("ground truth: ||Ax - b||_inf = {res_err:.3e}");
+    assert!(res_err < 1e-4);
+
+    // ---- Time plane: what would this cost on the U280? ----------------
+    let cal = AccelSimConfig::callipepla();
+    let est = sim::solver_seconds(&cal, a.n, a.nnz(), pjrt.iters);
+    let brk = sim::iteration_cycles(&cal, a.n, a.nnz());
+    println!(
+        "U280 estimate: {:.3} ms total ({} iters x {} cycles @ {:.0} MHz)",
+        est * 1e3,
+        pjrt.iters,
+        brk.total,
+        cal.hbm.freq_hz / 1e6
+    );
+    println!("e2e OK");
+    Ok(())
+}

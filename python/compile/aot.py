@@ -1,0 +1,89 @@
+"""AOT lowering: JAX phase graphs -> HLO *text* artifacts for the Rust
+PJRT runtime.
+
+HLO text (NOT ``lowered.compile().serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+Emits one ``<phase>_<scheme>_n<N>_z<NNZ>.hlo.txt`` per (phase, scheme,
+bucket) plus ``manifest.json`` describing parameter shapes/dtypes so the
+Rust side can validate before feeding literals.
+"""
+import argparse
+import json
+import pathlib
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+PHASES = ["init", "phase1", "phase2", "phase3"]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple so the Rust
+    side can uniformly unwrap tuples)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(phase, scheme, n, nnz_pad):
+    fn, args = model.make_jitted(phase, scheme, n, nnz_pad)
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def artifact_name(phase, scheme, n, nnz_pad):
+    return f"{phase}_{scheme}_n{n}_z{nnz_pad}.hlo.txt"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--buckets", default=None,
+                    help="comma list like 1024:16384,4096:131072 (default: model.BUCKETS)")
+    ap.add_argument("--schemes", default="fp64,mixv3")
+    args = ap.parse_args()
+
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    if args.buckets:
+        buckets = [tuple(int(v) for v in b.split(":")) for b in args.buckets.split(",")]
+    else:
+        buckets = model.BUCKETS
+    schemes = args.schemes.split(",")
+
+    manifest = {"buckets": buckets, "schemes": schemes, "artifacts": []}
+    for n, nnz in buckets:
+        for scheme in schemes:
+            for phase in PHASES:
+                name = artifact_name(phase, scheme, n, nnz)
+                text = lower_one(phase, scheme, n, nnz)
+                (out / name).write_text(text)
+                fn, shapes = model.make_jitted(phase, scheme, n, nnz)
+                manifest["artifacts"].append({
+                    "file": name,
+                    "phase": phase,
+                    "scheme": scheme,
+                    "n": n,
+                    "nnz_pad": nnz,
+                    "params": [
+                        {"shape": list(s.shape), "dtype": str(s.dtype)} for s in shapes
+                    ],
+                })
+                print(f"wrote {name} ({len(text)} chars)")
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"manifest: {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Layer-1 Pallas kernels for the Callipepla JPCG stack.
+
+Every kernel is authored with ``interpret=True`` so it lowers to plain HLO
+ops executable on the CPU PJRT client (real-TPU Mosaic custom-calls cannot
+run there; see DESIGN.md §Hardware-Adaptation).
+"""
+from .spmv import spmv, spmv_pallas_call
+from .dot import dot, dot_lanes, DELAY_LANES
+from .axpy import axpy, left_divide, update_p
+
+__all__ = [
+    "spmv",
+    "spmv_pallas_call",
+    "dot",
+    "dot_lanes",
+    "DELAY_LANES",
+    "axpy",
+    "left_divide",
+    "update_p",
+]

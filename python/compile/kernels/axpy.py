@@ -1,0 +1,68 @@
+"""Streaming vector-update Pallas kernels (modules M3/M4/M5/M7).
+
+Each is a pure element-wise II=1 stream: one element in, one element out
+per cycle on the FPGA; on TPU a blocked VPU map.  They share one generic
+blocked elementwise builder so the BlockSpec schedule (the HBM<->VMEM
+burst pattern) is identical across M3/M4/M5/M7 — matching the paper's
+observation that all vector modules run at the same streaming rate
+(processing-rate matching, §4.2).
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 4096
+
+
+def _blocked_call(kernel, n, block, n_vec_inputs, scalar=False):
+    """Blocked elementwise pallas_call: n_vec_inputs vectors (+ optional
+    broadcast scalar) -> one vector."""
+    block = min(block, n)
+    if n % block != 0:
+        raise ValueError(f"n={n} not a multiple of block={block}")
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    in_specs = [spec] * n_vec_inputs
+    if scalar:
+        in_specs.append(pl.BlockSpec((1,), lambda i: (0,)))
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block,),
+        in_specs=in_specs,
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float64),
+        interpret=True,
+    )
+
+
+def _axpy_kernel(x_ref, y_ref, a_ref, o_ref):
+    o_ref[...] = y_ref[...] + a_ref[0] * x_ref[...]
+
+
+def axpy(alpha, x, y, block=DEFAULT_BLOCK):
+    """o = y + alpha*x  (M3 'update x' with +alpha, M4 'update r' with
+    -alpha).  ``alpha`` is the Type-II instruction's ``double alpha``
+    field; it enters the kernel as a (1,)-shaped SMEM-style operand so the
+    lowered HLO takes it as a runtime parameter, not a compile-time
+    constant — the accelerator must serve *arbitrary* problems (§2.3.1).
+    """
+    a = jnp.asarray(alpha, jnp.float64).reshape(1)
+    return _blocked_call(_axpy_kernel, x.shape[0], block, 2, scalar=True)(x, y, a)
+
+
+def _left_divide_kernel(r_ref, m_ref, o_ref):
+    o_ref[...] = r_ref[...] / m_ref[...]
+
+
+def left_divide(r, m, block=DEFAULT_BLOCK):
+    """z = M^{-1} r, Jacobi: element-wise divide by the diagonal (M5)."""
+    return _blocked_call(_left_divide_kernel, r.shape[0], block, 2)(r, m)
+
+
+def _update_p_kernel(z_ref, p_ref, b_ref, o_ref):
+    o_ref[...] = z_ref[...] + b_ref[0] * p_ref[...]
+
+
+def update_p(z, beta, p, block=DEFAULT_BLOCK):
+    """p' = z + beta*p (M7)."""
+    b = jnp.asarray(beta, jnp.float64).reshape(1)
+    return _blocked_call(_update_p_kernel, z.shape[0], block, 2, scalar=True)(z, p, b)

@@ -1,0 +1,67 @@
+"""Cyclic-delay-buffer dot product Pallas kernel (modules M2/M6/M8).
+
+Mirrors Callipepla's two-phase dot product (paper footnote 1):
+
+  Phase I  — II=1 pipeline: each incoming element pair is multiplied and
+             accumulated into one lane of a cyclic delay buffer of length
+             ``DELAY_LANES`` (the FPGA uses L == FP-add latency so the
+             accumulator never sees a read-after-write hazard).
+  Phase II — the L lanes are reduced with a slower (II=5 on the FPGA)
+             tail whose cost is independent of the vector length.
+
+On TPU the delay buffer becomes a VMEM vector of ``DELAY_LANES`` partial
+sums; the lane-parallel accumulate is exactly what the VPU wants.  The
+kernel returns the *lanes*, and :func:`dot` applies the Phase-II reduce —
+keeping the two phases separate lets the Rust cycle model charge them
+independently (II=1 * len/L  vs  5 * L).
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# FPGA value is 8 f64 adders deep; keep the same so partial-sum grouping
+# (and thus rounding) matches the hardware design the paper measured.
+DELAY_LANES = 8
+
+DEFAULT_BLOCK = 4096
+
+
+def _dot_kernel(a_ref, b_ref, lanes_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        lanes_ref[...] = jnp.zeros_like(lanes_ref)
+
+    a = a_ref[...].astype(jnp.float64)
+    b = b_ref[...].astype(jnp.float64)
+    prod = a * b
+    # Cyclic assignment of element i to lane i % L, vectorised as a
+    # (block/L, L) fold — identical partial-sum grouping to the FPGA's
+    # cyclic delay buffer.
+    lanes_ref[...] += prod.reshape(-1, DELAY_LANES).sum(axis=0)
+
+
+def dot_lanes(a, b, block=DEFAULT_BLOCK):
+    """Phase I only: return the DELAY_LANES partial sums."""
+    n = a.shape[0]
+    block = min(block, n)
+    if n % block != 0 or block % DELAY_LANES != 0:
+        raise ValueError(f"n={n} must tile into blocks of {block} divisible by {DELAY_LANES}")
+    call = pl.pallas_call(
+        _dot_kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((DELAY_LANES,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((DELAY_LANES,), jnp.float64),
+        interpret=True,
+    )
+    return call(a, b)
+
+
+def dot(a, b, block=DEFAULT_BLOCK):
+    """Full dot product: Phase I lanes + Phase II tail reduce."""
+    return dot_lanes(a, b, block).sum()

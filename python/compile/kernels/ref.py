@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for the Layer-1 Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel is checked
+against the function of the same name here (pytest + hypothesis sweeps in
+``python/tests/``). They intentionally use the most direct jnp formulation.
+"""
+import jax.numpy as jnp
+
+
+def spmv_ref(vals, col, row, x, n):
+    """y = A @ x with A given as padded COO streams.
+
+    ``vals`` may be f32 (Mix-V3: cast up before multiply, paper §6) or f64.
+    Padded entries carry ``vals == 0`` and point at (row 0, col 0), so they
+    contribute nothing.
+    """
+    contrib = vals.astype(x.dtype) * x[col]
+    return jnp.zeros(n, dtype=x.dtype).at[row].add(contrib)
+
+
+def dot_ref(a, b):
+    """FP64 dot product (modules M2/M6/M8)."""
+    return jnp.dot(a.astype(jnp.float64), b.astype(jnp.float64))
+
+
+def axpy_ref(alpha, x, y):
+    """y + alpha * x (modules M3/M4)."""
+    return y + alpha * x
+
+
+def left_divide_ref(r, m):
+    """z = M^{-1} r for the Jacobi preconditioner: element-wise divide
+    by the diagonal (module M5)."""
+    return r / m
+
+
+def update_p_ref(z, beta, p):
+    """p = z + beta * p (module M7)."""
+    return z + beta * p
+
+
+def phase1_ref(vals, col, row, p, n):
+    """Phase-1 of Fig. 5: M1 (SpMV) then M2 (dot alpha)."""
+    ap = spmv_ref(vals, col, row, p, n)
+    pap = dot_ref(p, ap)
+    return ap, pap
+
+
+def phase2_ref(r, ap, m, alpha):
+    """Phase-2 of Fig. 5: M4 (update r), M5 (left divide), M6 (dot rz),
+    M8 (dot rr). z is *not* returned: the paper recomputes it in Phase-3
+    to save an off-chip channel (§5.3)."""
+    r1 = axpy_ref(-alpha, ap, r)
+    z = left_divide_ref(r1, m)
+    rz = dot_ref(r1, z)
+    rr = dot_ref(r1, r1)
+    return r1, rz, rr
+
+
+def phase3_ref(r, m, p, x, alpha, beta):
+    """Phase-3 of Fig. 5: M4+M5 recompute z from r, then M7 (update p)
+    and M3 (update x, using the *old* p)."""
+    z = left_divide_ref(r, m)
+    x1 = axpy_ref(alpha, p, x)
+    p1 = update_p_ref(z, beta, p)
+    return p1, x1

@@ -1,0 +1,80 @@
+"""Mixed-precision streamed SpMV Pallas kernel (module M1, paper §6).
+
+TPU re-think of the Callipepla / Serpens SpMV (DESIGN.md §Hardware-
+Adaptation): the FPGA design streams 64-bit packed non-zeros from 16 HBM
+channels into 8 PEs each, holds the input vector in a BRAM "X memory" and
+accumulates the output in a URAM "Y memory".  On TPU the analogue is:
+
+  * the nnz stream is tiled over the Pallas *grid* with a ``BlockSpec`` —
+    one grid step == one burst of ``block_nnz`` non-zeros arriving from HBM;
+  * the input vector x lives whole in VMEM (the X-memory analogue; its
+    BlockSpec index map pins it to block 0 for every grid step);
+  * the output y lives whole in VMEM and is revisited by every grid step
+    (the Y-memory accumulate port), with the scatter-accumulate expressed
+    as a dense ``.at[].add`` per burst.
+
+Mix-V3 (the scheme Callipepla ships): ``vals`` arrives as f32 and is cast
+to f64 *before* the multiply, x and y stay f64 — exactly the cast placement
+of Fig. 8 step (1).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_NNZ = 2048
+
+
+def _spmv_kernel(vals_ref, col_ref, row_ref, x_ref, y_ref, *, n):
+    """One grid step: consume one burst of non-zeros, accumulate into y."""
+    step = pl.program_id(0)
+
+    # First burst initialises the Y memory (the FPGA design zeroes URAM
+    # while the first burst is in flight).
+    @pl.when(step == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    vals = vals_ref[...]
+    col = col_ref[...]
+    row = row_ref[...]
+    x = x_ref[...]
+
+    # Fig. 8 pipeline: (1) cast f32 value to f64, (2) gather x[col],
+    # (3) multiply, (4) accumulate at row.
+    contrib = vals.astype(y_ref.dtype) * x[col]
+    y_ref[...] += jnp.zeros(n, dtype=y_ref.dtype).at[row].add(contrib)
+
+
+def spmv_pallas_call(n, nnz_pad, val_dtype, block_nnz=DEFAULT_BLOCK_NNZ):
+    """Build the pallas_call for a given (n, nnz_pad) bucket.
+
+    ``val_dtype`` selects the precision scheme for the stored matrix:
+    jnp.float32 == Mix-V3, jnp.float64 == default FP64 (Table 1).
+    """
+    block_nnz = min(block_nnz, nnz_pad)
+    if nnz_pad % block_nnz != 0:
+        raise ValueError(f"nnz_pad={nnz_pad} not a multiple of block_nnz={block_nnz}")
+    grid = (nnz_pad // block_nnz,)
+    whole = lambda step: (0,)  # pin x / y blocks to VMEM for every step
+    burst = lambda step: (step,)
+    return pl.pallas_call(
+        functools.partial(_spmv_kernel, n=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_nnz,), burst),  # vals: streamed from HBM
+            pl.BlockSpec((block_nnz,), burst),  # col
+            pl.BlockSpec((block_nnz,), burst),  # row
+            pl.BlockSpec((n,), whole),          # x: VMEM-resident
+        ],
+        out_specs=pl.BlockSpec((n,), whole),    # y: VMEM accumulator
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float64),
+        interpret=True,
+    )
+
+
+def spmv(vals, col, row, x, n, block_nnz=DEFAULT_BLOCK_NNZ):
+    """y = A @ x over padded COO streams; convenience entry point."""
+    call = spmv_pallas_call(n, vals.shape[0], vals.dtype, block_nnz)
+    return call(vals, col, row, x)

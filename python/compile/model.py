@@ -1,0 +1,113 @@
+"""Layer-2 JAX compute graphs for the Callipepla JPCG iteration.
+
+The JPCG main loop (Algorithm 1) is split into the three computation
+phases of Fig. 5 — the same split the FPGA uses, because a scalar
+dependency (alpha after Phase-1, beta after Phase-2) is a hard barrier on
+any substrate.  Each phase is one jit-able function over a fixed
+(n, nnz_pad) *bucket*; ``aot.py`` lowers each to HLO text that the Rust
+coordinator loads once and executes every iteration.
+
+Scalars (alpha, beta) are *runtime arguments*, mirroring the ``double
+alpha`` field of the Type-II computation instruction: the global
+controller in Rust computes them and feeds them into the next phase's
+executable.
+
+All vectors are FP64 (the paper maintains main-loop vectors in FP64 for
+every scheme, §6); the matrix value stream is f32 for Mix-V3 or f64 for
+the default scheme.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from .kernels import spmv, dot, axpy, left_divide, update_p
+
+# (n, nnz_pad) buckets compiled by aot.py.  HLO is static-shape, so the
+# coordinator pads a problem into the smallest fitting bucket; padded nnz
+# are (0, 0, 0.0) no-ops and padded vector lanes hold zeros.
+BUCKETS = [
+    (1024, 16384),
+    (4096, 32768),
+    (4096, 131072),
+    (16384, 65536),
+    (16384, 131072),
+    (16384, 524288),
+]
+
+SCHEMES = {
+    "fp64": jnp.float64,   # default FP64 (Table 1 row 1)
+    "mixv3": jnp.float32,  # Mix-V3: f32 matrix, f64 vectors (Table 1 row 4)
+}
+
+
+def phase1(vals, col, row, p, *, n):
+    """Phase-1: M1 SpMV (ap = A p) then M2 dot (pap = p . ap).
+
+    VSR: ap streams from M1 straight into the dot and into the ap
+    write-back — the controller gets pap and computes alpha = rz / pap.
+    """
+    ap = spmv(vals, col, row, p, n)
+    pap = dot(p, ap)
+    return ap, pap
+
+
+def phase2(r, ap, m, alpha):
+    """Phase-2: M4 update-r, M5 left-divide, M6 dot-rz, M8 dot-rr.
+
+    z is computed but deliberately *not* an output: the paper recomputes
+    it in Phase-3 rather than spending an off-chip channel on it (§5.3).
+    """
+    r1 = axpy(-alpha, ap, r)
+    z = left_divide(r1, m)
+    rz = dot(r1, z)
+    rr = dot(r1, r1)
+    return r1, rz, rr
+
+
+def phase3(r, m, p, x, alpha, beta):
+    """Phase-3: M4+M5 recompute z, M7 update-p, M3 update-x (old p)."""
+    z = left_divide(r, m)
+    x1 = axpy(alpha, p, x)
+    p1 = update_p(z, beta, p)
+    return p1, x1
+
+
+def init_phase(vals, col, row, x0, b, m, *, n):
+    """Lines 1-5 of Algorithm 1: r = b - A x0, z = M^-1 r, p = z,
+    rz = r.z, rr = r.r.  The FPGA reuses M1..M8 for this via the rp = -1
+    first loop trip (Fig. 4); as an artifact it is its own executable."""
+    ax0 = spmv(vals, col, row, x0, n)
+    r = b - ax0
+    z = left_divide(r, m)
+    p = z
+    rz = dot(r, z)
+    rr = dot(r, r)
+    return r, z, p, rz, rr
+
+
+def make_jitted(phase_name, scheme, n, nnz_pad):
+    """Bind a phase to a bucket + precision scheme and return (fn, example
+    ShapeDtypeStructs) ready for jax.jit(...).lower(...)."""
+    vdt = SCHEMES[scheme]
+    f64 = lambda: jax.ShapeDtypeStruct((n,), jnp.float64)
+    vals = jax.ShapeDtypeStruct((nnz_pad,), vdt)
+    idx = lambda: jax.ShapeDtypeStruct((nnz_pad,), jnp.int32)
+    scal = jax.ShapeDtypeStruct((), jnp.float64)
+    if phase_name == "phase1":
+        fn = functools.partial(phase1, n=n)
+        args = (vals, idx(), idx(), f64())
+    elif phase_name == "phase2":
+        fn = phase2
+        args = (f64(), f64(), f64(), scal)
+    elif phase_name == "phase3":
+        fn = phase3
+        args = (f64(), f64(), f64(), f64(), scal, scal)
+    elif phase_name == "init":
+        fn = functools.partial(init_phase, n=n)
+        args = (vals, idx(), idx(), f64(), f64(), f64())
+    else:
+        raise ValueError(phase_name)
+    return fn, args

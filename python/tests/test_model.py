@@ -1,0 +1,121 @@
+"""L2 correctness: phase graphs vs oracles + a full JPCG driven through
+the phase functions converging on a real small SPD system."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def laplacian_1d_coo(n, val_dtype=np.float64):
+    """Tridiagonal 1-D Poisson matrix: SPD, well-conditioned."""
+    rows, cols, vals = [], [], []
+    for i in range(n):
+        rows.append(i); cols.append(i); vals.append(2.0)
+        if i > 0:
+            rows.append(i); cols.append(i - 1); vals.append(-1.0)
+        if i < n - 1:
+            rows.append(i); cols.append(i + 1); vals.append(-1.0)
+    return (np.array(vals, val_dtype), np.array(cols, np.int32),
+            np.array(rows, np.int32))
+
+
+def pad_coo(vals, col, row, nnz_pad):
+    pad = nnz_pad - len(vals)
+    return (np.concatenate([vals, np.zeros(pad, vals.dtype)]),
+            np.concatenate([col, np.zeros(pad, col.dtype)]),
+            np.concatenate([row, np.zeros(pad, row.dtype)]))
+
+
+@pytest.fixture(scope="module")
+def small_system():
+    n, nnz_pad = 256, 1024
+    vals, col, row = laplacian_1d_coo(n)
+    vals, col, row = pad_coo(vals, col, row, nnz_pad)
+    m = np.full(n, 2.0)  # diagonal of A
+    b = np.ones(n)
+    return dict(n=n, nnz_pad=nnz_pad, vals=jnp.array(vals),
+                col=jnp.array(col), row=jnp.array(row),
+                m=jnp.array(m), b=jnp.array(b))
+
+
+def test_phase1_matches_ref(small_system):
+    s = small_system
+    rng = np.random.default_rng(0)
+    p = jnp.array(rng.standard_normal(s["n"]))
+    ap, pap = model.phase1(s["vals"], s["col"], s["row"], p, n=s["n"])
+    ap_r, pap_r = ref.phase1_ref(s["vals"], s["col"], s["row"], p, s["n"])
+    np.testing.assert_allclose(ap, ap_r, rtol=1e-12)
+    np.testing.assert_allclose(pap, pap_r, rtol=1e-12)
+
+
+def test_phase2_matches_ref(small_system):
+    s = small_system
+    rng = np.random.default_rng(1)
+    r = jnp.array(rng.standard_normal(s["n"]))
+    ap = jnp.array(rng.standard_normal(s["n"]))
+    alpha = jnp.float64(0.37)
+    got = model.phase2(r, ap, s["m"], alpha)
+    want = ref.phase2_ref(r, ap, s["m"], alpha)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-12)
+
+
+def test_phase3_matches_ref(small_system):
+    s = small_system
+    rng = np.random.default_rng(2)
+    r, p, x = (jnp.array(rng.standard_normal(s["n"])) for _ in range(3))
+    got = model.phase3(r, s["m"], p, x, jnp.float64(0.3), jnp.float64(0.9))
+    want = ref.phase3_ref(r, s["m"], p, x, 0.3, 0.9)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-12, atol=1e-14)
+
+
+def test_full_jpcg_via_phases_converges(small_system):
+    """Drive Algorithm 1 exactly as the Rust coordinator will: init phase,
+    then phase1/2/3 per iteration with scalars owned by the 'controller'.
+    Must converge on the 1-D Poisson system to ||r||^2 < 1e-12."""
+    s = small_system
+    n = s["n"]
+    x = jnp.zeros(n)
+    r, z, p, rz, rr = model.init_phase(
+        s["vals"], s["col"], s["row"], x, s["b"], s["m"], n=n)
+    iters = 0
+    for _ in range(4 * n):
+        if float(rr) < 1e-12:
+            break
+        ap, pap = model.phase1(s["vals"], s["col"], s["row"], p, n=n)
+        alpha = float(rz) / float(pap)
+        r, rz_new, rr = model.phase2(r, ap, s["m"], jnp.float64(alpha))
+        beta = float(rz_new) / float(rz)
+        p, x = model.phase3(r, s["m"], p, x, jnp.float64(alpha),
+                            jnp.float64(beta))
+        rz = rz_new
+        iters += 1
+    assert float(rr) < 1e-12, f"no convergence: rr={float(rr)}"
+    # Check the actual solve: A x ≈ b.
+    ax = ref.spmv_ref(s["vals"], s["col"], s["row"], x, n)
+    np.testing.assert_allclose(ax, s["b"], atol=1e-5)
+
+
+def test_mixv3_phase1_uses_f32_matrix(small_system):
+    """Mix-V3: SpMV result must equal using the f32-rounded matrix in f64
+    arithmetic — not the f64 matrix, not f32 arithmetic."""
+    s = small_system
+    vals32 = s["vals"].astype(jnp.float32)
+    rng = np.random.default_rng(5)
+    p = jnp.array(rng.standard_normal(s["n"]))
+    ap, _ = model.phase1(vals32, s["col"], s["row"], p, n=s["n"])
+    want = ref.spmv_ref(vals32.astype(jnp.float64), s["col"], s["row"], p, s["n"])
+    np.testing.assert_array_equal(np.asarray(ap), np.asarray(want))
+
+
+def test_make_jitted_all_phases_trace():
+    """Every (phase, scheme) combination must trace/lower without error on
+    a tiny bucket — the gate for aot.py."""
+    for phase in ["init", "phase1", "phase2", "phase3"]:
+        for scheme in ["fp64", "mixv3"]:
+            fn, args = model.make_jitted(phase, scheme, 1024, 4096)
+            jax.jit(fn).lower(*args)  # must not raise

@@ -1,0 +1,89 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! * E-ABL1 — VSR + decentralized scheduling on/off (§5.5: 14 vs 19
+//!   memory accesses => per-iteration cycle gap).
+//! * E-ABL2 — double vs single memory channel (§5.7: rd+wr overlap).
+//! * E-ABL3 — FIFO depth deadlock boundary (§5.6: fast FIFO >= L+1).
+//! * E-ABL4 — precision scheme vs SpMV stream cycles (§6 / Table 1).
+//! * E-ABL5 — hazard-distance padding (Serpens load-store vs XcgSolver
+//!   FP-latency, §7.5.1).
+
+use callipepla::hbm::{ChannelMode, HbmConfig};
+use callipepla::precision::Scheme;
+use callipepla::sim::dataflow::{Dataflow, SimError};
+use callipepla::sim::iteration::{iteration_cycles, spmv_busy_cycles, AccelSimConfig, M5_DEPTH};
+use callipepla::sparse::{pack_nnz_streams, synth, DEP_DIST_SERPENS, DEP_DIST_XCGSOLVER};
+
+fn main() {
+    let n = 100_000;
+    let nnz = 2_000_000;
+
+    // ---- E-ABL1: VSR on/off -------------------------------------------
+    let cal = AccelSimConfig::callipepla();
+    let mut no_vsr = cal;
+    no_vsr.vsr = false;
+    let with = iteration_cycles(&cal, n, nnz);
+    let without = iteration_cycles(&no_vsr, n, nnz);
+    println!("ABL1 VSR+decentralized scheduling (n={n}, nnz={nnz}):");
+    println!(
+        "  with VSR    {:>9} cycles/iter | without {:>9} | saving {:.2}x",
+        with.total,
+        without.total,
+        without.total as f64 / with.total as f64
+    );
+
+    // ---- E-ABL2: double vs single channel ------------------------------
+    let mut single = cal;
+    single.hbm = HbmConfig { vector_mode: ChannelMode::Single, ..cal.hbm };
+    let dbl = iteration_cycles(&cal, n, nnz);
+    let sgl = iteration_cycles(&single, n, nnz);
+    println!("ABL2 double-channel design (§5.7):");
+    println!(
+        "  double {:>9} cycles/iter | single {:>9} | phase3 {:>9} vs {:>9}",
+        dbl.total, sgl.total, dbl.phase3, sgl.phase3
+    );
+
+    // ---- E-ABL3: FIFO depth boundary -----------------------------------
+    println!("ABL3 deadlock boundary (M5 depth L={M5_DEPTH}, fast-FIFO sweep):");
+    for depth in [2, M5_DEPTH / 2, M5_DEPTH, M5_DEPTH + 1, 2 * M5_DEPTH] {
+        let mut df = Dataflow::new(2);
+        let r_in = df.fifo(4);
+        let fast = df.fifo(depth);
+        let slow = df.fifo(4);
+        df.mem_read("rd", 0, 1000, r_in);
+        df.pipe("M5", vec![r_in], vec![(0, fast), (M5_DEPTH - 1, slow)], M5_DEPTH, 1000);
+        df.dot("M6", vec![fast, slow], 1000, 0);
+        let verdict = match df.run(1_000_000) {
+            Ok(s) => format!("ok in {} cycles", s.cycles),
+            Err(SimError::Deadlock { cycle, .. }) => format!("DEADLOCK at cycle {cycle}"),
+            Err(e) => format!("{e}"),
+        };
+        println!("  fast-FIFO depth {depth:>3}: {verdict}");
+    }
+
+    // ---- E-ABL4: precision schemes -------------------------------------
+    println!("ABL4 SpMV stream cycles per scheme (nnz={nnz}, padding 1.06):");
+    for scheme in Scheme::ALL {
+        println!(
+            "  {:<6} {:>9} cycles ({} B/nnz)",
+            scheme.name(),
+            spmv_busy_cycles(nnz, scheme, 1.06),
+            scheme.nnz_bytes()
+        );
+    }
+
+    // ---- E-ABL5: hazard-distance padding --------------------------------
+    let a = synth::banded_spd(20_000, 200_000, 1e-3, 77);
+    let serp = pack_nnz_streams(&a, DEP_DIST_SERPENS);
+    let xcg = pack_nnz_streams(&a, DEP_DIST_XCGSOLVER);
+    println!("ABL5 scheduler padding (n={} nnz={}):", a.n, a.nnz());
+    println!(
+        "  serpens dist {:>2}: padding {:.3}x, {} cycles | xcg dist {:>2}: padding {:.3}x, {} cycles",
+        DEP_DIST_SERPENS,
+        serp.padding_factor(),
+        serp.cycles(),
+        DEP_DIST_XCGSOLVER,
+        xcg.padding_factor(),
+        xcg.cycles()
+    );
+}

@@ -1,0 +1,30 @@
+//! Bench: regenerate the Fig. 9 residual traces (nasa2910, gyro_k,
+//! msc10848 x five precision settings) and report where each setting
+//! first crosses the 1e-12 threshold.
+
+use callipepla::bench_harness::tables::fig9_traces;
+use callipepla::sparse::synth;
+
+fn main() {
+    let scale: f64 = std::env::var("CALLIPEPLA_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.05);
+    std::fs::create_dir_all("traces").ok();
+    for id in ["M7", "M13", "M15"] {
+        let spec = synth::find_spec(id).unwrap();
+        let a = spec.generate(scale);
+        println!("\nFig. 9 {} ({}): n={} nnz={}", spec.id, spec.paper_name, a.n, a.nnz());
+        for (label, csv) in fig9_traces(&a, 20_000) {
+            let rows = csv.lines().count() - 1;
+            let last = csv.lines().last().unwrap_or("0,1");
+            let final_rr: f64 = last.split(',').nth(1).unwrap_or("1").parse().unwrap_or(1.0);
+            println!(
+                "  {label:<20} {rows:>6} rows  final |r|^2 = {final_rr:.3e}  {}",
+                if final_rr < 1e-12 { "converged" } else { "NOT converged" }
+            );
+            std::fs::write(format!("traces/fig9_{}_{label}.csv", spec.paper_name), csv).ok();
+        }
+    }
+    println!("\npaper shape: fp64/mixv3/onboard overlap; mixv1 & mixv2 lag or stall.");
+}

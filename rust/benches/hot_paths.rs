@@ -1,0 +1,79 @@
+//! Hot-path microbenches (E-Perf): the numbers tracked across the
+//! EXPERIMENTS.md §Perf optimization log.
+//!
+//! * native SpMV (CSR f64 / stream-replay Mix-V3)
+//! * delay-buffer dot product
+//! * one full native JPCG iteration
+//! * one PJRT phase1 executable call (if artifacts are built)
+
+use callipepla::bench_harness::timing::{bench, human_time};
+use callipepla::coordinator::{Coordinator, CoordinatorConfig, NativeExecutor, PhaseExecutor};
+use callipepla::precision::{dot_delay_buffer, Scheme};
+use callipepla::runtime::{default_artifact_dir, PjrtExecutor, PjrtRuntime};
+use callipepla::solver::{jpcg_solve, SolveOptions};
+use callipepla::sparse::{pack_nnz_streams, synth, DEP_DIST_SERPENS};
+
+fn main() {
+    let a = synth::banded_spd(100_000, 1_200_000, 1e-3, 7);
+    let x: Vec<f64> = (0..a.n).map(|i| ((i % 17) as f64 - 8.0) / 8.0).collect();
+    let mut y = vec![0.0; a.n];
+    let nnz = a.nnz();
+    println!("hot paths on n={} nnz={nnz}", a.n);
+
+    // CSR FP64 SpMV.
+    let r = bench("spmv_csr_f64", 3, 20, || a.spmv_f64(&x, &mut y));
+    let gbs = (nnz as f64 * 12.0 + a.n as f64 * 16.0) / r.median_s / 1e9;
+    println!("{}   ~{gbs:.2} GB/s effective", r.report());
+
+    // Stream-replay Mix-V3 SpMV (the scheduled-stream value plane).
+    let stream = pack_nnz_streams(&a, DEP_DIST_SERPENS);
+    let r = bench("spmv_stream_replay_mixv3", 2, 10, || {
+        stream.replay_mixv3(&x, &mut y)
+    });
+    println!("{}", r.report());
+
+    // Delay-buffer dot.
+    let b: Vec<f64> = (0..a.n).map(|i| (i as f64 * 0.001).sin()).collect();
+    let r = bench("dot_delay_buffer_100k", 3, 50, || {
+        std::hint::black_box(dot_delay_buffer(&x, &b));
+    });
+    println!("{}", r.report());
+
+    // Full native iteration (via a capped solve).
+    let mut opts = SolveOptions::callipepla();
+    opts.max_iters = 10;
+    let r = bench("native_jpcg_10_iters", 1, 5, || {
+        std::hint::black_box(jpcg_solve(&a, None, None, &opts));
+    });
+    println!("{}   => {} per iteration", r.report(), human_time(r.median_s / 10.0));
+
+    // Coordinator-path iteration (instruction issue + module dispatch).
+    let r = bench("coordinator_native_10_iters", 1, 5, || {
+        let cfg = CoordinatorConfig { max_iters: 10, ..Default::default() };
+        let mut coord = Coordinator::new(cfg);
+        let mut exec = NativeExecutor::new(&a, Scheme::MixV3);
+        let b1 = vec![1.0; a.n];
+        let x0 = vec![0.0; a.n];
+        std::hint::black_box(coord.solve(&mut exec, &b1, &x0));
+    });
+    println!("{}", r.report());
+
+    // PJRT phase call, when artifacts exist.
+    match PjrtRuntime::new(default_artifact_dir()) {
+        Ok(mut rt) => {
+            let small = synth::laplace2d_shifted(4_000, 0.05);
+            match PjrtExecutor::new(&mut rt, &small, Scheme::MixV3) {
+                Ok(mut exec) => {
+                    let p: Vec<f64> = (0..small.n).map(|i| (i as f64 * 0.01).cos()).collect();
+                    exec.phase1(&p); // warm compile
+                    let r = bench("pjrt_phase1_call_n4096_bucket", 2, 20, || {
+                        std::hint::black_box(exec.phase1(&p));
+                    });
+                    println!("{}", r.report());
+                }
+                Err(e) => println!("pjrt executor unavailable: {e}"),
+            }
+        }
+        Err(e) => println!("pjrt bench skipped: {e}"),
+    }
+}

@@ -1,0 +1,46 @@
+//! Bench: regenerate Table 4 (solver time, 4 platforms x matrix suite).
+//!
+//! Default: a representative 12-matrix subset at scale 0.02 (fast);
+//! set CALLIPEPLA_BENCH_FULL=1 for all 36, CALLIPEPLA_BENCH_SCALE to
+//! change the matrix scale.  The paper-shape checks printed at the end
+//! are the reproduction criteria of DESIGN.md §3 (E-T4).
+
+use callipepla::bench_harness::tables::{self, SweepConfig};
+use callipepla::bench_harness::timing::bench;
+
+fn main() {
+    let scale: f64 = std::env::var("CALLIPEPLA_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.02);
+    let full = std::env::var("CALLIPEPLA_BENCH_FULL").is_ok();
+    let ids: Vec<String> = if full {
+        Vec::new()
+    } else {
+        ["M2", "M4", "M7", "M10", "M19", "M21", "M31"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect()
+    };
+    let cfg = SweepConfig { scale, max_iters: 20_000 };
+    eprintln!(
+        "table4 bench: {} matrices at scale {scale}",
+        if full { 36 } else { ids.len() }
+    );
+
+    let t0 = std::time::Instant::now();
+    let evals = tables::eval_suite(&ids, &cfg);
+    println!("{}", tables::print_table4(&evals));
+    println!("sweep wall time: {:?}", t0.elapsed());
+    println!(
+        "paper shape: Callipepla ~3-5x XcgSolver geomean; SerpensCG ~1.2-1.5x;\n\
+         A100 loses on small matrices, wins on the largest; XcgSolver FAILs M31+."
+    );
+
+    // Microbench: per-cell evaluation cost (sizes full-suite runs).
+    let spec = callipepla::sparse::synth::find_spec("M7").unwrap();
+    let r = bench("eval_matrix(M7, all 4 platforms)", 1, 3, || {
+        std::hint::black_box(tables::eval_matrix(&spec, &cfg));
+    });
+    println!("{}", r.report());
+}

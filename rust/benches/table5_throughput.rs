@@ -1,0 +1,27 @@
+//! Bench: regenerate Table 5 (throughput, fraction of peak, energy
+//! efficiency) over the matrix suite.
+
+use callipepla::bench_harness::tables::{self, SweepConfig};
+
+fn main() {
+    let scale: f64 = std::env::var("CALLIPEPLA_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.02);
+    let full = std::env::var("CALLIPEPLA_BENCH_FULL").is_ok();
+    let ids: Vec<String> = if full {
+        Vec::new()
+    } else {
+        ["M2", "M4", "M7", "M10", "M19", "M21", "M31"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect()
+    };
+    let cfg = SweepConfig { scale, max_iters: 20_000 };
+    let evals = tables::eval_suite(&ids, &cfg);
+    println!("{}", tables::print_table5(&evals));
+    println!(
+        "paper shape: Callipepla geomean ~3-5x XcgSolver throughput, ~2.9x energy eff.,\n\
+         highest FPGA FoP; A100 max throughput highest but min lowest (launch floor)."
+    );
+}

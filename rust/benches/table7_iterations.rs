@@ -1,0 +1,49 @@
+//! Bench: regenerate Table 7 (iteration counts vs CPU golden).
+//!
+//! The reproduction criterion: Callipepla/A100 land within a few
+//! iterations of the CPU; the XcgSolver padded-accumulator model shows
+//! systematic inflation.
+
+use callipepla::accel::Accel;
+use callipepla::bench_harness::tables::{self, SweepConfig};
+
+fn main() {
+    let scale: f64 = std::env::var("CALLIPEPLA_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.02);
+    let full = std::env::var("CALLIPEPLA_BENCH_FULL").is_ok();
+    let ids: Vec<String> = if full {
+        Vec::new()
+    } else {
+        ["M2", "M4", "M7", "M10", "M19", "M21"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect()
+    };
+    let cfg = SweepConfig { scale, max_iters: 20_000 };
+    let evals = tables::eval_suite(&ids, &cfg);
+    println!("{}", tables::print_table7(&evals));
+
+    // Aggregate shape check.
+    let mut cal_absdiff = 0i64;
+    let mut xcg_infl = 0i64;
+    let mut count = 0i64;
+    for e in &evals {
+        let cal = e.results.iter().find(|r| r.accel == Accel::Callipepla).unwrap();
+        let xcg = e.results.iter().find(|r| r.accel == Accel::XcgSolver).unwrap();
+        if !xcg.failed && e.cpu_iters < 20_000 {
+            cal_absdiff += (cal.iters as i64 - e.cpu_iters as i64).abs();
+            xcg_infl += xcg.iters as i64 - e.cpu_iters as i64;
+            count += 1;
+        }
+    }
+    if count > 0 {
+        println!(
+            "mean |Callipepla - CPU| = {:.1} iters; mean XcgSolver inflation = {:+.1} iters",
+            cal_absdiff as f64 / count as f64,
+            xcg_infl as f64 / count as f64
+        );
+        println!("paper shape: Callipepla within ~10 of CPU; XcgSolver inflated by 10-35%.");
+    }
+}

@@ -1,0 +1,258 @@
+//! Comparator accelerator/platform models: the four rows of Table 2,
+//! the Table 6 resource model, and the per-accelerator solve pipeline
+//! that combines the value plane (iteration counts) with the time plane
+//! (cycle model) for Tables 4/5.
+
+pub mod resources;
+
+use crate::precision::Scheme;
+use crate::sim::{self, AccelSimConfig};
+use crate::solver::{jpcg_solve, SolveOptions, SolveResult};
+use crate::sparse::CsrMatrix;
+
+/// The four evaluated accelerators/platforms (Table 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Accel {
+    XcgSolver,
+    SerpensCG,
+    Callipepla,
+    A100,
+}
+
+impl Accel {
+    pub const ALL: [Accel; 4] = [Accel::XcgSolver, Accel::SerpensCG, Accel::Callipepla, Accel::A100];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Accel::XcgSolver => "XcgSolver",
+            Accel::SerpensCG => "SerpensCG",
+            Accel::Callipepla => "Callipepla",
+            Accel::A100 => "A100",
+        }
+    }
+
+    /// Table 2 row.
+    pub fn spec(self) -> PlatformSpec {
+        match self {
+            Accel::XcgSolver => PlatformSpec {
+                process_nm: 16,
+                freq_hz: 250e6,
+                mem_gb: 8,
+                bandwidth_bps: 331e9,
+                power_w: 49.0,
+                peak_gflops: 410.0,
+            },
+            Accel::SerpensCG => PlatformSpec {
+                process_nm: 16,
+                freq_hz: 238e6,
+                mem_gb: 8,
+                bandwidth_bps: 345e9,
+                power_w: 43.0,
+                peak_gflops: 410.0,
+            },
+            Accel::Callipepla => PlatformSpec {
+                process_nm: 16,
+                freq_hz: 221e6,
+                mem_gb: 8,
+                bandwidth_bps: 374e9,
+                power_w: 56.0,
+                peak_gflops: 410.0,
+            },
+            Accel::A100 => PlatformSpec {
+                process_nm: 7,
+                freq_hz: 1.41e9,
+                mem_gb: 40,
+                bandwidth_bps: 1.56e12,
+                power_w: 243.0,
+                peak_gflops: 29_200.0, // paper sums CUDA + tensor cores
+            },
+        }
+    }
+
+    /// Solver-precision configuration for the value plane (Table 7 rows).
+    pub fn solve_options(self) -> SolveOptions {
+        match self {
+            Accel::XcgSolver => SolveOptions::xcgsolver(),
+            Accel::SerpensCG => SolveOptions::serpenscg(),
+            Accel::Callipepla => SolveOptions::callipepla(),
+            Accel::A100 => SolveOptions::gpu(),
+        }
+    }
+
+    /// Time-plane configuration (None for the GPU: analytic model).
+    pub fn sim_config(self) -> Option<AccelSimConfig> {
+        match self {
+            Accel::XcgSolver => Some(AccelSimConfig::xcgsolver()),
+            Accel::SerpensCG => Some(AccelSimConfig::serpenscg()),
+            Accel::Callipepla => Some(AccelSimConfig::callipepla()),
+            Accel::A100 => None,
+        }
+    }
+
+    /// The XcgSolver out-of-memory failure mode (§7.5.1, Table 4 FAIL
+    /// rows), evaluated at *paper-scale* dimensions (scaled-down bench
+    /// matrices still FAIL where the real matrix would).  Model: the
+    /// in-order zero-padded FP64 stream is duplicated across memory
+    /// banks with double-buffering (4 copies) and a single XRT bank
+    /// allocation is capped at 2 GB (8 GB HBM / 4 banks).  This captures
+    /// the six largest FAIL rows (M31-M36); M23/M28 fail on the real
+    /// system for structure-dependent padding our synthetic stand-ins do
+    /// not reproduce — documented in EXPERIMENTS.md.
+    pub fn fails_oom_dims(self, _n: usize, nnz: usize) -> bool {
+        match self {
+            Accel::XcgSolver => {
+                let padded_nnz = nnz as f64 * 1.35;
+                padded_nnz * 16.0 * 4.0 > 2.0e9
+            }
+            _ => false,
+        }
+    }
+
+    /// OOM check against an in-memory matrix's own dimensions.
+    pub fn fails_oom(self, a: &CsrMatrix) -> bool {
+        self.fails_oom_dims(a.n, a.nnz())
+    }
+}
+
+/// Table 2 specification record.
+#[derive(Debug, Clone, Copy)]
+pub struct PlatformSpec {
+    pub process_nm: u32,
+    pub freq_hz: f64,
+    pub mem_gb: u32,
+    pub bandwidth_bps: f64,
+    pub power_w: f64,
+    pub peak_gflops: f64,
+}
+
+/// One accelerator x matrix evaluation: value plane + time plane.
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    pub accel: Accel,
+    pub iters: u32,
+    pub converged: bool,
+    pub failed: bool,
+    pub solver_seconds: f64,
+    pub flops: u64,
+    pub gflops: f64,
+    pub gflops_per_joule: f64,
+}
+
+/// An OOM-failure cell (Table 4 "FAIL").
+pub fn fail_result(accel: Accel) -> EvalResult {
+    EvalResult {
+        accel,
+        iters: 0,
+        converged: false,
+        failed: true,
+        solver_seconds: f64::NAN,
+        flops: 0,
+        gflops: f64::NAN,
+        gflops_per_joule: f64::NAN,
+    }
+}
+
+/// Evaluate one accelerator on one matrix (a Table 4 cell).
+///
+/// `iters_override` allows reusing a previously computed iteration count
+/// (the benches sweep accelerators over one matrix without re-solving).
+pub fn evaluate(accel: Accel, a: &CsrMatrix, iters_override: Option<&SolveResult>) -> EvalResult {
+    if accel.fails_oom(a) {
+        return fail_result(accel);
+    }
+    let owned;
+    let solve = match iters_override {
+        Some(s) => s,
+        None => {
+            owned = jpcg_solve(a, None, None, &accel.solve_options());
+            &owned
+        }
+    };
+    evaluate_dims(accel, a.n, a.nnz(), solve)
+}
+
+/// Time-plane evaluation at explicit dimensions.  The suite sweeps call
+/// this with the *paper-scale* (n, nnz) even when the value-plane matrix
+/// is scaled down: iteration counts are scale-calibrated, while solver
+/// time / throughput are properties of the full-size problem on the
+/// modeled hardware (Table 4/5 report paper-size runs).
+pub fn evaluate_dims(accel: Accel, n: usize, nnz: usize, solve: &SolveResult) -> EvalResult {
+    let seconds = match accel.sim_config() {
+        Some(cfg) => sim::solver_seconds(&cfg, n, nnz, solve.iters),
+        None => sim::iteration::gpu_solver_seconds(n, nnz, solve.iters),
+    };
+    // FLOPs at the modeled problem size.
+    let flops = (solve.iters as u64 + 1) * crate::solver::jpcg::flops_per_iter(n, nnz);
+    let spec = accel.spec();
+    let gflops = flops as f64 / seconds / 1e9;
+    EvalResult {
+        accel,
+        iters: solve.iters,
+        converged: solve.converged,
+        failed: false,
+        solver_seconds: seconds,
+        flops,
+        gflops,
+        gflops_per_joule: gflops / spec.power_w,
+    }
+}
+
+/// Scheme actually streamed by each accelerator's SpMV.
+pub fn spmv_scheme(accel: Accel) -> Scheme {
+    match accel {
+        Accel::Callipepla => Scheme::MixV3,
+        _ => Scheme::Fp64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::synth;
+
+    #[test]
+    fn table2_specs_match_paper() {
+        let c = Accel::Callipepla.spec();
+        assert_eq!(c.freq_hz, 221e6);
+        assert_eq!(c.power_w, 56.0);
+        let g = Accel::A100.spec();
+        assert!((g.bandwidth_bps / c.bandwidth_bps - 4.17).abs() < 0.05,
+            "A100 has ~4.17x Callipepla's bandwidth (§7.6)");
+    }
+
+    #[test]
+    fn callipepla_outperforms_xcgsolver_on_medium_matrix() {
+        let a = synth::banded_spd(5_000, 120_000, 1e-4, 31);
+        let cal = evaluate(Accel::Callipepla, &a, None);
+        let xcg = evaluate(Accel::XcgSolver, &a, None);
+        assert!(!cal.failed && !xcg.failed);
+        let speedup = xcg.solver_seconds / cal.solver_seconds;
+        assert!(speedup > 2.0, "speedup={speedup}");
+        assert!(cal.gflops > xcg.gflops);
+        assert!(cal.gflops_per_joule > xcg.gflops_per_joule);
+    }
+
+    #[test]
+    fn xcgsolver_fails_oom_on_table4_fail_rows() {
+        use crate::sparse::suite36;
+        // Paper Table 4: XcgSolver fails on M31..M36 (plus M23/M28 for
+        // structure-specific reasons the model does not capture).
+        let suite = suite36();
+        for s in &suite {
+            let fails = Accel::XcgSolver.fails_oom_dims(s.n, s.nnz);
+            let expected = matches!(s.id, "M31" | "M32" | "M33" | "M34" | "M35" | "M36");
+            assert_eq!(fails, expected, "{} ({} nnz)", s.id, s.nnz);
+            assert!(!Accel::Callipepla.fails_oom_dims(s.n, s.nnz), "{}", s.id);
+        }
+    }
+
+    #[test]
+    fn gpu_wins_energy_only_sometimes() {
+        // On a small matrix the GPU's launch floor destroys efficiency.
+        let a = synth::banded_spd(3_000, 90_000, 1e-3, 32);
+        let cal = evaluate(Accel::Callipepla, &a, None);
+        let gpu = evaluate(Accel::A100, &a, None);
+        assert!(cal.gflops_per_joule > gpu.gflops_per_joule,
+            "cal={} gpu={}", cal.gflops_per_joule, gpu.gflops_per_joule);
+    }
+}

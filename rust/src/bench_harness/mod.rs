@@ -1,0 +1,8 @@
+//! Micro-benchmark harness (criterion is unavailable offline): warmup +
+//! timed iterations with median/mean/stddev reporting, plus the table
+//! printers that regenerate the paper's tables from evaluation sweeps.
+
+pub mod tables;
+pub mod timing;
+
+pub use timing::{bench, BenchResult};

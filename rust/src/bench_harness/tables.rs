@@ -1,0 +1,336 @@
+//! Table/figure regeneration: the sweeps and printers behind every
+//! experiment in DESIGN.md §3 (Tables 3-7, Fig. 9).
+//!
+//! Everything here is pure library code so the CLI (`callipepla table4`)
+//! and the bench binaries share one implementation.
+
+use crate::accel::{self, resources, Accel, EvalResult};
+use crate::metrics;
+use crate::precision::Scheme;
+use crate::solver::{jpcg_solve, SolveOptions, SolveResult};
+use crate::sparse::{suite36, CsrMatrix, MatrixSpec};
+
+/// One matrix's evaluation across all four accelerators.
+pub struct MatrixEval {
+    pub spec: MatrixSpec,
+    pub n: usize,
+    pub nnz: usize,
+    /// CPU FP64 golden iteration count (Table 7 reference row).
+    pub cpu_iters: u32,
+    pub results: Vec<EvalResult>,
+}
+
+/// Sweep configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepConfig {
+    /// Matrix scale factor (1.0 == paper-size, DESIGN.md §Hardware-Adaptation).
+    pub scale: f64,
+    /// Iteration cap (paper: 20 000).
+    pub max_iters: u32,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        Self { scale: 0.02, max_iters: 20_000 }
+    }
+}
+
+/// Evaluate one matrix on all accelerators (+ CPU golden).  The five
+/// value-plane solves are independent, so they run on scoped threads.
+pub fn eval_matrix(spec: &MatrixSpec, cfg: &SweepConfig) -> MatrixEval {
+    let a = spec.generate(cfg.scale);
+    let mut cpu_opts = SolveOptions::default();
+    cpu_opts.max_iters = cfg.max_iters;
+    let (cpu, results) = std::thread::scope(|s| {
+        let cpu_h = s.spawn(|| jpcg_solve(&a, None, None, &cpu_opts));
+        let handles: Vec<_> = Accel::ALL
+            .into_iter()
+            .map(|acc| {
+                let a = &a;
+                s.spawn(move || {
+                    if acc.fails_oom_dims(spec.n, spec.nnz) {
+                        // FAIL at paper scale (Table 4): reported even
+                        // when the bench matrix is scaled down.
+                        return accel::fail_result(acc);
+                    }
+                    let mut opts = acc.solve_options();
+                    opts.max_iters = cfg.max_iters;
+                    let solve = jpcg_solve(a, None, None, &opts);
+                    // Value plane on the scaled matrix; time plane at
+                    // paper-scale dims (see accel::evaluate_dims).
+                    accel::evaluate_dims(acc, spec.n, spec.nnz, &solve)
+                })
+            })
+            .collect();
+        (
+            cpu_h.join().expect("cpu solve"),
+            handles.into_iter().map(|h| h.join().expect("accel solve")).collect::<Vec<_>>(),
+        )
+    });
+    MatrixEval { spec: spec.clone(), n: a.n, nnz: a.nnz(), cpu_iters: cpu.iters, results }
+}
+
+/// Evaluate a subset (or all) of the 36-matrix suite.
+pub fn eval_suite(ids: &[String], cfg: &SweepConfig) -> Vec<MatrixEval> {
+    suite36()
+        .iter()
+        .filter(|s| ids.is_empty() || ids.iter().any(|i| i.eq_ignore_ascii_case(s.id)))
+        .map(|s| eval_matrix(s, cfg))
+        .collect()
+}
+
+fn by_accel<'e>(e: &'e MatrixEval, a: Accel) -> &'e EvalResult {
+    e.results.iter().find(|r| r.accel == a).unwrap()
+}
+
+// ------------------------------------------------------------------ T3
+
+pub fn print_table3() -> String {
+    let mut out = String::from(
+        "Table 3: evaluated matrices (synthetic stand-ins; paper dims at scale=1.0)\n",
+    );
+    out.push_str(&format!("{:<5} {:<16} {:>10} {:>12} {:>10} {:>10}\n",
+        "ID", "Matrix", "#Row", "NNZ", "CPU iters", "kind"));
+    for s in suite36() {
+        out.push_str(&format!(
+            "{:<5} {:<16} {:>10} {:>12} {:>10} {:>10?}\n",
+            s.id, s.paper_name, s.n, s.nnz, s.cpu_iters, s.kind
+        ));
+    }
+    out
+}
+
+// ------------------------------------------------------------------ T4
+
+/// Table 4: solver time per accelerator, with speedup vs XcgSolver.
+pub fn print_table4(evals: &[MatrixEval]) -> String {
+    let mut out = String::from("Table 4: solver time (s) and speedup vs XcgSolver\n");
+    out.push_str(&format!(
+        "{:<5} {:>12} {:>12} {:>8} {:>12} {:>8} {:>12} {:>8}\n",
+        "ID", "XcgSolver", "SerpensCG", "spd", "Callipepla", "spd", "A100", "spd"
+    ));
+    let mut spd = vec![Vec::new(); 3];
+    for e in evals {
+        let xcg = by_accel(e, Accel::XcgSolver);
+        let base = xcg.solver_seconds;
+        let row: Vec<&EvalResult> =
+            [Accel::SerpensCG, Accel::Callipepla, Accel::A100].iter().map(|&a| by_accel(e, a)).collect();
+        let fmt_t = |r: &EvalResult| {
+            if r.failed { "FAIL".to_string() } else { format!("{:.3e}", r.solver_seconds) }
+        };
+        let fmt_s = |r: &EvalResult| {
+            if r.failed || xcg.failed {
+                "-".to_string()
+            } else {
+                format!("{:.3}x", base / r.solver_seconds)
+            }
+        };
+        out.push_str(&format!(
+            "{:<5} {:>12} {:>12} {:>8} {:>12} {:>8} {:>12} {:>8}\n",
+            e.spec.id,
+            fmt_t(xcg),
+            fmt_t(row[0]),
+            fmt_s(row[0]),
+            fmt_t(row[1]),
+            fmt_s(row[1]),
+            fmt_t(row[2]),
+            fmt_s(row[2]),
+        ));
+        if !xcg.failed {
+            for (k, r) in row.iter().enumerate() {
+                if !r.failed {
+                    spd[k].push(base / r.solver_seconds);
+                }
+            }
+        }
+    }
+    out.push_str(&format!(
+        "GeoMean speedup vs XcgSolver:  SerpensCG {:.3}x  Callipepla {:.3}x  A100 {:.3}x\n",
+        metrics::geomean(spd[0].iter().copied()),
+        metrics::geomean(spd[1].iter().copied()),
+        metrics::geomean(spd[2].iter().copied()),
+    ));
+    out
+}
+
+// ------------------------------------------------------------------ T5
+
+/// Table 5: throughput, fraction of peak, energy efficiency.
+pub fn print_table5(evals: &[MatrixEval]) -> String {
+    let mut out =
+        String::from("Table 5: throughput (GFLOP/s), fraction of peak, energy eff. (GFLOP/J)\n");
+    out.push_str(&format!(
+        "{:<12} {:>8} {:>8} {:>8} {:>9} {:>7} | {:>9} {:>9} {:>9}\n",
+        "Accel", "Peak", "Min", "Max", "GeoMean", "FoP%", "eff.Min", "eff.Max", "eff.GeoM"
+    ));
+    for acc in Accel::ALL {
+        let spec = acc.spec();
+        let g: Vec<f64> = evals
+            .iter()
+            .map(|e| by_accel(e, acc))
+            .filter(|r| !r.failed)
+            .map(|r| r.gflops)
+            .collect();
+        let eff: Vec<f64> = evals
+            .iter()
+            .map(|e| by_accel(e, acc))
+            .filter(|r| !r.failed)
+            .map(|r| r.gflops_per_joule)
+            .collect();
+        let gs = metrics::summarize(&g);
+        let es = metrics::summarize(&eff);
+        out.push_str(&format!(
+            "{:<12} {:>8.0} {:>8.2} {:>8.2} {:>9.2} {:>6.2}% | {:>9.3e} {:>9.3e} {:>9.3e}\n",
+            acc.name(),
+            spec.peak_gflops,
+            gs.min,
+            gs.max,
+            gs.geomean,
+            metrics::fraction_of_peak_pct(gs.max, spec.peak_gflops),
+            es.min,
+            es.max,
+            es.geomean,
+        ));
+    }
+    out
+}
+
+// ------------------------------------------------------------------ T6
+
+pub fn print_table6() -> String {
+    let mut out = String::from("Table 6: FPGA resource utilization on the U280\n");
+    for name in ["XcgSolver", "SerpensCG", "Callipepla"] {
+        let r = resources::measured(name);
+        let u = r.utilization();
+        out.push_str(&format!(
+            "{:<12} LUT {:>7} ({:>4.1}%)  FF {:>7} ({:>4.1}%)  DSP {:>5} ({:>4.1}%)  BRAM {:>4} ({:>4.1}%)  URAM {:>4} ({:>4.1}%)\n",
+            name, u[0].1, u[0].2, u[1].1, u[1].2, u[2].1, u[2].2, u[3].1, u[3].2, u[4].1, u[4].2
+        ));
+    }
+    let d = resources::callipepla_build();
+    let u = d.utilization();
+    out.push_str(&format!(
+        "{:<12} LUT {:>7} ({:>4.1}%)  FF {:>7} ({:>4.1}%)  DSP {:>5} ({:>4.1}%)  BRAM {:>4} ({:>4.1}%)  URAM {:>4} ({:>4.1}%)\n",
+        "(derived)", u[0].1, u[0].2, u[1].1, u[1].2, u[2].1, u[2].2, u[3].1, u[3].2, u[4].1, u[4].2
+    ));
+    out
+}
+
+// ------------------------------------------------------------------ T7
+
+/// Table 7: iteration counts vs the CPU golden reference.
+pub fn print_table7(evals: &[MatrixEval]) -> String {
+    let mut out = String::from("Table 7: iteration counts and difference to CPU\n");
+    out.push_str(&format!(
+        "{:<5} {:>8} {:>10} {:>8} {:>11} {:>8} {:>9} {:>8}\n",
+        "ID", "CPU", "XcgSolver", "diff", "Callipepla", "diff", "A100", "diff"
+    ));
+    for e in evals {
+        let xcg = by_accel(e, Accel::XcgSolver);
+        let cal = by_accel(e, Accel::Callipepla);
+        let gpu = by_accel(e, Accel::A100);
+        let diff = |r: &EvalResult| {
+            if r.failed {
+                "-".to_string()
+            } else {
+                format!("{:+}", r.iters as i64 - e.cpu_iters as i64)
+            }
+        };
+        let it = |r: &EvalResult| {
+            if r.failed { "FAIL".to_string() } else { r.iters.to_string() }
+        };
+        out.push_str(&format!(
+            "{:<5} {:>8} {:>10} {:>8} {:>11} {:>8} {:>9} {:>8}\n",
+            e.spec.id,
+            e.cpu_iters,
+            it(xcg),
+            diff(xcg),
+            it(cal),
+            diff(cal),
+            it(gpu),
+            diff(gpu),
+        ));
+    }
+    out
+}
+
+// ------------------------------------------------------------------ F9
+
+/// Fig. 9: residual traces for one matrix under the five settings
+/// (FP64, Mix-V1/V2/V3, Callipepla on-board == MixV3 + delay-buffer +
+/// out-of-order).  Returns (label, csv) pairs.
+pub fn fig9_traces(a: &CsrMatrix, max_iters: u32) -> Vec<(String, String)> {
+    let mut out = Vec::new();
+    let run = |opts: SolveOptions| -> SolveResult {
+        let opts = SolveOptions { record_trace: true, max_iters, ..opts };
+        jpcg_solve(a, None, None, &opts)
+    };
+    let fp64 = run(SolveOptions::default());
+    out.push(("fp64".to_string(), fp64.trace.to_csv(2000)));
+    for scheme in [Scheme::MixV1, Scheme::MixV2, Scheme::MixV3] {
+        let res = run(SolveOptions { scheme, ..SolveOptions::default() });
+        out.push((scheme.name().to_string(), res.trace.to_csv(2000)));
+    }
+    let onboard = run(SolveOptions::callipepla());
+    out.push(("callipepla_onboard".to_string(), onboard.trace.to_csv(2000)));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::synth;
+
+    fn quick_cfg() -> SweepConfig {
+        SweepConfig { scale: 0.01, max_iters: 600 }
+    }
+
+    #[test]
+    fn eval_suite_filters_by_id() {
+        let evals = eval_suite(&["M4".to_string()], &quick_cfg());
+        assert_eq!(evals.len(), 1);
+        assert_eq!(evals[0].spec.id, "M4");
+        assert_eq!(evals[0].results.len(), 4);
+    }
+
+    #[test]
+    fn table4_reports_speedups_in_paper_direction() {
+        let evals = eval_suite(&["M4".to_string(), "M3".to_string()], &quick_cfg());
+        for e in &evals {
+            let xcg = by_accel(e, Accel::XcgSolver);
+            let cal = by_accel(e, Accel::Callipepla);
+            assert!(cal.solver_seconds < xcg.solver_seconds, "{}", e.spec.id);
+        }
+        let txt = print_table4(&evals);
+        assert!(txt.contains("GeoMean"));
+    }
+
+    #[test]
+    fn table7_callipepla_tracks_cpu_closely() {
+        let evals = eval_suite(&["M4".to_string()], &quick_cfg());
+        let e = &evals[0];
+        let cal = by_accel(e, Accel::Callipepla);
+        assert!((cal.iters as i64 - e.cpu_iters as i64).abs() <= 3);
+        let xcg = by_accel(e, Accel::XcgSolver);
+        assert!(xcg.iters >= e.cpu_iters);
+    }
+
+    #[test]
+    fn fig9_traces_have_five_settings() {
+        let a = synth::banded_spd(800, 6_000, 1e-4, 51);
+        let traces = fig9_traces(&a, 400);
+        assert_eq!(traces.len(), 5);
+        let labels: Vec<&str> = traces.iter().map(|(l, _)| l.as_str()).collect();
+        assert_eq!(labels, ["fp64", "mixv1", "mixv2", "mixv3", "callipepla_onboard"]);
+        for (_, csv) in &traces {
+            assert!(csv.starts_with("iter,rr\n"));
+            assert!(csv.lines().count() > 2);
+        }
+    }
+
+    #[test]
+    fn printers_do_not_panic_on_static_tables() {
+        assert!(print_table3().contains("Flan_1565"));
+        assert!(print_table6().contains("Callipepla"));
+    }
+}

@@ -1,0 +1,90 @@
+//! Tiny timing harness (criterion is unavailable in this offline
+//! environment): warmup, N timed runs, median/mean/min statistics, and
+//! a stable one-line report format the bench binaries print.
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub runs: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>6} runs  mean {:>12}  median {:>12}  min {:>12}",
+            self.name,
+            self.runs,
+            human_time(self.mean_s),
+            human_time(self.median_s),
+            human_time(self.min_s),
+        )
+    }
+}
+
+/// Human-readable seconds.
+pub fn human_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Run `f` with `warmup` untimed + `runs` timed invocations.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, runs: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(runs);
+    for _ in 0..runs.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(f64::total_cmp);
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        runs: times.len(),
+        mean_s: mean,
+        median_s: times[times.len() / 2],
+        min_s: times[0],
+        max_s: *times.last().unwrap(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_runs_and_orders_stats() {
+        let mut n = 0u64;
+        let r = bench("noop", 2, 11, || {
+            n += 1;
+            std::hint::black_box(n);
+        });
+        assert_eq!(n, 13); // 2 warmup + 11 timed
+        assert_eq!(r.runs, 11);
+        assert!(r.min_s <= r.median_s && r.median_s <= r.max_s);
+    }
+
+    #[test]
+    fn human_time_units() {
+        assert!(human_time(2.0).ends_with(" s"));
+        assert!(human_time(2e-3).ends_with(" ms"));
+        assert!(human_time(2e-6).ends_with(" us"));
+        assert!(human_time(2e-9).ends_with(" ns"));
+    }
+}

@@ -1,0 +1,375 @@
+//! The global controller (paper §3, §4.3, Fig. 4).
+//!
+//! The controller owns every scalar (alpha, beta, rz, rr), issues the
+//! stream-centric instructions to vector-control and computation
+//! modules, and decides termination on the fly — the capability fixed
+//! FPGA designs lack (§2.3.1).  The heavy vector work is delegated to a
+//! [`PhaseExecutor`]: the native module implementations
+//! ([`NativeExecutor`]) or the PJRT artifact runtime
+//! (`runtime::PjrtExecutor`) — same control flow, different value plane.
+//!
+//! Fig. 4's two controller optimizations are reproduced:
+//! 1. the merged init (`rp = -1` trip performs Alg. 1 lines 1-5 with the
+//!    same modules), and
+//! 2. M8 (dot rr) ordered before M5-M7 so a converged iteration skips
+//!    the z-recompute and p-update, running only M3 to finish x.
+
+use crate::isa::{InstCmp, InstRdWr, InstTrace, InstVCtrl, Instruction};
+use crate::modules::fsm::{self, ModuleFsm, VecCtrlState};
+use crate::precision::Scheme;
+use crate::solver::ResidualTrace;
+use crate::sparse::CsrMatrix;
+use crate::vsr::Phase;
+
+/// The three per-iteration phase computations + the init pass.  All
+/// vectors FP64 (§6); the scheme only affects the executor's SpMV.
+pub trait PhaseExecutor {
+    /// Lines 1-5: returns (r, z, p, rz, rr) from x0 and b.
+    fn init(&mut self, x0: &[f64], b: &[f64]) -> (Vec<f64>, Vec<f64>, Vec<f64>, f64, f64);
+    /// Phase-1: (ap, pap) from p.
+    fn phase1(&mut self, p: &[f64]) -> (Vec<f64>, f64);
+    /// Phase-2: (r', rz_new, rr) from r, ap, alpha.
+    fn phase2(&mut self, r: &[f64], ap: &[f64], alpha: f64) -> (Vec<f64>, f64, f64);
+    /// Phase-3: (p', x') from r, p, x, alpha, beta (z recomputed inside).
+    fn phase3(
+        &mut self,
+        r: &[f64],
+        p: &[f64],
+        x: &[f64],
+        alpha: f64,
+        beta: f64,
+    ) -> (Vec<f64>, Vec<f64>);
+    /// M3 alone (converged-exit path): x' = x + alpha p.
+    fn update_x_only(&mut self, p: &[f64], x: &[f64], alpha: f64) -> Vec<f64>;
+}
+
+/// Controller configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct CoordinatorConfig {
+    pub tol: f64,
+    pub max_iters: u32,
+    pub record_trace: bool,
+    /// Record every issued instruction (tests / time plane).
+    pub record_instructions: bool,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self { tol: 1e-12, max_iters: 20_000, record_trace: false, record_instructions: false }
+    }
+}
+
+/// Outcome of a coordinated solve.
+#[derive(Debug)]
+pub struct CoordResult {
+    pub x: Vec<f64>,
+    pub iters: u32,
+    pub converged: bool,
+    pub final_rr: f64,
+    pub trace: ResidualTrace,
+    pub instructions: InstTrace,
+}
+
+/// The global controller.
+pub struct Coordinator {
+    pub cfg: CoordinatorConfig,
+    vec_fsms: Vec<ModuleFsm<VecCtrlState>>,
+    insts: InstTrace,
+}
+
+impl Coordinator {
+    pub fn new(cfg: CoordinatorConfig) -> Self {
+        Self {
+            cfg,
+            vec_fsms: vec![
+                fsm::vecctrl_p(),
+                fsm::vecctrl_r(),
+                fsm::vecctrl_x(),
+                fsm::vecctrl_ap(),
+                fsm::vecctrl_m(),
+            ],
+            insts: InstTrace::default(),
+        }
+    }
+
+    /// Issue the Type-I / Type-III instructions for one phase according
+    /// to each vector-control FSM (decentralized scheduling: the
+    /// controller only nudges the FSMs; they emit their own memory
+    /// instructions).
+    fn issue_phase(&mut self, phase: Phase, n: u32, alpha: f64) {
+        if !self.cfg.record_instructions {
+            return;
+        }
+        for i in 0..self.vec_fsms.len() {
+            let state = *self.vec_fsms[i].peek();
+            if state.phase != phase {
+                continue;
+            }
+            let name = self.vec_fsms[i].name;
+            self.vec_fsms[i].step();
+            let q_id = state.rd_to.map(|m| m as u8).unwrap_or(0);
+            let vc = InstVCtrl {
+                rd: state.rd_to.is_some(),
+                wr: state.wr_from.is_some(),
+                base_addr: 0,
+                len: n,
+                q_id,
+            };
+            self.insts.record(name, Instruction::VCtrl(vc));
+            // The vector-control module decomposes into a Type-III
+            // memory instruction (§4.2 vector-flow example).
+            self.insts.record(
+                &format!("{name}/mem"),
+                Instruction::RdWr(InstRdWr {
+                    rd: vc.rd,
+                    wr: vc.wr,
+                    base_addr: 0,
+                    len: n,
+                }),
+            );
+        }
+        // Type-II computation instructions for the phase's modules.
+        let mods: &[&str] = match phase {
+            Phase::Phase1 => &["M1", "M2"],
+            Phase::Phase2 => &["M4", "M8", "M5", "M6"], // M8 hoisted, Fig. 4
+            Phase::Phase3 => &["M4", "M5", "M7", "M3"],
+        };
+        for m in mods {
+            self.insts
+                .record(m, Instruction::Cmp(InstCmp { len: n, alpha, q_id: 0 }));
+        }
+    }
+
+    /// Run the Fig. 4 controller program to completion.
+    pub fn solve<E: PhaseExecutor>(
+        &mut self,
+        exec: &mut E,
+        b: &[f64],
+        x0: &[f64],
+    ) -> CoordResult {
+        let n = b.len() as u32;
+        let mut x = x0.to_vec();
+        // Merged init: the rp = -1 trip of Fig. 4.
+        let (mut r, _z, mut p, mut rz, mut rr) = exec.init(&x, b);
+        let mut trace = ResidualTrace::new(self.cfg.record_trace);
+        trace.push(rr);
+
+        let mut iters = 0u32;
+        let mut converged = rr <= self.cfg.tol;
+        while iters < self.cfg.max_iters && !converged {
+            // Phase 1.
+            self.issue_phase(Phase::Phase1, n, 0.0);
+            let (ap, pap) = exec.phase1(&p);
+            let alpha = rz / pap; // scalar unit, line 8
+            // Phase 2 (M8 result checked immediately: Fig. 4 opt 2).
+            self.issue_phase(Phase::Phase2, n, alpha);
+            let (r_new, rz_new, rr_new) = exec.phase2(&r, &ap, alpha);
+            r = r_new;
+            rr = rr_new;
+            if rr <= self.cfg.tol {
+                // Converged: skip M5-M7, run M3 alone to finish x.
+                x = exec.update_x_only(&p, &x, alpha);
+                iters += 1;
+                trace.push(rr);
+                converged = true;
+                break;
+            }
+            // Phase 3.
+            let beta = rz_new / rz; // scalar unit, line 13 coefficient
+            self.issue_phase(Phase::Phase3, n, beta);
+            let (p_new, x_new) = exec.phase3(&r, &p, &x, alpha, beta);
+            p = p_new;
+            x = x_new;
+            rz = rz_new;
+            iters += 1;
+            trace.push(rr);
+        }
+
+        CoordResult {
+            x,
+            iters,
+            converged,
+            final_rr: rr,
+            trace,
+            instructions: std::mem::take(&mut self.insts),
+        }
+    }
+}
+
+// --------------------------------------------------------------------
+// Native executor: the module implementations of modules::compute.
+// --------------------------------------------------------------------
+
+use crate::modules::compute::{AxpyModule, DotModule, LeftDivideModule, SpMvModule, UpdatePModule};
+use crate::sparse::{pack_nnz_streams, NnzStream, DEP_DIST_SERPENS};
+
+/// Executes phases with the native module implementations, streaming the
+/// SpMV through the scheduled Serpens nnz streams (Mix-V3) or CSR FP64.
+pub struct NativeExecutor<'a> {
+    pub a: &'a CsrMatrix,
+    pub scheme: Scheme,
+    stream: Option<NnzStream>,
+    m: Vec<f64>,
+}
+
+impl<'a> NativeExecutor<'a> {
+    pub fn new(a: &'a CsrMatrix, scheme: Scheme) -> Self {
+        let stream = if scheme.matrix_f32() {
+            Some(pack_nnz_streams(a, DEP_DIST_SERPENS))
+        } else {
+            None
+        };
+        let m = a.jacobi_diag();
+        Self { a, scheme, stream, m }
+    }
+
+    fn spmv(&self, v: &[f64]) -> Vec<f64> {
+        match &self.stream {
+            Some(s) => SpMvModule { stream: s }.run(v),
+            None => {
+                let mut out = vec![0.0; self.a.n];
+                self.a.spmv_f64(v, &mut out);
+                out
+            }
+        }
+    }
+}
+
+impl PhaseExecutor for NativeExecutor<'_> {
+    fn init(&mut self, x0: &[f64], b: &[f64]) -> (Vec<f64>, Vec<f64>, Vec<f64>, f64, f64) {
+        let ax = self.spmv(x0);
+        let n = self.a.n;
+        let mut r = vec![0.0; n];
+        for i in 0..n {
+            r[i] = b[i] - ax[i];
+        }
+        let mut z = vec![0.0; n];
+        LeftDivideModule.run(&r, &self.m, &mut z);
+        let p = z.clone();
+        let rz = DotModule.run(&r, &z);
+        let rr = DotModule.run(&r, &r);
+        (r, z, p, rz, rr)
+    }
+
+    fn phase1(&mut self, p: &[f64]) -> (Vec<f64>, f64) {
+        let ap = self.spmv(p);
+        let pap = DotModule.run(p, &ap);
+        (ap, pap)
+    }
+
+    fn phase2(&mut self, r: &[f64], ap: &[f64], alpha: f64) -> (Vec<f64>, f64, f64) {
+        let mut r1 = r.to_vec();
+        AxpyModule.run(-alpha, ap, &mut r1);
+        let mut z = vec![0.0; r1.len()];
+        LeftDivideModule.run(&r1, &self.m, &mut z);
+        let rz = DotModule.run(&r1, &z);
+        let rr = DotModule.run(&r1, &r1);
+        (r1, rz, rr)
+    }
+
+    fn phase3(
+        &mut self,
+        r: &[f64],
+        p: &[f64],
+        x: &[f64],
+        alpha: f64,
+        beta: f64,
+    ) -> (Vec<f64>, Vec<f64>) {
+        // M4+M5 recompute z from the (already updated) r stream (§5.3).
+        let mut z = vec![0.0; r.len()];
+        LeftDivideModule.run(r, &self.m, &mut z);
+        let mut x1 = x.to_vec();
+        AxpyModule.run(alpha, p, &mut x1);
+        let mut p1 = p.to_vec();
+        UpdatePModule.run(beta, &z, &mut p1);
+        (p1, x1)
+    }
+
+    fn update_x_only(&mut self, p: &[f64], x: &[f64], alpha: f64) -> Vec<f64> {
+        let mut x1 = x.to_vec();
+        AxpyModule.run(alpha, p, &mut x1);
+        x1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::{jpcg_solve, SolveOptions};
+    use crate::sparse::synth;
+
+    fn solve_native(a: &CsrMatrix, scheme: Scheme) -> CoordResult {
+        let cfg = CoordinatorConfig { record_instructions: true, ..Default::default() };
+        let mut coord = Coordinator::new(cfg);
+        let mut exec = NativeExecutor::new(a, scheme);
+        let b = vec![1.0; a.n];
+        let x0 = vec![0.0; a.n];
+        coord.solve(&mut exec, &b, &x0)
+    }
+
+    #[test]
+    fn coordinator_converges_and_solves() {
+        let a = synth::laplace2d_shifted(900, 0.05);
+        let res = solve_native(&a, Scheme::MixV3);
+        assert!(res.converged, "rr={}", res.final_rr);
+        let mut ax = vec![0.0; a.n];
+        a.spmv_f64(&res.x, &mut ax);
+        let err = ax.iter().map(|v| (v - 1.0).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-4, "err={err}");
+    }
+
+    #[test]
+    fn coordinator_matches_reference_solver_iterations() {
+        // The coordinator's phase-split numerics must land within a few
+        // iterations of the monolithic reference solver.
+        let a = synth::banded_spd(1500, 12_000, 1e-4, 21);
+        let coord = solve_native(&a, Scheme::MixV3);
+        let refres = jpcg_solve(&a, None, None, &SolveOptions::callipepla());
+        let diff = (coord.iters as i64 - refres.iters as i64).abs();
+        assert!(diff <= 5, "coord={} ref={}", coord.iters, refres.iters);
+    }
+
+    #[test]
+    fn fp64_scheme_uses_csr_path() {
+        let a = synth::laplace2d_shifted(400, 0.1);
+        let res = solve_native(&a, Scheme::Fp64);
+        assert!(res.converged);
+    }
+
+    #[test]
+    fn instruction_trace_counts_scale_with_iterations() {
+        let a = synth::laplace2d_shifted(400, 0.1);
+        let res = solve_native(&a, Scheme::MixV3);
+        // One M1 Type-II instruction per iteration (phase 1).
+        let m1 = res.instructions.count_for("M1");
+        assert!(
+            (m1 as i64 - res.iters as i64).abs() <= 1,
+            "m1={m1} iters={}",
+            res.iters
+        );
+        // VecCtrl-p issues one Type-I per phase it participates in.
+        assert!(res.instructions.count_for("VecCtrl-p") >= m1);
+    }
+
+    #[test]
+    fn early_exit_skips_phase3_modules() {
+        let a = synth::laplace2d_shifted(400, 0.3); // converges quickly
+        let res = solve_native(&a, Scheme::Fp64);
+        assert!(res.converged);
+        // On the converged iteration M7 was skipped: M7 count == iters-1.
+        let m7 = res.instructions.count_for("M7");
+        assert_eq!(m7 as u32, res.iters - 1, "M7 skipped on the final trip");
+    }
+
+    #[test]
+    fn zero_b_converges_without_instructions() {
+        let a = synth::laplace2d_shifted(100, 0.1);
+        let cfg = CoordinatorConfig { record_instructions: true, ..Default::default() };
+        let mut coord = Coordinator::new(cfg);
+        let mut exec = NativeExecutor::new(&a, Scheme::MixV3);
+        let res = coord.solve(&mut exec, &vec![0.0; a.n], &vec![0.0; a.n]);
+        assert!(res.converged);
+        assert_eq!(res.iters, 0);
+        assert_eq!(res.instructions.count_for("M1"), 0);
+    }
+}

@@ -1,0 +1,146 @@
+//! HBM channel model (paper §4.2, §5.7, Table 2).
+//!
+//! The accelerator is bandwidth-matched: eq. (1) f = BW / r.  For a U280
+//! (460 GB/s over 32 channels, 512-bit ports) the matching frequency is
+//! 225 MHz; Callipepla closed timing at 221 MHz (Table 2), so the cycle
+//! model charges one 64-byte beat per channel per cycle at the *achieved*
+//! frequency of each accelerator.
+//!
+//! The double-channel design (§5.7): a read-modify-write vector served by
+//! ONE channel pays read + write serially (the channel turns around);
+//! with TWO channels in ping-pong (read v_t from ch0 while writing
+//! v_{t+1} to ch1, swap next iteration) the read and write overlap and
+//! the latency halves while still honouring the inter-iteration
+//! dependency.
+
+/// Beat width in bytes (512-bit AXI port, §2.3.3).
+pub const BEAT_BYTES: u64 = 64;
+
+/// Channel configuration for one long vector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChannelMode {
+    /// One channel: read and write serialize (Fig. 7c).
+    Single,
+    /// Ping-pong pair: read and write overlap (Fig. 7d/e).
+    Double,
+}
+
+/// Physical HBM + clocking description of an accelerator build.
+#[derive(Debug, Clone, Copy)]
+pub struct HbmConfig {
+    /// Total HBM channels on the part (U280: 32).
+    pub channels: usize,
+    /// Channels allocated to the SpMV nnz streams (16 on all three
+    /// FPGA accelerators).
+    pub nnz_channels: usize,
+    /// Achieved accelerator frequency in Hz (Table 2).
+    pub freq_hz: f64,
+    /// Aggregate achievable memory bandwidth in bytes/s (Table 2).
+    pub bandwidth_bps: f64,
+    /// Vector read-modify-write channel policy.
+    pub vector_mode: ChannelMode,
+}
+
+impl HbmConfig {
+    /// Callipepla build: 221 MHz, 374 GB/s achieved, double channels.
+    pub fn callipepla() -> Self {
+        Self {
+            channels: 32,
+            nnz_channels: 16,
+            freq_hz: 221e6,
+            bandwidth_bps: 374e9,
+            vector_mode: ChannelMode::Double,
+        }
+    }
+
+    /// SerpensCG build: 238 MHz, 345 GB/s, single-channel vectors.
+    pub fn serpenscg() -> Self {
+        Self {
+            channels: 32,
+            nnz_channels: 16,
+            freq_hz: 238e6,
+            bandwidth_bps: 345e9,
+            vector_mode: ChannelMode::Single,
+        }
+    }
+
+    /// XcgSolver build: 250 MHz, 331 GB/s, single-channel vectors.
+    pub fn xcgsolver() -> Self {
+        Self {
+            channels: 32,
+            nnz_channels: 16,
+            freq_hz: 250e6,
+            bandwidth_bps: 331e9,
+            vector_mode: ChannelMode::Single,
+        }
+    }
+
+    /// Eq. (1): the frequency that matches per-channel bandwidth to one
+    /// beat per cycle.
+    pub fn matching_freq_hz(&self) -> f64 {
+        (self.bandwidth_bps / self.channels as f64) / BEAT_BYTES as f64
+    }
+
+    /// Cycles to move `bytes` over one channel (one beat per cycle).
+    pub fn stream_cycles(&self, bytes: u64) -> u64 {
+        bytes.div_ceil(BEAT_BYTES)
+    }
+
+    /// Cycles for a vector that is both read and written in one phase,
+    /// under the configured channel mode (§5.7): serialized on a single
+    /// channel, overlapped on a double channel.
+    pub fn rw_vector_cycles(&self, bytes_read: u64, bytes_written: u64) -> u64 {
+        let r = self.stream_cycles(bytes_read);
+        let w = self.stream_cycles(bytes_written);
+        match self.vector_mode {
+            ChannelMode::Single => r + w,
+            ChannelMode::Double => r.max(w),
+        }
+    }
+
+    /// Seconds per cycle.
+    pub fn cycle_time(&self) -> f64 {
+        1.0 / self.freq_hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matching_frequency_is_225mhz_on_u280() {
+        // §4.2: (460 GB/s / 32) / 64 B = 225 MHz.
+        let cfg = HbmConfig { bandwidth_bps: 460e9, ..HbmConfig::callipepla() };
+        let f = cfg.matching_freq_hz();
+        assert!((f - 224.6e6).abs() < 1e6, "f = {f}");
+    }
+
+    #[test]
+    fn stream_cycles_rounds_up() {
+        let cfg = HbmConfig::callipepla();
+        assert_eq!(cfg.stream_cycles(0), 0);
+        assert_eq!(cfg.stream_cycles(1), 1);
+        assert_eq!(cfg.stream_cycles(64), 1);
+        assert_eq!(cfg.stream_cycles(65), 2);
+    }
+
+    #[test]
+    fn double_channel_halves_rw_latency() {
+        // §5.7: "we reduce the memory latency by half".
+        let double = HbmConfig::callipepla();
+        let single = HbmConfig { vector_mode: ChannelMode::Single, ..double };
+        let bytes = 1 << 20;
+        assert_eq!(
+            single.rw_vector_cycles(bytes, bytes),
+            2 * double.rw_vector_cycles(bytes, bytes)
+        );
+    }
+
+    #[test]
+    fn table2_builds_differ_as_specified() {
+        assert!(HbmConfig::xcgsolver().freq_hz > HbmConfig::callipepla().freq_hz);
+        assert!(HbmConfig::callipepla().bandwidth_bps > HbmConfig::serpenscg().bandwidth_bps);
+        assert_eq!(HbmConfig::callipepla().vector_mode, ChannelMode::Double);
+    }
+}

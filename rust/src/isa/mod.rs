@@ -1,0 +1,193 @@
+//! The stream-centric instruction set (paper §4, Fig. 2).
+//!
+//! Three instruction types, all bit-packed exactly as the HLS structs:
+//!
+//! * **Type-I** `InstVCtrl` — tells a vector-control module whether to
+//!   read/write a vector, where it lives in memory, its length, and
+//!   which destination module receives the stream (`q_id`, 3 bits).
+//! * **Type-II** `InstCmp` — triggers one computation module: vector
+//!   length, a double-precision scalar (the only operand a module ever
+//!   needs — modules are single-function, so there is no opcode), and
+//!   the destination `q_id` for the output stream.
+//! * **Type-III** `InstRdWr` — issued by a vector-control module to its
+//!   memory module: read/write flags, base address, length.
+//!
+//! The design principles (§2.3.1): every instruction processes streams;
+//! a module either produces or consumes streams; memory is decoupled
+//! from compute so prefetching overlaps execution.
+
+
+/// Destination-queue index (ap_uint<3> in the HLS source).
+pub type QId = u8;
+
+/// Type-I: vector control instruction (5 fields, Fig. 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InstVCtrl {
+    pub rd: bool,
+    pub wr: bool,
+    pub base_addr: u32,
+    pub len: u32,
+    pub q_id: QId,
+}
+
+/// Type-II: computation instruction (3 fields, Fig. 2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InstCmp {
+    pub len: u32,
+    /// The `double alpha` field: alpha for M3/M4, beta for M7, unused 0.0
+    /// for the dot/divide modules.
+    pub alpha: f64,
+    pub q_id: QId,
+}
+
+/// Type-III: memory instruction (4 fields, Fig. 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InstRdWr {
+    pub rd: bool,
+    pub wr: bool,
+    pub base_addr: u32,
+    pub len: u32,
+}
+
+/// Any instruction, for traces and the issue queue.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Instruction {
+    VCtrl(InstVCtrl),
+    Cmp(InstCmp),
+    RdWr(InstRdWr),
+}
+
+// ---------------------------------------------------------------------
+// Bit-exact encodings.  The HLS structs are flat bit concatenations; we
+// pack into u128 little-end-first in field order so the Rust encoding is
+// a stable wire format for traces and golden tests.
+//
+//   InstVCtrl: rd:1 | wr:1 | base_addr:32 | len:32 | q_id:3   (69 bits)
+//   InstCmp:   len:32 | alpha:64 | q_id:3                     (99 bits)
+//   InstRdWr:  rd:1 | wr:1 | base_addr:32 | len:32            (66 bits)
+// ---------------------------------------------------------------------
+
+impl InstVCtrl {
+    pub fn encode(&self) -> u128 {
+        (self.rd as u128)
+            | (self.wr as u128) << 1
+            | (self.base_addr as u128) << 2
+            | (self.len as u128) << 34
+            | (self.q_id as u128 & 0b111) << 66
+    }
+
+    pub fn decode(bits: u128) -> Self {
+        Self {
+            rd: bits & 1 != 0,
+            wr: bits >> 1 & 1 != 0,
+            base_addr: (bits >> 2) as u32,
+            len: (bits >> 34) as u32,
+            q_id: (bits >> 66 & 0b111) as u8,
+        }
+    }
+}
+
+impl InstCmp {
+    pub fn encode(&self) -> u128 {
+        (self.len as u128)
+            | (self.alpha.to_bits() as u128) << 32
+            | (self.q_id as u128 & 0b111) << 96
+    }
+
+    pub fn decode(bits: u128) -> Self {
+        Self {
+            len: bits as u32,
+            alpha: f64::from_bits((bits >> 32) as u64),
+            q_id: (bits >> 96 & 0b111) as u8,
+        }
+    }
+}
+
+impl InstRdWr {
+    pub fn encode(&self) -> u128 {
+        (self.rd as u128)
+            | (self.wr as u128) << 1
+            | (self.base_addr as u128) << 2
+            | (self.len as u128) << 34
+    }
+
+    pub fn decode(bits: u128) -> Self {
+        Self {
+            rd: bits & 1 != 0,
+            wr: bits >> 1 & 1 != 0,
+            base_addr: (bits >> 2) as u32,
+            len: (bits >> 34) as u32,
+        }
+    }
+}
+
+/// Memory-write response (§4.2 "Scalar and memory response"): memory
+/// modules acknowledge completed writes so the controller can maintain
+/// consistency when modules read vectors another module just wrote.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemResponse {
+    pub base_addr: u32,
+    pub len: u32,
+}
+
+/// Recorded instruction issue, for the time plane and for debugging.
+#[derive(Debug, Clone, Default)]
+pub struct InstTrace {
+    pub issued: Vec<(String, Instruction)>,
+}
+
+impl InstTrace {
+    pub fn record(&mut self, target: &str, inst: Instruction) {
+        self.issued.push((target.to_string(), inst));
+    }
+
+    pub fn count_for(&self, target: &str) -> usize {
+        self.issued.iter().filter(|(t, _)| t == target).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vctrl_roundtrip() {
+        let i = InstVCtrl { rd: true, wr: false, base_addr: 0xDEAD_BEEF, len: 1_000_000, q_id: 5 };
+        assert_eq!(InstVCtrl::decode(i.encode()), i);
+    }
+
+    #[test]
+    fn cmp_roundtrip_preserves_alpha_bits() {
+        for alpha in [0.0, -0.0, 1.5e-300, f64::MAX, std::f64::consts::PI] {
+            let i = InstCmp { len: 7, alpha, q_id: 3 };
+            let d = InstCmp::decode(i.encode());
+            assert_eq!(d.alpha.to_bits(), alpha.to_bits());
+            assert_eq!(d.len, 7);
+            assert_eq!(d.q_id, 3);
+        }
+    }
+
+    #[test]
+    fn rdwr_roundtrip() {
+        let i = InstRdWr { rd: true, wr: true, base_addr: 42, len: 9 };
+        assert_eq!(InstRdWr::decode(i.encode()), i);
+    }
+
+    #[test]
+    fn qid_is_three_bits() {
+        let i = InstVCtrl { rd: false, wr: false, base_addr: 0, len: 0, q_id: 7 };
+        assert_eq!(InstVCtrl::decode(i.encode()).q_id, 7);
+    }
+
+    #[test]
+    fn trace_counts_per_target() {
+        let mut t = InstTrace::default();
+        t.record("M3", Instruction::Cmp(InstCmp { len: 1, alpha: 0.0, q_id: 0 }));
+        t.record("M3", Instruction::Cmp(InstCmp { len: 2, alpha: 1.0, q_id: 0 }));
+        t.record("VecCtrl-p", Instruction::VCtrl(InstVCtrl {
+            rd: true, wr: false, base_addr: 0, len: 2, q_id: 1,
+        }));
+        assert_eq!(t.count_for("M3"), 2);
+        assert_eq!(t.count_for("VecCtrl-p"), 1);
+    }
+}

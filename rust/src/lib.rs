@@ -1,0 +1,42 @@
+//! # Callipepla — stream-centric ISA + mixed-precision JPCG solver
+//!
+//! Reproduction of *Callipepla: Stream Centric Instruction Set and Mixed
+//! Precision for Accelerating Conjugate Gradient Solver* (Song et al.,
+//! FPGA '23) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The paper's FPGA is replaced by two orthogonal planes (DESIGN.md §5):
+//!
+//! * a **value plane** that runs the JPCG numerics for real — natively
+//!   ([`solver`]) and through AOT-compiled JAX/Pallas HLO artifacts
+//!   executed by the PJRT CPU client ([`runtime`]);
+//! * a **time plane** — a cycle-approximate model of the U280 HBM
+//!   accelerator ([`hbm`], [`sim`]) driven by the same stream-centric
+//!   instruction traces ([`isa`], [`coordinator`]).
+//!
+//! Layer map:
+//!
+//! | Layer | Where | Paper section |
+//! |---|---|---|
+//! | L3 coordinator | [`coordinator`], [`isa`], [`modules`], [`vsr`], [`sim`] | §3–§5 |
+//! | L2 JAX model | `python/compile/model.py` | Alg. 1 / Fig. 5 phases |
+//! | L1 Pallas kernels | `python/compile/kernels/` | §6 mixed-precision SpMV |
+//! | runtime | [`runtime`] (xla crate / PJRT) | — |
+
+pub mod accel;
+pub mod bench_harness;
+pub mod coordinator;
+pub mod hbm;
+pub mod isa;
+pub mod metrics;
+pub mod modules;
+pub mod precision;
+pub mod runtime;
+pub mod sim;
+pub mod solver;
+pub mod sparse;
+pub mod util;
+pub mod vsr;
+
+pub use precision::Scheme;
+pub use solver::{jpcg_solve, SolveOptions, SolveResult};
+pub use sparse::CsrMatrix;

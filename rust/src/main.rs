@@ -1,0 +1,275 @@
+//! Callipepla CLI — the Layer-3 leader entrypoint.
+//!
+//! Subcommands map 1:1 to the experiments of DESIGN.md §3:
+//!
+//! ```text
+//! callipepla solve  --matrix M7 [--scheme mixv3] [--scale 0.05] [--pjrt]
+//! callipepla solve  --mtx path/to/file.mtx [--pjrt]
+//! callipepla suite  --list
+//! callipepla table4 [--scale 0.02] [--matrices M1,M2,...]
+//! callipepla table5 [--scale 0.02] [--matrices ...]
+//! callipepla table6
+//! callipepla table7 [--scale 0.02] [--matrices ...]
+//! callipepla fig9   [--out traces/] [--scale 0.05]
+//! callipepla sim    --matrix M7 [--scale 0.05]      (cycle breakdown)
+//! ```
+//!
+//! (Arg parsing is hand-rolled: clap is not available offline.)
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use callipepla::bench_harness::tables::{self, SweepConfig};
+use callipepla::coordinator::{Coordinator, CoordinatorConfig, NativeExecutor};
+use callipepla::precision::Scheme;
+use callipepla::runtime::{default_artifact_dir, PjrtExecutor, PjrtRuntime};
+use callipepla::sim::{self, AccelSimConfig};
+use callipepla::solver::{jpcg_solve, SolveOptions};
+use callipepla::sparse::{self, suite36, CsrMatrix};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        print_usage();
+        std::process::exit(2);
+    }
+    let cmd = args[0].clone();
+    let flags = parse_flags(&args[1..]);
+    let r = match cmd.as_str() {
+        "solve" => cmd_solve(&flags),
+        "suite" => cmd_suite(&flags),
+        "table4" => cmd_table(&flags, 4),
+        "table5" => cmd_table(&flags, 5),
+        "table6" => {
+            println!("{}", tables::print_table6());
+            Ok(())
+        }
+        "table7" => cmd_table(&flags, 7),
+        "tables" => cmd_all_tables(&flags),
+        "fig9" => cmd_fig9(&flags),
+        "sim" => cmd_sim(&flags),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command {other:?}")),
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "callipepla — stream-centric ISA + mixed-precision JPCG (FPGA'23 reproduction)\n\
+         commands: solve suite table4 table5 table6 table7 fig9 sim\n\
+         common flags: --matrix <Mxx|name>  --mtx <file>  --scale <f>  --scheme <fp64|mixv1|mixv2|mixv3>\n\
+         \u{20}                --matrices M1,M2  --max-iters <n>  --pjrt  --out <dir>"
+    );
+}
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                m.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                m.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    m
+}
+
+fn flag_f64(flags: &HashMap<String, String>, key: &str, default: f64) -> f64 {
+    flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn flag_u32(flags: &HashMap<String, String>, key: &str, default: u32) -> u32 {
+    flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn load_matrix(flags: &HashMap<String, String>) -> Result<(String, CsrMatrix)> {
+    if let Some(path) = flags.get("mtx") {
+        let a = sparse::mtx::read_mtx(std::path::Path::new(path))?;
+        return Ok((path.clone(), a));
+    }
+    let key = flags
+        .get("matrix")
+        .ok_or_else(|| anyhow!("need --matrix <Mxx|name> or --mtx <file>"))?;
+    let spec = sparse::synth::find_spec(key)
+        .ok_or_else(|| anyhow!("unknown matrix {key:?} (see `callipepla suite`)"))?;
+    let scale = flag_f64(flags, "scale", 0.05);
+    Ok((format!("{} ({})", spec.id, spec.paper_name), spec.generate(scale)))
+}
+
+fn parse_scheme(flags: &HashMap<String, String>) -> Result<Scheme> {
+    Ok(match flags.get("scheme").map(String::as_str) {
+        None | Some("mixv3") => Scheme::MixV3,
+        Some("fp64") => Scheme::Fp64,
+        Some("mixv1") => Scheme::MixV1,
+        Some("mixv2") => Scheme::MixV2,
+        Some(other) => bail!("unknown scheme {other:?}"),
+    })
+}
+
+fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
+    let (name, a) = load_matrix(flags)?;
+    let scheme = parse_scheme(flags)?;
+    let max_iters = flag_u32(flags, "max-iters", 20_000);
+    println!("solving {name}: n={} nnz={} scheme={}", a.n, a.nnz(), scheme.name());
+    let t0 = std::time::Instant::now();
+    if flags.contains_key("pjrt") {
+        // Three-layer path: coordinator -> PJRT artifacts (L2/L1).
+        let mut rt = PjrtRuntime::new(default_artifact_dir())?;
+        let mut exec = PjrtExecutor::new(&mut rt, &a, scheme)?;
+        let cfg = CoordinatorConfig { max_iters, ..Default::default() };
+        let mut coord = Coordinator::new(cfg);
+        let b = vec![1.0; a.n];
+        let x0 = vec![0.0; a.n];
+        let res = coord.solve(&mut exec, &b, &x0);
+        println!(
+            "pjrt path: converged={} iters={} rr={:.3e} executable_calls={} wall={:?}",
+            res.converged,
+            res.iters,
+            res.final_rr,
+            exec.calls,
+            t0.elapsed()
+        );
+    } else if flags.contains_key("coordinator") {
+        // Native module path through the full ISA coordinator.
+        let cfg = CoordinatorConfig {
+            max_iters,
+            record_instructions: true,
+            ..Default::default()
+        };
+        let mut coord = Coordinator::new(cfg);
+        let mut exec = NativeExecutor::new(&a, scheme);
+        let b = vec![1.0; a.n];
+        let x0 = vec![0.0; a.n];
+        let res = coord.solve(&mut exec, &b, &x0);
+        println!(
+            "coordinator path: converged={} iters={} rr={:.3e} instructions={} wall={:?}",
+            res.converged,
+            res.iters,
+            res.final_rr,
+            res.instructions.issued.len(),
+            t0.elapsed()
+        );
+    } else {
+        let mut opts = SolveOptions::callipepla();
+        opts.scheme = scheme;
+        opts.max_iters = max_iters;
+        let res = jpcg_solve(&a, None, None, &opts);
+        println!(
+            "native path: converged={} iters={} rr={:.3e} flops={} wall={:?}",
+            res.converged, res.iters, res.final_rr, res.flops, t0.elapsed()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_suite(_flags: &HashMap<String, String>) -> Result<()> {
+    println!("{}", tables::print_table3());
+    Ok(())
+}
+
+fn sweep_config(flags: &HashMap<String, String>) -> SweepConfig {
+    SweepConfig {
+        scale: flag_f64(flags, "scale", 0.02),
+        max_iters: flag_u32(flags, "max-iters", 20_000),
+    }
+}
+
+fn matrix_filter(flags: &HashMap<String, String>) -> Vec<String> {
+    flags
+        .get("matrices")
+        .map(|s| s.split(',').map(str::to_string).collect())
+        .unwrap_or_default()
+}
+
+fn cmd_table(flags: &HashMap<String, String>, which: u8) -> Result<()> {
+    let cfg = sweep_config(flags);
+    let ids = matrix_filter(flags);
+    eprintln!(
+        "evaluating {} matrices at scale {} (use --matrices / --scale to adjust)...",
+        if ids.is_empty() { suite36().len() } else { ids.len() },
+        cfg.scale
+    );
+    let evals = tables::eval_suite(&ids, &cfg);
+    match which {
+        4 => println!("{}", tables::print_table4(&evals)),
+        5 => println!("{}", tables::print_table5(&evals)),
+        7 => println!("{}", tables::print_table7(&evals)),
+        _ => unreachable!(),
+    }
+    Ok(())
+}
+
+/// One sweep, all three value/time tables — saves re-solving the suite.
+fn cmd_all_tables(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = sweep_config(flags);
+    let ids = matrix_filter(flags);
+    eprintln!("evaluating {} matrices at scale {} ...",
+        if ids.is_empty() { suite36().len() } else { ids.len() }, cfg.scale);
+    let evals = tables::eval_suite(&ids, &cfg);
+    println!("{}", tables::print_table4(&evals));
+    println!("{}", tables::print_table5(&evals));
+    println!("{}", tables::print_table6());
+    println!("{}", tables::print_table7(&evals));
+    Ok(())
+}
+
+fn cmd_fig9(flags: &HashMap<String, String>) -> Result<()> {
+    // Paper Fig. 9 uses nasa2910 (M7), gyro_k (M13), msc10848 (M15).
+    let out_dir = flags.get("out").cloned().unwrap_or_else(|| "traces".to_string());
+    std::fs::create_dir_all(&out_dir)?;
+    let scale = flag_f64(flags, "scale", 0.05);
+    let max_iters = flag_u32(flags, "max-iters", 20_000);
+    for id in ["M7", "M13", "M15"] {
+        let spec = sparse::synth::find_spec(id).unwrap();
+        let a = spec.generate(scale);
+        eprintln!("tracing {} ({}) n={} nnz={}", id, spec.paper_name, a.n, a.nnz());
+        for (label, csv) in tables::fig9_traces(&a, max_iters) {
+            let path = format!("{out_dir}/fig9_{}_{label}.csv", spec.paper_name);
+            std::fs::write(&path, csv)?;
+            println!("wrote {path}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sim(flags: &HashMap<String, String>) -> Result<()> {
+    let (name, a) = load_matrix(flags)?;
+    println!("cycle model for {name}: n={} nnz={}", a.n, a.nnz());
+    for (label, cfg) in [
+        ("Callipepla", AccelSimConfig::callipepla()),
+        ("SerpensCG", AccelSimConfig::serpenscg()),
+        ("XcgSolver", AccelSimConfig::xcgsolver()),
+    ] {
+        let b = sim::iteration_cycles(&cfg, a.n, a.nnz());
+        println!(
+            "{label:<11} phase1 {:>9}  phase2 {:>9}  phase3 {:>9}  total {:>10} cycles  ({:.3} us/iter @ {:.0} MHz)",
+            b.phase1,
+            b.phase2,
+            b.phase3,
+            b.total,
+            b.total as f64 * cfg.hbm.cycle_time() * 1e6,
+            cfg.hbm.freq_hz / 1e6,
+        );
+    }
+    println!(
+        "A100 (analytic): {:.3} us/iter",
+        sim::iteration::gpu_iteration_seconds(a.n, a.nnz()) * 1e6
+    );
+    Ok(())
+}

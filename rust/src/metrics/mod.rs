@@ -1,0 +1,89 @@
+//! Metrics plane: throughput, fraction-of-peak, energy efficiency and
+//! geomean aggregation — the quantities of Table 5 (§7.3 definitions:
+//! throughput = flops / solver time; energy efficiency = throughput /
+//! power; FoP = max throughput / peak throughput).
+
+/// Geometric mean, skipping NaNs (failed cells, like XcgSolver's OOM
+/// rows, are excluded the way the paper's geomeans exclude FAIL).
+pub fn geomean(values: impl IntoIterator<Item = f64>) -> f64 {
+    let mut log_sum = 0.0;
+    let mut count = 0usize;
+    for v in values {
+        if v.is_finite() && v > 0.0 {
+            log_sum += v.ln();
+            count += 1;
+        }
+    }
+    if count == 0 {
+        f64::NAN
+    } else {
+        (log_sum / count as f64).exp()
+    }
+}
+
+/// Throughput in GFLOP/s.
+pub fn gflops(flops: u64, seconds: f64) -> f64 {
+    flops as f64 / seconds / 1e9
+}
+
+/// Energy efficiency in GFLOP/J.
+pub fn gflops_per_joule(gflops: f64, power_w: f64) -> f64 {
+    gflops / power_w
+}
+
+/// Fraction of peak, in percent (§7.3: max achieved / peak).
+pub fn fraction_of_peak_pct(max_gflops: f64, peak_gflops: f64) -> f64 {
+    100.0 * max_gflops / peak_gflops
+}
+
+/// Min / max / geomean summary of a metric across the suite.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Summary {
+    pub min: f64,
+    pub max: f64,
+    pub geomean: f64,
+}
+
+pub fn summarize(values: &[f64]) -> Summary {
+    let finite: Vec<f64> = values.iter().copied().filter(|v| v.is_finite()).collect();
+    if finite.is_empty() {
+        return Summary { min: f64::NAN, max: f64::NAN, geomean: f64::NAN };
+    }
+    Summary {
+        min: finite.iter().copied().fold(f64::INFINITY, f64::min),
+        max: finite.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+        geomean: geomean(finite),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean([1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean([2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_skips_nans_like_fail_cells() {
+        assert!((geomean([1.0, f64::NAN, 4.0]) - 2.0).abs() < 1e-12);
+        assert!(geomean([f64::NAN]).is_nan());
+    }
+
+    #[test]
+    fn fop_definition() {
+        // Paper: Callipepla max 43.71 GFLOP/s over 410 peak = 10.7%.
+        let fop = fraction_of_peak_pct(43.71, 410.0);
+        assert!((fop - 10.66).abs() < 0.05, "fop={fop}");
+    }
+
+    #[test]
+    fn summary_handles_mixed() {
+        let s = summarize(&[3.0, 1.0, f64::NAN, 9.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 9.0);
+        assert!((s.geomean - 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,167 @@
+//! Value-plane behaviours of the eight computation modules, expressed as
+//! whole-stream operations (the element-wise semantics each II=1
+//! pipeline applies).  The coordinator composes these when it executes
+//! an iteration natively; they are also the unit under test for the
+//! module-level equivalence checks against the Pallas kernels' refs.
+
+use crate::precision::{dot_delay_buffer, Scheme};
+use crate::sparse::{CsrMatrix, NnzStream};
+
+/// What a module hands back to the coordinator.
+#[derive(Debug, Clone)]
+pub enum ModuleOutput {
+    /// A produced/updated vector (streamed onward or written back).
+    Vector(Vec<f64>),
+    /// A scalar delivered to the global controller.
+    Scalar(f64),
+}
+
+/// A computation module: one function, no opcode (§4.1.2).
+pub trait ComputeModule {
+    fn name(&self) -> &'static str;
+}
+
+/// M1 — SpMV over the packed nnz streams (Fig. 8).
+pub struct SpMvModule<'a> {
+    pub stream: &'a NnzStream,
+}
+
+impl<'a> SpMvModule<'a> {
+    /// ap = A p via stream replay (Mix-V3 arithmetic: the stream carries
+    /// f32 values, x / y are f64).
+    pub fn run(&self, p: &[f64]) -> Vec<f64> {
+        let mut ap = vec![0.0; self.stream.n];
+        self.stream.replay_mixv3(p, &mut ap);
+        ap
+    }
+
+    /// FP64 variant (SerpensCG / XcgSolver): same schedule, f64 values
+    /// taken from the master matrix.
+    pub fn run_fp64(&self, a: &CsrMatrix, p: &[f64]) -> Vec<f64> {
+        let mut ap = vec![0.0; a.n];
+        a.spmv_f64(p, &mut ap);
+        ap
+    }
+}
+
+impl ComputeModule for SpMvModule<'_> {
+    fn name(&self) -> &'static str {
+        "M1:spmv"
+    }
+}
+
+/// M2/M6/M8 — delay-buffer dot product.
+pub struct DotModule;
+
+impl DotModule {
+    pub fn run(&self, a: &[f64], b: &[f64]) -> f64 {
+        dot_delay_buffer(a, b)
+    }
+}
+
+impl ComputeModule for DotModule {
+    fn name(&self) -> &'static str {
+        "dot"
+    }
+}
+
+/// M3/M4 — axpy update (M3: +alpha, M4: -alpha via the instruction's
+/// alpha field).
+pub struct AxpyModule;
+
+impl AxpyModule {
+    pub fn run(&self, alpha: f64, x: &[f64], y: &mut [f64]) {
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += alpha * xi;
+        }
+    }
+}
+
+impl ComputeModule for AxpyModule {
+    fn name(&self) -> &'static str {
+        "axpy"
+    }
+}
+
+/// M5 — left divide: z = r / m element-wise.
+pub struct LeftDivideModule;
+
+impl LeftDivideModule {
+    pub fn run(&self, r: &[f64], m: &[f64], z: &mut [f64]) {
+        for ((zi, ri), mi) in z.iter_mut().zip(r).zip(m) {
+            *zi = ri / mi;
+        }
+    }
+}
+
+impl ComputeModule for LeftDivideModule {
+    fn name(&self) -> &'static str {
+        "M5:left-divide"
+    }
+}
+
+/// M7 — update p: p' = z + beta p.
+pub struct UpdatePModule;
+
+impl UpdatePModule {
+    pub fn run(&self, beta: f64, z: &[f64], p: &mut [f64]) {
+        for (pi, zi) in p.iter_mut().zip(z) {
+            *pi = zi + beta * *pi;
+        }
+    }
+}
+
+impl ComputeModule for UpdatePModule {
+    fn name(&self) -> &'static str {
+        "M7:update-p"
+    }
+}
+
+/// Bytes a module moves per invocation on vectors of length n — feeds
+/// the metrics plane (scheme affects only M1's stream, handled there).
+pub fn vector_bytes_per_call(n: usize, _scheme: Scheme) -> u64 {
+    8 * n as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{pack_nnz_streams, synth, DEP_DIST_SERPENS};
+
+    #[test]
+    fn spmv_module_matches_csr_reference() {
+        let a = synth::banded_spd(600, 5000, 1e-2, 11);
+        let stream = pack_nnz_streams(&a, DEP_DIST_SERPENS);
+        let m1 = SpMvModule { stream: &stream };
+        let p: Vec<f64> = (0..a.n).map(|i| ((i * 13) % 29) as f64 / 29.0).collect();
+        let ap = m1.run(&p);
+        // Mix-V3 reference.
+        let mut want = vec![0.0; a.n];
+        for i in 0..a.n {
+            let (cols, vals) = a.row(i);
+            for (c, v) in cols.iter().zip(vals) {
+                want[i] += (*v as f32) as f64 * p[*c as usize];
+            }
+        }
+        for i in 0..a.n {
+            assert!((ap[i] - want[i]).abs() <= 1e-9 * want[i].abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn axpy_and_update_p_semantics() {
+        let mut y = vec![1.0, 2.0, 3.0];
+        AxpyModule.run(-0.5, &[2.0, 2.0, 2.0], &mut y);
+        assert_eq!(y, vec![0.0, 1.0, 2.0]);
+        let mut p = vec![1.0, 1.0];
+        UpdatePModule.run(2.0, &[3.0, 4.0], &mut p);
+        assert_eq!(p, vec![5.0, 6.0]);
+    }
+
+    #[test]
+    fn left_divide_is_elementwise() {
+        let mut z = vec![0.0; 3];
+        LeftDivideModule.run(&[2.0, 9.0, -4.0], &[2.0, 3.0, 4.0], &mut z);
+        assert_eq!(z, vec![1.0, 3.0, -1.0]);
+    }
+}

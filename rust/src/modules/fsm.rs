@@ -1,0 +1,284 @@
+//! The decentralized vector-scheduling FSMs of Fig. 6.
+//!
+//! §5.5: rather than one controller juggling 23 FIFOs, every vector
+//! control module (a)–(e) and every computation module (f)–(m) owns a
+//! small FSM that steps once per phase-visit.  The tables here are the
+//! exact schedules drawn in Fig. 6; the coordinator advances them and
+//! the tests pin them against the figure.
+
+use crate::vsr::{Module, Phase, Vector};
+
+/// Where a stream comes from / goes to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Endpoint {
+    Memory,
+    Module(Module),
+    /// Scalar delivered to the global controller (dot modules).
+    Controller,
+}
+
+/// One state of a vector-control FSM: what this vector does in one phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VecCtrlState {
+    pub phase: Phase,
+    /// Read from memory toward this module (None = no read).
+    pub rd_to: Option<Module>,
+    /// Write to memory from this module (None = no write).
+    pub wr_from: Option<Module>,
+}
+
+/// One state of a computation-module FSM (Fig. 6 f–m): input streams on
+/// the left, output streams on the right.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CompState {
+    pub phase: Phase,
+    /// (vector, source).
+    pub inputs: Vec<(Vector, Endpoint)>,
+    /// (vector, destination).
+    pub outputs: Vec<(Vector, Endpoint)>,
+}
+
+/// A whole FSM: the cyclic state list (one full cycle == one iteration).
+#[derive(Debug, Clone)]
+pub struct ModuleFsm<S> {
+    pub name: &'static str,
+    pub states: Vec<S>,
+    pub current: usize,
+}
+
+impl<S: Clone> ModuleFsm<S> {
+    pub fn new(name: &'static str, states: Vec<S>) -> Self {
+        Self { name, states, current: 0 }
+    }
+
+    /// Advance to the next state, wrapping at the end of the iteration.
+    pub fn step(&mut self) -> &S {
+        let s = &self.states[self.current];
+        self.current = (self.current + 1) % self.states.len();
+        s
+    }
+
+    pub fn peek(&self) -> &S {
+        &self.states[self.current]
+    }
+
+    /// True when a full iteration of states has been traversed.
+    pub fn at_start(&self) -> bool {
+        self.current == 0
+    }
+}
+
+/// Fig. 6 (a): vector p — Rd->M1 (P1.1), Rd->M2 (P1.2), RdWr<->M7/M3 (P3).
+pub fn vecctrl_p() -> ModuleFsm<VecCtrlState> {
+    ModuleFsm::new(
+        "VecCtrl-p",
+        vec![
+            VecCtrlState { phase: Phase::Phase1, rd_to: Some(Module::M1), wr_from: None },
+            VecCtrlState { phase: Phase::Phase1, rd_to: Some(Module::M2), wr_from: None },
+            VecCtrlState { phase: Phase::Phase3, rd_to: Some(Module::M7), wr_from: Some(Module::M7) },
+        ],
+    )
+}
+
+/// Fig. 6 (b): vector r — Rd->M4 (P2), RdWr<->M4/M5 (P3).
+pub fn vecctrl_r() -> ModuleFsm<VecCtrlState> {
+    ModuleFsm::new(
+        "VecCtrl-r",
+        vec![
+            VecCtrlState { phase: Phase::Phase2, rd_to: Some(Module::M4), wr_from: None },
+            VecCtrlState { phase: Phase::Phase3, rd_to: Some(Module::M4), wr_from: Some(Module::M5) },
+        ],
+    )
+}
+
+/// Fig. 6 (c): vector x — RdWr<->M3 (P3 only).
+pub fn vecctrl_x() -> ModuleFsm<VecCtrlState> {
+    ModuleFsm::new(
+        "VecCtrl-x",
+        vec![VecCtrlState { phase: Phase::Phase3, rd_to: Some(Module::M3), wr_from: Some(Module::M3) }],
+    )
+}
+
+/// Fig. 6 (d): vector ap — Wr<-M1 (P1), Rd->M4 (P2), Rd->M4 (P3 recompute).
+pub fn vecctrl_ap() -> ModuleFsm<VecCtrlState> {
+    ModuleFsm::new(
+        "VecCtrl-ap",
+        vec![
+            VecCtrlState { phase: Phase::Phase1, rd_to: None, wr_from: Some(Module::M1) },
+            VecCtrlState { phase: Phase::Phase2, rd_to: Some(Module::M4), wr_from: None },
+            VecCtrlState { phase: Phase::Phase3, rd_to: Some(Module::M4), wr_from: None },
+        ],
+    )
+}
+
+/// Fig. 6 (e): the Jacobi diagonal M — Rd->M5 in P2 and P3.
+pub fn vecctrl_m() -> ModuleFsm<VecCtrlState> {
+    ModuleFsm::new(
+        "VecCtrl-M",
+        vec![
+            VecCtrlState { phase: Phase::Phase2, rd_to: Some(Module::M5), wr_from: None },
+            VecCtrlState { phase: Phase::Phase3, rd_to: Some(Module::M5), wr_from: None },
+        ],
+    )
+}
+
+/// Fig. 6 (f)–(m): computation-module FSMs.
+pub fn comp_fsm(m: Module) -> ModuleFsm<CompState> {
+    use Endpoint::{Memory, Module as ModEp};
+    use Vector::*;
+    let fsm = |name, states| ModuleFsm::new(name, states);
+    match m {
+        Module::M1 => fsm(
+            "M1:spmv",
+            vec![CompState {
+                phase: Phase::Phase1,
+                inputs: vec![(P, Memory)],
+                outputs: vec![(Ap, ModEp(Module::M2)), (Ap, Memory)],
+            }],
+        ),
+        Module::M2 => fsm(
+            "M2:dot-alpha",
+            vec![CompState {
+                phase: Phase::Phase1,
+                inputs: vec![(P, Memory), (Ap, ModEp(Module::M1))],
+                outputs: vec![], // scalar pap -> controller
+            }],
+        ),
+        Module::M3 => fsm(
+            "M3:update-x",
+            vec![CompState {
+                phase: Phase::Phase3,
+                inputs: vec![(X, Memory), (P, ModEp(Module::M7))],
+                outputs: vec![(X, Memory)],
+            }],
+        ),
+        Module::M4 => fsm(
+            "M4:update-r",
+            vec![
+                CompState {
+                    phase: Phase::Phase2,
+                    inputs: vec![(R, Memory), (Ap, Memory)],
+                    outputs: vec![(R, ModEp(Module::M5))],
+                },
+                CompState {
+                    phase: Phase::Phase3,
+                    inputs: vec![(R, Memory), (Ap, Memory)],
+                    outputs: vec![(R, ModEp(Module::M5))],
+                },
+            ],
+        ),
+        Module::M5 => fsm(
+            "M5:left-divide",
+            vec![
+                // §5.5's worked example: state 1 (P2) sends z and r to M6;
+                // state 2 (P3) sends z to M7 and r to memory.
+                CompState {
+                    phase: Phase::Phase2,
+                    inputs: vec![(M, Memory), (R, ModEp(Module::M4))],
+                    outputs: vec![(Z, ModEp(Module::M6)), (R, ModEp(Module::M6))],
+                },
+                CompState {
+                    phase: Phase::Phase3,
+                    inputs: vec![(M, Memory), (R, ModEp(Module::M4))],
+                    outputs: vec![(Z, ModEp(Module::M7)), (R, Memory)],
+                },
+            ],
+        ),
+        Module::M6 => fsm(
+            "M6:dot-rz",
+            vec![CompState {
+                phase: Phase::Phase2,
+                inputs: vec![(R, ModEp(Module::M5)), (Z, ModEp(Module::M5))],
+                outputs: vec![(R, ModEp(Module::M8))], // scalar rz -> controller
+            }],
+        ),
+        Module::M7 => fsm(
+            "M7:update-p",
+            vec![CompState {
+                phase: Phase::Phase3,
+                inputs: vec![(Z, ModEp(Module::M5)), (P, Memory)],
+                outputs: vec![(P, ModEp(Module::M3)), (P, Memory)],
+            }],
+        ),
+        Module::M8 => fsm(
+            "M8:dot-rr",
+            vec![CompState {
+                phase: Phase::Phase2,
+                inputs: vec![(R, ModEp(Module::M6))],
+                outputs: vec![], // scalar rr -> controller
+            }],
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vsr::{accesses_with_vsr, count_accesses};
+
+    #[test]
+    fn vecctrl_fsms_match_fig6_state_counts() {
+        assert_eq!(vecctrl_p().states.len(), 3);
+        assert_eq!(vecctrl_r().states.len(), 2);
+        assert_eq!(vecctrl_x().states.len(), 1);
+        assert_eq!(vecctrl_ap().states.len(), 3);
+        assert_eq!(vecctrl_m().states.len(), 2);
+    }
+
+    #[test]
+    fn fsm_steps_cycle_per_iteration() {
+        let mut p = vecctrl_p();
+        assert!(p.at_start());
+        p.step();
+        p.step();
+        p.step();
+        assert!(p.at_start(), "3 states == one iteration for p");
+    }
+
+    /// The union of all FSM memory ops must equal the §5.5 access table
+    /// (10 reads, 4 writes) — the FSMs *are* the decentralized encoding
+    /// of that table.
+    #[test]
+    fn fsm_memory_ops_total_14_accesses() {
+        let fsms = [vecctrl_p(), vecctrl_r(), vecctrl_x(), vecctrl_ap(), vecctrl_m()];
+        let reads: usize = fsms.iter().flat_map(|f| &f.states).filter(|s| s.rd_to.is_some()).count();
+        let writes: usize =
+            fsms.iter().flat_map(|f| &f.states).filter(|s| s.wr_from.is_some()).count();
+        let (r, w) = count_accesses(&accesses_with_vsr());
+        assert_eq!((reads, writes), (r, w), "FSMs encode the Fig. 5 access schedule");
+    }
+
+    #[test]
+    fn m5_states_match_paper_worked_example() {
+        let fsm = comp_fsm(Module::M5);
+        assert_eq!(fsm.states.len(), 2);
+        let s1 = &fsm.states[0];
+        assert_eq!(s1.phase, Phase::Phase2);
+        assert!(s1.outputs.contains(&(Vector::Z, Endpoint::Module(Module::M6))));
+        assert!(s1.outputs.contains(&(Vector::R, Endpoint::Module(Module::M6))));
+        let s2 = &fsm.states[1];
+        assert_eq!(s2.phase, Phase::Phase3);
+        assert!(s2.outputs.contains(&(Vector::Z, Endpoint::Module(Module::M7))));
+        assert!(s2.outputs.contains(&(Vector::R, Endpoint::Memory)));
+    }
+
+    #[test]
+    fn phase2_chain_is_m4_m5_m6_m8() {
+        // r flows M4 -> M5 -> M6 -> M8 without touching memory.
+        let m5_in = &comp_fsm(Module::M5).states[0].inputs;
+        assert!(m5_in.contains(&(Vector::R, Endpoint::Module(Module::M4))));
+        let m6_in = &comp_fsm(Module::M6).states[0].inputs;
+        assert!(m6_in.contains(&(Vector::R, Endpoint::Module(Module::M5))));
+        let m8_in = &comp_fsm(Module::M8).states[0].inputs;
+        assert!(m8_in.contains(&(Vector::R, Endpoint::Module(Module::M6))));
+    }
+
+    #[test]
+    fn dot_modules_emit_no_vector_stream() {
+        for m in [Module::M2, Module::M8] {
+            for s in &comp_fsm(m).states {
+                assert!(s.outputs.iter().all(|(_, e)| *e != Endpoint::Memory));
+            }
+        }
+    }
+}

@@ -1,0 +1,355 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the coordinator hot
+//! path via the `xla` crate's CPU PJRT client.  Python never runs here —
+//! the artifacts are compiled once by `make artifacts` and this module
+//! is pure Rust + libxla_extension.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax's
+//! serialized protos carry 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids (see aot.py and
+//! /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::PhaseExecutor;
+use crate::precision::Scheme;
+use crate::sparse::CsrMatrix;
+use crate::util::json::Json;
+
+/// One artifact's manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub phase: String,
+    pub scheme: String,
+    pub n: usize,
+    pub nnz_pad: usize,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("read {dir:?}/manifest.json — run `make artifacts`"))?;
+        let j = Json::parse(&text)?;
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts[]"))?;
+        let mut artifacts = Vec::new();
+        for a in arts {
+            artifacts.push(ArtifactMeta {
+                file: a.get("file").and_then(Json::as_str).unwrap_or_default().to_string(),
+                phase: a.get("phase").and_then(Json::as_str).unwrap_or_default().to_string(),
+                scheme: a.get("scheme").and_then(Json::as_str).unwrap_or_default().to_string(),
+                n: a.get("n").and_then(Json::as_usize).unwrap_or(0),
+                nnz_pad: a.get("nnz_pad").and_then(Json::as_usize).unwrap_or(0),
+            });
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    /// Smallest bucket fitting (n, nnz) for a scheme; buckets come from
+    /// `python/compile/model.py::BUCKETS`.
+    pub fn pick_bucket(&self, n: usize, nnz: usize, scheme: &str) -> Option<(usize, usize)> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.scheme == scheme && a.n >= n && a.nnz_pad >= nnz)
+            .map(|a| (a.n, a.nnz_pad))
+            .min()
+    }
+}
+
+/// Compiled-executable cache keyed by (phase, scheme, n, nnz_pad).
+pub struct PjrtRuntime {
+    pub client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: HashMap<(String, String, usize, usize), xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client and index the artifact directory.
+    pub fn new(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client, dir, manifest, cache: HashMap::new() })
+    }
+
+    /// Load + compile (cached) one phase executable.
+    pub fn executable(
+        &mut self,
+        phase: &str,
+        scheme: &str,
+        n: usize,
+        nnz_pad: usize,
+    ) -> Result<&xla::PjRtLoadedExecutable> {
+        let key = (phase.to_string(), scheme.to_string(), n, nnz_pad);
+        if !self.cache.contains_key(&key) {
+            let file = format!("{phase}_{scheme}_n{n}_z{nnz_pad}.hlo.txt");
+            let path = self.dir.join(&file);
+            if !path.exists() {
+                bail!("missing artifact {path:?} — run `make artifacts`");
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parse {file}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {file}: {e:?}"))?;
+            self.cache.insert(key.clone(), exe);
+        }
+        Ok(&self.cache[&key])
+    }
+}
+
+fn run_tuple(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+    let result = exe
+        .execute::<xla::Literal>(args)
+        .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+    result.to_tuple().map_err(|e| anyhow!("tuple: {e:?}"))
+}
+
+fn lit_f64(v: &[f64]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+fn to_f64(l: &xla::Literal, n: usize) -> Result<Vec<f64>> {
+    let v = l.to_vec::<f64>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+    Ok(v[..n].to_vec())
+}
+
+fn to_scalar(l: &xla::Literal) -> Result<f64> {
+    l.to_vec::<f64>()
+        .map_err(|e| anyhow!("to_vec: {e:?}"))?
+        .first()
+        .copied()
+        .ok_or_else(|| anyhow!("empty scalar literal"))
+}
+
+/// Executes the JPCG phases through the AOT artifacts: the L3-calls-L2/L1
+/// path of the three-layer architecture.  Vectors are padded into the
+/// selected bucket (padded nnz are (0,0,0.0) no-ops; padded vector lanes
+/// hold zeros and the diagonal pad holds ones, so dots and divides are
+/// unaffected — the contract tested in `python/tests/test_kernels.py`).
+pub struct PjrtExecutor<'rt> {
+    rt: &'rt mut PjrtRuntime,
+    scheme: Scheme,
+    n_real: usize,
+    n_bucket: usize,
+    nnz_bucket: usize,
+    vals: xla::Literal,
+    col: xla::Literal,
+    row: xla::Literal,
+    m: xla::Literal,
+    /// Executable-call counter (metrics / tests).
+    pub calls: u64,
+}
+
+impl<'rt> PjrtExecutor<'rt> {
+    pub fn new(rt: &'rt mut PjrtRuntime, a: &CsrMatrix, scheme: Scheme) -> Result<Self> {
+        let scheme_name = match scheme {
+            Scheme::Fp64 => "fp64",
+            Scheme::MixV3 => "mixv3",
+            other => bail!("no artifacts for scheme {other:?} (fp64 / mixv3 only)"),
+        };
+        let (n_bucket, nnz_bucket) = rt
+            .manifest
+            .pick_bucket(a.n, a.nnz(), scheme_name)
+            .ok_or_else(|| {
+                anyhow!("no bucket fits n={} nnz={} — extend model.BUCKETS", a.n, a.nnz())
+            })?;
+        // COO streams, padded.
+        let nnz = a.nnz();
+        let mut col = vec![0i32; nnz_bucket];
+        let mut row = vec![0i32; nnz_bucket];
+        let mut k = 0usize;
+        for i in 0..a.n {
+            let (cols, _) = a.row(i);
+            for c in cols {
+                col[k] = *c as i32;
+                row[k] = i as i32;
+                k += 1;
+            }
+        }
+        debug_assert_eq!(k, nnz);
+        let vals = match scheme {
+            Scheme::Fp64 => {
+                let mut v = vec![0f64; nnz_bucket];
+                v[..nnz].copy_from_slice(&a.vals);
+                xla::Literal::vec1(&v)
+            }
+            _ => {
+                let mut v = vec![0f32; nnz_bucket];
+                for (dst, src) in v.iter_mut().zip(&a.vals) {
+                    *dst = *src as f32;
+                }
+                xla::Literal::vec1(&v)
+            }
+        };
+        let mut m = vec![1.0f64; n_bucket];
+        m[..a.n].copy_from_slice(&a.jacobi_diag());
+        Ok(Self {
+            rt,
+            scheme,
+            n_real: a.n,
+            n_bucket,
+            nnz_bucket,
+            vals,
+            col: xla::Literal::vec1(&col),
+            row: xla::Literal::vec1(&row),
+            m: lit_f64(&m),
+            calls: 0,
+        })
+    }
+
+    fn scheme_name(&self) -> &'static str {
+        match self.scheme {
+            Scheme::Fp64 => "fp64",
+            _ => "mixv3",
+        }
+    }
+
+    fn pad(&self, v: &[f64]) -> xla::Literal {
+        let mut out = vec![0.0f64; self.n_bucket];
+        out[..v.len()].copy_from_slice(v);
+        lit_f64(&out)
+    }
+
+    fn call(&mut self, phase: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let scheme = self.scheme_name();
+        let exe = self
+            .rt
+            .executable(phase, scheme, self.n_bucket, self.nnz_bucket)?;
+        self.calls += 1;
+        run_tuple(exe, args)
+    }
+}
+
+impl PhaseExecutor for PjrtExecutor<'_> {
+    fn init(&mut self, x0: &[f64], b: &[f64]) -> (Vec<f64>, Vec<f64>, Vec<f64>, f64, f64) {
+        let args = [
+            self.vals.clone(),
+            self.col.clone(),
+            self.row.clone(),
+            self.pad(x0),
+            self.pad(b),
+            self.m.clone(),
+        ];
+        let out = self.call("init", &args).expect("init artifact");
+        let n = self.n_real;
+        (
+            to_f64(&out[0], n).unwrap(),
+            to_f64(&out[1], n).unwrap(),
+            to_f64(&out[2], n).unwrap(),
+            to_scalar(&out[3]).unwrap(),
+            to_scalar(&out[4]).unwrap(),
+        )
+    }
+
+    fn phase1(&mut self, p: &[f64]) -> (Vec<f64>, f64) {
+        let args = [
+            self.vals.clone(),
+            self.col.clone(),
+            self.row.clone(),
+            self.pad(p),
+        ];
+        let out = self.call("phase1", &args).expect("phase1 artifact");
+        (to_f64(&out[0], self.n_real).unwrap(), to_scalar(&out[1]).unwrap())
+    }
+
+    fn phase2(&mut self, r: &[f64], ap: &[f64], alpha: f64) -> (Vec<f64>, f64, f64) {
+        let args = [self.pad(r), self.pad(ap), self.m.clone(), xla::Literal::scalar(alpha)];
+        let out = self.call("phase2", &args).expect("phase2 artifact");
+        (
+            to_f64(&out[0], self.n_real).unwrap(),
+            to_scalar(&out[1]).unwrap(),
+            to_scalar(&out[2]).unwrap(),
+        )
+    }
+
+    fn phase3(
+        &mut self,
+        r: &[f64],
+        p: &[f64],
+        x: &[f64],
+        alpha: f64,
+        beta: f64,
+    ) -> (Vec<f64>, Vec<f64>) {
+        let args = [
+            self.pad(r),
+            self.m.clone(),
+            self.pad(p),
+            self.pad(x),
+            xla::Literal::scalar(alpha),
+            xla::Literal::scalar(beta),
+        ];
+        let out = self.call("phase3", &args).expect("phase3 artifact");
+        (
+            to_f64(&out[0], self.n_real).unwrap(),
+            to_f64(&out[1], self.n_real).unwrap(),
+        )
+    }
+
+    fn update_x_only(&mut self, p: &[f64], x: &[f64], alpha: f64) -> Vec<f64> {
+        // No dedicated artifact: x' = x + alpha p on the coordinator
+        // (scalar-weighted add is controller-side work in Fig. 4's exit
+        // path; n is small relative to the solve).
+        x.iter().zip(p).map(|(xi, pi)| xi + alpha * pi).collect()
+    }
+}
+
+/// Default artifact directory: `$CALLIPEPLA_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("CALLIPEPLA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_and_picks_buckets() {
+        let dir = std::env::temp_dir().join(format!("calli_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts": [
+                {"file": "phase1_mixv3_n1024_z16384.hlo.txt", "phase": "phase1",
+                 "scheme": "mixv3", "n": 1024, "nnz_pad": 16384},
+                {"file": "phase1_mixv3_n4096_z131072.hlo.txt", "phase": "phase1",
+                 "scheme": "mixv3", "n": 4096, "nnz_pad": 131072}
+            ]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(m.pick_bucket(1000, 10_000, "mixv3"), Some((1024, 16384)));
+        assert_eq!(m.pick_bucket(2000, 10_000, "mixv3"), Some((4096, 131072)));
+        assert_eq!(m.pick_bucket(100_000, 10_000, "mixv3"), None);
+        assert_eq!(m.pick_bucket(100, 100, "fp64"), None);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_a_clear_error() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,457 @@
+//! Token-level dataflow simulator with HLS stall semantics.
+//!
+//! Tokens are 64-byte *beats* (8 f64 lanes), matching one channel beat
+//! per cycle (§4.2 rate matching).  Nodes:
+//!
+//! * `MemRead` / `MemWrite` — one beat per cycle, arbitrated round-robin
+//!   per HBM channel (two streams on one channel halve each other's
+//!   rate — the single- vs double-channel effect of §5.7).
+//! * `Pipe` — an II=1 processing pipeline of fixed depth with outputs
+//!   tapped at given stages.  A blocked emission (full FIFO) freezes the
+//!   *entire* pipeline: exactly the HLS behaviour behind the Fig. 7
+//!   deadlock.
+//! * `Dot` — consumes streams, emits nothing; finishes `tail` cycles
+//!   after the last beat (the II=5 Phase-II fold of footnote 1).
+//! * `Spmv` — consumes the x vector, stays busy for the scheduled nnz
+//!   stream length, then streams the output vector.
+//!
+//! The engine detects deadlock as a cycle in which no node progressed
+//! while work remains.
+
+use std::collections::VecDeque;
+
+pub type FifoId = usize;
+pub type NodeId = usize;
+
+#[derive(Debug, Clone)]
+struct Fifo {
+    cap: usize,
+    len: usize,
+}
+
+/// Stall-freeze pipeline: slot index == pipeline stage.
+#[derive(Debug, Clone)]
+struct PipeState {
+    /// slots[s] == true: a token occupies stage s.
+    slots: VecDeque<bool>,
+    consumed: u64,
+}
+
+#[derive(Debug, Clone)]
+enum NodeKind {
+    MemRead { channel: usize, beats: u64, done: u64, out: FifoId },
+    MemWrite { channel: usize, beats: u64, done: u64, input: FifoId },
+    Pipe {
+        ins: Vec<FifoId>,
+        /// (stage, fifo) output taps; stage < depth.
+        outs: Vec<(usize, FifoId)>,
+        depth: usize,
+        expect: u64,
+        state: PipeState,
+    },
+    Dot { ins: Vec<FifoId>, expect: u64, consumed: u64, tail: u64, tail_left: u64 },
+    Spmv { x_in: FifoId, x_beats: u64, busy: u64, out_beats: u64, out: FifoId, consumed: u64, busy_left: u64, emitted: u64 },
+}
+
+#[derive(Debug, Clone)]
+struct Node {
+    name: String,
+    kind: NodeKind,
+}
+
+/// Simulation outcome.
+#[derive(Debug, Clone)]
+pub struct SimStats {
+    pub cycles: u64,
+    /// Per-node completion cycle.
+    pub node_done_at: Vec<u64>,
+}
+
+#[derive(Debug, Clone)]
+pub enum SimError {
+    /// No progress while nodes are unfinished: the Fig. 7 condition.
+    Deadlock { cycle: u64, stuck: Vec<String> },
+    /// Safety valve.
+    CycleLimit(u64),
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::Deadlock { cycle, stuck } => {
+                write!(f, "deadlock at cycle {cycle}: stuck nodes {stuck:?}")
+            }
+            SimError::CycleLimit(c) => write!(f, "cycle limit {c} exceeded"),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
+
+/// Builder + engine.
+#[derive(Debug, Default, Clone)]
+pub struct Dataflow {
+    fifos: Vec<Fifo>,
+    nodes: Vec<Node>,
+    num_channels: usize,
+}
+
+impl Dataflow {
+    pub fn new(num_channels: usize) -> Self {
+        Self { fifos: Vec::new(), nodes: Vec::new(), num_channels }
+    }
+
+    pub fn fifo(&mut self, cap: usize) -> FifoId {
+        self.fifos.push(Fifo { cap, len: 0 });
+        self.fifos.len() - 1
+    }
+
+    pub fn mem_read(&mut self, name: &str, channel: usize, beats: u64, out: FifoId) -> NodeId {
+        assert!(channel < self.num_channels);
+        self.push(name, NodeKind::MemRead { channel, beats, done: 0, out })
+    }
+
+    pub fn mem_write(&mut self, name: &str, channel: usize, beats: u64, input: FifoId) -> NodeId {
+        assert!(channel < self.num_channels);
+        self.push(name, NodeKind::MemWrite { channel, beats, done: 0, input })
+    }
+
+    /// II=1 pipeline of `depth` stages; `outs` are (stage, fifo) taps.
+    pub fn pipe(
+        &mut self,
+        name: &str,
+        ins: Vec<FifoId>,
+        outs: Vec<(usize, FifoId)>,
+        depth: usize,
+        expect: u64,
+    ) -> NodeId {
+        for (s, _) in &outs {
+            assert!(*s < depth, "tap stage beyond pipeline depth");
+        }
+        let state = PipeState { slots: VecDeque::from(vec![false; depth]), consumed: 0 };
+        self.push(name, NodeKind::Pipe { ins, outs, depth, expect, state })
+    }
+
+    /// Dot-product consumer with a fixed post-stream tail.
+    pub fn dot(&mut self, name: &str, ins: Vec<FifoId>, expect: u64, tail: u64) -> NodeId {
+        self.push(name, NodeKind::Dot { ins, expect, consumed: 0, tail, tail_left: tail })
+    }
+
+    /// SpMV: consume `x_beats` of the input vector, stay busy for the
+    /// scheduled nnz-stream cycles, then emit `out_beats`.
+    pub fn spmv(
+        &mut self,
+        name: &str,
+        x_in: FifoId,
+        x_beats: u64,
+        busy: u64,
+        out_beats: u64,
+        out: FifoId,
+    ) -> NodeId {
+        self.push(
+            name,
+            NodeKind::Spmv {
+                x_in,
+                x_beats,
+                busy,
+                out_beats,
+                out,
+                consumed: 0,
+                busy_left: busy,
+                emitted: 0,
+            },
+        )
+    }
+
+    fn push(&mut self, name: &str, kind: NodeKind) -> NodeId {
+        self.nodes.push(Node { name: name.to_string(), kind });
+        self.nodes.len() - 1
+    }
+
+    fn node_finished(&self, n: &Node) -> bool {
+        match &n.kind {
+            NodeKind::MemRead { beats, done, .. } => done >= beats,
+            NodeKind::MemWrite { beats, done, .. } => done >= beats,
+            NodeKind::Pipe { expect, state, .. } => {
+                state.consumed >= *expect && state.slots.iter().all(|s| !s)
+            }
+            NodeKind::Dot { expect, consumed, tail_left, .. } => {
+                consumed >= expect && *tail_left == 0
+            }
+            NodeKind::Spmv { out_beats, emitted, .. } => emitted >= out_beats,
+        }
+    }
+
+    /// Run to completion. Returns cycle statistics or a deadlock report.
+    pub fn run(&mut self, cycle_limit: u64) -> Result<SimStats, SimError> {
+        let mut cycle = 0u64;
+        let n_nodes = self.nodes.len();
+        let mut done_at = vec![0u64; n_nodes];
+        loop {
+            if self.nodes.iter().all(|n| self.node_finished(n)) {
+                return Ok(SimStats { cycles: cycle, node_done_at: done_at });
+            }
+            if cycle >= cycle_limit {
+                return Err(SimError::CycleLimit(cycle_limit));
+            }
+            let progressed = self.step(cycle);
+            for (i, n) in self.nodes.iter().enumerate() {
+                if done_at[i] == 0 && self.node_finished(n) {
+                    done_at[i] = cycle + 1;
+                }
+            }
+            if !progressed {
+                let stuck = self
+                    .nodes
+                    .iter()
+                    .filter(|n| !self.node_finished(n))
+                    .map(|n| n.name.clone())
+                    .collect();
+                return Err(SimError::Deadlock { cycle, stuck });
+            }
+            cycle += 1;
+        }
+    }
+
+    /// One simulated cycle; returns whether any node made progress.
+    fn step(&mut self, cycle: u64) -> bool {
+        let mut progressed = false;
+        // Channel arbitration: one beat per channel per cycle,
+        // round-robin by (cycle + node index) so co-located streams
+        // interleave fairly.
+        let mut channel_used = vec![false; self.num_channels];
+        let order: Vec<usize> = (0..self.nodes.len())
+            .map(|i| (i + cycle as usize) % self.nodes.len())
+            .collect();
+
+        // Phase A: memory reads (producers) — capped one per channel.
+        for &i in &order {
+            if let NodeKind::MemRead { channel, beats, done, out } = self.nodes[i].kind {
+                if done < beats && !channel_used[channel] && self.fifos[out].len < self.fifos[out].cap {
+                    self.fifos[out].len += 1;
+                    if let NodeKind::MemRead { done, .. } = &mut self.nodes[i].kind {
+                        *done += 1;
+                    }
+                    channel_used[channel] = true;
+                    progressed = true;
+                }
+            }
+        }
+
+        // Phase B: compute nodes.
+        for &i in &order {
+            let node = &mut self.nodes[i];
+            match &mut node.kind {
+                NodeKind::Pipe { ins, outs, state, expect, .. } => {
+                    // 1. Emission check: every occupied tap stage must be
+                    // able to write. A single blocked tap freezes the pipe.
+                    let mut blocked = false;
+                    for &(stage, f) in outs.iter() {
+                        if state.slots[stage] && self.fifos[f].len >= self.fifos[f].cap {
+                            blocked = true;
+                            break;
+                        }
+                    }
+                    if blocked {
+                        continue;
+                    }
+                    // Will a new token enter stage 0?
+                    let can_consume = state.consumed < *expect
+                        && ins.iter().all(|&f| self.fifos[f].len > 0);
+                    let any_token = state.slots.iter().any(|&s| s) || can_consume;
+                    if !any_token {
+                        continue;
+                    }
+                    // 2. Emit from taps (token passes the tap stage now).
+                    for &(stage, f) in outs.iter() {
+                        if state.slots[stage] {
+                            self.fifos[f].len += 1;
+                        }
+                    }
+                    // 3. Advance pipeline. A token leaving the last stage
+                    // just retires (all its writes happened at taps).
+                    state.slots.pop_back();
+                    state.slots.push_front(false);
+                    // 4. Consume.
+                    if can_consume {
+                        for &f in ins.iter() {
+                            self.fifos[f].len -= 1;
+                        }
+                        state.consumed += 1;
+                        state.slots[0] = true;
+                    }
+                    progressed = true;
+                }
+                NodeKind::Dot { ins, expect, consumed, tail_left, .. } => {
+                    if *consumed < *expect {
+                        if ins.iter().all(|&f| self.fifos[f].len > 0) {
+                            for &f in ins.iter() {
+                                self.fifos[f].len -= 1;
+                            }
+                            *consumed += 1;
+                            progressed = true;
+                        }
+                    } else if *tail_left > 0 {
+                        *tail_left -= 1;
+                        progressed = true;
+                    }
+                }
+                NodeKind::Spmv {
+                    x_in,
+                    x_beats,
+                    busy_left,
+                    out_beats,
+                    out,
+                    consumed,
+                    emitted,
+                    ..
+                } => {
+                    // x load and nnz streaming overlap (prefetch, §4.2);
+                    // output starts once both complete.
+                    let mut acted = false;
+                    if *consumed < *x_beats && self.fifos[*x_in].len > 0 {
+                        self.fifos[*x_in].len -= 1;
+                        *consumed += 1;
+                        acted = true;
+                    }
+                    if *busy_left > 0 {
+                        *busy_left -= 1;
+                        acted = true;
+                    }
+                    if *consumed >= *x_beats
+                        && *busy_left == 0
+                        && *emitted < *out_beats
+                        && self.fifos[*out].len < self.fifos[*out].cap
+                    {
+                        self.fifos[*out].len += 1;
+                        *emitted += 1;
+                        acted = true;
+                    }
+                    progressed |= acted;
+                }
+                _ => {}
+            }
+        }
+
+        // Phase C: memory writes (consumers) — capped one per channel.
+        for &i in &order {
+            if let NodeKind::MemWrite { channel, beats, done, input } = self.nodes[i].kind {
+                if done < beats && !channel_used[channel] && self.fifos[input].len > 0 {
+                    self.fifos[input].len -= 1;
+                    if let NodeKind::MemWrite { done, .. } = &mut self.nodes[i].kind {
+                        *done += 1;
+                    }
+                    channel_used[channel] = true;
+                    progressed = true;
+                }
+            }
+        }
+        progressed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// mem -> pipe -> mem: cycles ~ beats + pipeline depth.
+    #[test]
+    fn straight_pipe_latency() {
+        let mut df = Dataflow::new(2);
+        let a = df.fifo(4);
+        let b = df.fifo(4);
+        df.mem_read("rd", 0, 100, a);
+        df.pipe("axpy", vec![a], vec![(2, b)], 3, 100);
+        df.mem_write("wr", 1, 100, b);
+        let stats = df.run(10_000).unwrap();
+        assert!((100..120).contains(&stats.cycles), "cycles={}", stats.cycles);
+    }
+
+    /// Two streams sharing one channel run at half rate; on separate
+    /// channels they overlap — the §5.7 single/double channel effect.
+    #[test]
+    fn channel_contention_halves_rate() {
+        let run = |same_channel: bool| {
+            let mut df = Dataflow::new(2);
+            let a = df.fifo(4);
+            let b = df.fifo(4);
+            df.mem_read("rd_v", 0, 200, a);
+            df.mem_read("rd_w", if same_channel { 0 } else { 1 }, 200, b);
+            df.dot("sink", vec![a, b], 200, 0);
+            df.run(100_000).unwrap().cycles
+        };
+        let contended = run(true);
+        let parallel = run(false);
+        assert!(contended >= 2 * parallel - 10, "contended={contended} parallel={parallel}");
+    }
+
+    /// Fig. 7(a): shallow fast FIFO + deep pipeline deadlocks.
+    #[test]
+    fn fig7_deadlock_with_shallow_fifo() {
+        let depth_l = 33;
+        let mut df = Dataflow::new(2);
+        let r_in = df.fifo(4);
+        let r_fast = df.fifo(2); // default depth 2: deadlocks
+        let z_slow = df.fifo(2);
+        df.mem_read("rd_r", 0, 100, r_in);
+        // M5: forwards r at stage 0, emits z at stage L-1.
+        df.pipe("M5", vec![r_in], vec![(0, r_fast), (depth_l - 1, z_slow)], depth_l, 100);
+        df.dot("M6", vec![r_fast, z_slow], 100, 0);
+        match df.run(100_000) {
+            Err(SimError::Deadlock { .. }) => {}
+            other => panic!("expected deadlock, got {other:?}"),
+        }
+    }
+
+    /// Fig. 7(b): fast FIFO depth >= L+1 resolves the deadlock.
+    #[test]
+    fn fig7_resolved_with_depth_l_plus_1() {
+        let depth_l = 33;
+        let mut df = Dataflow::new(2);
+        let r_in = df.fifo(4);
+        let r_fast = df.fifo(depth_l + 1);
+        let z_slow = df.fifo(2);
+        df.mem_read("rd_r", 0, 100, r_in);
+        df.pipe("M5", vec![r_in], vec![(0, r_fast), (depth_l - 1, z_slow)], depth_l, 100);
+        df.dot("M6", vec![r_fast, z_slow], 100, 0);
+        let stats = df.run(100_000).unwrap();
+        assert!(stats.cycles < 200, "cycles={}", stats.cycles);
+    }
+
+    /// Dot tail is charged after the stream ends (footnote 1).
+    #[test]
+    fn dot_tail_extends_completion() {
+        let mut df = Dataflow::new(1);
+        let a = df.fifo(4);
+        df.mem_read("rd", 0, 50, a);
+        df.dot("dot", vec![a], 50, 40);
+        let stats = df.run(10_000).unwrap();
+        assert!(stats.cycles >= 90, "cycles={}", stats.cycles);
+    }
+
+    /// SpMV node: output held until busy window and x load both finish.
+    #[test]
+    fn spmv_waits_for_busy_window() {
+        let mut df = Dataflow::new(2);
+        let x = df.fifo(8);
+        let y = df.fifo(8);
+        df.mem_read("rd_x", 0, 10, x);
+        df.spmv("M1", x, 10, 500, 10, y);
+        df.mem_write("wr_y", 1, 10, y);
+        let stats = df.run(10_000).unwrap();
+        assert!(stats.cycles >= 500, "cycles={}", stats.cycles);
+        assert!(stats.cycles < 600, "cycles={}", stats.cycles);
+    }
+
+    /// Cycle limit trips instead of hanging.
+    #[test]
+    fn cycle_limit_guards() {
+        let mut df = Dataflow::new(1);
+        let a = df.fifo(1);
+        df.mem_read("rd", 0, 10, a); // no consumer: fills and stalls
+        match df.run(100) {
+            Err(SimError::Deadlock { .. }) | Err(SimError::CycleLimit(_)) => {}
+            other => panic!("expected stall, got {other:?}"),
+        }
+    }
+}

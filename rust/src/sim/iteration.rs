@@ -1,0 +1,420 @@
+//! Per-iteration cycle model: builds the Fig. 5 phase graphs on the
+//! dataflow engine and turns (matrix, accelerator config) into
+//! cycles/iteration and solver seconds.
+//!
+//! Channel map (a U280 has 32): 0-15 nnz streams, 16 the Jacobi diagonal
+//! M, then one or two channels per long vector depending on the §5.7
+//! channel mode.  The VSR flag switches between the Fig. 5 reuse graphs
+//! and the store-everything baseline (§5.5), which also serializes the
+//! per-module memory round-trips the way XcgSolver's kernel-sequential
+//! execution does.
+
+use crate::hbm::{ChannelMode, HbmConfig};
+use crate::precision::Scheme;
+use crate::sparse::{NUM_CHANNELS, PES_PER_CHANNEL};
+
+use super::dataflow::{Dataflow, SimError};
+
+/// f64 lanes per 64-byte beat.
+const LANES: u64 = 8;
+/// M5 left-divide pipeline depth (Fig. 7: L = 33).
+pub const M5_DEPTH: usize = 33;
+/// Dot-product Phase-II tail: II=5 over the 8-lane delay buffer.
+pub const DOT_TAIL: u64 = 5 * 8;
+/// Per-phase control overhead (instruction issue + FSM transitions).
+pub const PHASE_OVERHEAD: u64 = 32;
+
+/// Simulation-facing accelerator description.
+#[derive(Debug, Clone, Copy)]
+pub struct AccelSimConfig {
+    pub hbm: HbmConfig,
+    /// Vector streaming reuse + decentralized scheduling (§5) on?
+    pub vsr: bool,
+    /// SpMV precision scheme (drives nnz stream bytes).
+    pub scheme: Scheme,
+    /// nnz-stream padding factor from the hazard scheduler
+    /// (sparse::NnzStream::padding_factor, or an estimate).
+    pub nnz_padding: f64,
+    /// Fixed overhead per module *invocation* (kernel-sequential designs
+    /// like XcgSolver pay this 8x per iteration; streaming designs ~0).
+    pub invoke_overhead: u64,
+}
+
+impl AccelSimConfig {
+    pub fn callipepla() -> Self {
+        Self {
+            hbm: HbmConfig::callipepla(),
+            vsr: true,
+            scheme: Scheme::MixV3,
+            nnz_padding: 1.06,
+            invoke_overhead: 0,
+        }
+    }
+
+    pub fn serpenscg() -> Self {
+        Self {
+            hbm: HbmConfig::serpenscg(),
+            vsr: false,
+            scheme: Scheme::Fp64,
+            nnz_padding: 1.06,
+            // Without decentralized scheduling the central controller
+            // sequences each module's memory-to-memory pass; the
+            // per-pass turnaround is what VSR + the FSMs remove.
+            // Calibrated against Table 4 M4: ~98 us/iter at n=10605.
+            invoke_overhead: 1300,
+        }
+    }
+
+    pub fn xcgsolver() -> Self {
+        Self {
+            hbm: HbmConfig::xcgsolver(),
+            vsr: false,
+            scheme: Scheme::Fp64,
+            // FP-add-latency zero padding (§7.5.1) costs more slots.
+            nnz_padding: 1.35,
+            // Vitis kernel-sequential invocation overhead, per module
+            // (calibrated: Table 4 M4 gives ~98 us/iter at n=10605).
+            invoke_overhead: 1300,
+        }
+    }
+}
+
+/// Cycle breakdown of one JPCG iteration.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IterationBreakdown {
+    pub phase1: u64,
+    pub phase2: u64,
+    pub phase3: u64,
+    pub total: u64,
+}
+
+fn beats(n: usize) -> u64 {
+    (n as u64).div_ceil(LANES)
+}
+
+/// Scheduled SpMV busy cycles: nnz spread over 16 channels x 8 PEs with
+/// the hazard-padding factor; FP64 nnz occupy two 64-bit slots (§2.3.3),
+/// halving effective PE throughput.
+pub fn spmv_busy_cycles(nnz: usize, scheme: Scheme, padding: f64) -> u64 {
+    let slot_factor = if scheme.matrix_f32() { 1.0 } else { 2.0 };
+    let lanes = (NUM_CHANNELS * PES_PER_CHANNEL) as f64;
+    (nnz as f64 * padding * slot_factor / lanes).ceil() as u64
+}
+
+// Channel ids.
+const CH_M: usize = 16;
+const CH_AP: usize = 17;
+const CH_AP2: usize = 18;
+const CH_P: usize = 19;
+const CH_P2: usize = 20;
+const CH_X: usize = 21;
+const CH_X2: usize = 22;
+const CH_R: usize = 23;
+const CH_R2: usize = 24;
+const TOTAL_CH: usize = 32;
+
+/// Second channel of a pair under the §5.7 ping-pong, or the same
+/// channel when the build is single-channel.
+fn wr_ch(cfg: &AccelSimConfig, rd: usize, pair: usize) -> usize {
+    match cfg.hbm.vector_mode {
+        ChannelMode::Double => pair,
+        ChannelMode::Single => rd,
+    }
+}
+
+const FIFO_DEPTH: usize = 64; // default stream FIFO depth
+const LIMIT: u64 = 500_000_000;
+
+/// Phase-1 with VSR: M1 (SpMV) streams ap into a fork feeding both M2
+/// (dot-alpha) and the ap write-back; p read twice (M1, then M2).
+fn phase1_vsr(cfg: &AccelSimConfig, n: usize, nnz: usize) -> u64 {
+    let nb = beats(n);
+    let busy = spmv_busy_cycles(nnz, cfg.scheme, cfg.nnz_padding);
+    let mut df = Dataflow::new(TOTAL_CH);
+    let p1 = df.fifo(FIFO_DEPTH);
+    let ap_raw = df.fifo(FIFO_DEPTH);
+    let ap_dot = df.fifo(FIFO_DEPTH);
+    let ap_wr = df.fifo(FIFO_DEPTH);
+    let p2 = df.fifo(FIFO_DEPTH);
+    df.mem_read("rd_p_m1", CH_P, nb, p1);
+    df.spmv("M1", p1, nb, busy, nb, ap_raw);
+    // VecCtrl-ap forks the stream: one copy to M2, one to memory.
+    df.pipe("fork_ap", vec![ap_raw], vec![(0, ap_dot), (0, ap_wr)], 1, nb);
+    df.mem_read("rd_p_m2", CH_P2, nb, p2);
+    df.dot("M2", vec![p2, ap_dot], nb, DOT_TAIL);
+    df.mem_write("wr_ap", wr_ch(cfg, CH_AP, CH_AP2), nb, ap_wr);
+    run_phase(df)
+}
+
+/// Phase-2 with VSR: the consume-and-send chain M4 -> M5 -> M6 -> M8 on
+/// one memory read of r; M5's z FIFO is deep (L+1) per §5.6.
+fn phase2_vsr(_cfg: &AccelSimConfig, n: usize) -> u64 {
+    let nb = beats(n);
+    let mut df = Dataflow::new(TOTAL_CH);
+    let r_in = df.fifo(FIFO_DEPTH);
+    let ap_in = df.fifo(FIFO_DEPTH);
+    let m_in = df.fifo(FIFO_DEPTH);
+    let r_m4 = df.fifo(FIFO_DEPTH);
+    let r_m5 = df.fifo(M5_DEPTH + 1); // fast FIFO, Fig. 7(b)
+    let z_m5 = df.fifo(FIFO_DEPTH);
+    let r_m6 = df.fifo(FIFO_DEPTH);
+    df.mem_read("rd_r", CH_R, nb, r_in);
+    df.mem_read("rd_ap", CH_AP, nb, ap_in);
+    df.mem_read("rd_m", CH_M, nb, m_in);
+    // M4: r' = r - alpha*ap, forwards r' (depth ~ FP mul-add pipe).
+    df.pipe("M4", vec![r_in, ap_in], vec![(7, r_m4)], 8, nb);
+    // M5: consume-and-send r' fast, z after the divide pipeline.
+    df.pipe("M5", vec![r_m4, m_in], vec![(0, r_m5), (M5_DEPTH - 1, z_m5)], M5_DEPTH, nb);
+    // M6: dot rz, forwarding r to M8 (tail folded into M8's).
+    df.pipe("M6", vec![r_m5, z_m5], vec![(4, r_m6)], 5, nb);
+    df.dot("M8", vec![r_m6], nb, DOT_TAIL);
+    run_phase(df)
+}
+
+/// Phase-3 with VSR: M4+M5 recompute z (r, ap, M re-read), M7 updates p
+/// (streamed on to M3 and memory), M3 updates x.
+fn phase3_vsr(cfg: &AccelSimConfig, n: usize) -> u64 {
+    let nb = beats(n);
+    let mut df = Dataflow::new(TOTAL_CH);
+    let r_in = df.fifo(FIFO_DEPTH);
+    let ap_in = df.fifo(FIFO_DEPTH);
+    let m_in = df.fifo(FIFO_DEPTH);
+    let p_in = df.fifo(FIFO_DEPTH);
+    let x_in = df.fifo(FIFO_DEPTH);
+    let r_m4 = df.fifo(FIFO_DEPTH);
+    let r_wr = df.fifo(M5_DEPTH + 1);
+    let z_m5 = df.fifo(FIFO_DEPTH);
+    let p_fork_in = df.fifo(FIFO_DEPTH);
+    let p_m3 = df.fifo(FIFO_DEPTH);
+    let p_wr = df.fifo(FIFO_DEPTH);
+    let x_wr = df.fifo(FIFO_DEPTH);
+    df.mem_read("rd_r", CH_R, nb, r_in);
+    df.mem_read("rd_ap", CH_AP, nb, ap_in);
+    df.mem_read("rd_m", CH_M, nb, m_in);
+    df.mem_read("rd_p", CH_P, nb, p_in);
+    df.mem_read("rd_x", CH_X, nb, x_in);
+    df.pipe("M4", vec![r_in, ap_in], vec![(7, r_m4)], 8, nb);
+    // M5 recompute: r forwarded to memory write, z into M7.
+    df.pipe("M5", vec![r_m4, m_in], vec![(0, r_wr), (M5_DEPTH - 1, z_m5)], M5_DEPTH, nb);
+    df.mem_write("wr_r", wr_ch(cfg, CH_R, CH_R2), nb, r_wr);
+    // M7: p' = z + beta p; forks to M3 and memory.
+    df.pipe("M7", vec![z_m5, p_in], vec![(7, p_fork_in)], 8, nb);
+    df.pipe("fork_p", vec![p_fork_in], vec![(0, p_m3), (0, p_wr)], 1, nb);
+    df.mem_write("wr_p", wr_ch(cfg, CH_P, CH_P2), nb, p_wr);
+    // M3: x' = x + alpha p_old ... the stream M7 forwards carries the
+    // old-p lane alongside; modelled as consuming the forked stream.
+    df.pipe("M3", vec![x_in, p_m3], vec![(7, x_wr)], 8, nb);
+    df.mem_write("wr_x", wr_ch(cfg, CH_X, CH_X2), nb, x_wr);
+    run_phase(df)
+}
+
+/// Without VSR (§5.5 baseline): every module is its own memory-to-memory
+/// pass, serialized (XcgSolver's kernel-sequential execution; also the
+/// SerpensCG data path, which has the ISA but not the reuse graph).
+fn iteration_no_vsr(cfg: &AccelSimConfig, n: usize, nnz: usize) -> IterationBreakdown {
+    let nb = beats(n);
+    let busy = spmv_busy_cycles(nnz, cfg.scheme, cfg.nnz_padding);
+    let ov = cfg.invoke_overhead;
+
+    // Phase 1: M1 (rd p -> wr ap), then M2 (rd p, rd ap -> scalar).
+    let m1 = {
+        let mut df = Dataflow::new(TOTAL_CH);
+        let p = df.fifo(FIFO_DEPTH);
+        let ap = df.fifo(FIFO_DEPTH);
+        df.mem_read("rd_p", CH_P, nb, p);
+        df.spmv("M1", p, nb, busy, nb, ap);
+        df.mem_write("wr_ap", CH_AP, nb, ap);
+        run_phase(df)
+    };
+    let m2 = {
+        let mut df = Dataflow::new(TOTAL_CH);
+        let p = df.fifo(FIFO_DEPTH);
+        let ap = df.fifo(FIFO_DEPTH);
+        df.mem_read("rd_p", CH_P, nb, p);
+        df.mem_read("rd_ap", CH_AP, nb, ap);
+        df.dot("M2", vec![p, ap], nb, DOT_TAIL);
+        run_phase(df)
+    };
+    let phase1 = m1 + m2 + 2 * ov;
+
+    // Phase 2: M4 (rd r, rd ap -> wr r), M5 (rd r, rd M -> wr z),
+    // M6 (rd r, rd z -> scalar), M8 (rd r -> scalar).
+    let two_read_map = |ch_a: usize, ch_b: usize, ch_o: usize, depth: usize| {
+        let mut df = Dataflow::new(TOTAL_CH);
+        let a = df.fifo(FIFO_DEPTH);
+        let b = df.fifo(FIFO_DEPTH);
+        let o = df.fifo(FIFO_DEPTH);
+        df.mem_read("rd_a", ch_a, nb, a);
+        df.mem_read("rd_b", ch_b, nb, b);
+        df.pipe("map", vec![a, b], vec![(depth - 1, o)], depth, nb);
+        df.mem_write("wr_o", ch_o, nb, o);
+        run_phase(df)
+    };
+    // z lives in ap's spare channel in the no-VSR design (it must be
+    // stored somewhere; the paper's point is it costs a channel).
+    let ch_z = CH_AP2;
+    let m4 = two_read_map(CH_R, CH_AP, CH_R, 8);
+    let m5 = two_read_map(CH_R, CH_M, ch_z, M5_DEPTH);
+    let m6 = {
+        let mut df = Dataflow::new(TOTAL_CH);
+        let r = df.fifo(FIFO_DEPTH);
+        let z = df.fifo(FIFO_DEPTH);
+        df.mem_read("rd_r", CH_R, nb, r);
+        df.mem_read("rd_z", ch_z, nb, z);
+        df.dot("M6", vec![r, z], nb, DOT_TAIL);
+        run_phase(df)
+    };
+    let m8 = {
+        let mut df = Dataflow::new(TOTAL_CH);
+        let r = df.fifo(FIFO_DEPTH);
+        df.mem_read("rd_r", CH_R, nb, r);
+        df.dot("M8", vec![r], nb, DOT_TAIL);
+        run_phase(df)
+    };
+    let phase2 = m4 + m5 + m6 + m8 + 4 * ov;
+
+    // Phase 3: M7 (rd z, rd p -> wr p), M3 (rd p, rd x -> wr x).
+    let m7 = two_read_map(ch_z, CH_P, CH_P, 8);
+    let m3 = two_read_map(CH_P, CH_X, CH_X, 8);
+    let phase3 = m7 + m3 + 2 * ov;
+
+    IterationBreakdown { phase1, phase2, phase3, total: phase1 + phase2 + phase3 }
+}
+
+fn run_phase(mut df: Dataflow) -> u64 {
+    match df.run(LIMIT) {
+        Ok(stats) => stats.cycles,
+        Err(SimError::Deadlock { cycle, stuck }) => {
+            panic!("phase graph deadlocked at {cycle}: {stuck:?}")
+        }
+        Err(e) => panic!("phase simulation failed: {e}"),
+    }
+}
+
+/// Cycles for one JPCG iteration under a configuration.
+pub fn iteration_cycles(cfg: &AccelSimConfig, n: usize, nnz: usize) -> IterationBreakdown {
+    if cfg.vsr {
+        let p1 = phase1_vsr(cfg, n, nnz) + PHASE_OVERHEAD;
+        let p2 = phase2_vsr(cfg, n) + PHASE_OVERHEAD;
+        let p3 = phase3_vsr(cfg, n) + PHASE_OVERHEAD;
+        IterationBreakdown { phase1: p1, phase2: p2, phase3: p3, total: p1 + p2 + p3 }
+    } else {
+        let mut b = iteration_no_vsr(cfg, n, nnz);
+        b.phase1 += PHASE_OVERHEAD;
+        b.phase2 += PHASE_OVERHEAD;
+        b.phase3 += PHASE_OVERHEAD;
+        b.total = b.phase1 + b.phase2 + b.phase3;
+        b
+    }
+}
+
+/// FPGA solver seconds: per-iteration cycles x iteration count, plus the
+/// Alg. 1 init pass (~ one iteration).
+pub fn solver_seconds(cfg: &AccelSimConfig, n: usize, nnz: usize, iters: u32) -> f64 {
+    let per_iter = iteration_cycles(cfg, n, nnz).total;
+    let cycles = per_iter as f64 * (iters as f64 + 1.0);
+    cycles * cfg.hbm.cycle_time()
+}
+
+// --------------------------------------------------------------------
+// A100 GPU analytic model (§7.2.2's explanation, quantified).
+// --------------------------------------------------------------------
+
+/// A100 JPCG iteration time: 8 kernel launches (cuSPARSE SpMV + 3 cuBLAS
+/// dots + 3 axpy-class + 1 copy/scal), each bandwidth-bound with a fixed
+/// launch overhead — the small-matrix floor the paper observes.
+pub fn gpu_iteration_seconds(n: usize, nnz: usize) -> f64 {
+    const BW: f64 = 1.56e12; // Table 2
+    const LAUNCH: f64 = 6.0e-6; // CUDA launch + sync overhead
+    let vec_bytes = 8.0 * n as f64;
+    // cuSPARSE CSR FP64 SpMV: vals 8B + col 4B per nnz, row ptr, x + y.
+    let spmv = LAUNCH + (12.0 * nnz as f64 + 3.0 * vec_bytes) / BW;
+    let dot = LAUNCH + 2.0 * vec_bytes / BW;
+    let axpy = LAUNCH + 3.0 * vec_bytes / BW;
+    spmv + 3.0 * dot + 4.0 * axpy
+}
+
+/// A100 solver seconds.
+pub fn gpu_solver_seconds(n: usize, nnz: usize, iters: u32) -> f64 {
+    gpu_iteration_seconds(n, nnz) * (iters as f64 + 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const N: usize = 16_384;
+    const NNZ: usize = 320_000;
+
+    #[test]
+    fn vsr_phases_complete_without_deadlock() {
+        let cfg = AccelSimConfig::callipepla();
+        let b = iteration_cycles(&cfg, N, NNZ);
+        assert!(b.phase1 > 0 && b.phase2 > 0 && b.phase3 > 0);
+        assert_eq!(b.total, b.phase1 + b.phase2 + b.phase3);
+    }
+
+    #[test]
+    fn vsr_beats_no_vsr() {
+        // §5.5: 14 vs 19 accesses + overlap => fewer cycles per iteration.
+        let cal = AccelSimConfig::callipepla();
+        let mut no_vsr = cal;
+        no_vsr.vsr = false;
+        let with = iteration_cycles(&cal, N, NNZ).total;
+        let without = iteration_cycles(&no_vsr, N, NNZ).total;
+        assert!(
+            (without as f64) > 1.3 * with as f64,
+            "with={with} without={without}"
+        );
+    }
+
+    #[test]
+    fn mixed_precision_halves_spmv_cycles() {
+        let fp64 = spmv_busy_cycles(1_000_000, Scheme::Fp64, 1.0) as i64;
+        let mixed = spmv_busy_cycles(1_000_000, Scheme::MixV3, 1.0) as i64;
+        assert!((fp64 - 2 * mixed).abs() <= 2, "fp64={fp64} mixed={mixed}");
+    }
+
+    #[test]
+    fn callipepla_faster_than_xcgsolver_per_iteration() {
+        let cal = AccelSimConfig::callipepla();
+        let xcg = AccelSimConfig::xcgsolver();
+        let tc = iteration_cycles(&cal, N, NNZ).total as f64 * cal.hbm.cycle_time();
+        let tx = iteration_cycles(&xcg, N, NNZ).total as f64 * xcg.hbm.cycle_time();
+        let speedup = tx / tc;
+        // Table 4 geomean per-iteration gap is ~2-4x (the rest of the
+        // solver-time gap comes from iteration counts).
+        assert!(speedup > 1.5 && speedup < 8.0, "speedup={speedup}");
+    }
+
+    #[test]
+    fn gpu_has_launch_floor_on_small_problems() {
+        // ~8 launches x 6us: small problems cannot go below ~48us/iter.
+        let t_small = gpu_iteration_seconds(3_000, 100_000);
+        assert!(t_small > 45e-6, "t={t_small}");
+        // Large problems are bandwidth-dominated.
+        let t_large = gpu_iteration_seconds(1_500_000, 100_000_000);
+        assert!(t_large > 5.0 * t_small, "t_large={t_large}");
+    }
+
+    #[test]
+    fn gpu_vs_fpga_crossover_matches_table4() {
+        // Small matrix (M7-like): Callipepla wins.
+        let cal = AccelSimConfig::callipepla();
+        let fpga_small = solver_seconds(&cal, 2_910, 174_296, 1_705);
+        let gpu_small = gpu_solver_seconds(2_910, 174_296, 1_716);
+        assert!(fpga_small < gpu_small, "fpga={fpga_small} gpu={gpu_small}");
+        // Large matrix (M33-like): A100 wins.
+        let fpga_large = solver_seconds(&cal, 1_437_960, 60_236_322, 2_053);
+        let gpu_large = gpu_solver_seconds(1_437_960, 60_236_322, 2_052);
+        assert!(gpu_large < fpga_large, "fpga={fpga_large} gpu={gpu_large}");
+    }
+
+    #[test]
+    fn solver_seconds_scale_with_iterations() {
+        let cfg = AccelSimConfig::callipepla();
+        let t1 = solver_seconds(&cfg, N, NNZ, 100);
+        let t2 = solver_seconds(&cfg, N, NNZ, 200);
+        assert!((t2 / t1 - 2.0).abs() < 0.02);
+    }
+}

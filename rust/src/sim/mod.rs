@@ -1,0 +1,15 @@
+//! The time plane: a cycle-approximate discrete-event simulator of the
+//! Callipepla accelerator (DESIGN.md §5).
+//!
+//! [`dataflow`] is a token-level FIFO/pipeline engine with the exact
+//! stall semantics of an HLS dataflow design — a write to a full FIFO
+//! freezes the whole pipeline, which is what makes the Fig. 7 deadlock
+//! reproducible (and the §5.6 depth rule checkable).  [`iteration`]
+//! builds the Fig. 5 per-phase graphs on top of it and produces
+//! cycles-per-iteration for each accelerator configuration.
+
+pub mod dataflow;
+pub mod iteration;
+
+pub use dataflow::{Dataflow, FifoId, NodeId, SimError, SimStats};
+pub use iteration::{iteration_cycles, solver_seconds, AccelSimConfig, IterationBreakdown};

@@ -1,0 +1,14 @@
+//! Native JPCG solver (Algorithm 1) — the *value plane* reference.
+//!
+//! This is the same phase-split iteration the Rust coordinator drives
+//! through the PJRT artifacts, but with the numerics inlined so the full
+//! 36-matrix suite (Tables 4/5/7, Fig. 9) runs fast.  Every knob that
+//! changes floating-point behaviour on the real accelerators is
+//! reproduced: the SpMV precision scheme (Table 1), the accumulator
+//! model (§7.5.1), and the delay-buffer dot product (footnote 1).
+
+pub mod jpcg;
+pub mod trace;
+
+pub use jpcg::{jpcg_solve, DotKind, SolveOptions, SolveResult};
+pub use trace::ResidualTrace;

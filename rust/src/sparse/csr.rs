@@ -1,0 +1,224 @@
+//! COO / CSR sparse matrices (square, FP64 master copies).
+//!
+//! The FP64 copy is the single source of truth; precision schemes
+//! (Table 1) derive their f32 views on demand via
+//! [`CsrMatrix::vals_f32`] so every scheme sees *the same* rounding of
+//! the same matrix — exactly what the FPGA does when it stores the nnz
+//! stream once in a given precision.
+
+/// Triplet-form sparse matrix; the assembly format for generators and
+/// Matrix-Market ingestion.
+#[derive(Debug, Clone, Default)]
+pub struct CooMatrix {
+    pub n: usize,
+    pub rows: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f64>,
+}
+
+impl CooMatrix {
+    pub fn new(n: usize) -> Self {
+        Self { n, rows: Vec::new(), cols: Vec::new(), vals: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: usize, c: usize, v: f64) {
+        debug_assert!(r < self.n && c < self.n);
+        self.rows.push(r as u32);
+        self.cols.push(c as u32);
+        self.vals.push(v);
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Sort by (row, col), summing duplicates, and convert to CSR.
+    pub fn to_csr(&self) -> CsrMatrix {
+        let mut order: Vec<u32> = (0..self.nnz() as u32).collect();
+        order.sort_unstable_by_key(|&i| {
+            (self.rows[i as usize], self.cols[i as usize])
+        });
+        let mut indptr = vec![0u32; self.n + 1];
+        let mut indices = Vec::with_capacity(self.nnz());
+        let mut vals: Vec<f64> = Vec::with_capacity(self.nnz());
+        let (mut last_r, mut last_c) = (u32::MAX, u32::MAX);
+        for &i in &order {
+            let (r, c, v) = (
+                self.rows[i as usize],
+                self.cols[i as usize],
+                self.vals[i as usize],
+            );
+            if r == last_r && c == last_c {
+                *vals.last_mut().unwrap() += v; // merge duplicate
+            } else {
+                indptr[r as usize + 1] += 1;
+                indices.push(c);
+                vals.push(v);
+                (last_r, last_c) = (r, c);
+            }
+        }
+        for i in 0..self.n {
+            indptr[i + 1] += indptr[i];
+        }
+        CsrMatrix { n: self.n, indptr, indices, vals }
+    }
+}
+
+/// Compressed-sparse-row matrix, FP64 values.
+#[derive(Debug, Clone)]
+pub struct CsrMatrix {
+    pub n: usize,
+    /// `indptr[i]..indptr[i+1]` is the index range of row `i`. Length n+1.
+    pub indptr: Vec<u32>,
+    pub indices: Vec<u32>,
+    pub vals: Vec<f64>,
+}
+
+impl CsrMatrix {
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Row range helper.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let (s, e) = (self.indptr[i] as usize, self.indptr[i + 1] as usize);
+        (&self.indices[s..e], &self.vals[s..e])
+    }
+
+    /// Diagonal of A — the Jacobi preconditioner M (Alg. 1 input 2).
+    /// Missing/zero diagonal entries are mapped to 1.0 so the left-divide
+    /// module is always well defined (same guard XcgSolver applies).
+    pub fn jacobi_diag(&self) -> Vec<f64> {
+        let mut d = vec![1.0; self.n];
+        for i in 0..self.n {
+            let (cols, vals) = self.row(i);
+            for (c, v) in cols.iter().zip(vals) {
+                if *c as usize == i && *v != 0.0 {
+                    d[i] = *v;
+                }
+            }
+        }
+        d
+    }
+
+    /// f32 view of the value stream: what HBM actually holds under
+    /// Mix-V1/V2/V3 (Table 1).
+    pub fn vals_f32(&self) -> Vec<f32> {
+        self.vals.iter().map(|&v| v as f32).collect()
+    }
+
+    /// y = A x, straightforward FP64 reference (the "CPU golden" of
+    /// Table 7).
+    pub fn spmv_f64(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.n);
+        debug_assert_eq!(y.len(), self.n);
+        // Hot path (§Perf): bounds checks lifted out of the gather loop;
+        // indices are validated at construction.
+        for i in 0..self.n {
+            let (s, e) = (self.indptr[i] as usize, self.indptr[i + 1] as usize);
+            let mut acc = 0.0f64;
+            for k in s..e {
+                // SAFETY: k < nnz and indices[k] < n by CSR construction.
+                unsafe {
+                    acc += *self.vals.get_unchecked(k)
+                        * x.get_unchecked(*self.indices.get_unchecked(k) as usize);
+                }
+            }
+            y[i] = acc;
+        }
+    }
+
+    /// Symmetry check (structure + values), used by tests and the mtx
+    /// loader: JPCG requires a symmetric matrix.
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        for i in 0..self.n {
+            let (cols, vals) = self.row(i);
+            for (c, v) in cols.iter().zip(vals) {
+                let j = *c as usize;
+                let (jc, jv) = self.row(j);
+                match jc.binary_search(&(i as u32)) {
+                    Ok(k) => {
+                        if (jv[k] - v).abs() > tol * v.abs().max(1.0) {
+                            return false;
+                        }
+                    }
+                    Err(_) => return false,
+                }
+            }
+        }
+        true
+    }
+
+    /// Bytes of one full matrix pass under a given nnz value width —
+    /// feeds the HBM traffic model. 64-bit packed nnz for f32 values
+    /// (14-bit col + 18-bit row + f32, §6), 128-bit for f64 (§2.3.3).
+    pub fn stream_bytes(&self, fp64_vals: bool) -> u64 {
+        let per = if fp64_vals { 16 } else { 8 };
+        self.nnz() as u64 * per
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tri(n: usize) -> CsrMatrix {
+        let mut coo = CooMatrix::new(n);
+        for i in 0..n {
+            coo.push(i, i, 2.0);
+            if i > 0 {
+                coo.push(i, i - 1, -1.0);
+            }
+            if i + 1 < n {
+                coo.push(i, i + 1, -1.0);
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn coo_to_csr_sorts_and_merges() {
+        let mut coo = CooMatrix::new(3);
+        coo.push(2, 0, 1.0);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 0, 2.0); // duplicate -> merged
+        coo.push(1, 2, 5.0);
+        let csr = coo.to_csr();
+        assert_eq!(csr.nnz(), 3);
+        assert_eq!(csr.row(0), (&[0u32][..], &[3.0][..]));
+        assert_eq!(csr.row(1), (&[2u32][..], &[5.0][..]));
+        assert_eq!(csr.row(2), (&[0u32][..], &[1.0][..]));
+    }
+
+    #[test]
+    fn spmv_tridiagonal() {
+        let a = tri(4);
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let mut y = [0.0; 4];
+        a.spmv_f64(&x, &mut y);
+        assert_eq!(y, [0.0, 0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn jacobi_diag_extracts_diagonal() {
+        let a = tri(5);
+        assert_eq!(a.jacobi_diag(), vec![2.0; 5]);
+    }
+
+    #[test]
+    fn symmetric_detects_both_ways() {
+        assert!(tri(6).is_symmetric(1e-12));
+        let mut coo = CooMatrix::new(2);
+        coo.push(0, 1, 3.0); // no (1,0) partner
+        coo.push(0, 0, 1.0);
+        coo.push(1, 1, 1.0);
+        assert!(!coo.to_csr().is_symmetric(1e-12));
+    }
+
+    #[test]
+    fn stream_bytes_mixed_halves_traffic() {
+        let a = tri(100);
+        assert_eq!(a.stream_bytes(true), 2 * a.stream_bytes(false));
+    }
+}

@@ -1,0 +1,12 @@
+//! Sparse-matrix substrate: CSR/COO storage, Matrix-Market I/O, the
+//! synthetic SPD benchmark suite standing in for Table 3, and the
+//! Serpens-style packed non-zero streams fed to the SpMV module.
+
+mod csr;
+pub mod mtx;
+pub mod stream;
+pub mod synth;
+
+pub use csr::{CooMatrix, CsrMatrix};
+pub use stream::{pack_nnz_streams, pack_nnz_streams_cfg, NnzStream, PackedNnz, DEP_DIST_SERPENS, DEP_DIST_XCGSOLVER, NUM_CHANNELS, PES_PER_CHANNEL};
+pub use synth::{suite36, MatrixSpec, SynthKind};

@@ -1,0 +1,165 @@
+//! Matrix Market (.mtx) reader/writer — the interchange format of
+//! SuiteSparse, so real Table-3 matrices can be dropped into the suite
+//! when available (the synthetic generators stand in otherwise).
+//!
+//! Supports `matrix coordinate real {general,symmetric}` and
+//! `pattern {general,symmetric}` (pattern entries get value 1.0), the
+//! formats used by every matrix in Table 3.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{CooMatrix, CsrMatrix};
+
+/// Parse a Matrix Market file into CSR. Symmetric files are expanded to
+/// full storage (both triangles), matching what the accelerator streams.
+pub fn read_mtx(path: &Path) -> Result<CsrMatrix> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    read_mtx_from(BufReader::new(f))
+}
+
+pub fn read_mtx_from<R: BufRead>(mut r: R) -> Result<CsrMatrix> {
+    let mut header = String::new();
+    r.read_line(&mut header)?;
+    let h = header.trim().to_ascii_lowercase();
+    if !h.starts_with("%%matrixmarket matrix coordinate") {
+        bail!("unsupported MatrixMarket header: {}", header.trim());
+    }
+    let pattern = h.contains(" pattern");
+    let symmetric = h.contains(" symmetric");
+    if !pattern && !h.contains(" real") && !h.contains(" integer") {
+        bail!("unsupported field type in header: {}", header.trim());
+    }
+
+    let mut line = String::new();
+    // Skip comment lines.
+    loop {
+        line.clear();
+        if r.read_line(&mut line)? == 0 {
+            bail!("EOF before size line");
+        }
+        let t = line.trim();
+        if !t.is_empty() && !t.starts_with('%') {
+            break;
+        }
+    }
+    let mut it = line.split_whitespace();
+    let nrows: usize = it.next().ok_or_else(|| anyhow!("bad size line"))?.parse()?;
+    let ncols: usize = it.next().ok_or_else(|| anyhow!("bad size line"))?.parse()?;
+    let nnz: usize = it.next().ok_or_else(|| anyhow!("bad size line"))?.parse()?;
+    if nrows != ncols {
+        bail!("JPCG needs a square matrix, got {nrows}x{ncols}");
+    }
+
+    let mut coo = CooMatrix::new(nrows);
+    let mut seen = 0usize;
+    loop {
+        line.clear();
+        if r.read_line(&mut line)? == 0 {
+            break;
+        }
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let i: usize = it.next().ok_or_else(|| anyhow!("bad entry: {t}"))?.parse()?;
+        let j: usize = it.next().ok_or_else(|| anyhow!("bad entry: {t}"))?.parse()?;
+        let v: f64 = if pattern {
+            1.0
+        } else {
+            it.next().ok_or_else(|| anyhow!("missing value: {t}"))?.parse()?
+        };
+        if i == 0 || j == 0 || i > nrows || j > ncols {
+            bail!("1-based index out of range: {t}");
+        }
+        coo.push(i - 1, j - 1, v);
+        if symmetric && i != j {
+            coo.push(j - 1, i - 1, v);
+        }
+        seen += 1;
+    }
+    if seen != nnz {
+        bail!("entry count mismatch: header says {nnz}, file has {seen}");
+    }
+    Ok(coo.to_csr())
+}
+
+/// Write CSR as `coordinate real general` (full storage).
+pub fn write_mtx(a: &CsrMatrix, path: &Path) -> Result<()> {
+    let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(w, "{} {} {}", a.n, a.n, a.nnz())?;
+    for i in 0..a.n {
+        let (cols, vals) = a.row(i);
+        for (c, v) in cols.iter().zip(vals) {
+            writeln!(w, "{} {} {:.17e}", i + 1, c + 1, v)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn roundtrip_general() {
+        let src = "%%MatrixMarket matrix coordinate real general\n\
+                   % comment\n\
+                   2 2 3\n1 1 2.0\n1 2 -1.0\n2 2 2.0\n";
+        let a = read_mtx_from(Cursor::new(src)).unwrap();
+        assert_eq!(a.n, 2);
+        assert_eq!(a.nnz(), 3);
+        assert_eq!(a.row(0), (&[0u32, 1][..], &[2.0, -1.0][..]));
+    }
+
+    #[test]
+    fn symmetric_expands_both_triangles() {
+        let src = "%%MatrixMarket matrix coordinate real symmetric\n\
+                   2 2 2\n1 1 4.0\n2 1 -1.0\n";
+        let a = read_mtx_from(Cursor::new(src)).unwrap();
+        assert_eq!(a.nnz(), 3); // (0,0), (1,0), (0,1)
+        assert!(a.is_symmetric(0.0));
+    }
+
+    #[test]
+    fn pattern_gets_unit_values() {
+        let src = "%%MatrixMarket matrix coordinate pattern symmetric\n\
+                   2 2 2\n1 1\n2 1\n";
+        let a = read_mtx_from(Cursor::new(src)).unwrap();
+        assert_eq!(a.vals, vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn rejects_rectangular() {
+        let src = "%%MatrixMarket matrix coordinate real general\n2 3 1\n1 1 1.0\n";
+        assert!(read_mtx_from(Cursor::new(src)).is_err());
+    }
+
+    #[test]
+    fn rejects_count_mismatch() {
+        let src = "%%MatrixMarket matrix coordinate real general\n2 2 5\n1 1 1.0\n";
+        assert!(read_mtx_from(Cursor::new(src)).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let p = std::env::temp_dir().join(format!("callipepla_mtx_{}.mtx", std::process::id()));
+        let a = {
+            let mut coo = CooMatrix::new(3);
+            coo.push(0, 0, 2.0);
+            coo.push(1, 1, 3.0);
+            coo.push(2, 0, -0.5);
+            coo.to_csr()
+        };
+        write_mtx(&a, &p).unwrap();
+        let b = read_mtx(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(a.vals, b.vals);
+        assert_eq!(a.indices, b.indices);
+    }
+}

@@ -1,0 +1,379 @@
+//! Serpens-style packed non-zero streams (paper §6, Fig. 8).
+//!
+//! Callipepla's SpMV (module M1) streams non-zeros from 16 HBM channels
+//! into 8 processing engines per channel.  Each 512-bit channel beat
+//! carries 8 × 64-bit packed non-zeros:
+//!
+//! ```text
+//!   63..50   49..32   31..0
+//!   col:14   row:18   value:f32      (Mix-V3 / Serpens encoding)
+//! ```
+//!
+//! Because the accumulator `y[row] += v * x[col]` has a read-after-write
+//! hazard, a PE must not touch the same row twice within the accumulator
+//! dependency distance.  Serpens solves this by **out-of-order scheduling**
+//! of each PE's nnz queue with the *load-store* distance (short), padding
+//! with no-ops only when nothing is schedulable; XcgSolver instead pads
+//! by the FP-add latency (long) — and, per §7.5.1, under-estimates it,
+//! which is both slower (more padding) and numerically unstable.  This
+//! module implements the scheduler so the cycle model can charge the
+//! *scheduled* stream length and the tests can replay streams to verify
+//! the hazard guarantee.
+
+
+use super::CsrMatrix;
+
+/// HBM channels dedicated to nnz streaming (all three FPGA accelerators
+/// in the paper allocate 16).
+pub const NUM_CHANNELS: usize = 16;
+/// PEs per channel: 512-bit beat / 64-bit packed nnz.
+pub const PES_PER_CHANNEL: usize = 8;
+/// X-memory (BRAM) depth: 14-bit col offset (§6: "a 14-bit column index").
+pub const COL_WINDOW: usize = 1 << 14;
+/// Y-memory (URAM) rows addressable: 18-bit row offset.
+pub const ROW_WINDOW: usize = 1 << 18;
+/// Serpens hazard distance: load-store dependency length.
+pub const DEP_DIST_SERPENS: usize = 5;
+/// XcgSolver pads by FP64-add latency (deeper, hence more padding).
+pub const DEP_DIST_XCGSOLVER: usize = 14;
+
+/// One 64-bit packed non-zero. `NOP` (all-ones col) is the padding beat.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PackedNnz(pub u64);
+
+impl PackedNnz {
+    pub const NOP: PackedNnz = PackedNnz(u64::MAX);
+
+    pub fn pack(col_off: u32, row_off: u32, val: f32) -> Self {
+        debug_assert!(col_off < COL_WINDOW as u32);
+        debug_assert!(row_off < ROW_WINDOW as u32);
+        let bits = ((col_off as u64) << 50)
+            | ((row_off as u64) << 32)
+            | (val.to_bits() as u64);
+        // All-ones col marks NOP; a real nnz never has col == 2^14-1 with
+        // row == 2^18-1 and val == NaN-payload, but guard anyway.
+        debug_assert_ne!(bits, u64::MAX);
+        PackedNnz(bits)
+    }
+
+    pub fn is_nop(self) -> bool {
+        self == Self::NOP
+    }
+
+    pub fn col_off(self) -> u32 {
+        (self.0 >> 50) as u32 & (COL_WINDOW as u32 - 1)
+    }
+
+    pub fn row_off(self) -> u32 {
+        (self.0 >> 32) as u32 & (ROW_WINDOW as u32 - 1)
+    }
+
+    pub fn val(self) -> f32 {
+        f32::from_bits(self.0 as u32)
+    }
+}
+
+/// The scheduled stream for one HBM channel: `beats[cycle][pe]`.
+#[derive(Debug, Clone)]
+pub struct ChannelStream {
+    pub beats: Vec<[PackedNnz; PES_PER_CHANNEL]>,
+}
+
+/// One (row-window, col-window) tile's worth of scheduled streams, plus
+/// the window origins needed to reconstruct absolute indices.
+#[derive(Debug, Clone)]
+pub struct TileStream {
+    pub row_base: u32,
+    pub col_base: u32,
+    pub channels: Vec<ChannelStream>,
+}
+
+/// All tiles of a matrix, in processing order, plus stream statistics.
+#[derive(Debug, Clone)]
+pub struct NnzStream {
+    pub n: usize,
+    pub tiles: Vec<TileStream>,
+    /// Real non-zeros packed (== matrix nnz).
+    pub nnz: usize,
+    /// Total beat slots including padding NOPs.
+    pub slots: usize,
+    /// Dependency distance the scheduler enforced.
+    pub dep_dist: usize,
+}
+
+impl NnzStream {
+    /// Padding overhead: slots / nnz (1.0 == perfect packing).
+    pub fn padding_factor(&self) -> f64 {
+        self.slots as f64 / self.nnz.max(1) as f64
+    }
+
+    /// SpMV cycles for the cycle model: the longest channel in each tile,
+    /// summed over tiles (channels in a tile run in lockstep off HBM).
+    pub fn cycles(&self) -> u64 {
+        self.tiles
+            .iter()
+            .map(|t| t.channels.iter().map(|c| c.beats.len()).max().unwrap_or(0) as u64)
+            .sum()
+    }
+
+    /// Replay the scheduled streams: y = A x in Mix-V3 arithmetic
+    /// (f32 value upcast to f64, f64 x / y).  Used by tests to prove the
+    /// scheduler is a *permutation with padding* of the matrix and by
+    /// the module-level SpMV (modules::compute::SpMvModule).
+    pub fn replay_mixv3(&self, x: &[f64], y: &mut [f64]) {
+        y.iter_mut().for_each(|v| *v = 0.0);
+        for tile in &self.tiles {
+            for ch in &tile.channels {
+                for beat in &ch.beats {
+                    for nz in beat {
+                        if nz.is_nop() {
+                            continue;
+                        }
+                        let r = (tile.row_base + nz.row_off()) as usize;
+                        let c = (tile.col_base + nz.col_off()) as usize;
+                        y[r] += nz.val() as f64 * x[c];
+                    }
+                }
+            }
+        }
+    }
+
+    /// Verify the RAW-hazard guarantee: within any channel, the same
+    /// (pe, row) pair never reappears within `dep_dist` beats.  Returns
+    /// the first violation if any.
+    pub fn check_hazards(&self) -> Option<(usize, usize, u32)> {
+        for tile in &self.tiles {
+            for ch in &tile.channels {
+                for pe in 0..PES_PER_CHANNEL {
+                    let mut last_seen: std::collections::HashMap<u32, usize> =
+                        std::collections::HashMap::new();
+                    for (cyc, beat) in ch.beats.iter().enumerate() {
+                        let nz = beat[pe];
+                        if nz.is_nop() {
+                            continue;
+                        }
+                        if let Some(&prev) = last_seen.get(&nz.row_off()) {
+                            if cyc - prev < self.dep_dist {
+                                return Some((pe, cyc, nz.row_off()));
+                            }
+                        }
+                        last_seen.insert(nz.row_off(), cyc);
+                    }
+                }
+            }
+        }
+        None
+    }
+}
+
+/// Schedule a CSR matrix into per-channel, per-PE streams with the given
+/// hazard distance.  Row `r` is owned by PE `(r / num_channels') % 8`...
+/// — concretely: nnz of row r goes to channel `r % NUM_CHANNELS`, PE
+/// `(r / NUM_CHANNELS) % PES_PER_CHANNEL`, the Serpens row-interleaving.
+pub fn pack_nnz_streams(a: &CsrMatrix, dep_dist: usize) -> NnzStream {
+    pack_nnz_streams_cfg(a, dep_dist, NUM_CHANNELS, PES_PER_CHANNEL)
+}
+
+/// Configurable variant (tests use small channel counts).
+pub fn pack_nnz_streams_cfg(
+    a: &CsrMatrix,
+    dep_dist: usize,
+    num_channels: usize,
+    pes: usize,
+) -> NnzStream {
+    let mut tiles = Vec::new();
+    let mut total_slots = 0usize;
+    let mut row_base = 0usize;
+    while row_base < a.n {
+        let row_end = (row_base + ROW_WINDOW).min(a.n);
+        let mut col_base = 0usize;
+        while col_base < a.n {
+            let col_end = (col_base + COL_WINDOW).min(a.n);
+            // Gather this tile's nnz into per-(channel, pe) queues.
+            let mut queues: Vec<Vec<Vec<PackedNnz>>> =
+                vec![vec![Vec::new(); pes]; num_channels];
+            let mut tile_nnz = 0usize;
+            for r in row_base..row_end {
+                let ch = r % num_channels;
+                let pe = (r / num_channels) % pes;
+                let (cols, vals) = a.row(r);
+                for (c, v) in cols.iter().zip(vals) {
+                    let c = *c as usize;
+                    if c < col_base || c >= col_end {
+                        continue;
+                    }
+                    queues[ch][pe].push(PackedNnz::pack(
+                        (c - col_base) as u32,
+                        (r - row_base) as u32,
+                        *v as f32,
+                    ));
+                    tile_nnz += 1;
+                }
+            }
+            if tile_nnz == 0 {
+                col_base = col_end;
+                continue;
+            }
+            // Out-of-order schedule each (channel, pe) queue.
+            let mut channels = Vec::with_capacity(num_channels);
+            for chq in queues {
+                let lanes: Vec<Vec<PackedNnz>> = chq
+                    .into_iter()
+                    .map(|q| schedule_lane(q, dep_dist))
+                    .collect();
+                let len = lanes.iter().map(Vec::len).max().unwrap_or(0);
+                let mut beats = vec![[PackedNnz::NOP; PES_PER_CHANNEL]; len];
+                for (pe, lane) in lanes.iter().enumerate() {
+                    for (cyc, nz) in lane.iter().enumerate() {
+                        beats[cyc][pe] = *nz;
+                    }
+                }
+                total_slots += len * pes;
+                channels.push(ChannelStream { beats });
+            }
+            tiles.push(TileStream {
+                row_base: row_base as u32,
+                col_base: col_base as u32,
+                channels,
+            });
+            col_base = col_end;
+        }
+        row_base = row_end;
+    }
+    NnzStream { n: a.n, tiles, nnz: a.nnz(), slots: total_slots, dep_dist }
+}
+
+/// Greedy out-of-order scheduler for one PE lane: each cycle pick the
+/// earliest queued nnz whose row was not issued in the last `dep_dist`
+/// cycles; emit a NOP if none qualifies.  A sliding window over at most
+/// `LOOKAHEAD` queue entries bounds the search (the FPGA uses a small
+/// reorder window for the same reason).
+fn schedule_lane(queue: Vec<PackedNnz>, dep_dist: usize) -> Vec<PackedNnz> {
+    const LOOKAHEAD: usize = 32;
+    let mut out = Vec::with_capacity(queue.len());
+    let mut pending: std::collections::VecDeque<PackedNnz> = queue.into();
+    // §Perf: the hazard check only needs the rows issued in the last
+    // dep_dist cycles — a small ring buffer beats a HashMap of every
+    // row ever issued (this function dominates stream-packing time).
+    let mut recent: Vec<u32> = vec![u32::MAX; dep_dist.max(1)];
+    let mut cycle = 0usize;
+    while !pending.is_empty() {
+        let mut issued = false;
+        for k in 0..pending.len().min(LOOKAHEAD) {
+            let row = pending[k].row_off();
+            if !recent.contains(&row) {
+                let nz = pending.remove(k).unwrap();
+                let slot = cycle % recent.len();
+                recent[slot] = row;
+                out.push(nz);
+                issued = true;
+                break;
+            }
+        }
+        if !issued {
+            let slot = cycle % recent.len();
+            recent[slot] = u32::MAX;
+            out.push(PackedNnz::NOP);
+        }
+        cycle += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::synth;
+
+    #[test]
+    fn pack_roundtrip() {
+        let nz = PackedNnz::pack(1234, 99999, -3.25);
+        assert_eq!(nz.col_off(), 1234);
+        assert_eq!(nz.row_off(), 99999);
+        assert_eq!(nz.val(), -3.25);
+        assert!(!nz.is_nop());
+        assert!(PackedNnz::NOP.is_nop());
+    }
+
+    #[test]
+    fn replay_matches_reference_spmv() {
+        let a = synth::banded_spd(500, 5000, 1e-2, 1);
+        let stream = pack_nnz_streams(&a, DEP_DIST_SERPENS);
+        let x: Vec<f64> = (0..a.n).map(|i| (i as f64 * 0.37).sin()).collect();
+        let mut y = vec![0.0; a.n];
+        stream.replay_mixv3(&x, &mut y);
+        // Reference: f32-rounded values, f64 arithmetic (Mix-V3).
+        let mut want = vec![0.0; a.n];
+        for i in 0..a.n {
+            let (cols, vals) = a.row(i);
+            for (c, v) in cols.iter().zip(vals) {
+                want[i] += (*v as f32) as f64 * x[*c as usize];
+            }
+        }
+        for i in 0..a.n {
+            assert!(
+                (y[i] - want[i]).abs() <= 1e-9 * want[i].abs().max(1.0),
+                "row {i}: {} vs {}",
+                y[i],
+                want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn scheduler_respects_hazard_distance() {
+        let a = synth::laplace2d_shifted(2500, 0.1);
+        for dep in [DEP_DIST_SERPENS, DEP_DIST_XCGSOLVER] {
+            let stream = pack_nnz_streams(&a, dep);
+            assert_eq!(stream.check_hazards(), None, "dep={dep}");
+        }
+    }
+
+    #[test]
+    fn all_nnz_present_exactly_once() {
+        let a = synth::banded_spd(300, 3000, 1e-2, 2);
+        let stream = pack_nnz_streams(&a, DEP_DIST_SERPENS);
+        let count: usize = stream
+            .tiles
+            .iter()
+            .flat_map(|t| &t.channels)
+            .flat_map(|c| &c.beats)
+            .flat_map(|b| b.iter())
+            .filter(|nz| !nz.is_nop())
+            .count();
+        assert_eq!(count, a.nnz());
+    }
+
+    #[test]
+    fn longer_dep_distance_pads_more() {
+        // §7.5.1: XcgSolver's FP-latency padding costs more slots than
+        // Serpens' load-store distance.
+        let a = synth::banded_spd(2000, 10_000, 1e-2, 3);
+        let serpens = pack_nnz_streams(&a, DEP_DIST_SERPENS);
+        let xcg = pack_nnz_streams(&a, DEP_DIST_XCGSOLVER);
+        assert!(xcg.padding_factor() >= serpens.padding_factor());
+        assert!(xcg.cycles() >= serpens.cycles());
+    }
+
+    #[test]
+    fn multi_window_matrix_tiles_correctly() {
+        // n > COL_WINDOW forces multiple column windows.
+        let n = COL_WINDOW + 1000;
+        let a = synth::laplace2d_shifted(n, 0.2);
+        let stream = pack_nnz_streams(&a, DEP_DIST_SERPENS);
+        assert!(stream.tiles.len() >= 2, "expected >=2 tiles, got {}", stream.tiles.len());
+        let x: Vec<f64> = (0..a.n).map(|i| ((i % 7) as f64) - 3.0).collect();
+        let mut y = vec![0.0; a.n];
+        stream.replay_mixv3(&x, &mut y);
+        let mut want = vec![0.0; a.n];
+        for i in 0..a.n {
+            let (cols, vals) = a.row(i);
+            for (c, v) in cols.iter().zip(vals) {
+                want[i] += (*v as f32) as f64 * x[*c as usize];
+            }
+        }
+        for i in 0..a.n {
+            assert!((y[i] - want[i]).abs() <= 1e-9 * want[i].abs().max(1.0));
+        }
+    }
+}

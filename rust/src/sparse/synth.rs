@@ -1,0 +1,367 @@
+//! Synthetic SPD matrix suite standing in for the 36 SuiteSparse matrices
+//! of Table 3 (DESIGN.md §Hardware-Adaptation: no network access to
+//! SuiteSparse in this environment).
+//!
+//! Construction: a banded weighted graph Laplacian `L` plus a diagonal
+//! shift `delta * I`.  `L` is symmetric positive *semi*-definite by
+//! construction (diag == sum of |off-diag| per row), so `A = L + delta*I`
+//! is SPD with smallest eigenvalue >= delta and largest ~= 2*max row
+//! weight.  After Jacobi preconditioning the condition number scales like
+//! 1/delta, and CG iteration count like 1/sqrt(delta) — so each Table-3
+//! entry carries a `delta` *tuned from the paper's CPU iteration count*
+//! (Table 7) to land the solver in the same convergence regime.  Matrix
+//! dimension and nnz match Table 3 (at `scale == 1.0`).
+
+use crate::util::Rng64;
+
+use super::{CooMatrix, CsrMatrix};
+
+/// Generator families, loosely matching the application classes the
+/// paper's suite covers ("structural problems, thermal problems, ...").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SynthKind {
+    /// 5-point 2-D Poisson stencil (thermal / 2D-3D class).
+    Laplace2d,
+    /// 7-point 3-D Poisson stencil.
+    Laplace3d,
+    /// Banded random graph Laplacian + delta*I (structural / FEM class).
+    BandedSpd,
+}
+
+/// One Table-3 row: the paper matrix it stands in for plus the synthetic
+/// recipe that reproduces its scale and difficulty.
+#[derive(Debug, Clone)]
+pub struct MatrixSpec {
+    /// Mxx identifier used throughout the paper's tables.
+    pub id: &'static str,
+    /// SuiteSparse name of the matrix this stands in for.
+    pub paper_name: &'static str,
+    /// Paper's row/col count (Table 3).
+    pub n: usize,
+    /// Paper's nnz (Table 3).
+    pub nnz: usize,
+    /// Paper's CPU-FP64 JPCG iteration count (Table 7); 20_000 == did
+    /// not converge within the cap.
+    pub cpu_iters: u32,
+    pub kind: SynthKind,
+}
+
+impl MatrixSpec {
+    /// Diagonal shift giving a Jacobi-CG iteration count in the regime of
+    /// `cpu_iters` (calibrated: iters ≈ C / sqrt(delta) with C ≈ 13 for
+    /// tau = 1e-12 on these generators; non-converging entries get a
+    /// delta below the calibration floor).
+    pub fn delta(&self) -> f64 {
+        // Table-7 cap entries (ex9, olafu, bcsstk36, raefsky4) do not
+        // reach 1e-12 on the real matrices.  Our synthetic spectra are
+        // more clustered than the real FEM spectra, so CG resolves them
+        // regardless of the shift; they are generated as the hardest
+        // difficulty and the deviation is documented in EXPERIMENTS.md.
+        let it = self.cpu_iters.max(20) as f64;
+        let c = 10.0; // empirical: iters ~ C / sqrt(delta) on these generators
+        (c / it).powi(2)
+    }
+
+    /// Edge-weight dynamic range in decades.  Non-converging entries
+    /// (20K cap in Table 7) get an extreme range so the FP64 residual
+    /// plateaus above 1e-12, like the real ex9/olafu/bcsstk36/raefsky4.
+    pub fn weight_decades(&self) -> f64 {
+        if self.cpu_iters >= 20_000 { 14.0 } else { 8.0 }
+    }
+
+    /// Generated size floor: CG converges in at most n steps, so a
+    /// stand-in must have n >= ~3.5x the target iteration count for the
+    /// convergence regime to be reproducible (capped at paper size).
+    fn n_floor(&self) -> usize {
+        ((3.5 * self.cpu_iters.min(20_000) as f64) as usize).min(self.n)
+    }
+
+    /// Generate the synthetic stand-in, optionally scaled down
+    /// (`scale < 1.0` shrinks n and nnz proportionally — used by the
+    /// default bench profile; `1.0` reproduces Table-3 sizes).
+    pub fn generate(&self, scale: f64) -> CsrMatrix {
+        let n = ((self.n as f64 * scale) as usize).max(self.n_floor()).max(64);
+        // Keep the paper's nnz density at the generated size.
+        let nnz = ((self.nnz as f64 * n as f64 / self.n as f64) as usize).max(4 * n);
+        let seed = fxhash(self.id);
+        match self.kind {
+            SynthKind::Laplace2d => laplace2d_shifted(n, self.delta()),
+            SynthKind::Laplace3d => laplace3d_shifted(n, self.delta()),
+            SynthKind::BandedSpd => {
+                banded_spd_decades(n, nnz, self.delta(), seed, self.weight_decades())
+            }
+        }
+    }
+}
+
+fn fxhash(s: &str) -> u64 {
+    // Tiny deterministic string hash for per-matrix seeds.
+    s.bytes().fold(0xcbf29ce484222325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100000001b3)
+    })
+}
+
+/// 2-D 5-point Poisson matrix of at least `n_target` unknowns, plus
+/// `delta*I` (delta==0 gives the pure singularity-free Dirichlet stencil).
+pub fn laplace2d_shifted(n_target: usize, delta: f64) -> CsrMatrix {
+    let side = (n_target as f64).sqrt().ceil() as usize;
+    let n = side * side;
+    let mut coo = CooMatrix::new(n);
+    for y in 0..side {
+        for x in 0..side {
+            let i = y * side + x;
+            coo.push(i, i, 4.0 + delta);
+            if x > 0 {
+                coo.push(i, i - 1, -1.0);
+            }
+            if x + 1 < side {
+                coo.push(i, i + 1, -1.0);
+            }
+            if y > 0 {
+                coo.push(i, i - side, -1.0);
+            }
+            if y + 1 < side {
+                coo.push(i, i + side, -1.0);
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// 3-D 7-point Poisson matrix, shifted.
+pub fn laplace3d_shifted(n_target: usize, delta: f64) -> CsrMatrix {
+    let side = (n_target as f64).cbrt().ceil() as usize;
+    let n = side * side * side;
+    let mut coo = CooMatrix::new(n);
+    let idx = |x: usize, y: usize, z: usize| (z * side + y) * side + x;
+    for z in 0..side {
+        for y in 0..side {
+            for x in 0..side {
+                let i = idx(x, y, z);
+                coo.push(i, i, 6.0 + delta);
+                if x > 0 {
+                    coo.push(i, idx(x - 1, y, z), -1.0);
+                }
+                if x + 1 < side {
+                    coo.push(i, idx(x + 1, y, z), -1.0);
+                }
+                if y > 0 {
+                    coo.push(i, idx(x, y - 1, z), -1.0);
+                }
+                if y + 1 < side {
+                    coo.push(i, idx(x, y + 1, z), -1.0);
+                }
+                if z > 0 {
+                    coo.push(i, idx(x, y, z - 1), -1.0);
+                }
+                if z + 1 < side {
+                    coo.push(i, idx(x, y, z + 1), -1.0);
+                }
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// Banded random weighted graph Laplacian + delta*I.
+///
+/// Each row gets ~`nnz_target/n - 1` off-diagonal partners within a band
+/// (FEM meshes are banded after reordering), weights in (0, 1]; the
+/// diagonal is the row's weight sum plus `delta`, making A an SPD
+/// M-matrix whose Jacobi-preconditioned condition number ~ 1/delta.
+pub fn banded_spd(n: usize, nnz_target: usize, delta: f64, seed: u64) -> CsrMatrix {
+    banded_spd_decades(n, nnz_target, delta, seed, 8.0)
+}
+
+/// `banded_spd` with an explicit edge-weight dynamic range (decades).
+pub fn banded_spd_decades(
+    n: usize,
+    nnz_target: usize,
+    delta: f64,
+    seed: u64,
+    decades: f64,
+) -> CsrMatrix {
+    let mut rng = Rng64::seed_from_u64(seed);
+    let per_row = ((nnz_target / n).saturating_sub(1) / 2).max(1);
+    let band = (per_row * 8).max(16).min(n - 1);
+    // Symmetric off-diagonal pattern: i ~ j, j in (i, i+band].
+    let mut partners: Vec<Vec<(u32, f64)>> = vec![Vec::new(); n];
+    for i in 0..n {
+        for _ in 0..per_row {
+            let span = band.min(n - 1 - i);
+            if span == 0 {
+                continue;
+            }
+            let j = i + 1 + rng.gen_range(span);
+            // Log-uniform weights spanning ~4 decades: real FEM/structural
+            // matrices (nasa2910, gyro_k, ...) mix stiff and soft elements,
+            // which is what fills the low end of the Jacobi-preconditioned
+            // spectrum densely and drives CG into the thousands of
+            // iterations Table 7 reports.
+            let w = 10f64.powf(-decades * rng.gen_f64());
+            partners[i].push((j as u32, w));
+        }
+    }
+    // Random diagonal similarity scaling S A S (s in [0.5, 2]): keeps
+    // SPD and the Jacobi-preconditioned spectrum, but destroys the
+    // graph-Laplacian property A*ones = delta*ones — without it the
+    // paper's b = all-ones RHS would be a near-eigenvector and CG would
+    // converge unrealistically fast regardless of conditioning.
+    let s: Vec<f64> = (0..n).map(|_| rng.gen_f64_range(0.5, 2.0)).collect();
+    let mut coo = CooMatrix::new(n);
+    let mut diag = vec![delta; n];
+    for i in 0..n {
+        for &(j, w) in &partners[i] {
+            let j = j as usize;
+            coo.push(i, j, -w * s[i] * s[j]);
+            coo.push(j, i, -w * s[i] * s[j]);
+            diag[i] += w;
+            diag[j] += w;
+        }
+    }
+    for (i, d) in diag.iter().enumerate() {
+        coo.push(i, i, *d * s[i] * s[i]);
+    }
+    coo.to_csr()
+}
+
+/// The 36-matrix suite of Table 3. `cpu_iters` comes from Table 7
+/// (CPU row); kinds are assigned from the paper's application notes.
+pub fn suite36() -> Vec<MatrixSpec> {
+    use SynthKind::*;
+    let t = |id, paper_name, n, nnz, cpu_iters, kind| MatrixSpec {
+        id,
+        paper_name,
+        n,
+        nnz,
+        cpu_iters,
+        kind,
+    };
+    vec![
+        t("M1", "ex9", 3_363, 99_471, 20_000, BandedSpd),
+        t("M2", "bcsstk15", 3_948, 117_816, 634, BandedSpd),
+        t("M3", "bodyy4", 17_546, 121_550, 164, BandedSpd),
+        t("M4", "ted_B", 10_605, 144_579, 26, BandedSpd),
+        t("M5", "ted_B_unscaled", 10_605, 144_579, 26, BandedSpd),
+        t("M6", "bcsstk24", 3_562, 159_910, 9_441, BandedSpd),
+        t("M7", "nasa2910", 2_910, 174_296, 1_713, BandedSpd),
+        t("M8", "s3rmt3m3", 5_357, 207_123, 15_692, BandedSpd),
+        t("M9", "bcsstk28", 4_410, 219_024, 4_821, BandedSpd),
+        t("M10", "s2rmq4m1", 5_489, 263_351, 1_750, BandedSpd),
+        t("M11", "cbuckle", 13_681, 676_515, 1_266, BandedSpd),
+        t("M12", "olafu", 16_146, 1_015_156, 20_000, BandedSpd),
+        t("M13", "gyro_k", 17_361, 1_021_159, 12_956, BandedSpd),
+        t("M14", "bcsstk36", 23_052, 1_143_140, 20_000, BandedSpd),
+        t("M15", "msc10848", 10_848, 1_229_776, 5_615, BandedSpd),
+        t("M16", "raefsky4", 19_779, 1_316_789, 20_000, BandedSpd),
+        t("M17", "nd3k", 9_000, 3_279_690, 9_904, BandedSpd),
+        t("M18", "nd6k", 18_000, 6_897_316, 11_816, BandedSpd),
+        t("M19", "2cubes_sphere", 101_492, 1_647_264, 33, Laplace3d),
+        t("M20", "cfd2", 123_440, 3_085_406, 8_419, BandedSpd),
+        t("M21", "Dubcova3", 146_689, 3_636_643, 242, Laplace2d),
+        t("M22", "ship_003", 121_728, 3_777_036, 6_151, BandedSpd),
+        t("M23", "offshore", 259_789, 4_242_673, 2_224, Laplace3d),
+        t("M24", "shipsec5", 179_860, 4_598_604, 5_507, BandedSpd),
+        t("M25", "ecology2", 999_999, 4_995_991, 6_584, Laplace2d),
+        t("M26", "tmt_sym", 726_713, 5_080_961, 4_903, Laplace2d),
+        t("M27", "boneS01", 127_224, 5_516_602, 2_287, BandedSpd),
+        t("M28", "hood", 220_542, 9_895_422, 6_424, BandedSpd),
+        t("M29", "bmwcra_1", 148_770, 10_641_602, 5_902, BandedSpd),
+        t("M30", "af_shell3", 504_855, 17_562_051, 3_906, BandedSpd),
+        t("M31", "Fault_639", 638_802, 27_245_944, 9_879, BandedSpd),
+        t("M32", "Emilia_923", 923_136, 40_373_538, 13_263, BandedSpd),
+        t("M33", "Geo_1438", 1_437_960, 60_236_322, 2_054, BandedSpd),
+        t("M34", "Serena", 1_391_349, 64_131_971, 1_299, BandedSpd),
+        t("M35", "audikw_1", 943_695, 77_651_847, 7_638, BandedSpd),
+        t("M36", "Flan_1565", 1_564_794, 114_165_372, 12_160, BandedSpd),
+    ]
+}
+
+/// Look up a suite entry by its Mxx id or paper name.
+pub fn find_spec(key: &str) -> Option<MatrixSpec> {
+    suite36()
+        .into_iter()
+        .find(|s| s.id.eq_ignore_ascii_case(key) || s.paper_name.eq_ignore_ascii_case(key))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_has_36_entries_matching_table3() {
+        let s = suite36();
+        assert_eq!(s.len(), 36);
+        assert_eq!(s[0].id, "M1");
+        assert_eq!(s[35].paper_name, "Flan_1565");
+        assert_eq!(s[35].nnz, 114_165_372);
+        // Table 3 rows are sorted by nnz within each half.
+        assert!(s.iter().take(18).zip(s.iter().take(18).skip(1)).all(|(a, b)| a.nnz <= b.nnz));
+    }
+
+    #[test]
+    fn generated_matrices_are_spd_shaped() {
+        for spec in suite36().into_iter().take(4) {
+            let a = spec.generate(0.01);
+            assert!(a.is_symmetric(1e-12), "{} not symmetric", spec.id);
+            // SPD via similarity scaling of a diagonally-dominant core:
+            // positive diagonal everywhere, and x'Ax > 0 on probes.
+            for i in 0..a.n {
+                let (cols, vals) = a.row(i);
+                let diag = cols
+                    .iter()
+                    .zip(vals)
+                    .find(|(c, _)| **c as usize == i)
+                    .map(|(_, v)| *v)
+                    .unwrap_or(0.0);
+                assert!(diag > 0.0, "row {i} of {}", spec.id);
+            }
+            let mut rng = crate::util::Rng64::seed_from_u64(1);
+            for _ in 0..3 {
+                let x: Vec<f64> = (0..a.n).map(|_| rng.gen_normal()).collect();
+                let mut ax = vec![0.0; a.n];
+                a.spmv_f64(&x, &mut ax);
+                let xtax: f64 = x.iter().zip(&ax).map(|(u, v)| u * v).sum();
+                assert!(xtax > 0.0, "{} not positive definite", spec.id);
+            }
+        }
+    }
+
+    #[test]
+    fn laplace2d_shape() {
+        let a = laplace2d_shifted(100, 0.0);
+        assert_eq!(a.n, 100);
+        assert!(a.is_symmetric(0.0));
+        assert_eq!(a.nnz(), 100 + 2 * 2 * 90); // 5-point, 10x10 grid
+    }
+
+    #[test]
+    fn laplace3d_shape() {
+        let a = laplace3d_shifted(27, 0.5);
+        assert_eq!(a.n, 27);
+        assert!(a.is_symmetric(0.0));
+    }
+
+    #[test]
+    fn banded_nnz_near_target() {
+        let a = banded_spd(1000, 20_000, 1e-3, 42);
+        let ratio = a.nnz() as f64 / 20_000.0;
+        assert!((0.5..=1.5).contains(&ratio), "nnz={} target=20000", a.nnz());
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let spec = find_spec("M7").unwrap();
+        let a = spec.generate(0.1);
+        let b = spec.generate(0.1);
+        assert_eq!(a.vals, b.vals);
+        assert_eq!(a.indices, b.indices);
+    }
+
+    #[test]
+    fn harder_specs_get_smaller_delta() {
+        let easy = find_spec("M4").unwrap(); // 26 iters
+        let hard = find_spec("M13").unwrap(); // 12956 iters
+        assert!(hard.delta() < easy.delta());
+    }
+}

@@ -1,0 +1,299 @@
+//! Minimal JSON reader/writer (serde_json is unavailable offline).
+//!
+//! The reader handles the subset emitted by `python/compile/aot.py`'s
+//! manifest and by our own writer: objects, arrays, strings (with basic
+//! escapes), numbers, booleans, null.  The writer is string-building
+//! helpers used by the bench harness and CLI to emit result JSON.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{bail, Result};
+
+/// Parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn parse(s: &str) -> Result<Json> {
+        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        let v = p.value()?;
+        p.ws();
+        if p.i != p.b.len() {
+            bail!("trailing garbage at byte {}", p.i);
+        }
+        Ok(v)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|f| f as usize)
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Result<u8> {
+        self.ws();
+        self.b
+            .get(self.i)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("unexpected EOF"))
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek()? != c {
+            bail!("expected '{}' at byte {}", c as char, self.i);
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json> {
+        self.ws();
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            bail!("bad literal at byte {}", self.i)
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        self.ws();
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i])?;
+        Ok(Json::Num(s.parse::<f64>()?))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            let c = *self
+                .b
+                .get(self.i)
+                .ok_or_else(|| anyhow::anyhow!("EOF in string"))?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = self.b[self.i];
+                    self.i += 1;
+                    out.push(match e {
+                        b'n' => '\n',
+                        b't' => '\t',
+                        b'r' => '\r',
+                        b'/' => '/',
+                        b'\\' => '\\',
+                        b'"' => '"',
+                        b'u' => {
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+                            self.i += 4;
+                            char::from_u32(u32::from_str_radix(hex, 16)?)
+                                .unwrap_or('\u{FFFD}')
+                        }
+                        other => bail!("bad escape \\{}", other as char),
+                    });
+                }
+                _ => out.push(c as char),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.eat(b'[')?;
+        let mut items = Vec::new();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                c => bail!("expected ',' or ']' got '{}'", c as char),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.eat(b'{')?;
+        let mut map = BTreeMap::new();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(map));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.eat(b':')?;
+            map.insert(k, self.value()?);
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(map));
+                }
+                c => bail!("expected ',' or '}}' got '{}'", c as char),
+            }
+        }
+    }
+}
+
+/// Escape and quote a string for JSON output.
+pub fn quote(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            _ => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Tiny object writer for result emission.
+#[derive(Default)]
+pub struct ObjWriter {
+    fields: Vec<String>,
+}
+
+impl ObjWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn field_str(&mut self, k: &str, v: &str) -> &mut Self {
+        self.fields.push(format!("{}:{}", quote(k), quote(v)));
+        self
+    }
+
+    pub fn field_num(&mut self, k: &str, v: f64) -> &mut Self {
+        let mut s = String::new();
+        let _ = write!(s, "{}:{}", quote(k), v);
+        self.fields.push(s);
+        self
+    }
+
+    pub fn field_raw(&mut self, k: &str, v: &str) -> &mut Self {
+        self.fields.push(format!("{}:{}", quote(k), v));
+        self
+    }
+
+    pub fn finish(&self) -> String {
+        format!("{{{}}}", self.fields.join(","))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_shape() {
+        let src = r#"{"buckets": [[1024, 16384]], "artifacts": [
+            {"file": "a.hlo.txt", "n": 1024, "params": [{"shape": [16384], "dtype": "float32"}]}
+        ]}"#;
+        let j = Json::parse(src).unwrap();
+        let arts = j.get("artifacts").unwrap().as_arr().unwrap();
+        assert_eq!(arts[0].get("file").unwrap().as_str(), Some("a.hlo.txt"));
+        assert_eq!(arts[0].get("n").unwrap().as_usize(), Some(1024));
+        let p0 = &arts[0].get("params").unwrap().as_arr().unwrap()[0];
+        assert_eq!(p0.get("dtype").unwrap().as_str(), Some("float32"));
+    }
+
+    #[test]
+    fn parses_escapes_and_numbers() {
+        let j = Json::parse(r#"{"s": "a\nb", "x": -1.5e-3, "t": true, "z": null}"#).unwrap();
+        assert_eq!(j.get("s").unwrap().as_str(), Some("a\nb"));
+        assert_eq!(j.get("x").unwrap().as_f64(), Some(-1.5e-3));
+        assert_eq!(j.get("t"), Some(&Json::Bool(true)));
+        assert_eq!(j.get("z"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{]").is_err());
+        assert!(Json::parse("{} extra").is_err());
+    }
+
+    #[test]
+    fn writer_roundtrips_through_parser() {
+        let mut w = ObjWriter::new();
+        w.field_str("name", "M1\"x\"").field_num("iters", 42.0);
+        let j = Json::parse(&w.finish()).unwrap();
+        assert_eq!(j.get("name").unwrap().as_str(), Some("M1\"x\""));
+        assert_eq!(j.get("iters").unwrap().as_f64(), Some(42.0));
+    }
+}

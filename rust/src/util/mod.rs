@@ -1,0 +1,7 @@
+//! Small self-contained utilities standing in for crates unavailable in
+//! this offline environment (rand, serde_json, clap, criterion).
+
+pub mod json;
+pub mod rng;
+
+pub use rng::Rng64;

@@ -1,0 +1,391 @@
+//! Vector Streaming Reuse (VSR) and the three-phase schedule (paper §5).
+//!
+//! VSR is the paper's central data-flow idea: a vector produced by one
+//! processing module can be *streamed* into the next module through an
+//! on-chip FIFO instead of bouncing off HBM — but only when no scalar
+//! dependency forces the consumer to wait for the *whole* vector.  This
+//! module encodes:
+//!
+//! * the JPCG data-flow graph (producers/consumers of every vector and
+//!   scalar per Algorithm-1 line),
+//! * the legality rules of §5.1 (when can / cannot VSR),
+//! * the resulting three-phase partition (Fig. 5) with its per-phase
+//!   reuse edges and memory accesses (§5.4),
+//! * the access-count accounting of §5.5 (19 accesses centralized vs
+//!   14 decentralized), and
+//! * the FIFO-depth deadlock rule of §5.6.
+
+use std::collections::BTreeSet;
+
+/// The named long vectors of Algorithm 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Vector {
+    P,
+    Ap,
+    R,
+    Z,
+    X,
+    /// The Jacobi diagonal M (read-only).
+    M,
+}
+
+impl Vector {
+    pub const ALL: [Vector; 6] = [
+        Vector::P,
+        Vector::Ap,
+        Vector::R,
+        Vector::Z,
+        Vector::X,
+        Vector::M,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Vector::P => "p",
+            Vector::Ap => "ap",
+            Vector::R => "r",
+            Vector::Z => "z",
+            Vector::X => "x",
+            Vector::M => "M",
+        }
+    }
+}
+
+/// The eight computation modules (Fig. 1 / §3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Module {
+    /// SpMV: ap = A p (line 7)
+    M1,
+    /// dot alpha: pap = p . ap (line 8)
+    M2,
+    /// update x: x += alpha p (line 9)
+    M3,
+    /// update r: r -= alpha ap (line 10)
+    M4,
+    /// left divide: z = M^-1 r (line 11)
+    M5,
+    /// dot rz (line 12)
+    M6,
+    /// update p: p = z + beta p (line 13)
+    M7,
+    /// dot rr (line 15)
+    M8,
+}
+
+impl Module {
+    pub const ALL: [Module; 8] = [
+        Module::M1,
+        Module::M2,
+        Module::M3,
+        Module::M4,
+        Module::M5,
+        Module::M6,
+        Module::M7,
+        Module::M8,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Module::M1 => "M1:spmv",
+            Module::M2 => "M2:dot-alpha",
+            Module::M3 => "M3:update-x",
+            Module::M4 => "M4:update-r",
+            Module::M5 => "M5:left-divide",
+            Module::M6 => "M6:dot-rz",
+            Module::M7 => "M7:update-p",
+            Module::M8 => "M8:dot-rr",
+        }
+    }
+
+    /// Vectors this module consumes / produces, and whether it reduces
+    /// to a scalar (dot modules): the raw data-flow facts of Alg. 1.
+    pub fn io(self) -> ModuleIo {
+        use Vector::*;
+        match self {
+            Module::M1 => ModuleIo::new(&[P], &[Ap], false),
+            Module::M2 => ModuleIo::new(&[P, Ap], &[], true),
+            Module::M3 => ModuleIo::new(&[X, P], &[X], false),
+            Module::M4 => ModuleIo::new(&[R, Ap], &[R], false),
+            Module::M5 => ModuleIo::new(&[R, M], &[Z], false),
+            Module::M6 => ModuleIo::new(&[R, Z], &[], true),
+            Module::M7 => ModuleIo::new(&[Z, P], &[P], false),
+            Module::M8 => ModuleIo::new(&[R], &[], true),
+        }
+    }
+}
+
+/// Data-flow signature of a module.
+#[derive(Debug, Clone)]
+pub struct ModuleIo {
+    pub consumes: Vec<Vector>,
+    pub produces: Vec<Vector>,
+    /// Scalar-reducing module: its output depends on the *whole* input
+    /// vector, which is exactly the VSR-blocking condition of §5.1.
+    pub reduces_to_scalar: bool,
+}
+
+impl ModuleIo {
+    fn new(c: &[Vector], p: &[Vector], s: bool) -> Self {
+        Self { consumes: c.to_vec(), produces: p.to_vec(), reduces_to_scalar: s }
+    }
+}
+
+/// The three phases of Fig. 5.  Phase-1 splits into 1.1 (M1) and 1.2
+/// (M2) in the paper; we keep them as ordered stages within phase 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Phase1,
+    Phase2,
+    Phase3,
+}
+
+/// Why two modules cannot share a stream (§5.1 "when can not VSR").
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum VsrBlock {
+    /// Consumer depends on a scalar computed from the producer's whole
+    /// output (e.g. M4 needs alpha = f(whole ap)).
+    ScalarDependency { scalar: &'static str },
+    /// Producer emits only after consuming its whole input (SpMV),
+    /// so the input vector cannot be forwarded.
+    FullConsumption,
+    /// Index skew exceeds the FIFO budget.
+    IndexSkew { skew: usize, budget: usize },
+}
+
+/// VSR legality between a producer stream and a consumer module, given
+/// the scalar dependencies of Alg. 1 (§5.2's analysis, mechanized).
+pub fn can_vsr(
+    producer: Module,
+    consumer: Module,
+    fifo_budget: usize,
+    skew: usize,
+) -> Result<(), VsrBlock> {
+    // Rule 3 (§5.1): index skew must fit in the FIFO budget.
+    if skew > fifo_budget {
+        return Err(VsrBlock::IndexSkew { skew, budget: fifo_budget });
+    }
+    use Module::*;
+    match (producer, consumer) {
+        // M2 produces pap -> alpha; M3/M4 consume alpha. Anything
+        // streamed from before M2's completion into M3/M4 is illegal
+        // within the same phase (rule 1).
+        (M1, M4) | (M1, M3) | (M2, M4) | (M2, M3) => {
+            Err(VsrBlock::ScalarDependency { scalar: "alpha" })
+        }
+        // M6 produces rz_new -> beta; M7 consumes beta (rule 1).
+        (M5, M7) | (M6, M7) => Err(VsrBlock::ScalarDependency { scalar: "beta" }),
+        // M1 (SpMV) only emits ap after consuming all of p: p cannot be
+        // forwarded through M1 to M2 (§5.4 Phase-1 discussion, rule 2).
+        (M1, M2) => Err(VsrBlock::FullConsumption),
+        _ => Ok(()),
+    }
+}
+
+/// Phase assignment of Fig. 5.
+pub fn phase_of(m: Module) -> Vec<Phase> {
+    use Module::*;
+    match m {
+        M1 | M2 => vec![Phase::Phase1],
+        // M4 and M5 run in Phase-2 *and* rerun in Phase-3 to recompute z
+        // (§5.3 recompute-to-save-memory).
+        M4 | M5 => vec![Phase::Phase2, Phase::Phase3],
+        M6 | M8 => vec![Phase::Phase2],
+        M7 | M3 => vec![Phase::Phase3],
+    }
+}
+
+/// One vector's memory activity within a phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Access {
+    pub vector: Vector,
+    pub read: bool,
+    pub write: bool,
+}
+
+/// The per-phase off-chip accesses of §5.4 *with* VSR + decentralized
+/// scheduling (10 reads + 4 writes = 14).
+pub fn accesses_with_vsr() -> Vec<(Phase, Vec<Access>)> {
+    use Vector::*;
+    let a = |vector, read, write| Access { vector, read, write };
+    vec![
+        // Phase 1: read p for M1 (the nnz stream is charged separately),
+        // read p again for M2, write ap. ap reused on-chip M1->M2.
+        (Phase::Phase1, vec![a(P, true, false), a(P, true, false), a(Ap, false, true)]),
+        // Phase 2: read r once (consume-and-send chain M4->M5->M6->M8),
+        // read M, read ap. Updated r stays on chip, z recomputed later.
+        (Phase::Phase2, vec![a(R, true, false), a(M, true, false), a(Ap, true, false)]),
+        // Phase 3: M4+M5 re-run (needs r, ap, M again), M7/M3 read p, x;
+        // write back r, p, x. z recomputed on chip, never stored.
+        (
+            Phase::Phase3,
+            vec![
+                a(R, true, true),
+                a(Ap, true, false),
+                a(M, true, false),
+                a(P, true, true),
+                a(X, true, true),
+            ],
+        ),
+    ]
+}
+
+/// Baseline accesses without decentralized VSR (§5.5: 14 reads + 5
+/// writes = 19): every module reads its inputs from memory and every
+/// produced vector is written back (z included).
+pub fn accesses_without_vsr() -> Vec<(Phase, Vec<Access>)> {
+    use Vector::*;
+    let a = |vector, read, write| Access { vector, read, write };
+    vec![
+        // M1 reads p, writes ap; M2 reads p and ap back from memory.
+        (
+            Phase::Phase1,
+            vec![a(P, true, false), a(P, true, false), a(Ap, true, true)],
+        ),
+        // M4 reads r + ap, writes r; M5 reads r + M, writes z; M6 reads
+        // r + z; M8 reads r.  Every hop round-trips through HBM.
+        (
+            Phase::Phase2,
+            vec![
+                a(R, true, true),
+                a(Ap, true, false),
+                a(R, true, false),
+                a(M, true, false),
+                a(Z, false, true),
+                a(R, true, false),
+                a(Z, true, false),
+                a(R, true, false),
+            ],
+        ),
+        // M7 reads z + p, writes p; M3 reads p + x, writes x.
+        (
+            Phase::Phase3,
+            vec![
+                a(Z, true, false),
+                a(P, true, true),
+                a(P, true, false),
+                a(X, true, true),
+            ],
+        ),
+    ]
+}
+
+/// Count (reads, writes) in an access table.
+pub fn count_accesses(table: &[(Phase, Vec<Access>)]) -> (usize, usize) {
+    let mut r = 0;
+    let mut w = 0;
+    for (_, list) in table {
+        for a in list {
+            r += a.read as usize;
+            w += a.write as usize;
+        }
+    }
+    (r, w)
+}
+
+/// §5.6: minimum depth of the *fast* FIFO so that a module with pipeline
+/// depth `l` consuming a slow and a fast stream cannot deadlock:
+/// depth >= L + 1.
+pub fn min_fast_fifo_depth(pipeline_depth: usize) -> usize {
+    pipeline_depth + 1
+}
+
+/// Vectors that live purely on-chip under the Fig. 5 schedule (only z:
+/// recomputed in Phase-3 instead of stored, §5.3) — saving one memory
+/// channel pair.
+pub fn onchip_only_vectors() -> BTreeSet<Vector> {
+    let stored: BTreeSet<Vector> = accesses_with_vsr()
+        .iter()
+        .flat_map(|(_, l)| l.iter().map(|a| a.vector))
+        .collect();
+    Vector::ALL.iter().copied().filter(|v| !stored.contains(v)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn access_counts_match_paper_section_5_5() {
+        let (r, w) = count_accesses(&accesses_with_vsr());
+        assert_eq!((r, w), (10, 4), "decentralized VSR: 10 reads + 4 writes");
+        let (r0, w0) = count_accesses(&accesses_without_vsr());
+        assert_eq!((r0, w0), (14, 5), "centralized baseline: 14 reads + 5 writes");
+    }
+
+    #[test]
+    fn z_is_the_only_onchip_vector() {
+        let s = onchip_only_vectors();
+        assert_eq!(s.len(), 1);
+        assert!(s.contains(&Vector::Z));
+    }
+
+    #[test]
+    fn scalar_dependencies_block_vsr() {
+        // ap from M1 cannot stream to M4 (alpha dependency) — the exact
+        // §5.2 example.
+        assert_eq!(
+            can_vsr(Module::M1, Module::M4, 1024, 0),
+            Err(VsrBlock::ScalarDependency { scalar: "alpha" })
+        );
+        // beta blocks M5->M7 within one phase.
+        assert_eq!(
+            can_vsr(Module::M5, Module::M7, 1024, 0),
+            Err(VsrBlock::ScalarDependency { scalar: "beta" })
+        );
+    }
+
+    #[test]
+    fn spmv_blocks_forwarding_p() {
+        assert_eq!(can_vsr(Module::M1, Module::M2, 1024, 0), Err(VsrBlock::FullConsumption));
+    }
+
+    #[test]
+    fn legal_reuse_chains_of_fig5() {
+        // Phase-2 consume-and-send chain M4 -> M5 -> M6 -> M8 on r.
+        assert!(can_vsr(Module::M4, Module::M5, 64, 1).is_ok());
+        assert!(can_vsr(Module::M5, Module::M6, 64, 1).is_ok());
+        assert!(can_vsr(Module::M6, Module::M8, 64, 1).is_ok());
+        // Phase-3: M4 -> M5(recompute z) -> M7 is legal because beta is
+        // already known when Phase-3 starts (M6 ran in Phase-2).
+        assert!(can_vsr(Module::M4, Module::M7, 64, 1).is_ok());
+        // Phase-3 p reuse M7 -> M3.
+        assert!(can_vsr(Module::M7, Module::M3, 64, 1).is_ok());
+    }
+
+    #[test]
+    fn index_skew_beyond_budget_blocks() {
+        assert_eq!(
+            can_vsr(Module::M4, Module::M5, 16, 33),
+            Err(VsrBlock::IndexSkew { skew: 33, budget: 16 })
+        );
+    }
+
+    #[test]
+    fn phases_match_fig5() {
+        assert_eq!(phase_of(Module::M1), vec![Phase::Phase1]);
+        assert_eq!(phase_of(Module::M2), vec![Phase::Phase1]);
+        assert_eq!(phase_of(Module::M4), vec![Phase::Phase2, Phase::Phase3]);
+        assert_eq!(phase_of(Module::M5), vec![Phase::Phase2, Phase::Phase3]);
+        assert_eq!(phase_of(Module::M6), vec![Phase::Phase2]);
+        assert_eq!(phase_of(Module::M8), vec![Phase::Phase2]);
+        assert_eq!(phase_of(Module::M7), vec![Phase::Phase3]);
+        assert_eq!(phase_of(Module::M3), vec![Phase::Phase3]);
+    }
+
+    #[test]
+    fn fifo_depth_rule() {
+        // Fig. 7: M5 pipeline depth L=33 needs fast FIFO >= 34.
+        assert_eq!(min_fast_fifo_depth(33), 34);
+    }
+
+    #[test]
+    fn module_io_covers_all_vectors() {
+        let mut seen = BTreeSet::new();
+        for m in Module::ALL {
+            let io = m.io();
+            seen.extend(io.consumes.iter().copied());
+            seen.extend(io.produces.iter().copied());
+        }
+        assert_eq!(seen.len(), Vector::ALL.len());
+    }
+}

@@ -1,0 +1,122 @@
+//! Integration tests over the PJRT runtime: the full L3 -> artifact
+//! (L2/L1) path.  These require `make artifacts`; they are skipped with
+//! a notice when the artifact directory is missing, and the Makefile's
+//! `test` target always builds artifacts first.
+
+use callipepla::coordinator::{Coordinator, CoordinatorConfig, NativeExecutor, PhaseExecutor};
+use callipepla::precision::Scheme;
+use callipepla::runtime::{default_artifact_dir, PjrtExecutor, PjrtRuntime};
+use callipepla::solver::{jpcg_solve, SolveOptions};
+use callipepla::sparse::synth;
+
+fn runtime_or_skip() -> Option<PjrtRuntime> {
+    match PjrtRuntime::new(default_artifact_dir()) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (artifacts not built): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn pjrt_phase1_matches_native_numerics() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let a = synth::banded_spd(900, 8_000, 1e-3, 17);
+    let mut exec = PjrtExecutor::new(&mut rt, &a, Scheme::MixV3).unwrap();
+    let mut native = NativeExecutor::new(&a, Scheme::MixV3);
+    let p: Vec<f64> = (0..a.n).map(|i| ((i * 31) % 101) as f64 / 101.0 - 0.5).collect();
+    let (ap_p, pap_p) = exec.phase1(&p);
+    let (ap_n, pap_n) = native.phase1(&p);
+    for i in 0..a.n {
+        assert!(
+            (ap_p[i] - ap_n[i]).abs() <= 1e-9 * ap_n[i].abs().max(1.0),
+            "ap[{i}]: {} vs {}",
+            ap_p[i],
+            ap_n[i]
+        );
+    }
+    assert!((pap_p - pap_n).abs() <= 1e-9 * pap_n.abs().max(1.0));
+}
+
+#[test]
+fn pjrt_phase2_and_phase3_match_native() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let a = synth::laplace2d_shifted(1_000, 0.05);
+    let mut exec = PjrtExecutor::new(&mut rt, &a, Scheme::MixV3).unwrap();
+    let mut native = NativeExecutor::new(&a, Scheme::MixV3);
+    let n = a.n;
+    let r: Vec<f64> = (0..n).map(|i| ((i * 13) % 37) as f64 / 37.0 - 0.5).collect();
+    let ap: Vec<f64> = (0..n).map(|i| ((i * 7) % 23) as f64 / 23.0 - 0.5).collect();
+    let (r1p, rzp, rrp) = exec.phase2(&r, &ap, 0.37);
+    let (r1n, rzn, rrn) = native.phase2(&r, &ap, 0.37);
+    for i in 0..n {
+        assert!((r1p[i] - r1n[i]).abs() <= 1e-12 * r1n[i].abs().max(1.0));
+    }
+    assert!((rzp - rzn).abs() <= 1e-9 * rzn.abs().max(1e-12), "{rzp} vs {rzn}");
+    assert!((rrp - rrn).abs() <= 1e-9 * rrn.abs().max(1e-12));
+
+    let p: Vec<f64> = (0..n).map(|i| (i as f64 * 0.01).sin()).collect();
+    let x = vec![0.25; n];
+    let (p1p, x1p) = exec.phase3(&r, &p, &x, 0.3, 0.9);
+    let (p1n, x1n) = native.phase3(&r, &p, &x, 0.3, 0.9);
+    for i in 0..n {
+        assert!((p1p[i] - p1n[i]).abs() <= 1e-12 * p1n[i].abs().max(1.0));
+        assert!((x1p[i] - x1n[i]).abs() <= 1e-12 * x1n[i].abs().max(1.0));
+    }
+}
+
+#[test]
+fn pjrt_full_solve_agrees_with_reference() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let a = synth::laplace2d_shifted(2_500, 0.05);
+    let mut exec = PjrtExecutor::new(&mut rt, &a, Scheme::MixV3).unwrap();
+    let mut coord = Coordinator::new(CoordinatorConfig::default());
+    let b = vec![1.0; a.n];
+    let x0 = vec![0.0; a.n];
+    let res = coord.solve(&mut exec, &b, &x0);
+    assert!(res.converged, "rr={}", res.final_rr);
+
+    let reference = jpcg_solve(&a, None, None, &SolveOptions::callipepla());
+    assert!(
+        (res.iters as i64 - reference.iters as i64).abs() <= 3,
+        "pjrt={} native={}",
+        res.iters,
+        reference.iters
+    );
+    // Ground truth.
+    let mut ax = vec![0.0; a.n];
+    a.spmv_f64(&res.x, &mut ax);
+    let err = ax.iter().map(|v| (v - 1.0).abs()).fold(0.0, f64::max);
+    assert!(err < 1e-4, "||Ax-b||={err}");
+}
+
+#[test]
+fn pjrt_fp64_scheme_also_works() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let a = synth::laplace2d_shifted(900, 0.1);
+    let mut exec = PjrtExecutor::new(&mut rt, &a, Scheme::Fp64).unwrap();
+    let mut coord = Coordinator::new(CoordinatorConfig::default());
+    let b = vec![1.0; a.n];
+    let res = coord.solve(&mut exec, &b, &vec![0.0; a.n]);
+    assert!(res.converged);
+}
+
+#[test]
+fn pjrt_rejects_oversized_problem_with_clear_error() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    // Largest bucket is n=16384: a bigger matrix must be refused.
+    let a = synth::laplace2d_shifted(20_000, 0.1);
+    let err = match PjrtExecutor::new(&mut rt, &a, Scheme::MixV3) {
+        Err(e) => e,
+        Ok(_) => panic!("oversized problem unexpectedly accepted"),
+    };
+    assert!(err.to_string().contains("bucket"), "{err}");
+}
+
+#[test]
+fn pjrt_mixv1_scheme_has_no_artifacts() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let a = synth::laplace2d_shifted(500, 0.1);
+    assert!(PjrtExecutor::new(&mut rt, &a, Scheme::MixV1).is_err());
+}
