@@ -1,51 +1,147 @@
 //! Hot-path microbenches (E-Perf): the numbers tracked across the
-//! EXPERIMENTS.md §Perf optimization log.
+//! perf trajectory (PERF.md / BENCH_hot_paths.json).
 //!
-//! * native SpMV (CSR f64 / stream-replay Mix-V3)
-//! * delay-buffer dot product
-//! * one full native JPCG iteration
-//! * one PJRT phase1 executable call (if artifacts are built)
+//! * native SpMV — serial CSR f64 baseline vs the engine's nnz-balanced
+//!   parallel kernels at 2 / 8 threads (f64 and Mix-V3)
+//! * stream-replay Mix-V3 SpMV, delay-buffer dot
+//! * 10 JPCG iterations — serial baseline vs the prepared-matrix plan
+//!   at 8 threads, plus an 8-RHS `solve_batch`
+//! * coordinator-path iterations (instruction issue + module dispatch)
+//! * time-plane: the fig9/ablation-style phase graph with busy-counter
+//!   fast-forwarding on vs off, and a full `iteration_cycles` call
+//! * one PJRT phase1 executable call (feature `pjrt`, artifacts built)
+//!
+//! `--json` additionally writes `BENCH_hot_paths.json` (median seconds
+//! + effective GB/s per kernel) so the trajectory is machine-tracked.
 
-use callipepla::bench_harness::timing::{bench, human_time};
-use callipepla::coordinator::{Coordinator, CoordinatorConfig, NativeExecutor, PhaseExecutor};
+use callipepla::bench_harness::timing::{bench, human_time, BenchResult};
+use callipepla::coordinator::{Coordinator, CoordinatorConfig, NativeExecutor};
+use callipepla::engine::{spmv_f64_parallel, spmv_parallel, PreparedMatrix, RowPartition};
 use callipepla::precision::{dot_delay_buffer, Scheme};
+#[cfg(feature = "pjrt")]
+use callipepla::coordinator::PhaseExecutor;
+#[cfg(feature = "pjrt")]
 use callipepla::runtime::{default_artifact_dir, PjrtExecutor, PjrtRuntime};
+use callipepla::sim::dataflow::Dataflow;
+use callipepla::sim::iteration::{iteration_cycles, spmv_busy_cycles, AccelSimConfig};
 use callipepla::solver::{jpcg_solve, SolveOptions};
 use callipepla::sparse::{pack_nnz_streams, synth, DEP_DIST_SERPENS};
 
+struct Rec {
+    name: String,
+    median_s: f64,
+    mean_s: f64,
+    gb_per_s: Option<f64>,
+}
+
+fn record(recs: &mut Vec<Rec>, r: &BenchResult, gb_per_s: Option<f64>) {
+    match gb_per_s {
+        Some(g) => println!("{}   ~{g:.2} GB/s effective", r.report()),
+        None => println!("{}", r.report()),
+    }
+    recs.push(Rec {
+        name: r.name.clone(),
+        median_s: r.median_s,
+        mean_s: r.mean_s,
+        gb_per_s,
+    });
+}
+
+/// The fig9/ablation-style phase-1 graph: big SpMV busy window feeding a
+/// forked output into a tailed dot + a write-back — the shape where the
+/// simulator used to burn one step() per idle busy cycle.
+fn phase_graph(nb: u64, busy: u64, fast_forward: bool) -> Dataflow {
+    let mut df = Dataflow::new(3);
+    df.set_fast_forward(fast_forward);
+    let x = df.fifo(64);
+    let y_raw = df.fifo(64);
+    let y_dot = df.fifo(64);
+    let y_wr = df.fifo(64);
+    let p2 = df.fifo(64);
+    df.mem_read("rd_x", 0, nb, x);
+    df.spmv("M1", x, nb, busy, nb, y_raw);
+    df.pipe("fork", vec![y_raw], vec![(0, y_dot), (0, y_wr)], 1, nb);
+    df.mem_read("rd_p", 1, nb, p2);
+    df.dot("M2", vec![p2, y_dot], nb, 40);
+    df.mem_write("wr_y", 2, nb, y_wr);
+    df
+}
+
 fn main() {
+    let json_mode = std::env::args().any(|a| a == "--json");
+    let mut recs: Vec<Rec> = Vec::new();
+
     let a = synth::banded_spd(100_000, 1_200_000, 1e-3, 7);
     let x: Vec<f64> = (0..a.n).map(|i| ((i % 17) as f64 - 8.0) / 8.0).collect();
     let mut y = vec![0.0; a.n];
     let nnz = a.nnz();
+    let spmv_bytes = nnz as f64 * 12.0 + a.n as f64 * 16.0;
     println!("hot paths on n={} nnz={nnz}", a.n);
 
-    // CSR FP64 SpMV.
+    // CSR FP64 SpMV: serial baseline, then the engine at 2 / 8 threads.
     let r = bench("spmv_csr_f64", 3, 20, || a.spmv_f64(&x, &mut y));
-    let gbs = (nnz as f64 * 12.0 + a.n as f64 * 16.0) / r.median_s / 1e9;
-    println!("{}   ~{gbs:.2} GB/s effective", r.report());
+    record(&mut recs, &r, Some(spmv_bytes / r.median_s / 1e9));
+    for threads in [2usize, 8] {
+        let part = RowPartition::nnz_balanced(&a, threads);
+        let r = bench(&format!("spmv_csr_f64_t{threads}"), 3, 20, || {
+            spmv_f64_parallel(&a, &x, &mut y, &part)
+        });
+        record(&mut recs, &r, Some(spmv_bytes / r.median_s / 1e9));
+    }
+
+    // Mix-V3 (f32 matrix, f64 x/accumulate) at 8 threads.
+    let vals32 = a.vals_f32();
+    let part8 = RowPartition::nnz_balanced(&a, 8);
+    let r = bench("spmv_mixv3_t8", 3, 20, || {
+        spmv_parallel(&a, &vals32, &x, &mut y, Scheme::MixV3, &part8)
+    });
+    record(&mut recs, &r, Some((nnz as f64 * 8.0 + a.n as f64 * 16.0) / r.median_s / 1e9));
 
     // Stream-replay Mix-V3 SpMV (the scheduled-stream value plane).
     let stream = pack_nnz_streams(&a, DEP_DIST_SERPENS);
     let r = bench("spmv_stream_replay_mixv3", 2, 10, || {
         stream.replay_mixv3(&x, &mut y)
     });
-    println!("{}", r.report());
+    record(&mut recs, &r, None);
 
     // Delay-buffer dot.
     let b: Vec<f64> = (0..a.n).map(|i| (i as f64 * 0.001).sin()).collect();
     let r = bench("dot_delay_buffer_100k", 3, 50, || {
         std::hint::black_box(dot_delay_buffer(&x, &b));
     });
-    println!("{}", r.report());
+    record(&mut recs, &r, None);
 
-    // Full native iteration (via a capped solve).
+    // Full native iterations (via a capped solve): serial baseline vs
+    // the prepared plan at 8 threads (fused sweeps + parallel SpMV +
+    // cached vals32/diag — bitwise-identical numerics).
     let mut opts = SolveOptions::callipepla();
     opts.max_iters = 10;
     let r = bench("native_jpcg_10_iters", 1, 5, || {
         std::hint::black_box(jpcg_solve(&a, None, None, &opts));
     });
-    println!("{}   => {} per iteration", r.report(), human_time(r.median_s / 10.0));
+    record(&mut recs, &r, None);
+    println!("    => {} per iteration", human_time(r.median_s / 10.0));
+
+    let prep8 = PreparedMatrix::new(&a, 8);
+    let r = bench("native_jpcg_10_iters_t8", 1, 5, || {
+        std::hint::black_box(prep8.solve(None, None, &opts));
+    });
+    record(&mut recs, &r, None);
+    println!("    => {} per iteration", human_time(r.median_s / 10.0));
+
+    // Batch API: 8 right-hand sides against one prepared matrix.
+    let rhs: Vec<Vec<f64>> = (0..8)
+        .map(|k| (0..a.n).map(|i| ((i + k * 37) % 11) as f64 / 11.0).collect())
+        .collect();
+    let r = bench("solve_batch_8rhs_t8_10_iters", 1, 3, || {
+        std::hint::black_box(prep8.solve_batch(&rhs, &opts));
+    });
+    record(&mut recs, &r, None);
+    let prep1 = PreparedMatrix::new(&a, 1);
+    let r = bench("solve_batch_8rhs_t1_10_iters", 1, 3, || {
+        std::hint::black_box(prep1.solve_batch(&rhs, &opts));
+    });
+    record(&mut recs, &r, None);
 
     // Coordinator-path iteration (instruction issue + module dispatch).
     let r = bench("coordinator_native_10_iters", 1, 5, || {
@@ -56,9 +152,36 @@ fn main() {
         let x0 = vec![0.0; a.n];
         std::hint::black_box(coord.solve(&mut exec, &b1, &x0));
     });
-    println!("{}", r.report());
+    record(&mut recs, &r, None);
 
-    // PJRT phase call, when artifacts exist.
+    // Time plane: the same phase graph stepped cycle-by-cycle vs with
+    // busy-counter fast-forwarding (results are bit-identical; only
+    // wall-clock differs), plus a full iteration_cycles call as used by
+    // the fig9/ablation sims.  Suite-density dims (nnz/n ~ 60, like the
+    // Table-3 upper half): there the SpMV busy window dwarfs the vector
+    // streams and the simulator used to idle-step through it.
+    let (sim_n, sim_nnz) = (100_000usize, 6_000_000usize);
+    let nb = (sim_n as u64).div_ceil(8);
+    let busy = spmv_busy_cycles(sim_nnz, Scheme::MixV3, 1.06);
+    let cycles_slow = phase_graph(nb, busy, false).run(u64::MAX).unwrap().cycles;
+    let cycles_fast = phase_graph(nb, busy, true).run(u64::MAX).unwrap().cycles;
+    assert_eq!(cycles_slow, cycles_fast, "fast-forward changed the sim result");
+    let r = bench("sim_phase_graph_step_by_step", 1, 5, || {
+        std::hint::black_box(phase_graph(nb, busy, false).run(u64::MAX).unwrap());
+    });
+    record(&mut recs, &r, None);
+    let r = bench("sim_phase_graph_fast_forward", 2, 10, || {
+        std::hint::black_box(phase_graph(nb, busy, true).run(u64::MAX).unwrap());
+    });
+    record(&mut recs, &r, None);
+    let cal = AccelSimConfig::callipepla();
+    let r = bench("sim_iteration_cycles_callipepla", 2, 10, || {
+        std::hint::black_box(iteration_cycles(&cal, sim_n, sim_nnz));
+    });
+    record(&mut recs, &r, None);
+
+    // PJRT phase call, when the feature and artifacts exist.
+    #[cfg(feature = "pjrt")]
     match PjrtRuntime::new(default_artifact_dir()) {
         Ok(mut rt) => {
             let small = synth::laplace2d_shifted(4_000, 0.05);
@@ -69,11 +192,38 @@ fn main() {
                     let r = bench("pjrt_phase1_call_n4096_bucket", 2, 20, || {
                         std::hint::black_box(exec.phase1(&p));
                     });
-                    println!("{}", r.report());
+                    record(&mut recs, &r, None);
                 }
                 Err(e) => println!("pjrt executor unavailable: {e}"),
             }
         }
         Err(e) => println!("pjrt bench skipped: {e}"),
+    }
+    #[cfg(not(feature = "pjrt"))]
+    println!("pjrt bench skipped: built without the `pjrt` feature");
+
+    if json_mode {
+        let mut out = String::from("{\n  \"bench\": \"hot_paths\",\n");
+        out.push_str(&format!(
+            "  \"matrix\": {{ \"n\": {}, \"nnz\": {} }},\n  \"results\": [\n",
+            a.n, nnz
+        ));
+        for (k, rec) in recs.iter().enumerate() {
+            let gbs = match rec.gb_per_s {
+                Some(g) => format!("{g:.4}"),
+                None => "null".to_string(),
+            };
+            out.push_str(&format!(
+                "    {{ \"name\": \"{}\", \"median_s\": {:e}, \"mean_s\": {:e}, \"gb_per_s\": {} }}{}\n",
+                rec.name,
+                rec.median_s,
+                rec.mean_s,
+                gbs,
+                if k + 1 < recs.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        std::fs::write("BENCH_hot_paths.json", &out).expect("write BENCH_hot_paths.json");
+        println!("wrote BENCH_hot_paths.json ({} kernels)", recs.len());
     }
 }

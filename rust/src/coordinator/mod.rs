@@ -200,27 +200,43 @@ impl Coordinator {
 // Native executor: the module implementations of modules::compute.
 // --------------------------------------------------------------------
 
+use crate::engine::PreparedMatrix;
 use crate::modules::compute::{AxpyModule, DotModule, LeftDivideModule, SpMvModule, UpdatePModule};
 use crate::sparse::{pack_nnz_streams, NnzStream, DEP_DIST_SERPENS};
 
 /// Executes phases with the native module implementations, streaming the
 /// SpMV through the scheduled Serpens nnz streams (Mix-V3) or CSR FP64.
+/// Matrix-derived state (Jacobi diagonal, f32 values, row partition)
+/// lives in a [`PreparedMatrix`] plan so it is derived once per matrix,
+/// and the CSR FP64 path runs the engine's nnz-balanced parallel SpMV
+/// (bitwise identical to the serial kernel).
 pub struct NativeExecutor<'a> {
     pub a: &'a CsrMatrix,
     pub scheme: Scheme,
     stream: Option<NnzStream>,
-    m: Vec<f64>,
+    prep: PreparedMatrix<'a>,
 }
 
 impl<'a> NativeExecutor<'a> {
     pub fn new(a: &'a CsrMatrix, scheme: Scheme) -> Self {
+        let threads =
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Self::with_threads(a, scheme, threads)
+    }
+
+    /// Explicit thread budget for the CSR SpMV path (1 = serial).
+    pub fn with_threads(a: &'a CsrMatrix, scheme: Scheme, threads: usize) -> Self {
         let stream = if scheme.matrix_f32() {
             Some(pack_nnz_streams(a, DEP_DIST_SERPENS))
         } else {
             None
         };
-        let m = a.jacobi_diag();
-        Self { a, scheme, stream, m }
+        Self { a, scheme, stream, prep: PreparedMatrix::new(a, threads) }
+    }
+
+    /// The underlying solve plan (partition, cached diagonal/values).
+    pub fn plan(&self) -> &PreparedMatrix<'a> {
+        &self.prep
     }
 
     fn spmv(&self, v: &[f64]) -> Vec<f64> {
@@ -228,7 +244,7 @@ impl<'a> NativeExecutor<'a> {
             Some(s) => SpMvModule { stream: s }.run(v),
             None => {
                 let mut out = vec![0.0; self.a.n];
-                self.a.spmv_f64(v, &mut out);
+                self.prep.spmv(Scheme::Fp64, v, &mut out);
                 out
             }
         }
@@ -244,7 +260,7 @@ impl PhaseExecutor for NativeExecutor<'_> {
             r[i] = b[i] - ax[i];
         }
         let mut z = vec![0.0; n];
-        LeftDivideModule.run(&r, &self.m, &mut z);
+        LeftDivideModule.run(&r, self.prep.diag(), &mut z);
         let p = z.clone();
         let rz = DotModule.run(&r, &z);
         let rr = DotModule.run(&r, &r);
@@ -261,7 +277,7 @@ impl PhaseExecutor for NativeExecutor<'_> {
         let mut r1 = r.to_vec();
         AxpyModule.run(-alpha, ap, &mut r1);
         let mut z = vec![0.0; r1.len()];
-        LeftDivideModule.run(&r1, &self.m, &mut z);
+        LeftDivideModule.run(&r1, self.prep.diag(), &mut z);
         let rz = DotModule.run(&r1, &z);
         let rr = DotModule.run(&r1, &r1);
         (r1, rz, rr)
@@ -277,7 +293,7 @@ impl PhaseExecutor for NativeExecutor<'_> {
     ) -> (Vec<f64>, Vec<f64>) {
         // M4+M5 recompute z from the (already updated) r stream (§5.3).
         let mut z = vec![0.0; r.len()];
-        LeftDivideModule.run(r, &self.m, &mut z);
+        LeftDivideModule.run(r, self.prep.diag(), &mut z);
         let mut x1 = x.to_vec();
         AxpyModule.run(alpha, p, &mut x1);
         let mut p1 = p.to_vec();
@@ -334,6 +350,28 @@ mod tests {
         let a = synth::laplace2d_shifted(400, 0.1);
         let res = solve_native(&a, Scheme::Fp64);
         assert!(res.converged);
+    }
+
+    #[test]
+    fn fp64_path_thread_count_is_bitwise_invisible() {
+        // The engine-backed CSR SpMV must not move a single iteration.
+        let a = synth::banded_spd(1_000, 8_000, 1e-4, 57);
+        let cfg = CoordinatorConfig::default();
+        let solve_t = |threads: usize| {
+            let mut coord = Coordinator::new(cfg);
+            let mut exec = NativeExecutor::with_threads(&a, Scheme::Fp64, threads);
+            let b = vec![1.0; a.n];
+            let x0 = vec![0.0; a.n];
+            coord.solve(&mut exec, &b, &x0)
+        };
+        let serial = solve_t(1);
+        let parallel = solve_t(8);
+        assert_eq!(serial.iters, parallel.iters);
+        assert!(serial
+            .x
+            .iter()
+            .zip(&parallel.x)
+            .all(|(u, v)| u.to_bits() == v.to_bits()));
     }
 
     #[test]

@@ -1,0 +1,31 @@
+//! Parallel execution engine: the software analogue of spreading the
+//! nnz stream across parallel compute units (paper §6 / Fig. 8 — 16 HBM
+//! channels × 8 PEs; same partition-by-nonzeros lesson as the related
+//! HBM SpMV designs of Hogervorst et al. and Korcyl & Korcyl).
+//!
+//! Three pieces, layered bottom-up:
+//!
+//! * [`RowPartition`] — contiguous nnz-balanced row blocks over a
+//!   [`CsrMatrix`](crate::sparse::CsrMatrix), cut on the `indptr` prefix
+//!   sum so every block carries ~nnz/parts work.
+//! * [`spmv_parallel`] — multithreaded SpMV (std scoped threads, no
+//!   dependencies) for all four precision [`Scheme`](crate::precision::Scheme)s.
+//!   Row-parallel CSR never splits a row, so per-row accumulation order
+//!   is untouched and the output is **bitwise identical** to the serial
+//!   kernels — Table-7 iteration counts cannot drift (asserted in
+//!   `tests/engine_parallel.rs`).
+//! * [`PreparedMatrix`] — a solve plan that derives `vals_f32`, the
+//!   Jacobi diagonal and the partition once, then serves any number of
+//!   solves: [`PreparedMatrix::solve`] runs one right-hand side with the
+//!   parallel SpMV inside the fused JPCG loop, and
+//!   [`PreparedMatrix::solve_batch`] runs many right-hand sides across
+//!   worker threads with per-worker reusable workspaces — the batching
+//!   story for serving concurrent solve requests.
+
+mod partition;
+mod plan;
+mod spmv;
+
+pub use partition::RowPartition;
+pub use plan::PreparedMatrix;
+pub use spmv::{spmv_f64_parallel, spmv_parallel};

@@ -1,0 +1,196 @@
+//! The prepared-matrix solve plan: derive everything reusable once,
+//! then serve solves — singly (parallel SpMV inside one solve) or in
+//! batches (solves spread across workers, serial SpMV inside each).
+
+use crate::precision::{apply_accumulator_model, Scheme};
+use crate::solver::{
+    jpcg_solve_cached_ws, jpcg_solve_with_spmv, SolveOptions, SolveResult, SolveWorkspace,
+};
+use crate::sparse::CsrMatrix;
+
+use super::{spmv_parallel, RowPartition};
+
+/// A matrix prepared for repeated solving: cached f32 value view
+/// (derived lazily, on the first Mix-scheme use — a pure-FP64 plan
+/// never pays the O(nnz) conversion), cached Jacobi diagonal, an
+/// nnz-balanced [`RowPartition`] sized to the thread budget, and the
+/// scheme-independent glue to run the fused JPCG loop over the parallel
+/// SpMV.  Everything a solve needs besides the right-hand side.
+#[derive(Debug, Clone)]
+pub struct PreparedMatrix<'a> {
+    a: &'a CsrMatrix,
+    vals32: std::sync::OnceLock<Vec<f32>>,
+    diag: Vec<f64>,
+    partition: RowPartition,
+    threads: usize,
+}
+
+impl<'a> PreparedMatrix<'a> {
+    /// Prepare with an explicit thread budget (>= 1).
+    pub fn new(a: &'a CsrMatrix, threads: usize) -> Self {
+        let threads = threads.max(1);
+        Self {
+            a,
+            vals32: std::sync::OnceLock::new(),
+            diag: a.jacobi_diag(),
+            partition: RowPartition::nnz_balanced(a, threads),
+            threads,
+        }
+    }
+
+    /// Prepare with one block per available hardware thread.
+    pub fn with_default_threads(a: &'a CsrMatrix) -> Self {
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Self::new(a, threads)
+    }
+
+    pub fn matrix(&self) -> &CsrMatrix {
+        self.a
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn partition(&self) -> &RowPartition {
+        &self.partition
+    }
+
+    /// Cached f32 view of the value stream (what HBM holds under
+    /// Mix-*), derived on first use.
+    pub fn vals32(&self) -> &[f32] {
+        self.vals32.get_or_init(|| self.a.vals_f32())
+    }
+
+    /// The f32 view if `scheme` streams one, else the empty slice the
+    /// FP64 kernels ignore — without forcing the lazy derivation.
+    fn vals32_for(&self, scheme: Scheme) -> &[f32] {
+        if scheme.matrix_f32() {
+            self.vals32()
+        } else {
+            &[]
+        }
+    }
+
+    /// Cached Jacobi diagonal (zeros mapped to 1.0).
+    pub fn diag(&self) -> &[f64] {
+        &self.diag
+    }
+
+    /// y = A x under `scheme`, on the plan's partition/threads.  Bitwise
+    /// identical to the serial `spmv_scheme` path.
+    pub fn spmv(&self, scheme: Scheme, x: &[f64], y: &mut [f64]) {
+        spmv_parallel(self.a, self.vals32_for(scheme), x, y, scheme, &self.partition);
+    }
+
+    /// Solve one right-hand side (`None` = ones, paper setup) with the
+    /// parallel SpMV inside the fused JPCG loop.  Numerics are bitwise
+    /// identical to [`crate::solver::jpcg_solve`] at any thread count.
+    pub fn solve(
+        &self,
+        b: Option<&[f64]>,
+        x0: Option<&[f64]>,
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        let mut ws = SolveWorkspace::new();
+        self.solve_ws(b, x0, opts, &mut ws)
+    }
+
+    /// [`PreparedMatrix::solve`] with a caller-held workspace, for
+    /// allocation-free repeated solves.
+    pub fn solve_ws(
+        &self,
+        b: Option<&[f64]>,
+        x0: Option<&[f64]>,
+        opts: &SolveOptions,
+        ws: &mut SolveWorkspace,
+    ) -> SolveResult {
+        let scheme = opts.scheme;
+        let vals32 = self.vals32_for(scheme);
+        if self.threads <= 1 {
+            return jpcg_solve_cached_ws(self.a, vals32, &self.diag, b, x0, opts, ws);
+        }
+        let acc = opts.accumulator;
+        jpcg_solve_with_spmv(self.a.n, self.a.nnz(), &self.diag, b, x0, opts, ws, |x, y, salt| {
+            spmv_parallel(self.a, vals32, x, y, scheme, &self.partition);
+            apply_accumulator_model(y, acc, salt);
+        })
+    }
+
+    /// Solve many right-hand sides against this one prepared matrix.
+    ///
+    /// Scaling strategy: parallelism goes *across* solves (one worker
+    /// per right-hand side chunk, serial SpMV inside each) — for a batch
+    /// this dominates per-solve SpMV threading because it also overlaps
+    /// the vector sweeps, and every solve still produces bitwise the
+    /// result of a lone [`crate::solver::jpcg_solve`] call.  Results
+    /// come back in input order.
+    pub fn solve_batch(&self, rhs: &[Vec<f64>], opts: &SolveOptions) -> Vec<SolveResult> {
+        if rhs.is_empty() {
+            return Vec::new();
+        }
+        let workers = self.threads.min(rhs.len()).max(1);
+        let vals32 = self.vals32_for(opts.scheme);
+        if workers == 1 {
+            let mut ws = SolveWorkspace::new();
+            return rhs
+                .iter()
+                .map(|b| {
+                    jpcg_solve_cached_ws(self.a, vals32, &self.diag, Some(b), None, opts, &mut ws)
+                })
+                .collect();
+        }
+        let chunk = rhs.len().div_ceil(workers);
+        let mut out: Vec<Option<SolveResult>> = Vec::with_capacity(rhs.len());
+        out.resize_with(rhs.len(), || None);
+        std::thread::scope(|s| {
+            for (out_chunk, rhs_chunk) in out.chunks_mut(chunk).zip(rhs.chunks(chunk)) {
+                s.spawn(move || {
+                    let mut ws = SolveWorkspace::new();
+                    for (slot, b) in out_chunk.iter_mut().zip(rhs_chunk) {
+                        *slot = Some(jpcg_solve_cached_ws(
+                            self.a,
+                            vals32,
+                            &self.diag,
+                            Some(b),
+                            None,
+                            opts,
+                            &mut ws,
+                        ));
+                    }
+                });
+            }
+        });
+        out.into_iter().map(|r| r.expect("every batch slot solved")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::jpcg_solve;
+    use crate::sparse::synth;
+
+    #[test]
+    fn prepared_solve_matches_plain_solver_bitwise() {
+        let a = synth::banded_spd(1_500, 12_000, 1e-4, 33);
+        let reference = jpcg_solve(&a, None, None, &SolveOptions::callipepla());
+        for threads in [1, 2, 8] {
+            let prep = PreparedMatrix::new(&a, threads);
+            let res = prep.solve(None, None, &SolveOptions::callipepla());
+            assert_eq!(res.iters, reference.iters, "threads={threads}");
+            assert_eq!(res.final_rr.to_bits(), reference.final_rr.to_bits());
+            assert!(
+                res.x.iter().zip(&reference.x).all(|(u, v)| u.to_bits() == v.to_bits()),
+                "solution drifted at {threads} threads"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let a = synth::laplace2d_shifted(64, 0.1);
+        let prep = PreparedMatrix::new(&a, 4);
+        assert!(prep.solve_batch(&[], &SolveOptions::default()).is_empty());
+    }
+}

@@ -1,0 +1,105 @@
+//! Multithreaded SpMV kernels over an nnz-balanced [`RowPartition`].
+//!
+//! Each worker runs the *serial* row-block kernel
+//! ([`crate::precision::spmv_scheme_rows`]) on its own disjoint slice of
+//! y.  No row is ever split across workers, so every y\[i\] is computed
+//! by exactly the serial per-row loop — the parallel output is bitwise
+//! identical to the serial one for all four schemes, at any thread
+//! count.  That invariant is what allows the solver to go parallel
+//! without moving a single Table-7 iteration count.
+
+use crate::precision::{spmv_scheme_rows, Scheme};
+use crate::sparse::CsrMatrix;
+
+use super::RowPartition;
+
+/// y = A x under `scheme`, one scoped thread per partition block.
+/// `vals32` must be the f32 view of `a.vals` (may be empty for
+/// [`Scheme::Fp64`]).  Blocks of zero rows spawn nothing; a one-block
+/// partition runs inline with no thread overhead.
+pub fn spmv_parallel(
+    a: &CsrMatrix,
+    vals32: &[f32],
+    x: &[f64],
+    y: &mut [f64],
+    scheme: Scheme,
+    part: &RowPartition,
+) {
+    debug_assert_eq!(x.len(), a.n);
+    debug_assert_eq!(y.len(), a.n);
+    if part.num_parts() <= 1 {
+        spmv_scheme_rows(a, vals32, x, y, 0, scheme);
+        return;
+    }
+    // Split y into the partition's disjoint row blocks (mem::take keeps
+    // each split's loan on a dead temporary, the borrowck-clean idiom
+    // for carving a &mut slice in a loop).
+    let mut blocks: Vec<(usize, &mut [f64])> = Vec::with_capacity(part.num_parts());
+    let mut rest = y;
+    let mut offset = 0usize;
+    for k in 0..part.num_parts() {
+        let range = part.range(k);
+        let slab = std::mem::take(&mut rest);
+        let (head, tail) = slab.split_at_mut(range.end - offset);
+        if !head.is_empty() {
+            blocks.push((range.start, head));
+        }
+        rest = tail;
+        offset = range.end;
+    }
+    std::thread::scope(|s| {
+        // First block runs on the calling thread: parts-1 spawns, not
+        // parts, and the caller is never idle.
+        let mut iter = blocks.into_iter();
+        let first = iter.next();
+        for (row_start, y_rows) in iter {
+            s.spawn(move || spmv_scheme_rows(a, vals32, x, y_rows, row_start, scheme));
+        }
+        if let Some((row_start, y_rows)) = first {
+            spmv_scheme_rows(a, vals32, x, y_rows, row_start, scheme);
+        }
+    });
+}
+
+/// FP64 convenience wrapper (the `spmv_csr_f64` hot path).
+pub fn spmv_f64_parallel(a: &CsrMatrix, x: &[f64], y: &mut [f64], part: &RowPartition) {
+    spmv_parallel(a, &[], x, y, Scheme::Fp64, part);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::synth;
+
+    #[test]
+    fn parallel_matches_serial_bitwise_all_schemes() {
+        let a = synth::banded_spd(1_200, 9_600, 1e-3, 13);
+        let vals32 = a.vals_f32();
+        let x: Vec<f64> = (0..a.n).map(|i| (i as f64 * 0.17).cos()).collect();
+        for scheme in Scheme::ALL {
+            let mut serial = vec![0.0; a.n];
+            spmv_scheme_rows(&a, &vals32, &x, &mut serial, 0, scheme);
+            for threads in [1, 2, 8] {
+                let part = RowPartition::nnz_balanced(&a, threads);
+                let mut par = vec![0.0; a.n];
+                spmv_parallel(&a, &vals32, &x, &mut par, scheme, &part);
+                assert!(
+                    serial.iter().zip(&par).all(|(u, v)| u.to_bits() == v.to_bits()),
+                    "scheme {scheme:?} diverged at {threads} threads"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn more_parts_than_rows_is_safe() {
+        let a = synth::laplace2d_shifted(9, 0.1);
+        let part = RowPartition::nnz_balanced(&a, 16);
+        let x = vec![1.0; a.n];
+        let mut y = vec![0.0; a.n];
+        spmv_f64_parallel(&a, &x, &mut y, &part);
+        let mut want = vec![0.0; a.n];
+        a.spmv_f64(&x, &mut want);
+        assert_eq!(y, want);
+    }
+}

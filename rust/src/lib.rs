@@ -7,8 +7,9 @@
 //! The paper's FPGA is replaced by two orthogonal planes (DESIGN.md §5):
 //!
 //! * a **value plane** that runs the JPCG numerics for real — natively
-//!   ([`solver`]) and through AOT-compiled JAX/Pallas HLO artifacts
-//!   executed by the PJRT CPU client ([`runtime`]);
+//!   ([`solver`], accelerated by the parallel execution [`engine`]) and
+//!   through AOT-compiled JAX/Pallas HLO artifacts executed by the PJRT
+//!   CPU client (`runtime`, behind the off-by-default `pjrt` feature);
 //! * a **time plane** — a cycle-approximate model of the U280 HBM
 //!   accelerator ([`hbm`], [`sim`]) driven by the same stream-centric
 //!   instruction traces ([`isa`], [`coordinator`]).
@@ -18,18 +19,24 @@
 //! | Layer | Where | Paper section |
 //! |---|---|---|
 //! | L3 coordinator | [`coordinator`], [`isa`], [`modules`], [`vsr`], [`sim`] | §3–§5 |
+//! | execution engine | [`engine`] (nnz-balanced parallel SpMV, prepared-matrix batch solves) | §6 / Fig. 8 analogue |
 //! | L2 JAX model | `python/compile/model.py` | Alg. 1 / Fig. 5 phases |
 //! | L1 Pallas kernels | `python/compile/kernels/` | §6 mixed-precision SpMV |
-//! | runtime | [`runtime`] (xla crate / PJRT) | — |
+//! | runtime | `runtime` (xla crate / PJRT, feature `pjrt`) | — |
+//!
+//! Performance notes (bench methodology, measured numbers, and the
+//! bitwise-parallelism invariants) live in `PERF.md` at the repo root.
 
 pub mod accel;
 pub mod bench_harness;
 pub mod coordinator;
+pub mod engine;
 pub mod hbm;
 pub mod isa;
 pub mod metrics;
 pub mod modules;
 pub mod precision;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
 pub mod solver;
@@ -37,6 +44,7 @@ pub mod sparse;
 pub mod util;
 pub mod vsr;
 
+pub use engine::PreparedMatrix;
 pub use precision::Scheme;
 pub use solver::{jpcg_solve, SolveOptions, SolveResult};
 pub use sparse::CsrMatrix;

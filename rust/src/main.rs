@@ -22,7 +22,9 @@ use anyhow::{anyhow, bail, Result};
 
 use callipepla::bench_harness::tables::{self, SweepConfig};
 use callipepla::coordinator::{Coordinator, CoordinatorConfig, NativeExecutor};
+use callipepla::engine::PreparedMatrix;
 use callipepla::precision::Scheme;
+#[cfg(feature = "pjrt")]
 use callipepla::runtime::{default_artifact_dir, PjrtExecutor, PjrtRuntime};
 use callipepla::sim::{self, AccelSimConfig};
 use callipepla::solver::{jpcg_solve, SolveOptions};
@@ -66,7 +68,7 @@ fn print_usage() {
         "callipepla — stream-centric ISA + mixed-precision JPCG (FPGA'23 reproduction)\n\
          commands: solve suite table4 table5 table6 table7 fig9 sim\n\
          common flags: --matrix <Mxx|name>  --mtx <file>  --scale <f>  --scheme <fp64|mixv1|mixv2|mixv3>\n\
-         \u{20}                --matrices M1,M2  --max-iters <n>  --pjrt  --out <dir>"
+         \u{20}                --matrices M1,M2  --max-iters <n>  --threads <n>  --pjrt  --out <dir>"
     );
 }
 
@@ -129,22 +131,31 @@ fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
     println!("solving {name}: n={} nnz={} scheme={}", a.n, a.nnz(), scheme.name());
     let t0 = std::time::Instant::now();
     if flags.contains_key("pjrt") {
-        // Three-layer path: coordinator -> PJRT artifacts (L2/L1).
-        let mut rt = PjrtRuntime::new(default_artifact_dir())?;
-        let mut exec = PjrtExecutor::new(&mut rt, &a, scheme)?;
-        let cfg = CoordinatorConfig { max_iters, ..Default::default() };
-        let mut coord = Coordinator::new(cfg);
-        let b = vec![1.0; a.n];
-        let x0 = vec![0.0; a.n];
-        let res = coord.solve(&mut exec, &b, &x0);
-        println!(
-            "pjrt path: converged={} iters={} rr={:.3e} executable_calls={} wall={:?}",
-            res.converged,
-            res.iters,
-            res.final_rr,
-            exec.calls,
-            t0.elapsed()
+        #[cfg(not(feature = "pjrt"))]
+        bail!(
+            "this binary was built without the `pjrt` feature; enabling it needs the \
+             `xla` crate + libxla_extension (see the dependency note in rust/Cargo.toml), \
+             then `cargo build --features pjrt`"
         );
+        // Three-layer path: coordinator -> PJRT artifacts (L2/L1).
+        #[cfg(feature = "pjrt")]
+        {
+            let mut rt = PjrtRuntime::new(default_artifact_dir())?;
+            let mut exec = PjrtExecutor::new(&mut rt, &a, scheme)?;
+            let cfg = CoordinatorConfig { max_iters, ..Default::default() };
+            let mut coord = Coordinator::new(cfg);
+            let b = vec![1.0; a.n];
+            let x0 = vec![0.0; a.n];
+            let res = coord.solve(&mut exec, &b, &x0);
+            println!(
+                "pjrt path: converged={} iters={} rr={:.3e} executable_calls={} wall={:?}",
+                res.converged,
+                res.iters,
+                res.final_rr,
+                exec.calls,
+                t0.elapsed()
+            );
+        }
     } else if flags.contains_key("coordinator") {
         // Native module path through the full ISA coordinator.
         let cfg = CoordinatorConfig {
@@ -169,10 +180,23 @@ fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
         let mut opts = SolveOptions::callipepla();
         opts.scheme = scheme;
         opts.max_iters = max_iters;
-        let res = jpcg_solve(&a, None, None, &opts);
+        // --threads N runs the prepared-matrix parallel engine (0/absent
+        // = serial reference path); the numerics are bitwise identical.
+        let threads = flag_u32(flags, "threads", 0) as usize;
+        let res = if threads > 1 {
+            let prep = PreparedMatrix::new(&a, threads);
+            prep.solve(None, None, &opts)
+        } else {
+            jpcg_solve(&a, None, None, &opts)
+        };
         println!(
-            "native path: converged={} iters={} rr={:.3e} flops={} wall={:?}",
-            res.converged, res.iters, res.final_rr, res.flops, t0.elapsed()
+            "native path ({}): converged={} iters={} rr={:.3e} flops={} wall={:?}",
+            if threads > 1 { format!("{threads} threads") } else { "serial".to_string() },
+            res.converged,
+            res.iters,
+            res.final_rr,
+            res.flops,
+            t0.elapsed()
         );
     }
     Ok(())

@@ -90,10 +90,11 @@ fn signed_hash01(i: u64, salt: u64) -> f64 {
 }
 
 /// SpMV under a precision scheme + accumulator model.  `vals32` must be
-/// the f32 view of `a.vals` (cached by the caller — deriving it is O(nnz)).
-/// `salt` feeds the PaddedUnstable perturbation (callers pass the
-/// iteration number so the perturbation varies across iterations the way
-/// a timing-dependent accumulator error would).
+/// the f32 view of `a.vals` (cached by the caller — deriving it is
+/// O(nnz)); it is ignored (may be empty) for [`Scheme::Fp64`].  `salt`
+/// feeds the PaddedUnstable perturbation (callers pass the iteration
+/// number so the perturbation varies across iterations the way a
+/// timing-dependent accumulator error would).
 pub fn spmv_scheme(
     a: &CsrMatrix,
     vals32: &[f32],
@@ -103,47 +104,80 @@ pub fn spmv_scheme(
     acc: AccumulatorModel,
     salt: u64,
 ) {
+    debug_assert_eq!(y.len(), a.n);
+    spmv_scheme_rows(a, vals32, x, y, 0, scheme);
+    apply_accumulator_model(y, acc, salt);
+}
+
+/// One scheme's SpMV restricted to the contiguous row block
+/// `row_start..row_start + y_rows.len()`, writing into `y_rows`.
+///
+/// Every row's multiply-accumulate runs in exactly the order of the full
+/// serial kernel, so covering `0..n` with disjoint row blocks — on any
+/// number of threads — reproduces the serial output *bitwise*.  This is
+/// the invariant that lets the parallel engine keep Table-7 iteration
+/// counts untouched (see `PERF.md`).
+pub fn spmv_scheme_rows(
+    a: &CsrMatrix,
+    vals32: &[f32],
+    x: &[f64],
+    y_rows: &mut [f64],
+    row_start: usize,
+    scheme: Scheme,
+) {
+    debug_assert!(row_start + y_rows.len() <= a.n);
+    // Hard guard, not a debug_assert: the Mix-V3 arm indexes vals32 with
+    // get_unchecked, so an undersized slice from safe code would be UB.
+    assert!(
+        !scheme.matrix_f32() || vals32.len() == a.nnz(),
+        "vals32 must be the f32 view of a.vals for {scheme:?} (len {} != nnz {})",
+        vals32.len(),
+        a.nnz()
+    );
     match scheme {
         Scheme::Fp64 => {
-            for i in 0..a.n {
-                let (cols, vals) = a.row(i);
+            for (j, yj) in y_rows.iter_mut().enumerate() {
+                let (cols, vals) = a.row(row_start + j);
                 let mut s = 0.0f64;
                 for (c, v) in cols.iter().zip(vals) {
                     s += v * x[*c as usize];
                 }
-                y[i] = s;
+                *yj = s;
             }
         }
         Scheme::MixV1 => {
             // All-f32 SpMV: x rounded to f32, f32 multiply-accumulate,
             // result widened at the end (vectors stay f64 outside).
-            for i in 0..a.n {
+            for (j, yj) in y_rows.iter_mut().enumerate() {
+                let i = row_start + j;
                 let (cols, _) = a.row(i);
                 let (s, e) = (a.indptr[i] as usize, a.indptr[i + 1] as usize);
                 let mut acc32 = 0.0f32;
                 for (k, c) in (s..e).zip(cols) {
                     acc32 += vals32[k] * x[*c as usize] as f32;
                 }
-                y[i] = acc32 as f64;
+                *yj = acc32 as f64;
             }
         }
         Scheme::MixV2 => {
             // f32 matrix and f32-rounded x, but f64 accumulation.
-            for i in 0..a.n {
+            for (j, yj) in y_rows.iter_mut().enumerate() {
+                let i = row_start + j;
                 let (cols, _) = a.row(i);
                 let (s, e) = (a.indptr[i] as usize, a.indptr[i + 1] as usize);
                 let mut acc64 = 0.0f64;
                 for (k, c) in (s..e).zip(cols) {
                     acc64 += vals32[k] as f64 * (x[*c as usize] as f32) as f64;
                 }
-                y[i] = acc64;
+                *yj = acc64;
             }
         }
         Scheme::MixV3 => {
             // f32 matrix upcast, full-f64 x and accumulation (Fig. 8).
             // Hot path (§Perf): bounds checks lifted out of the inner
             // gather loop — indices are validated at matrix build time.
-            for i in 0..a.n {
+            for (j, yj) in y_rows.iter_mut().enumerate() {
+                let i = row_start + j;
                 let (s, e) = (a.indptr[i] as usize, a.indptr[i + 1] as usize);
                 let mut acc64 = 0.0f64;
                 for k in s..e {
@@ -153,10 +187,17 @@ pub fn spmv_scheme(
                             * x.get_unchecked(*a.indices.get_unchecked(k) as usize);
                     }
                 }
-                y[i] = acc64;
+                *yj = acc64;
             }
         }
     }
+}
+
+/// Apply the accumulator-architecture perturbation (§7.5.1) to a full
+/// SpMV output.  Separated from the gather kernels so the parallel
+/// engine can run the row blocks on threads and still apply the
+/// whole-vector model in the serial path's exact element order.
+pub fn apply_accumulator_model(y: &mut [f64], acc: AccumulatorModel, salt: u64) {
     if let AccumulatorModel::PaddedUnstable { eps } = acc {
         for (i, v) in y.iter_mut().enumerate() {
             *v += *v * eps * signed_hash01(i as u64, salt);
@@ -192,6 +233,87 @@ pub fn dot_delay_buffer(a: &[f64], b: &[f64]) -> f64 {
 /// Plain sequential dot (CPU golden).
 pub fn dot_sequential(a: &[f64], b: &[f64]) -> f64 {
     a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+// ---------------------------------------------------------------------
+// Streaming dot accumulators.
+//
+// The fused solver sweeps (solver::jpcg) fold the Phase-2 dots into the
+// element-wise update loops instead of making separate n-length passes.
+// Fusion is only legal if it cannot move a single bit of the result, so
+// each accumulator reproduces — product by product, in element order —
+// the exact reduction structure of its whole-array counterpart:
+// `SeqDot` == `dot_sequential`, `DelayDot` == `dot_delay_buffer`
+// (asserted bitwise in the tests below).
+// ---------------------------------------------------------------------
+
+/// A running dot product fed one element pair at a time, in index order.
+pub trait DotAccumulator: Default {
+    /// Accumulate the product `a * b` for the next element index.
+    fn add(&mut self, a: f64, b: f64);
+    /// Final reduction value.
+    fn finish(&self) -> f64;
+}
+
+/// Sequential accumulation: bitwise-identical to [`dot_sequential`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SeqDot {
+    acc: f64,
+}
+
+impl DotAccumulator for SeqDot {
+    #[inline]
+    fn add(&mut self, a: f64, b: f64) {
+        self.acc += a * b;
+    }
+
+    #[inline]
+    fn finish(&self) -> f64 {
+        self.acc
+    }
+}
+
+/// The FPGA's 8-lane cyclic delay buffer as a streaming accumulator:
+/// element i lands in lane i % L and the lanes fold sequentially at the
+/// end — bitwise-identical to [`dot_delay_buffer`], because each lane
+/// sees the same partial products in the same order and the final fold
+/// is the same left-to-right lane sum.
+#[derive(Debug, Clone, Copy)]
+pub struct DelayDot {
+    lanes: [f64; DELAY_LANES],
+    next: usize,
+}
+
+impl Default for DelayDot {
+    fn default() -> Self {
+        Self { lanes: [0.0; DELAY_LANES], next: 0 }
+    }
+}
+
+impl DotAccumulator for DelayDot {
+    #[inline]
+    fn add(&mut self, a: f64, b: f64) {
+        self.lanes[self.next] += a * b;
+        self.next += 1;
+        if self.next == DELAY_LANES {
+            self.next = 0;
+        }
+    }
+
+    #[inline]
+    fn finish(&self) -> f64 {
+        self.lanes.iter().sum()
+    }
+}
+
+/// Whole-array dot through an accumulator type (used for the Phase-1
+/// `pap` dot, which has no update loop to fuse into).
+pub fn dot_with<D: DotAccumulator>(a: &[f64], b: &[f64]) -> f64 {
+    let mut d = D::default();
+    for (x, y) in a.iter().zip(b) {
+        d.add(*x, *y);
+    }
+    d.finish()
 }
 
 #[cfg(test)]
@@ -269,6 +391,41 @@ mod tests {
             lanes[i % DELAY_LANES] += a[i] * b[i];
         }
         assert_eq!(dot_delay_buffer(&a, &b), lanes.iter().sum::<f64>());
+    }
+
+    #[test]
+    fn streaming_accumulators_match_whole_array_dots_bitwise() {
+        // Awkward length (not a multiple of DELAY_LANES) + magnitude
+        // spread so any reassociation would flip low-order bits.
+        let a: Vec<f64> = (0..1003)
+            .map(|i| ((i * 37) % 101) as f64 * 10f64.powi((i % 7) as i32 - 3))
+            .collect();
+        let b: Vec<f64> = (0..1003).map(|i| ((i * 53) % 97) as f64 - 48.0).collect();
+        assert_eq!(
+            dot_with::<SeqDot>(&a, &b).to_bits(),
+            dot_sequential(&a, &b).to_bits()
+        );
+        assert_eq!(
+            dot_with::<DelayDot>(&a, &b).to_bits(),
+            dot_delay_buffer(&a, &b).to_bits()
+        );
+    }
+
+    #[test]
+    fn scheme_rows_cover_matches_full_bitwise() {
+        let (a, v32, x) = system(300);
+        for scheme in Scheme::ALL {
+            let mut full = vec![0.0; a.n];
+            spmv_scheme_rows(&a, &v32, &x, &mut full, 0, scheme);
+            let mut piecewise = vec![0.0; a.n];
+            for w in [0usize, 37, 170, 299, a.n].windows(2) {
+                spmv_scheme_rows(&a, &v32, &x, &mut piecewise[w[0]..w[1]], w[0], scheme);
+            }
+            assert!(
+                full.iter().zip(&piecewise).all(|(u, v)| u.to_bits() == v.to_bits()),
+                "scheme {scheme:?} row blocks diverged"
+            );
+        }
     }
 
     #[test]

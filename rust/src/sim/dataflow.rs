@@ -17,6 +17,17 @@
 //!
 //! The engine detects deadlock as a cycle in which no node progressed
 //! while work remains.
+//!
+//! §Perf (see PERF.md): `step` is allocation-free (the per-cycle
+//! `order`/`channel_used` scratch of the original implementation is
+//! gone / hoisted into the engine), and `run` *fast-forwards* through
+//! stretches where the only possible progress is an `Spmv::busy_left`
+//! or `Dot::tail_left` countdown: such cycles change no FIFO, so k of
+//! them collapse into one bulk decrement.  Cycle counts, per-node
+//! completion times and deadlock verdicts are bit-for-bit those of the
+//! cycle-by-cycle run (asserted in the tests below); only wall-clock
+//! changes — SpMV-dominated phase graphs simulate orders of magnitude
+//! faster.
 
 use std::collections::VecDeque;
 
@@ -63,8 +74,11 @@ struct Node {
 #[derive(Debug, Clone)]
 pub struct SimStats {
     pub cycles: u64,
-    /// Per-node completion cycle.
-    pub node_done_at: Vec<u64>,
+    /// Per-node completion cycle; `None` while unfinished.  A node that
+    /// is already complete before the first step (e.g. zero beats)
+    /// reports `Some(0)` — `0` is a real completion time here, not the
+    /// unset sentinel it used to be.
+    pub node_done_at: Vec<Option<u64>>,
 }
 
 #[derive(Debug, Clone)]
@@ -88,17 +102,50 @@ impl std::fmt::Display for SimError {
 
 impl std::error::Error for SimError {}
 
+/// What one simulated cycle did — drives the fast-forward decision.
+struct StepOutcome {
+    /// Any node progressed (countdowns included).
+    progressed: bool,
+    /// `Some(min_left)`: the ONLY progress this cycle was busy/tail
+    /// countdown decrements, and every decremented counter still holds
+    /// >= `min_left` cycles.  The next `min_left - 1` cycles are then
+    /// provably identical decrements and can be applied in bulk.
+    countdown_min: Option<u64>,
+}
+
 /// Builder + engine.
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Clone)]
 pub struct Dataflow {
     fifos: Vec<Fifo>,
     nodes: Vec<Node>,
     num_channels: usize,
+    fast_forward: bool,
+    /// Per-cycle channel arbitration scratch, reused across steps.
+    channel_used: Vec<bool>,
+}
+
+impl Default for Dataflow {
+    fn default() -> Self {
+        Self::new(0)
+    }
 }
 
 impl Dataflow {
     pub fn new(num_channels: usize) -> Self {
-        Self { fifos: Vec::new(), nodes: Vec::new(), num_channels }
+        Self {
+            fifos: Vec::new(),
+            nodes: Vec::new(),
+            num_channels,
+            fast_forward: true,
+            channel_used: vec![false; num_channels],
+        }
+    }
+
+    /// Toggle busy-counter fast-forwarding (on by default).  Results are
+    /// identical either way; the cycle-by-cycle mode exists for the
+    /// equivalence tests and for debugging.
+    pub fn set_fast_forward(&mut self, on: bool) {
+        self.fast_forward = on;
     }
 
     pub fn fifo(&mut self, cap: usize) -> FifoId {
@@ -186,7 +233,14 @@ impl Dataflow {
     pub fn run(&mut self, cycle_limit: u64) -> Result<SimStats, SimError> {
         let mut cycle = 0u64;
         let n_nodes = self.nodes.len();
-        let mut done_at = vec![0u64; n_nodes];
+        let mut done_at: Vec<Option<u64>> = vec![None; n_nodes];
+        // Pre-scan: nodes complete before the first step finish at 0
+        // (the old u64 representation conflated this with "unset").
+        for (i, n) in self.nodes.iter().enumerate() {
+            if self.node_finished(n) {
+                done_at[i] = Some(0);
+            }
+        }
         loop {
             if self.nodes.iter().all(|n| self.node_finished(n)) {
                 return Ok(SimStats { cycles: cycle, node_done_at: done_at });
@@ -194,13 +248,13 @@ impl Dataflow {
             if cycle >= cycle_limit {
                 return Err(SimError::CycleLimit(cycle_limit));
             }
-            let progressed = self.step(cycle);
+            let outcome = self.step(cycle);
             for (i, n) in self.nodes.iter().enumerate() {
-                if done_at[i] == 0 && self.node_finished(n) {
-                    done_at[i] = cycle + 1;
+                if done_at[i].is_none() && self.node_finished(n) {
+                    done_at[i] = Some(cycle + 1);
                 }
             }
-            if !progressed {
+            if !outcome.progressed {
                 let stuck = self
                     .nodes
                     .iter()
@@ -210,36 +264,83 @@ impl Dataflow {
                 return Err(SimError::Deadlock { cycle, stuck });
             }
             cycle += 1;
+            // Fast-forward: the next min_left - 1 cycles would only
+            // repeat the same decrements (no FIFO/pipe state changed, so
+            // no other node can wake until a counter reaches zero).
+            // Nothing finishes inside the skipped stretch — counters
+            // stay > 0 — so done_at bookkeeping is unaffected.
+            if self.fast_forward {
+                if let Some(min_left) = outcome.countdown_min {
+                    if min_left > 1 {
+                        let skip = (min_left - 1).min(cycle_limit.saturating_sub(cycle));
+                        if skip > 0 {
+                            self.bulk_countdown(skip);
+                            cycle += skip;
+                        }
+                    }
+                }
+            }
         }
     }
 
-    /// One simulated cycle; returns whether any node made progress.
-    fn step(&mut self, cycle: u64) -> bool {
-        let mut progressed = false;
+    /// Apply `k` cycles' worth of pure countdown decrements at once.
+    /// Callers guarantee every active counter holds > `k` cycles.
+    fn bulk_countdown(&mut self, k: u64) {
+        for node in &mut self.nodes {
+            match &mut node.kind {
+                NodeKind::Spmv { busy_left, .. } if *busy_left > 0 => {
+                    debug_assert!(*busy_left > k);
+                    *busy_left -= k;
+                }
+                NodeKind::Dot { expect, consumed, tail_left, .. }
+                    if *consumed >= *expect && *tail_left > 0 =>
+                {
+                    debug_assert!(*tail_left > k);
+                    *tail_left -= k;
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// One simulated cycle; reports what progressed.
+    fn step(&mut self, cycle: u64) -> StepOutcome {
+        // `other` — progress that changes FIFO/pipe/transfer state;
+        // `countdown` — progress that only decrements busy/tail counters.
+        let mut other = false;
+        let mut any_countdown = false;
+        let mut min_left = u64::MAX;
+        let n_nodes = self.nodes.len();
         // Channel arbitration: one beat per channel per cycle,
         // round-robin by (cycle + node index) so co-located streams
-        // interleave fairly.
-        let mut channel_used = vec![false; self.num_channels];
-        let order: Vec<usize> = (0..self.nodes.len())
-            .map(|i| (i + cycle as usize) % self.nodes.len())
-            .collect();
+        // interleave fairly.  The scratch buffer is struct-owned and the
+        // rotation is computed inline: no per-cycle allocation.
+        for used in self.channel_used.iter_mut() {
+            *used = false;
+        }
+        let rotate = |k: usize| (k + cycle as usize) % n_nodes;
 
         // Phase A: memory reads (producers) — capped one per channel.
-        for &i in &order {
+        for k in 0..n_nodes {
+            let i = rotate(k);
             if let NodeKind::MemRead { channel, beats, done, out } = self.nodes[i].kind {
-                if done < beats && !channel_used[channel] && self.fifos[out].len < self.fifos[out].cap {
+                if done < beats
+                    && !self.channel_used[channel]
+                    && self.fifos[out].len < self.fifos[out].cap
+                {
                     self.fifos[out].len += 1;
                     if let NodeKind::MemRead { done, .. } = &mut self.nodes[i].kind {
                         *done += 1;
                     }
-                    channel_used[channel] = true;
-                    progressed = true;
+                    self.channel_used[channel] = true;
+                    other = true;
                 }
             }
         }
 
         // Phase B: compute nodes.
-        for &i in &order {
+        for k in 0..n_nodes {
+            let i = rotate(k);
             let node = &mut self.nodes[i];
             match &mut node.kind {
                 NodeKind::Pipe { ins, outs, state, expect, .. } => {
@@ -280,7 +381,7 @@ impl Dataflow {
                         state.consumed += 1;
                         state.slots[0] = true;
                     }
-                    progressed = true;
+                    other = true;
                 }
                 NodeKind::Dot { ins, expect, consumed, tail_left, .. } => {
                     if *consumed < *expect {
@@ -289,11 +390,12 @@ impl Dataflow {
                                 self.fifos[f].len -= 1;
                             }
                             *consumed += 1;
-                            progressed = true;
+                            other = true;
                         }
                     } else if *tail_left > 0 {
                         *tail_left -= 1;
-                        progressed = true;
+                        any_countdown = true;
+                        min_left = min_left.min(*tail_left);
                     }
                 }
                 NodeKind::Spmv {
@@ -308,15 +410,15 @@ impl Dataflow {
                 } => {
                     // x load and nnz streaming overlap (prefetch, §4.2);
                     // output starts once both complete.
-                    let mut acted = false;
                     if *consumed < *x_beats && self.fifos[*x_in].len > 0 {
                         self.fifos[*x_in].len -= 1;
                         *consumed += 1;
-                        acted = true;
+                        other = true;
                     }
                     if *busy_left > 0 {
                         *busy_left -= 1;
-                        acted = true;
+                        any_countdown = true;
+                        min_left = min_left.min(*busy_left);
                     }
                     if *consumed >= *x_beats
                         && *busy_left == 0
@@ -325,28 +427,31 @@ impl Dataflow {
                     {
                         self.fifos[*out].len += 1;
                         *emitted += 1;
-                        acted = true;
+                        other = true;
                     }
-                    progressed |= acted;
                 }
                 _ => {}
             }
         }
 
         // Phase C: memory writes (consumers) — capped one per channel.
-        for &i in &order {
+        for k in 0..n_nodes {
+            let i = rotate(k);
             if let NodeKind::MemWrite { channel, beats, done, input } = self.nodes[i].kind {
-                if done < beats && !channel_used[channel] && self.fifos[input].len > 0 {
+                if done < beats && !self.channel_used[channel] && self.fifos[input].len > 0 {
                     self.fifos[input].len -= 1;
                     if let NodeKind::MemWrite { done, .. } = &mut self.nodes[i].kind {
                         *done += 1;
                     }
-                    channel_used[channel] = true;
-                    progressed = true;
+                    self.channel_used[channel] = true;
+                    other = true;
                 }
             }
         }
-        progressed
+        StepOutcome {
+            progressed: other || any_countdown,
+            countdown_min: if !other && any_countdown { Some(min_left) } else { None },
+        }
     }
 }
 
@@ -452,6 +557,100 @@ mod tests {
         match df.run(100) {
             Err(SimError::Deadlock { .. }) | Err(SimError::CycleLimit(_)) => {}
             other => panic!("expected stall, got {other:?}"),
+        }
+    }
+
+    /// A node with zero work reports completion at cycle 0 — the old
+    /// `done_at == 0` sentinel could never distinguish this.
+    #[test]
+    fn zero_beat_node_done_at_cycle_zero() {
+        let mut df = Dataflow::new(2);
+        let a = df.fifo(4);
+        let b = df.fifo(4);
+        df.mem_read("rd_empty", 0, 0, a); // finished before the first step
+        df.mem_read("rd_real", 1, 20, b);
+        df.dot("sink", vec![b], 20, 0);
+        let stats = df.run(10_000).unwrap();
+        assert_eq!(stats.node_done_at[0], Some(0));
+        assert!(matches!(stats.node_done_at[1], Some(c) if c >= 20));
+        assert!(stats.node_done_at.iter().all(|d| d.is_some()));
+    }
+
+    /// Build the Fig.-5-like phase-1 shape used by the iteration model:
+    /// large SpMV busy window + dot tail — the fast-forward sweet spot.
+    fn spmv_phase_graph(busy: u64) -> Dataflow {
+        let mut df = Dataflow::new(3);
+        let x = df.fifo(8);
+        let y_raw = df.fifo(8);
+        let y_dot = df.fifo(8);
+        let y_wr = df.fifo(8);
+        let p2 = df.fifo(8);
+        df.mem_read("rd_x", 0, 64, x);
+        df.spmv("M1", x, 64, busy, 64, y_raw);
+        df.pipe("fork", vec![y_raw], vec![(0, y_dot), (0, y_wr)], 1, 64);
+        df.mem_read("rd_p", 1, 64, p2);
+        df.dot("M2", vec![p2, y_dot], 64, 40);
+        df.mem_write("wr_y", 2, 64, y_wr);
+        df
+    }
+
+    /// Fast-forward must not move a single number: cycles and per-node
+    /// completion times match the cycle-by-cycle run exactly.
+    #[test]
+    fn fast_forward_is_bit_identical_to_stepping() {
+        for busy in [0, 1, 7, 500, 20_000] {
+            let mut ff = spmv_phase_graph(busy);
+            let mut slow = ff.clone();
+            slow.set_fast_forward(false);
+            let sf = ff.run(1_000_000).unwrap();
+            let ss = slow.run(1_000_000).unwrap();
+            assert_eq!(sf.cycles, ss.cycles, "busy={busy}");
+            assert_eq!(sf.node_done_at, ss.node_done_at, "busy={busy}");
+        }
+    }
+
+    /// Fast-forward preserves deadlock verdicts (cycle and stuck set).
+    #[test]
+    fn fast_forward_preserves_deadlock_verdict() {
+        let build = || {
+            let depth_l = 33;
+            let mut df = Dataflow::new(2);
+            let r_in = df.fifo(4);
+            let r_fast = df.fifo(2);
+            let z_slow = df.fifo(2);
+            df.mem_read("rd_r", 0, 100, r_in);
+            df.pipe("M5", vec![r_in], vec![(0, r_fast), (depth_l - 1, z_slow)], depth_l, 100);
+            df.dot("M6", vec![r_fast, z_slow], 100, 0);
+            df
+        };
+        let mut ff = build();
+        let mut slow = build();
+        slow.set_fast_forward(false);
+        match (ff.run(100_000), slow.run(100_000)) {
+            (
+                Err(SimError::Deadlock { cycle: c1, stuck: s1 }),
+                Err(SimError::Deadlock { cycle: c2, stuck: s2 }),
+            ) => {
+                assert_eq!(c1, c2);
+                assert_eq!(s1, s2);
+            }
+            other => panic!("expected matching deadlocks, got {other:?}"),
+        }
+    }
+
+    /// Fast-forward preserves the cycle-limit verdict.
+    #[test]
+    fn fast_forward_preserves_cycle_limit() {
+        // SpMV busy window far beyond the limit: the run must trip the
+        // limit, not silently jump past it.
+        let mut df = Dataflow::new(1);
+        let x = df.fifo(8);
+        let y = df.fifo(8);
+        df.mem_read("rd_x", 0, 4, x);
+        df.spmv("M1", x, 4, 1_000_000, 4, y);
+        match df.run(500) {
+            Err(SimError::CycleLimit(500)) => {}
+            other => panic!("expected cycle limit, got {other:?}"),
         }
     }
 }

@@ -1,10 +1,21 @@
 //! The Jacobi-preconditioned CG iteration (Algorithm 1), phase-split as
 //! in Fig. 5 so the arithmetic (and its rounding) matches what the
 //! accelerator executes module by module.
-
+//!
+//! §Perf (see PERF.md): the per-iteration vector work runs as two fused
+//! n-length sweeps instead of five — Phase 2 folds the r-update, the
+//! z-divide and both dots (M4/M8/M5/M6) into one pass; Phase 3 was
+//! already one pass (M3/M7).  The dots accumulate through
+//! [`DotAccumulator`]s that reproduce the whole-array reductions
+//! product-for-product in element order, so fusion is *bitwise*
+//! invisible: iteration counts cannot drift.  The SpMV is pluggable
+//! ([`jpcg_solve_with_spmv`]) so the parallel engine ([`crate::engine`])
+//! can substitute its nnz-balanced multithreaded kernels, and the
+//! matrix-derived caches (`vals_f32`, `jacobi_diag`) are injectable
+//! ([`jpcg_solve_cached`]) so repeated solves stop re-deriving them.
 
 use crate::precision::{
-    dot_delay_buffer, dot_sequential, spmv_scheme, AccumulatorModel, Scheme,
+    dot_with, spmv_scheme, AccumulatorModel, DelayDot, DotAccumulator, Scheme, SeqDot,
 };
 use crate::sparse::CsrMatrix;
 
@@ -99,6 +110,30 @@ pub struct SolveResult {
     pub flops: u64,
 }
 
+/// Reusable per-solve scratch vectors (r, ap, z, p).  A batch server
+/// keeps one per worker thread so back-to-back solves against the same
+/// [`crate::engine::PreparedMatrix`] allocate nothing but the returned x.
+#[derive(Debug, Clone, Default)]
+pub struct SolveWorkspace {
+    r: Vec<f64>,
+    ap: Vec<f64>,
+    z: Vec<f64>,
+    p: Vec<f64>,
+}
+
+impl SolveWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn resize(&mut self, n: usize) {
+        for v in [&mut self.r, &mut self.ap, &mut self.z, &mut self.p] {
+            v.clear();
+            v.resize(n, 0.0);
+        }
+    }
+}
+
 /// FLOPs of one main-loop iteration: SpMV (2 nnz) + three dots (2n each)
 /// + two axpys (2n each) + update-p (2n) + left-divide (n).
 pub fn flops_per_iter(n: usize, nnz: usize) -> u64 {
@@ -113,7 +148,67 @@ pub fn jpcg_solve(
     x0: Option<&[f64]>,
     opts: &SolveOptions,
 ) -> SolveResult {
-    let n = a.n;
+    let m = a.jacobi_diag();
+    let vals32 = if opts.scheme.matrix_f32() { a.vals_f32() } else { Vec::new() };
+    jpcg_solve_cached(a, &vals32, &m, b, x0, opts)
+}
+
+/// [`jpcg_solve`] with the matrix-derived caches supplied by the caller:
+/// `vals32` the f32 view of `a.vals` (may be empty for `Scheme::Fp64`)
+/// and `m` the Jacobi diagonal with zeros already mapped to 1.0 (as
+/// [`CsrMatrix::jacobi_diag`] produces).  This is what a prepared-matrix
+/// server calls per right-hand side — deriving both is O(nnz + n) and
+/// used to be paid on every solve.
+pub fn jpcg_solve_cached(
+    a: &CsrMatrix,
+    vals32: &[f32],
+    m: &[f64],
+    b: Option<&[f64]>,
+    x0: Option<&[f64]>,
+    opts: &SolveOptions,
+) -> SolveResult {
+    let mut ws = SolveWorkspace::new();
+    jpcg_solve_cached_ws(a, vals32, m, b, x0, opts, &mut ws)
+}
+
+/// [`jpcg_solve_cached`] with an explicit scratch workspace (reused
+/// across solves; only the solution vector is allocated).
+pub fn jpcg_solve_cached_ws(
+    a: &CsrMatrix,
+    vals32: &[f32],
+    m: &[f64],
+    b: Option<&[f64]>,
+    x0: Option<&[f64]>,
+    opts: &SolveOptions,
+    ws: &mut SolveWorkspace,
+) -> SolveResult {
+    let scheme = opts.scheme;
+    let acc = opts.accumulator;
+    jpcg_solve_with_spmv(a.n, a.nnz(), m, b, x0, opts, ws, |x, y, salt| {
+        spmv_scheme(a, vals32, x, y, scheme, acc, salt)
+    })
+}
+
+/// The solver loop with a pluggable SpMV: `spmv(x, y, salt)` must write
+/// y = A x under the configured scheme + accumulator model (`salt` is 0
+/// for the init pass and `iteration + 1` afterwards, feeding the
+/// PaddedUnstable perturbation).  The engine's parallel kernels and the
+/// serial path share this one loop, so their numerics cannot diverge by
+/// construction.
+#[allow(clippy::too_many_arguments)]
+pub fn jpcg_solve_with_spmv<F>(
+    n: usize,
+    nnz: usize,
+    m: &[f64],
+    b: Option<&[f64]>,
+    x0: Option<&[f64]>,
+    opts: &SolveOptions,
+    ws: &mut SolveWorkspace,
+    spmv: F,
+) -> SolveResult
+where
+    F: FnMut(&[f64], &mut [f64], u64),
+{
     let ones;
     let b = match b {
         Some(b) => b,
@@ -122,55 +217,78 @@ pub fn jpcg_solve(
             &ones
         }
     };
+    match opts.dot {
+        DotKind::Sequential => solve_impl::<SeqDot, F>(n, nnz, m, b, x0, opts, ws, spmv),
+        DotKind::DelayBuffer => solve_impl::<DelayDot, F>(n, nnz, m, b, x0, opts, ws, spmv),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn solve_impl<D, F>(
+    n: usize,
+    nnz: usize,
+    m: &[f64],
+    b: &[f64],
+    x0: Option<&[f64]>,
+    opts: &SolveOptions,
+    ws: &mut SolveWorkspace,
+    mut spmv: F,
+) -> SolveResult
+where
+    D: DotAccumulator,
+    F: FnMut(&[f64], &mut [f64], u64),
+{
+    debug_assert_eq!(b.len(), n);
+    debug_assert_eq!(m.len(), n);
     let mut x = x0.map(<[f64]>::to_vec).unwrap_or_else(|| vec![0.0; n]);
-    let m = a.jacobi_diag();
-    let vals32 = a.vals_f32();
+    ws.resize(n);
+    let SolveWorkspace { r, ap, z, p } = ws;
+    let (r, ap, z, p) = (&mut r[..], &mut ap[..], &mut z[..], &mut p[..]);
 
-    let dot: fn(&[f64], &[f64]) -> f64 = match opts.dot {
-        DotKind::Sequential => dot_sequential,
-        DotKind::DelayBuffer => dot_delay_buffer,
-    };
-
-    let mut r = vec![0.0; n];
-    let mut ap = vec![0.0; n];
-    let mut z = vec![0.0; n];
-    let mut p = vec![0.0; n];
-
-    // Lines 1-5: r = b - A x0; z = M^-1 r; p = z; rz = r.z; rr = r.r.
-    // The initial SpMV runs on the same hardware as the main loop, so it
-    // uses the same scheme/accumulator.
-    spmv_scheme(a, &vals32, &x, &mut ap, opts.scheme, opts.accumulator, 0);
+    // Lines 1-5 (merged init): r = b - A x0; z = M^-1 r; p = z;
+    // rz = r.z; rr = r.r.  The initial SpMV runs on the same hardware as
+    // the main loop, so it uses the same scheme/accumulator; the divide,
+    // copy and both dots are one fused sweep (accumulation order per dot
+    // unchanged — see precision::DotAccumulator).
+    spmv(&x, ap, 0);
+    let mut rz_acc = D::default();
+    let mut rr_acc = D::default();
     for i in 0..n {
         r[i] = b[i] - ap[i];
         z[i] = r[i] / m[i];
         p[i] = z[i];
+        rz_acc.add(r[i], z[i]);
+        rr_acc.add(r[i], r[i]);
     }
-    let mut rz = dot(&r, &z);
-    let mut rr = dot(&r, &r);
+    let mut rz = rz_acc.finish();
+    let mut rr = rr_acc.finish();
 
     let mut trace = ResidualTrace::new(opts.record_trace);
     trace.push(rr);
 
     let mut iters = 0u32;
-    let mut flops = 2 * a.nnz() as u64 + 6 * n as u64;
+    let mut flops = 2 * nnz as u64 + 6 * n as u64;
     // Line 6: for (0 <= i < N_max and rr > tau)
     while iters < opts.max_iters && rr > opts.tol {
         // --- Phase 1: M1 ap = A p ; M2 pap = p . ap --------------------
-        spmv_scheme(a, &vals32, &p, &mut ap, opts.scheme, opts.accumulator, iters as u64 + 1);
-        let pap = dot(&p, &ap);
+        spmv(p, ap, iters as u64 + 1);
+        let pap = dot_with::<D>(p, ap);
         let alpha = rz / pap;
 
-        // --- Phase 2: M4 r -= alpha ap ; M5 z = r/m ; M6 rz ; M8 rr ---
-        // (M8 ordered before M5-M7 in the controller, Fig. 4 opt (2); the
-        // arithmetic is unaffected.)
+        // --- Phase 2, fused: M4 r -= alpha ap ; M8 rr ; M5 z = r/m ;
+        // M6 rz — one sweep over n instead of four.  (M8 ordered before
+        // M5-M7 in the controller, Fig. 4 opt (2); the arithmetic is
+        // unaffected.)
+        let mut rr_acc = D::default();
+        let mut rz_acc = D::default();
         for i in 0..n {
             r[i] -= alpha * ap[i];
-        }
-        rr = dot(&r, &r);
-        for i in 0..n {
+            rr_acc.add(r[i], r[i]);
             z[i] = r[i] / m[i];
+            rz_acc.add(r[i], z[i]);
         }
-        let rz_new = dot(&r, &z);
+        rr = rr_acc.finish();
+        let rz_new = rz_acc.finish();
         let beta = rz_new / rz;
         rz = rz_new;
 
@@ -180,7 +298,7 @@ pub fn jpcg_solve(
             p[i] = z[i] + beta * p[i];
         }
 
-        flops += flops_per_iter(n, a.nnz());
+        flops += flops_per_iter(n, nnz);
         iters += 1;
         trace.push(rr);
     }
@@ -191,6 +309,7 @@ pub fn jpcg_solve(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::precision::{dot_delay_buffer, dot_sequential};
     use crate::sparse::synth;
 
     fn poisson(n: usize) -> CsrMatrix {
@@ -308,5 +427,111 @@ mod tests {
         // Start from the solution: should converge in ~0 iterations.
         let warm = jpcg_solve(&a, None, Some(&cold.x), &SolveOptions::default());
         assert!(warm.iters <= 2, "warm={}", warm.iters);
+    }
+
+    /// The pre-fusion solver, kept verbatim as a test oracle: five
+    /// separate n-length passes + whole-array dots per iteration.
+    fn reference_unfused(
+        a: &CsrMatrix,
+        b: Option<&[f64]>,
+        opts: &SolveOptions,
+    ) -> SolveResult {
+        let n = a.n;
+        let ones;
+        let b = match b {
+            Some(b) => b,
+            None => {
+                ones = vec![1.0; n];
+                &ones
+            }
+        };
+        let mut x = vec![0.0; n];
+        let m = a.jacobi_diag();
+        let vals32 = a.vals_f32();
+        let dot: fn(&[f64], &[f64]) -> f64 = match opts.dot {
+            DotKind::Sequential => dot_sequential,
+            DotKind::DelayBuffer => dot_delay_buffer,
+        };
+        let mut r = vec![0.0; n];
+        let mut ap = vec![0.0; n];
+        let mut z = vec![0.0; n];
+        let mut p = vec![0.0; n];
+        spmv_scheme(a, &vals32, &x, &mut ap, opts.scheme, opts.accumulator, 0);
+        for i in 0..n {
+            r[i] = b[i] - ap[i];
+            z[i] = r[i] / m[i];
+            p[i] = z[i];
+        }
+        let mut rz = dot(&r, &z);
+        let mut rr = dot(&r, &r);
+        let mut trace = ResidualTrace::new(opts.record_trace);
+        trace.push(rr);
+        let mut iters = 0u32;
+        let mut flops = 2 * a.nnz() as u64 + 6 * n as u64;
+        while iters < opts.max_iters && rr > opts.tol {
+            spmv_scheme(a, &vals32, &p, &mut ap, opts.scheme, opts.accumulator, iters as u64 + 1);
+            let pap = dot(&p, &ap);
+            let alpha = rz / pap;
+            for i in 0..n {
+                r[i] -= alpha * ap[i];
+            }
+            rr = dot(&r, &r);
+            for i in 0..n {
+                z[i] = r[i] / m[i];
+            }
+            let rz_new = dot(&r, &z);
+            let beta = rz_new / rz;
+            rz = rz_new;
+            for i in 0..n {
+                x[i] += alpha * p[i];
+                p[i] = z[i] + beta * p[i];
+            }
+            flops += flops_per_iter(n, a.nnz());
+            iters += 1;
+            trace.push(rr);
+        }
+        SolveResult { x, iters, converged: rr <= opts.tol, final_rr: rr, trace, flops }
+    }
+
+    #[test]
+    fn fused_sweeps_are_bitwise_identical_to_unfused() {
+        // The load-bearing claim of the fusion: not "close", identical.
+        let a = synth::banded_spd(900, 7_200, 1e-3, 23);
+        for opts in [
+            SolveOptions::default(),
+            SolveOptions::callipepla(),
+            SolveOptions::xcgsolver(),
+            SolveOptions { scheme: Scheme::MixV2, dot: DotKind::DelayBuffer, ..Default::default() },
+        ] {
+            let fused = jpcg_solve(&a, None, None, &opts);
+            let unfused = reference_unfused(&a, None, &opts);
+            assert_eq!(fused.iters, unfused.iters, "{opts:?}");
+            assert_eq!(fused.final_rr.to_bits(), unfused.final_rr.to_bits(), "{opts:?}");
+            assert_eq!(fused.flops, unfused.flops, "{opts:?}");
+            assert!(
+                fused
+                    .x
+                    .iter()
+                    .zip(&unfused.x)
+                    .all(|(u, v)| u.to_bits() == v.to_bits()),
+                "solution drifted under fusion for {opts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_is_bitwise_stable() {
+        let a = synth::banded_spd(700, 5_600, 1e-3, 41);
+        let m = a.jacobi_diag();
+        let vals32 = a.vals_f32();
+        let opts = SolveOptions::callipepla();
+        let mut ws = SolveWorkspace::new();
+        let first = jpcg_solve_cached_ws(&a, &vals32, &m, None, None, &opts, &mut ws);
+        let second = jpcg_solve_cached_ws(&a, &vals32, &m, None, None, &opts, &mut ws);
+        let fresh = jpcg_solve(&a, None, None, &opts);
+        assert_eq!(first.iters, fresh.iters);
+        assert_eq!(second.iters, fresh.iters);
+        assert!(first.x.iter().zip(&fresh.x).all(|(u, v)| u.to_bits() == v.to_bits()));
+        assert!(second.x.iter().zip(&fresh.x).all(|(u, v)| u.to_bits() == v.to_bits()));
     }
 }

@@ -10,5 +10,8 @@
 pub mod jpcg;
 pub mod trace;
 
-pub use jpcg::{jpcg_solve, DotKind, SolveOptions, SolveResult};
+pub use jpcg::{
+    jpcg_solve, jpcg_solve_cached, jpcg_solve_cached_ws, jpcg_solve_with_spmv, DotKind,
+    SolveOptions, SolveResult, SolveWorkspace,
+};
 pub use trace::ResidualTrace;

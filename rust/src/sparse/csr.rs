@@ -111,11 +111,22 @@ impl CsrMatrix {
     /// y = A x, straightforward FP64 reference (the "CPU golden" of
     /// Table 7).
     pub fn spmv_f64(&self, x: &[f64], y: &mut [f64]) {
-        debug_assert_eq!(x.len(), self.n);
         debug_assert_eq!(y.len(), self.n);
+        self.spmv_f64_rows(x, y, 0);
+    }
+
+    /// `spmv_f64` restricted to the contiguous row block
+    /// `row_start..row_start + y_rows.len()`, writing into `y_rows`.
+    /// Per-row accumulation order is identical to the full kernel, so a
+    /// row partition of calls reproduces `spmv_f64` bitwise — the
+    /// invariant the parallel engine ([`crate::engine`]) relies on.
+    pub fn spmv_f64_rows(&self, x: &[f64], y_rows: &mut [f64], row_start: usize) {
+        debug_assert_eq!(x.len(), self.n);
+        debug_assert!(row_start + y_rows.len() <= self.n);
         // Hot path (§Perf): bounds checks lifted out of the gather loop;
         // indices are validated at construction.
-        for i in 0..self.n {
+        for (j, yj) in y_rows.iter_mut().enumerate() {
+            let i = row_start + j;
             let (s, e) = (self.indptr[i] as usize, self.indptr[i + 1] as usize);
             let mut acc = 0.0f64;
             for k in s..e {
@@ -125,8 +136,38 @@ impl CsrMatrix {
                         * x.get_unchecked(*self.indices.get_unchecked(k) as usize);
                 }
             }
-            y[i] = acc;
+            *yj = acc;
         }
+    }
+
+    /// Non-zeros in row `i`.
+    #[inline]
+    pub fn row_nnz(&self, i: usize) -> usize {
+        (self.indptr[i + 1] - self.indptr[i]) as usize
+    }
+
+    /// Contiguous nnz-balanced row partition into `parts` blocks:
+    /// returns `parts + 1` row boundaries (`bounds[k]..bounds[k+1]` is
+    /// block k).  Cut points are placed by binary search on the nnz
+    /// prefix sum (`indptr`), so every block carries at most
+    /// `nnz/parts + max_row_nnz` non-zeros — near-perfect balance
+    /// whenever single rows are small against a block, the same
+    /// split-by-work rule HBM SpMV accelerators use to feed their
+    /// channel groups evenly.
+    pub fn nnz_balanced_bounds(&self, parts: usize) -> Vec<usize> {
+        let parts = parts.max(1);
+        let total = self.nnz() as u64;
+        let mut bounds = Vec::with_capacity(parts + 1);
+        bounds.push(0usize);
+        for k in 1..parts {
+            let target = total * k as u64 / parts as u64;
+            // First row boundary whose nnz prefix reaches the target.
+            let cut = self.indptr.partition_point(|&p| (p as u64) < target);
+            let prev = *bounds.last().unwrap();
+            bounds.push(cut.clamp(prev, self.n));
+        }
+        bounds.push(self.n);
+        bounds
     }
 
     /// Symmetry check (structure + values), used by tests and the mtx
@@ -220,5 +261,56 @@ mod tests {
     fn stream_bytes_mixed_halves_traffic() {
         let a = tri(100);
         assert_eq!(a.stream_bytes(true), 2 * a.stream_bytes(false));
+    }
+
+    #[test]
+    fn spmv_rows_matches_full_kernel_bitwise() {
+        let a = tri(97);
+        let x: Vec<f64> = (0..a.n).map(|i| (i as f64 * 0.31).sin()).collect();
+        let mut full = vec![0.0; a.n];
+        a.spmv_f64(&x, &mut full);
+        for bounds in [vec![0, 97], vec![0, 13, 40, 97], vec![0, 1, 96, 97]] {
+            let mut piecewise = vec![0.0; a.n];
+            for w in bounds.windows(2) {
+                a.spmv_f64_rows(&x, &mut piecewise[w[0]..w[1]], w[0]);
+            }
+            assert!(
+                full.iter().zip(&piecewise).all(|(u, v)| u.to_bits() == v.to_bits()),
+                "row-block kernel diverged for bounds {bounds:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn nnz_balanced_bounds_cover_and_balance() {
+        let a = tri(1000);
+        for parts in [1, 2, 3, 7, 8] {
+            let b = a.nnz_balanced_bounds(parts);
+            assert_eq!(b.len(), parts + 1);
+            assert_eq!((b[0], b[parts]), (0, a.n));
+            assert!(b.windows(2).all(|w| w[0] <= w[1]), "non-monotone: {b:?}");
+            let total: usize = b
+                .windows(2)
+                .map(|w| (a.indptr[w[1]] - a.indptr[w[0]]) as usize)
+                .sum();
+            assert_eq!(total, a.nnz());
+            // Tridiagonal rows are tiny, so balance is near-perfect.
+            let max = b
+                .windows(2)
+                .map(|w| (a.indptr[w[1]] - a.indptr[w[0]]) as usize)
+                .max()
+                .unwrap();
+            let mean = a.nnz() as f64 / parts as f64;
+            assert!((max as f64) <= mean + 3.0, "max={max} mean={mean}");
+        }
+    }
+
+    #[test]
+    fn nnz_balanced_bounds_more_parts_than_rows() {
+        let a = tri(3);
+        let b = a.nnz_balanced_bounds(8);
+        assert_eq!(b.len(), 9);
+        assert_eq!((b[0], b[8]), (0, 3));
+        assert!(b.windows(2).all(|w| w[0] <= w[1]));
     }
 }

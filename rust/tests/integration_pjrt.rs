@@ -2,6 +2,11 @@
 //! (L2/L1) path.  These require `make artifacts`; they are skipped with
 //! a notice when the artifact directory is missing, and the Makefile's
 //! `test` target always builds artifacts first.
+//!
+//! The whole file is gated on the `pjrt` feature: without it the crate
+//! has no `runtime` module (and no `xla` dependency), so offline
+//! `cargo test` never touches libxla_extension.
+#![cfg(feature = "pjrt")]
 
 use callipepla::coordinator::{Coordinator, CoordinatorConfig, NativeExecutor, PhaseExecutor};
 use callipepla::precision::Scheme;
