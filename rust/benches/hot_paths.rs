@@ -69,9 +69,13 @@ fn phase_graph(nb: u64, busy: u64, fast_forward: bool) -> Dataflow {
 
 fn main() {
     let json_mode = std::env::args().any(|a| a == "--json");
+    // --tiny: CI smoke sizes — every kernel still runs and the JSON is
+    // still written, but the whole bench finishes in seconds.
+    let tiny = std::env::args().any(|a| a == "--tiny");
     let mut recs: Vec<Rec> = Vec::new();
 
-    let a = synth::banded_spd(100_000, 1_200_000, 1e-3, 7);
+    let (bench_n, bench_nnz) = if tiny { (2_000, 24_000) } else { (100_000, 1_200_000) };
+    let a = synth::banded_spd(bench_n, bench_nnz, 1e-3, 7);
     let x: Vec<f64> = (0..a.n).map(|i| ((i % 17) as f64 - 8.0) / 8.0).collect();
     let mut y = vec![0.0; a.n];
     let nnz = a.nnz();
@@ -160,7 +164,8 @@ fn main() {
     // the fig9/ablation sims.  Suite-density dims (nnz/n ~ 60, like the
     // Table-3 upper half): there the SpMV busy window dwarfs the vector
     // streams and the simulator used to idle-step through it.
-    let (sim_n, sim_nnz) = (100_000usize, 6_000_000usize);
+    let (sim_n, sim_nnz) =
+        if tiny { (4_096usize, 200_000usize) } else { (100_000usize, 6_000_000usize) };
     let nb = (sim_n as u64).div_ceil(8);
     let busy = spmv_busy_cycles(sim_nnz, Scheme::MixV3, 1.06);
     let cycles_slow = phase_graph(nb, busy, false).run(u64::MAX).unwrap().cycles;

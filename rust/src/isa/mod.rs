@@ -131,18 +131,23 @@ pub struct MemResponse {
 }
 
 /// Recorded instruction issue, for the time plane and for debugging.
+///
+/// Targets are interned `&'static str` ids (module names and the fixed
+/// vector-control / memory module names baked into the compiled
+/// program), so recording an instruction never allocates — a
+/// long instruction-recorded solve costs one `Vec` push per issue.
 #[derive(Debug, Clone, Default)]
 pub struct InstTrace {
-    pub issued: Vec<(String, Instruction)>,
+    pub issued: Vec<(&'static str, Instruction)>,
 }
 
 impl InstTrace {
-    pub fn record(&mut self, target: &str, inst: Instruction) {
-        self.issued.push((target.to_string(), inst));
+    pub fn record(&mut self, target: &'static str, inst: Instruction) {
+        self.issued.push((target, inst));
     }
 
     pub fn count_for(&self, target: &str) -> usize {
-        self.issued.iter().filter(|(t, _)| t == target).count()
+        self.issued.iter().filter(|(t, _)| *t == target).count()
     }
 }
 
@@ -177,6 +182,46 @@ mod tests {
     fn qid_is_three_bits() {
         let i = InstVCtrl { rd: false, wr: false, base_addr: 0, len: 0, q_id: 7 };
         assert_eq!(InstVCtrl::decode(i.encode()).q_id, 7);
+    }
+
+    // ------------------------------------------------------------------
+    // Golden wire-format fixtures: the u128 bit patterns below pin the
+    // encoding as a *stable contract* (trace files, cross-tool dumps),
+    // not merely a round-trip-consistent one.  If any of these change,
+    // the wire format changed — bump consumers deliberately.
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn golden_vctrl_encodings() {
+        let read_only =
+            InstVCtrl { rd: true, wr: false, base_addr: 0xDEAD_BEEF, len: 1_000_000, q_id: 5 };
+        assert_eq!(read_only.encode(), 0x14003d09037ab6fbbd_u128);
+        let read_write =
+            InstVCtrl { rd: true, wr: true, base_addr: 0x0600_0000, len: 16_384, q_id: 2 };
+        assert_eq!(read_write.encode(), 0x80001000018000003_u128);
+        assert_eq!(InstVCtrl::decode(0x14003d09037ab6fbbd_u128), read_only);
+        assert_eq!(InstVCtrl::decode(0x80001000018000003_u128), read_write);
+    }
+
+    #[test]
+    fn golden_cmp_encodings() {
+        let unit = InstCmp { len: 16_384, alpha: 1.0, q_id: 0 };
+        assert_eq!(unit.encode(), 0x3ff000000000000000004000_u128);
+        let neg_half = InstCmp { len: 7, alpha: -0.5, q_id: 3 };
+        assert_eq!(neg_half.encode(), 0x3bfe000000000000000000007_u128);
+        let pi = InstCmp { len: 4096, alpha: std::f64::consts::PI, q_id: 6 };
+        assert_eq!(pi.encode(), 0x6400921fb54442d1800001000_u128);
+        assert_eq!(InstCmp::decode(0x3bfe000000000000000000007_u128), neg_half);
+    }
+
+    #[test]
+    fn golden_rdwr_encodings() {
+        let rd = InstRdWr { rd: true, wr: false, base_addr: 42, len: 9 };
+        assert_eq!(rd.encode(), 0x24000000a9_u128);
+        let wr = InstRdWr { rd: false, wr: true, base_addr: 0x0440_0000, len: 100_000 };
+        assert_eq!(wr.encode(), 0x61a8011000002_u128);
+        assert_eq!(InstRdWr::decode(0x24000000a9_u128), rd);
+        assert_eq!(InstRdWr::decode(0x61a8011000002_u128), wr);
     }
 
     #[test]

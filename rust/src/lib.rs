@@ -4,21 +4,27 @@
 //! Precision for Accelerating Conjugate Gradient Solver* (Song et al.,
 //! FPGA '23) as a three-layer Rust + JAX + Pallas stack.
 //!
-//! The paper's FPGA is replaced by two orthogonal planes (DESIGN.md §5):
+//! The paper's FPGA is replaced by two orthogonal planes (DESIGN.md §5),
+//! both driven by **one compiled instruction program** ([`program`]):
 //!
-//! * a **value plane** that runs the JPCG numerics for real — natively
-//!   ([`solver`], accelerated by the parallel execution [`engine`]) and
-//!   through AOT-compiled JAX/Pallas HLO artifacts executed by the PJRT
-//!   CPU client (`runtime`, behind the off-by-default `pjrt` feature);
+//! * a **value plane** that runs the JPCG numerics for real — the
+//!   [`coordinator`] dispatches the compiled Type-I/II/III steps through
+//!   an instruction bus to a native interpreter ([`solver`] numerics,
+//!   accelerated by the parallel execution [`engine`]) or to AOT-compiled
+//!   JAX/Pallas HLO artifacts executed by the PJRT CPU client
+//!   (`runtime`, behind the off-by-default `pjrt` feature);
 //! * a **time plane** — a cycle-approximate model of the U280 HBM
-//!   accelerator ([`hbm`], [`sim`]) driven by the same stream-centric
-//!   instruction traces ([`isa`], [`coordinator`]).
+//!   accelerator ([`hbm`], [`sim`]) whose phase graphs are *derived from
+//!   the same compiled program* (`Dataflow::from_program`), so the two
+//!   planes cannot drift.
 //!
 //! Layer map:
 //!
 //! | Layer | Where | Paper section |
 //! |---|---|---|
-//! | L3 coordinator | [`coordinator`], [`isa`], [`modules`], [`vsr`], [`sim`] | §3–§5 |
+//! | L3 coordinator | [`coordinator`] (controller + native interpreter) | §3, §4.3, Fig. 4 |
+//! | instruction program | [`program`] (HBM memory map, compiled trips, bus), [`isa`], [`modules`], [`vsr`] | §4–§5 |
+//! | time plane | [`sim`] (graphs derived from the program), [`hbm`] | §5.6–§5.7, §7 |
 //! | execution engine | [`engine`] (nnz-balanced parallel SpMV, prepared-matrix batch solves) | §6 / Fig. 8 analogue |
 //! | L2 JAX model | `python/compile/model.py` | Alg. 1 / Fig. 5 phases |
 //! | L1 Pallas kernels | `python/compile/kernels/` | §6 mixed-precision SpMV |
@@ -36,6 +42,7 @@ pub mod isa;
 pub mod metrics;
 pub mod modules;
 pub mod precision;
+pub mod program;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;

@@ -12,6 +12,7 @@
 //! callipepla table7 [--scale 0.02] [--matrices ...]
 //! callipepla fig9   [--out traces/] [--scale 0.05]
 //! callipepla sim    --matrix M7 [--scale 0.05]      (cycle breakdown)
+//! callipepla program [--n 16384] [--mode double]    (compiled ISA dump)
 //! ```
 //!
 //! (Arg parsing is hand-rolled: clap is not available offline.)
@@ -51,6 +52,7 @@ fn main() {
         "tables" => cmd_all_tables(&flags),
         "fig9" => cmd_fig9(&flags),
         "sim" => cmd_sim(&flags),
+        "program" => cmd_program(&flags),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -66,9 +68,11 @@ fn main() {
 fn print_usage() {
     eprintln!(
         "callipepla — stream-centric ISA + mixed-precision JPCG (FPGA'23 reproduction)\n\
-         commands: solve suite table4 table5 table6 table7 fig9 sim\n\
+         commands: solve suite table4 table5 table6 table7 fig9 sim program\n\
          common flags: --matrix <Mxx|name>  --mtx <file>  --scale <f>  --scheme <fp64|mixv1|mixv2|mixv3>\n\
-         \u{20}                --matrices M1,M2  --max-iters <n>  --threads <n>  --pjrt  --out <dir>"
+         \u{20}                --matrices M1,M2  --max-iters <n>  --threads <n>  --pjrt  --out <dir>\n\
+         \u{20}                solve: --coordinator [--serpens-stream]\n\
+         \u{20}                program: --n <len>  --mode <double|single>"
     );
 }
 
@@ -157,23 +161,36 @@ fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
             );
         }
     } else if flags.contains_key("coordinator") {
-        // Native module path through the full ISA coordinator.
+        // Native instruction-interpreter path through the compiled ISA
+        // program.  --serpens-stream additionally replays the scheduled
+        // Serpens nnz streams for the SpMV (Mix-V3 only) instead of the
+        // bitwise-oracle engine kernels.
         let cfg = CoordinatorConfig {
             max_iters,
             record_instructions: true,
             ..Default::default()
         };
         let mut coord = Coordinator::new(cfg);
-        let mut exec = NativeExecutor::new(&a, scheme);
+        let serpens = flags.contains_key("serpens-stream");
+        if serpens && scheme != Scheme::MixV3 {
+            bail!("--serpens-stream replays the Mix-V3 nnz streams; use --scheme mixv3");
+        }
+        let mut exec = if serpens {
+            NativeExecutor::with_serpens_stream(&a)
+        } else {
+            NativeExecutor::new(&a, scheme)
+        };
         let b = vec![1.0; a.n];
         let x0 = vec![0.0; a.n];
         let res = coord.solve(&mut exec, &b, &x0);
         println!(
-            "coordinator path: converged={} iters={} rr={:.3e} instructions={} wall={:?}",
+            "coordinator path ({}): converged={} iters={} rr={:.3e} instructions={} acks={} wall={:?}",
+            if serpens { "serpens-stream" } else { "engine" },
             res.converged,
             res.iters,
             res.final_rr,
             res.instructions.issued.len(),
+            res.mem_acks,
             t0.elapsed()
         );
     } else {
@@ -267,6 +284,75 @@ fn cmd_fig9(flags: &HashMap<String, String>) -> Result<()> {
             let path = format!("{out_dir}/fig9_{}_{label}.csv", spec.paper_name);
             std::fs::write(&path, csv)?;
             println!("wrote {path}");
+        }
+    }
+    Ok(())
+}
+
+/// Dump the compiled instruction program: the five trips with their
+/// Type-I/II/III steps, real HBM addresses, and validated reuse edges.
+fn cmd_program(flags: &HashMap<String, String>) -> Result<()> {
+    use callipepla::hbm::ChannelMode;
+    use callipepla::program::{short_name, Program};
+
+    let n = flag_u32(flags, "n", 16_384);
+    let mode = match flags.get("mode").map(String::as_str) {
+        None | Some("double") => ChannelMode::Double,
+        Some("single") => ChannelMode::Single,
+        Some(other) => bail!("unknown channel mode {other:?}"),
+    };
+    let program = Program::compile(n, mode);
+    println!("compiled program: n={n} mode={mode:?}");
+    println!("\nmemory map (addresses in 64-byte beats):");
+    for r in program.mem_map.regions() {
+        println!(
+            "  {:<3} channels {:?}  base 0x{:08x}  {} beats",
+            r.vector.name(),
+            r.channels,
+            r.rd_addr(0),
+            r.beats()
+        );
+    }
+    for trip in program.all_trips() {
+        let (reads, writes) = trip.access_counts();
+        println!(
+            "\n[{}] {} vector-control steps ({reads} rd / {writes} wr), \
+             {} compute steps, {} reuse edges",
+            trip.kind.label(),
+            trip.vec_steps.len(),
+            trip.comp_steps.len(),
+            trip.reuse_edges.len()
+        );
+        for s in &trip.vec_steps {
+            let v = s.vctrl;
+            println!(
+                "  I   {:<11} rd={} wr={} base=0x{:08x} len={} q_id={}",
+                s.name, v.rd as u8, v.wr as u8, v.base_addr, v.len, v.q_id
+            );
+            if let Some(rd) = s.rd_inst {
+                let (nm, ch) = (s.mem_name, s.rd_channel);
+                println!("  III {nm:<11} rd ch{ch:<2} base=0x{:08x}", rd.base_addr);
+            }
+            if let Some(wr) = s.wr_inst {
+                let (nm, ch) = (s.mem_name, s.wr_channel);
+                println!("  III {nm:<11} wr ch{ch:<2} base=0x{:08x}", wr.base_addr);
+            }
+        }
+        for c in &trip.comp_steps {
+            println!(
+                "  II  {:<11} len={} bind={:?} q_id={}",
+                c.target, c.inst.len, c.bind, c.inst.q_id
+            );
+        }
+        for e in &trip.reuse_edges {
+            println!(
+                "  edge {} -> {} ({}) skew={} fifo={}",
+                short_name(e.producer),
+                short_name(e.consumer),
+                e.vector.name(),
+                e.skew,
+                e.fifo_depth
+            );
         }
     }
     Ok(())

@@ -1,11 +1,12 @@
 //! Processing-module layer: the Fig. 6 decentralized-scheduling FSMs and
 //! the value-plane behaviours of modules M1–M8.
 //!
-//! The FSMs are data (state tables), not threads: the coordinator steps
-//! them each phase and the tests assert they encode exactly the
-//! schedules of Fig. 6.  The compute behaviours are the element-stream
-//! semantics each module applies, shared between the native solver and
-//! the module-level streaming tests.
+//! The FSMs are data (state tables), not threads: the program builder
+//! (`crate::program::builder`) walks their states to compile the
+//! Type-I/III vector-control steps and the Type-II stream endpoints,
+//! and the tests assert they encode exactly the schedules of Fig. 6.
+//! The compute behaviours are the element-stream semantics each module
+//! applies — what the native instruction interpreter dispatches.
 
 pub mod compute;
 pub mod fsm;

@@ -1,0 +1,323 @@
+//! The program builder: compiles the Fig. 4 controller schedule and the
+//! Fig. 5/6 module schedules into typed instruction trips with real HBM
+//! addresses, validating every on-chip reuse edge at build time.
+//!
+//! The Type-I/III steps are generated from the decentralized
+//! vector-control FSMs of [`crate::modules::fsm`] — the FSMs *are* the
+//! schedule (§5.5); the builder only walks their states and attaches
+//! channels/addresses from the [`HbmMemoryMap`].  The Type-II steps
+//! carry the stream endpoints of the Fig. 6 computation-module FSMs,
+//! which is what lets the time plane derive its dataflow graphs from
+//! the same instructions the value plane executes.
+
+use crate::hbm::ChannelMode;
+use crate::isa::{InstCmp, InstRdWr, InstVCtrl};
+use crate::modules::fsm::{self, Endpoint};
+use crate::vsr::{self, Module, Phase, Vector};
+
+use super::{
+    edge_fifo_depth, pipe_depth, short_name, tap_stage, CompStep, HbmMemoryMap, PhaseProgram,
+    Program, ReuseEdge, ScalarBind, ScalarRole, TripKind, VecStep,
+};
+
+/// Compile and validate the five-trip program for vectors of length `n`.
+pub fn compile(n: u32, mode: ChannelMode) -> Program {
+    let mem_map = HbmMemoryMap::new(n, mode);
+    let phases = [
+        build_steady(TripKind::Phase1, n, &mem_map),
+        build_steady(TripKind::Phase2, n, &mem_map),
+        build_steady(TripKind::Phase3, n, &mem_map),
+    ];
+    let init = build_init(n, &mem_map);
+    let exit = build_exit(n, &mem_map);
+    let prog = Program { n, mem_map, init, phases, exit };
+    validate(&prog);
+    prog
+}
+
+/// Interned memory-module trace targets (one per vector-control module,
+/// §4.2's decomposition) — recording never allocates.
+fn mem_target(name: &'static str) -> &'static str {
+    match name {
+        "VecCtrl-p" => "VecCtrl-p/mem",
+        "VecCtrl-r" => "VecCtrl-r/mem",
+        "VecCtrl-x" => "VecCtrl-x/mem",
+        "VecCtrl-ap" => "VecCtrl-ap/mem",
+        "VecCtrl-M" => "VecCtrl-M/mem",
+        other => other,
+    }
+}
+
+fn make_vec_step(
+    name: &'static str,
+    vector: Vector,
+    rd_to: Option<Module>,
+    wr_from: Option<Module>,
+    read_idx: usize,
+    n: u32,
+    map: &HbmMemoryMap,
+) -> VecStep {
+    let region = *map.region(vector).expect("vector-control step on an unmapped vector");
+    let rd_channel = region.rd_channel(read_idx);
+    let wr_channel = region.wr_channel(map.mode);
+    // The Type-I carries the address the module streams *from* (or the
+    // write-back address for write-only states, e.g. ap in Phase-1).
+    let base_addr =
+        if rd_to.is_some() { region.rd_addr(read_idx) } else { region.wr_addr(map.mode) };
+    let q_id = rd_to.map(|m| m as u8).unwrap_or(0);
+    let vctrl = InstVCtrl {
+        rd: rd_to.is_some(),
+        wr: wr_from.is_some(),
+        base_addr,
+        len: n,
+        q_id,
+    };
+    let rd_inst = rd_to.map(|_| InstRdWr {
+        rd: true,
+        wr: false,
+        base_addr: region.rd_addr(read_idx),
+        len: n,
+    });
+    let wr_inst = wr_from.map(|_| InstRdWr {
+        rd: false,
+        wr: true,
+        base_addr: region.wr_addr(map.mode),
+        len: n,
+    });
+    VecStep {
+        name,
+        mem_name: mem_target(name),
+        vector,
+        rd_to,
+        wr_from,
+        rd_channel,
+        wr_channel,
+        vctrl,
+        rd_inst,
+        wr_inst,
+    }
+}
+
+fn make_comp_step(
+    module: Module,
+    n: u32,
+    inputs: Vec<(Vector, Endpoint)>,
+    outputs: Vec<(Vector, Endpoint)>,
+) -> CompStep {
+    let q_id = outputs
+        .iter()
+        .find_map(|(_, e)| match e {
+            Endpoint::Module(d) => Some(*d as u8),
+            _ => None,
+        })
+        .unwrap_or(0);
+    let scalar = match module {
+        Module::M2 => Some(ScalarRole::Pap),
+        Module::M6 => Some(ScalarRole::Rz),
+        Module::M8 => Some(ScalarRole::Rr),
+        _ => None,
+    };
+    let bind = match module {
+        Module::M3 | Module::M4 => ScalarBind::Alpha,
+        Module::M7 => ScalarBind::Beta,
+        _ => ScalarBind::Unbound,
+    };
+    CompStep {
+        module,
+        target: short_name(module),
+        inst: InstCmp { len: n, alpha: 0.0, q_id },
+        scalar,
+        bind,
+        inputs,
+        outputs,
+    }
+}
+
+/// Steady-state trips: vector-control steps straight from the Fig. 6
+/// FSM states, computation steps from the per-module FSMs, in the
+/// controller's issue order (M8 hoisted in Phase-2, Fig. 4 opt. 2).
+fn build_steady(kind: TripKind, n: u32, map: &HbmMemoryMap) -> PhaseProgram {
+    let phase = kind.phase().expect("steady trip has a phase");
+    let fsms = [
+        (fsm::vecctrl_p(), Vector::P),
+        (fsm::vecctrl_r(), Vector::R),
+        (fsm::vecctrl_x(), Vector::X),
+        (fsm::vecctrl_ap(), Vector::Ap),
+        (fsm::vecctrl_m(), Vector::M),
+    ];
+    let mut vec_steps = Vec::new();
+    for (f, vector) in fsms {
+        // A vector may visit a phase more than once (p is read for M1
+        // and again for M2 in Phase-1); successive reads alternate the
+        // channel pair.
+        let mut read_idx = 0;
+        for s in &f.states {
+            if s.phase != phase {
+                continue;
+            }
+            vec_steps.push(make_vec_step(f.name, vector, s.rd_to, s.wr_from, read_idx, n, map));
+            if s.rd_to.is_some() {
+                read_idx += 1;
+            }
+        }
+    }
+    let order: &[Module] = match phase {
+        Phase::Phase1 => &[Module::M1, Module::M2],
+        Phase::Phase2 => &[Module::M4, Module::M8, Module::M5, Module::M6],
+        Phase::Phase3 => &[Module::M4, Module::M5, Module::M7, Module::M3],
+    };
+    let comp_steps: Vec<CompStep> = order
+        .iter()
+        .map(|&m| {
+            let f = fsm::comp_fsm(m);
+            let st = f
+                .states
+                .iter()
+                .find(|s| s.phase == phase)
+                .unwrap_or_else(|| panic!("{} has no {phase:?} state", short_name(m)));
+            make_comp_step(m, n, st.inputs.clone(), st.outputs.clone())
+        })
+        .collect();
+    let reuse_edges = extract_edges(&comp_steps);
+    PhaseProgram { kind, vec_steps, comp_steps, reuse_edges }
+}
+
+/// The merged-init trip (Fig. 4, `rp = -1`): lines 1–5 on the steady
+/// modules with alpha = 1 and beta = 0 pre-bound.  The host preloads b
+/// into r's region, so M4 computes r = b - 1·(A x0) in place; M1 reads
+/// x0 instead of p; M7's beta-0 update degenerates to the p = z copy;
+/// x is untouched, r and p are written back.
+fn build_init(n: u32, map: &HbmMemoryMap) -> PhaseProgram {
+    use Endpoint::{Memory, Module as ModEp};
+    use Module::*;
+    use Vector::*;
+    let vec_steps = vec![
+        make_vec_step("VecCtrl-x", X, Some(M1), None, 0, n, map),
+        make_vec_step("VecCtrl-r", R, Some(M4), Some(M5), 0, n, map),
+        make_vec_step("VecCtrl-M", M, Some(M5), None, 0, n, map),
+        make_vec_step("VecCtrl-p", P, None, Some(M7), 0, n, map),
+    ];
+    let comp_steps = vec![
+        make_comp_step(M1, n, vec![(X, Memory)], vec![(Ap, ModEp(M4))]),
+        make_comp_step(M4, n, vec![(R, Memory), (Ap, ModEp(M1))], vec![(R, ModEp(M5))]),
+        make_comp_step(M8, n, vec![(R, ModEp(M6))], vec![]),
+        make_comp_step(
+            M5,
+            n,
+            vec![(M, Memory), (R, ModEp(M4))],
+            vec![(Z, ModEp(M6)), (Z, ModEp(M7)), (R, ModEp(M6)), (R, Memory)],
+        ),
+        make_comp_step(M6, n, vec![(R, ModEp(M5)), (Z, ModEp(M5))], vec![(R, ModEp(M8))]),
+        make_comp_step(M7, n, vec![(Z, ModEp(M5))], vec![(P, Memory)]),
+    ];
+    let reuse_edges = extract_edges(&comp_steps);
+    PhaseProgram { kind: TripKind::Init, vec_steps, comp_steps, reuse_edges }
+}
+
+/// The converged-exit trip (Fig. 4 opt. 2): the hoisted M8 already
+/// reported rr <= tau, so only M3 runs to finish x; p comes from memory
+/// (M7 was skipped) and the new x is written back.
+fn build_exit(n: u32, map: &HbmMemoryMap) -> PhaseProgram {
+    use Endpoint::Memory;
+    let vec_steps = vec![
+        make_vec_step("VecCtrl-p", Vector::P, Some(Module::M3), None, 0, n, map),
+        make_vec_step("VecCtrl-x", Vector::X, Some(Module::M3), Some(Module::M3), 0, n, map),
+    ];
+    let comp_steps = vec![make_comp_step(
+        Module::M3,
+        n,
+        vec![(Vector::X, Memory), (Vector::P, Memory)],
+        vec![(Vector::X, Memory)],
+    )];
+    let reuse_edges = extract_edges(&comp_steps);
+    PhaseProgram { kind: TripKind::ConvergedExit, vec_steps, comp_steps, reuse_edges }
+}
+
+/// Collect the module-to-module stream edges of a trip, with the §5.6
+/// skew/depth bookkeeping derived from the producer's tap stages.
+fn extract_edges(comp_steps: &[CompStep]) -> Vec<ReuseEdge> {
+    let mut edges = Vec::new();
+    for c in comp_steps {
+        for (v, ep) in &c.inputs {
+            let Endpoint::Module(src) = ep else { continue };
+            let producer = comp_steps
+                .iter()
+                .find(|s| s.module == *src)
+                .unwrap_or_else(|| panic!("edge source {} missing from trip", short_name(*src)));
+            let my = tap_stage(producer.module, *v);
+            let max = producer
+                .outputs
+                .iter()
+                .map(|(ov, _)| tap_stage(producer.module, *ov))
+                .max()
+                .unwrap_or(my);
+            edges.push(ReuseEdge {
+                producer: *src,
+                consumer: c.module,
+                vector: *v,
+                skew: max - my,
+                fifo_depth: edge_fifo_depth(producer, *v),
+            });
+        }
+    }
+    edges
+}
+
+/// Build-time validation: reuse-edge legality (§5.1/§5.2 via
+/// [`vsr::edge_legal`]), the §5.6 fast-FIFO rule, address sanity, and
+/// structural consistency (every memory input has a compiled read
+/// routed to it, every write-back a producing module).
+fn validate(prog: &Program) {
+    prog.mem_map.check_no_overlap().expect("memory map overlap");
+    for trip in prog.all_trips() {
+        let label = trip.kind.label();
+        let bound = trip.kind.bound_scalars();
+        for e in &trip.reuse_edges {
+            if let Err(block) =
+                vsr::edge_legal(e.producer, e.consumer, e.vector, e.fifo_depth, e.skew, bound)
+            {
+                panic!("illegal reuse edge in {label}: {e:?} ({block:?})");
+            }
+            if e.skew > 0 {
+                let need = vsr::min_fast_fifo_depth(pipe_depth(e.producer));
+                assert!(
+                    e.fifo_depth >= need,
+                    "fast FIFO too shallow in {label}: {e:?} needs >= {need} (§5.6)"
+                );
+            }
+        }
+        for c in &trip.comp_steps {
+            for (v, ep) in &c.inputs {
+                match ep {
+                    Endpoint::Memory => assert!(
+                        trip.vec_steps.iter().any(|s| s.vector == *v && s.rd_to == Some(c.module)),
+                        "{label}: no compiled read of {} for {}",
+                        v.name(),
+                        short_name(c.module)
+                    ),
+                    Endpoint::Module(src) => assert!(
+                        trip.comp_steps.iter().any(|s| s.module == *src),
+                        "{label}: {} consumes from {} which is not in the trip",
+                        short_name(c.module),
+                        short_name(*src)
+                    ),
+                    Endpoint::Controller => {}
+                }
+            }
+        }
+        for s in &trip.vec_steps {
+            if let Some(m) = s.wr_from {
+                assert!(
+                    trip.comp_steps
+                        .iter()
+                        .any(|c| c.module == m
+                            && c.outputs.contains(&(s.vector, Endpoint::Memory))),
+                    "{label}: write-back of {} has no producing {} output",
+                    s.vector.name(),
+                    short_name(m)
+                );
+            }
+            assert!(s.vctrl.q_id < 8, "q_id must fit ap_uint<3>");
+        }
+    }
+}

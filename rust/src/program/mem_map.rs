@@ -1,0 +1,218 @@
+//! The HBM memory map: real channel + base-address assignments for the
+//! long vectors (paper §4.2, §5.4, §5.7).
+//!
+//! A U280 exposes 32 HBM pseudo-channels, each a 256 MiB window of the
+//! device address space.  Channels 0–15 carry the SpMV nnz streams
+//! (§2.3.3); channel 16 holds the Jacobi diagonal M; the four
+//! read-modify-write vectors (ap, p, x, r) each own a *channel pair*
+//! for the §5.7 ping-pong (read v_t from one channel while writing
+//! v_{t+1} to the other).  z is deliberately **not mapped**: the Fig. 5
+//! schedule recomputes it on-chip (§5.3), which is exactly what frees
+//! its channel pair.
+//!
+//! Addresses are in 64-byte *beats* (the 512-bit AXI transfer unit), so
+//! the full 8 GiB device space fits the ISA's 32-bit address fields.
+
+use crate::hbm::ChannelMode;
+use crate::vsr::Vector;
+
+/// Beats per 256 MiB channel window (256 MiB / 64 B).
+pub const CHANNEL_WINDOW_BEATS: u32 = 1 << 22;
+/// Channels reserved for the SpMV nnz streams.
+pub const NNZ_CHANNELS: usize = 16;
+/// Channel holding the Jacobi diagonal (read-only, never ping-ponged).
+pub const CH_DIAG: usize = 16;
+/// Total HBM pseudo-channels on the part.
+pub const TOTAL_CHANNELS: usize = 32;
+/// f64 lanes per beat.
+pub const BEAT_LANES: u32 = 8;
+
+/// One long vector's placement: a channel pair and a beat offset within
+/// the channel window (the same offset is used in both channels of the
+/// pair — the ping-pong alternates channels, not offsets).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VectorRegion {
+    pub vector: Vector,
+    /// `[primary, pair]`; equal for single-channel vectors (the diagonal).
+    pub channels: [usize; 2],
+    /// Beat offset inside each channel window.
+    pub offset_beats: u32,
+    /// Vector length in f64 elements.
+    pub elems: u32,
+}
+
+impl VectorRegion {
+    /// Beats occupied in each channel of the pair.
+    pub fn beats(&self) -> u32 {
+        self.elems.div_ceil(BEAT_LANES)
+    }
+
+    pub fn bytes(&self) -> u64 {
+        8 * self.elems as u64
+    }
+
+    /// Channel serving the `k`-th same-phase read: multiple readers of
+    /// one vector alternate the pair so their streams overlap (the two
+    /// p reads of Phase-1 run in parallel, Fig. 5).
+    pub fn rd_channel(&self, k: usize) -> usize {
+        self.channels[k % 2]
+    }
+
+    /// Global beat address of the `k`-th read.
+    pub fn rd_addr(&self, k: usize) -> u32 {
+        self.rd_channel(k) as u32 * CHANNEL_WINDOW_BEATS + self.offset_beats
+    }
+
+    /// Write channel under the configured mode: the pair channel when
+    /// ping-ponging (read and write overlap, §5.7), the read channel
+    /// when single (they serialize — the channel turns around).
+    pub fn wr_channel(&self, mode: ChannelMode) -> usize {
+        match mode {
+            ChannelMode::Double => self.channels[1],
+            ChannelMode::Single => self.channels[0],
+        }
+    }
+
+    /// Global beat address of the write-back.
+    pub fn wr_addr(&self, mode: ChannelMode) -> u32 {
+        self.wr_channel(mode) as u32 * CHANNEL_WINDOW_BEATS + self.offset_beats
+    }
+}
+
+/// The full map for one solve: every *stored* vector of Algorithm 1
+/// gets a region; [`Vector::Z`] stays on-chip and has none.
+#[derive(Debug, Clone)]
+pub struct HbmMemoryMap {
+    pub n: u32,
+    pub mode: ChannelMode,
+    regions: Vec<VectorRegion>,
+}
+
+impl HbmMemoryMap {
+    /// Lay out vectors of length `n` under a channel policy.  Panics if
+    /// a vector outgrows its 256 MiB channel window (n > 32 Mi doubles),
+    /// which is far beyond the largest suite matrix.
+    pub fn new(n: u32, mode: ChannelMode) -> Self {
+        let region = |vector, primary: usize, pair: usize| VectorRegion {
+            vector,
+            channels: [primary, pair],
+            offset_beats: 0,
+            elems: n,
+        };
+        let regions = vec![
+            region(Vector::M, CH_DIAG, CH_DIAG),
+            region(Vector::Ap, 17, 18),
+            region(Vector::P, 19, 20),
+            region(Vector::X, 21, 22),
+            region(Vector::R, 23, 24),
+        ];
+        for r in &regions {
+            assert!(
+                r.offset_beats + r.beats() <= CHANNEL_WINDOW_BEATS,
+                "vector {} ({} elems) exceeds the 256 MiB channel window",
+                r.vector.name(),
+                r.elems
+            );
+        }
+        Self { n, mode, regions }
+    }
+
+    /// The region of a stored vector; `None` for on-chip-only z.
+    pub fn region(&self, v: Vector) -> Option<&VectorRegion> {
+        self.regions.iter().find(|r| r.vector == v)
+    }
+
+    pub fn regions(&self) -> &[VectorRegion] {
+        &self.regions
+    }
+
+    /// Every byte range two live vectors occupy in one channel must be
+    /// disjoint (a vector may legitimately appear in two channels — its
+    /// ping-pong pair — but never on top of another vector).
+    pub fn check_no_overlap(&self) -> Result<(), String> {
+        for (i, a) in self.regions.iter().enumerate() {
+            for b in self.regions.iter().skip(i + 1) {
+                for &ca in &a.channels {
+                    for &cb in &b.channels {
+                        if ca != cb {
+                            continue;
+                        }
+                        let a0 = a.offset_beats as u64 * 64;
+                        let a1 = a0 + a.bytes();
+                        let b0 = b.offset_beats as u64 * 64;
+                        let b1 = b0 + b.bytes();
+                        if a0 < b1 && b0 < a1 {
+                            return Err(format!(
+                                "vectors {} and {} overlap in channel {ca}: \
+                                 [{a0},{a1}) vs [{b0},{b1})",
+                                a.vector.name(),
+                                b.vector.name()
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vsr::onchip_only_vectors;
+
+    #[test]
+    fn no_two_live_vectors_overlap_in_a_channel() {
+        for mode in [ChannelMode::Double, ChannelMode::Single] {
+            let map = HbmMemoryMap::new(1_437_960, mode); // largest suite matrix
+            map.check_no_overlap().unwrap();
+        }
+    }
+
+    #[test]
+    fn z_is_never_mapped_and_matches_vsr_analysis() {
+        let map = HbmMemoryMap::new(10_000, ChannelMode::Double);
+        assert!(map.region(Vector::Z).is_none(), "z lives on-chip (§5.3)");
+        for v in onchip_only_vectors() {
+            assert!(map.region(v).is_none(), "{} is on-chip only", v.name());
+        }
+        for v in [Vector::P, Vector::Ap, Vector::R, Vector::X, Vector::M] {
+            assert!(map.region(v).is_some(), "{} must be stored", v.name());
+        }
+    }
+
+    #[test]
+    fn vectors_avoid_the_nnz_channels() {
+        let map = HbmMemoryMap::new(4_096, ChannelMode::Double);
+        for r in map.regions() {
+            for &c in &r.channels {
+                assert!(c >= NNZ_CHANNELS && c < TOTAL_CHANNELS, "{:?}", r);
+            }
+        }
+    }
+
+    #[test]
+    fn ping_pong_channels_follow_the_mode() {
+        let n = 8_192;
+        let dbl = HbmMemoryMap::new(n, ChannelMode::Double);
+        let sgl = HbmMemoryMap::new(n, ChannelMode::Single);
+        let p_dbl = dbl.region(Vector::P).unwrap();
+        let p_sgl = sgl.region(Vector::P).unwrap();
+        // Double: write to the pair channel; single: turn the read
+        // channel around.
+        assert_ne!(p_dbl.wr_channel(ChannelMode::Double), p_dbl.rd_channel(0));
+        assert_eq!(p_sgl.wr_channel(ChannelMode::Single), p_sgl.rd_channel(0));
+        // Two same-phase reads alternate the pair either way.
+        assert_ne!(p_dbl.rd_channel(0), p_dbl.rd_channel(1));
+    }
+
+    #[test]
+    fn addresses_are_real_channel_windows() {
+        let map = HbmMemoryMap::new(16_384, ChannelMode::Double);
+        let r = map.region(Vector::R).unwrap();
+        assert_eq!(r.rd_addr(0), 23 * CHANNEL_WINDOW_BEATS);
+        assert_eq!(r.wr_addr(ChannelMode::Double), 24 * CHANNEL_WINDOW_BEATS);
+        assert_eq!(r.beats(), 2_048);
+    }
+}

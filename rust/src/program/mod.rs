@@ -1,0 +1,413 @@
+//! The compiled instruction program: one control representation that
+//! drives **both** planes (the reproduction's answer to paper §4–§5).
+//!
+//! [`Program::compile`] turns (vector length, channel policy) into five
+//! typed instruction trips:
+//!
+//! * the **merged-init** trip (Fig. 4's `rp = -1` pass: lines 1–5 of
+//!   Algorithm 1 run on the steady-state modules with alpha = 1 and
+//!   beta = 0 pre-bound, r's region preloaded with b by the host),
+//! * the three **steady-state phases** of Fig. 5, whose Type-I/III
+//!   steps come from the decentralized vector-control FSMs
+//!   ([`crate::modules::fsm`]) and whose Type-II steps carry the
+//!   stream endpoints of the Fig. 6 computation-module FSMs, and
+//! * the **converged-exit** trip (Fig. 4 opt. 2: M8 is hoisted before
+//!   M5–M7, so a converged iteration runs M3 alone to finish x).
+//!
+//! Every instruction carries a *real* HBM address from the
+//! [`HbmMemoryMap`], and every on-chip reuse edge is validated at build
+//! time against [`crate::vsr::edge_legal`] (the §5.1/§5.2 rules) plus
+//! the §5.6 FIFO-depth rule.  The value plane executes these exact
+//! steps through [`bus::InstructionBus`]; the time plane derives its
+//! cycle graphs from them via `Dataflow::from_program` — the two can no
+//! longer drift.
+
+pub mod builder;
+pub mod bus;
+pub mod mem_map;
+
+pub use bus::{DispatchReturn, InstDispatch, InstructionBus, Scalars, VectorFile};
+pub use mem_map::{HbmMemoryMap, VectorRegion, CH_DIAG, NNZ_CHANNELS, TOTAL_CHANNELS};
+
+use crate::hbm::ChannelMode;
+use crate::isa::{InstCmp, InstRdWr, InstVCtrl};
+use crate::modules::fsm::Endpoint;
+use crate::vsr::{Module, Phase, Vector};
+
+// ---------------------------------------------------------------------
+// Module micro-architecture (II=1 pipeline shapes).  These are facts
+// about the hardware modules, not about the schedule — the schedule is
+// what the compiled steps carry.
+// ---------------------------------------------------------------------
+
+/// M5 left-divide pipeline depth (Fig. 7: L = 33).
+pub const M5_DEPTH: usize = 33;
+/// M6 forwards r after its 5-stage dot front-end.
+pub const M6_DEPTH: usize = 5;
+/// FP multiply-add pipelines (M3, M4, M7).
+pub const FMA_DEPTH: usize = 8;
+/// Default stream FIFO depth.
+pub const STREAM_FIFO_DEPTH: usize = 64;
+
+/// Pipeline depth of a module's streaming datapath.
+pub fn pipe_depth(m: Module) -> usize {
+    match m {
+        Module::M5 => M5_DEPTH,
+        Module::M6 => M6_DEPTH,
+        Module::M3 | Module::M4 | Module::M7 => FMA_DEPTH,
+        // M1 (SpMV) and the pure dots have no tapped pipeline.
+        Module::M1 | Module::M2 | Module::M8 => 1,
+    }
+}
+
+/// Stage at which a module taps `v` onto its output stream.  M5
+/// consume-and-sends r at stage 0 (the copy that makes the Fig. 7
+/// fast-FIFO analysis necessary); everything else emits at the end of
+/// its pipeline.
+pub fn tap_stage(m: Module, v: Vector) -> usize {
+    match (m, v) {
+        (Module::M5, Vector::R) => 0,
+        _ => pipe_depth(m) - 1,
+    }
+}
+
+/// FIFO depth for the edge carrying `vector` out of `step`: the §5.6
+/// rule — an output tapped *earlier* than a sibling tap is the fast
+/// stream and needs depth >= L + 1 to avoid the Fig. 7 deadlock;
+/// everything else gets the default stream depth.
+pub fn edge_fifo_depth(step: &CompStep, vector: Vector) -> usize {
+    let my = tap_stage(step.module, vector);
+    let max = step
+        .outputs
+        .iter()
+        .map(|(v, _)| tap_stage(step.module, *v))
+        .max()
+        .unwrap_or(my);
+    if my < max {
+        pipe_depth(step.module) + 1
+    } else {
+        STREAM_FIFO_DEPTH
+    }
+}
+
+/// Short trace-target id of a computation module ("M1".."M8").
+pub fn short_name(m: Module) -> &'static str {
+    match m {
+        Module::M1 => "M1",
+        Module::M2 => "M2",
+        Module::M3 => "M3",
+        Module::M4 => "M4",
+        Module::M5 => "M5",
+        Module::M6 => "M6",
+        Module::M7 => "M7",
+        Module::M8 => "M8",
+    }
+}
+
+// ---------------------------------------------------------------------
+// Compiled step types.
+// ---------------------------------------------------------------------
+
+/// Which controller trip a phase program belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TripKind {
+    /// Merged init (Fig. 4, `rp = -1`): alpha = 1, beta = 0 pre-bound.
+    Init,
+    Phase1,
+    Phase2,
+    Phase3,
+    /// Converged exit: M3 alone finishes x (Fig. 4 opt. 2).
+    ConvergedExit,
+}
+
+impl TripKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            TripKind::Init => "init",
+            TripKind::Phase1 => "phase1",
+            TripKind::Phase2 => "phase2",
+            TripKind::Phase3 => "phase3",
+            TripKind::ConvergedExit => "converged-exit",
+        }
+    }
+
+    /// Scalars the controller has bound *before* this trip starts —
+    /// what waives the §5.1 scalar-dependency rule for its reuse edges.
+    pub fn bound_scalars(self) -> &'static [&'static str] {
+        match self {
+            // The merged init pre-binds alpha = 1 and beta = 0.
+            TripKind::Init => &["alpha", "beta"],
+            TripKind::Phase1 => &[],
+            TripKind::Phase2 => &["alpha"],
+            TripKind::Phase3 => &["alpha", "beta"],
+            TripKind::ConvergedExit => &["alpha"],
+        }
+    }
+
+    /// The Fig. 5 phase this trip instantiates, for the steady trips.
+    pub fn phase(self) -> Option<Phase> {
+        match self {
+            TripKind::Phase1 => Some(Phase::Phase1),
+            TripKind::Phase2 => Some(Phase::Phase2),
+            TripKind::Phase3 => Some(Phase::Phase3),
+            _ => None,
+        }
+    }
+}
+
+/// Scalar a dot module returns to the controller (§4.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScalarRole {
+    Pap,
+    Rz,
+    Rr,
+}
+
+/// Which controller scalar the bus binds into a Type-II `alpha` field
+/// at issue time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScalarBind {
+    Unbound,
+    Alpha,
+    Beta,
+}
+
+/// One vector-control step: the Type-I instruction plus the Type-III
+/// memory instruction(s) it decomposes into (§4.2's vector-flow
+/// example), with real channels and addresses.
+#[derive(Debug, Clone)]
+pub struct VecStep {
+    pub name: &'static str,
+    pub mem_name: &'static str,
+    pub vector: Vector,
+    pub rd_to: Option<Module>,
+    pub wr_from: Option<Module>,
+    pub rd_channel: usize,
+    pub wr_channel: usize,
+    pub vctrl: InstVCtrl,
+    pub rd_inst: Option<InstRdWr>,
+    pub wr_inst: Option<InstRdWr>,
+}
+
+/// One computation step: the Type-II instruction plus the stream
+/// endpoints (Fig. 6 f–m) that tell both planes where its inputs come
+/// from and where its outputs go.
+#[derive(Debug, Clone)]
+pub struct CompStep {
+    pub module: Module,
+    pub target: &'static str,
+    /// `alpha` is a placeholder here; the bus binds the live scalar at
+    /// issue time (the controller owns alpha/beta, §4.3).
+    pub inst: InstCmp,
+    pub scalar: Option<ScalarRole>,
+    pub bind: ScalarBind,
+    pub inputs: Vec<(Vector, Endpoint)>,
+    pub outputs: Vec<(Vector, Endpoint)>,
+}
+
+/// A module-to-module on-chip stream, with the §5.6 bookkeeping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReuseEdge {
+    pub producer: Module,
+    pub consumer: Module,
+    pub vector: Vector,
+    /// Stage gap to the producer's slowest sibling tap.
+    pub skew: usize,
+    pub fifo_depth: usize,
+}
+
+/// One trip's compiled instruction sequence.
+#[derive(Debug, Clone)]
+pub struct PhaseProgram {
+    pub kind: TripKind,
+    pub vec_steps: Vec<VecStep>,
+    pub comp_steps: Vec<CompStep>,
+    pub reuse_edges: Vec<ReuseEdge>,
+}
+
+impl PhaseProgram {
+    /// (reads, writes) this trip issues against HBM.
+    pub fn access_counts(&self) -> (usize, usize) {
+        let r = self.vec_steps.iter().filter(|s| s.rd_inst.is_some()).count();
+        let w = self.vec_steps.iter().filter(|s| s.wr_inst.is_some()).count();
+        (r, w)
+    }
+}
+
+/// The whole compiled program for one solve.
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub n: u32,
+    pub mem_map: HbmMemoryMap,
+    pub init: PhaseProgram,
+    pub phases: [PhaseProgram; 3],
+    pub exit: PhaseProgram,
+}
+
+impl Program {
+    /// Compile and validate the full five-trip program.
+    pub fn compile(n: u32, mode: ChannelMode) -> Program {
+        builder::compile(n, mode)
+    }
+
+    pub fn phase(&self, p: Phase) -> &PhaseProgram {
+        match p {
+            Phase::Phase1 => &self.phases[0],
+            Phase::Phase2 => &self.phases[1],
+            Phase::Phase3 => &self.phases[2],
+        }
+    }
+
+    pub fn all_trips(&self) -> [&PhaseProgram; 5] {
+        [&self.init, &self.phases[0], &self.phases[1], &self.phases[2], &self.exit]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vsr::{accesses_with_vsr, can_vsr, count_accesses, edge_legal, min_fast_fifo_depth};
+
+    fn compiled() -> Program {
+        Program::compile(16_384, ChannelMode::Double)
+    }
+
+    #[test]
+    fn every_reuse_edge_in_every_trip_is_legal() {
+        // Property-style sweep: several sizes, both channel modes, every
+        // trip, every edge.
+        for n in [1u32, 7, 1_000, 16_384, 1_000_000] {
+            for mode in [ChannelMode::Double, ChannelMode::Single] {
+                let prog = Program::compile(n, mode);
+                for trip in prog.all_trips() {
+                    let bound = trip.kind.bound_scalars();
+                    for e in &trip.reuse_edges {
+                        edge_legal(e.producer, e.consumer, e.vector, e.fifo_depth, e.skew, bound)
+                            .unwrap_or_else(|b| {
+                                panic!("illegal edge {e:?} in {}: {b:?}", trip.kind.label())
+                            });
+                        if e.skew > 0 {
+                            assert!(
+                                e.fifo_depth >= min_fast_fifo_depth(pipe_depth(e.producer)),
+                                "fast FIFO under-provisioned: {e:?}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn phase2_chain_needs_no_waivers() {
+        // The steady Phase-2 edges are the raw Fig. 5 chain: they must
+        // pass can_vsr outright, with no bound-scalar waiver.
+        let prog = compiled();
+        let p2 = prog.phase(Phase::Phase2);
+        assert!(!p2.reuse_edges.is_empty());
+        for e in &p2.reuse_edges {
+            can_vsr(e.producer, e.consumer, e.fifo_depth, e.skew)
+                .unwrap_or_else(|b| panic!("phase2 edge {e:?}: {b:?}"));
+        }
+    }
+
+    #[test]
+    fn steady_state_accesses_reproduce_section_5_5() {
+        let prog = compiled();
+        // Per-phase multiset of (vector, rd, wr) against the §5.4 table.
+        for (phase, want) in accesses_with_vsr() {
+            let trip = prog.phase(phase);
+            let mut got: Vec<(Vector, bool, bool)> = trip
+                .vec_steps
+                .iter()
+                .map(|s| (s.vector, s.rd_inst.is_some(), s.wr_inst.is_some()))
+                .collect();
+            let mut want: Vec<(Vector, bool, bool)> =
+                want.iter().map(|a| (a.vector, a.read, a.write)).collect();
+            got.sort();
+            want.sort();
+            assert_eq!(got, want, "{phase:?}");
+        }
+        // Totals: 10 reads + 4 writes (§5.5, decentralized).
+        let (mut r, mut w) = (0, 0);
+        for p in &prog.phases {
+            let (pr, pw) = p.access_counts();
+            r += pr;
+            w += pw;
+        }
+        assert_eq!((r, w), count_accesses(&accesses_with_vsr()));
+    }
+
+    #[test]
+    fn instruction_addresses_come_from_the_memory_map() {
+        let prog = compiled();
+        prog.mem_map.check_no_overlap().unwrap();
+        for trip in prog.all_trips() {
+            for s in &trip.vec_steps {
+                let region = prog.mem_map.region(s.vector).expect("stored vector");
+                if let Some(rd) = s.rd_inst {
+                    assert_eq!(rd.base_addr % mem_map::CHANNEL_WINDOW_BEATS, region.offset_beats);
+                    assert_eq!(
+                        (rd.base_addr / mem_map::CHANNEL_WINDOW_BEATS) as usize,
+                        s.rd_channel
+                    );
+                    assert!(rd.base_addr != 0, "placeholder address survived compilation");
+                }
+                if let Some(wr) = s.wr_inst {
+                    assert_eq!(
+                        (wr.base_addr / mem_map::CHANNEL_WINDOW_BEATS) as usize,
+                        s.wr_channel
+                    );
+                }
+                assert_eq!(s.vctrl.len, prog.n);
+            }
+        }
+    }
+
+    #[test]
+    fn z_never_appears_as_a_memory_access() {
+        let prog = compiled();
+        for trip in prog.all_trips() {
+            assert!(
+                trip.vec_steps.iter().all(|s| s.vector != Vector::Z),
+                "z must stay on-chip in {}",
+                trip.kind.label()
+            );
+        }
+    }
+
+    #[test]
+    fn trip_shapes_match_fig4() {
+        let prog = compiled();
+        let mods = |t: &PhaseProgram| t.comp_steps.iter().map(|c| c.module).collect::<Vec<_>>();
+        use Module::*;
+        assert_eq!(mods(&prog.init), vec![M1, M4, M8, M5, M6, M7]);
+        assert_eq!(mods(prog.phase(Phase::Phase1)), vec![M1, M2]);
+        // M8 hoisted before M5/M6 (Fig. 4 opt. 2).
+        assert_eq!(mods(prog.phase(Phase::Phase2)), vec![M4, M8, M5, M6]);
+        assert_eq!(mods(prog.phase(Phase::Phase3)), vec![M4, M5, M7, M3]);
+        assert_eq!(mods(&prog.exit), vec![M3]);
+        // Init reads x0, b (via r's region) and M; writes r and p.
+        assert_eq!(prog.init.access_counts(), (3, 2));
+        assert_eq!(prog.exit.access_counts(), (2, 1));
+    }
+
+    #[test]
+    fn fast_fifo_depth_rule_is_applied_to_m5() {
+        let prog = compiled();
+        let p2 = prog.phase(Phase::Phase2);
+        let fast = p2
+            .reuse_edges
+            .iter()
+            .find(|e| e.producer == Module::M5 && e.vector == Vector::R)
+            .expect("M5 r consume-and-send edge");
+        assert_eq!(fast.fifo_depth, M5_DEPTH + 1, "Fig. 7(b): depth L+1");
+        assert_eq!(fast.skew, M5_DEPTH - 1);
+        let slow = p2
+            .reuse_edges
+            .iter()
+            .find(|e| e.producer == Module::M5 && e.vector == Vector::Z)
+            .expect("M5 z edge");
+        assert_eq!(slow.fifo_depth, STREAM_FIFO_DEPTH);
+    }
+}

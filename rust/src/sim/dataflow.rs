@@ -303,6 +303,180 @@ impl Dataflow {
         }
     }
 
+    /// Build a phase graph from one trip of a compiled instruction
+    /// program: every node, FIFO, channel and beat count derives from
+    /// the same Type-I/II/III instructions the value plane executed —
+    /// the time plane can no longer drift from the ISA.
+    ///
+    /// Mapping rules (module micro-architecture comes from
+    /// `crate::program`'s depth/tap tables; the *schedule* — who reads
+    /// and writes what, where, how much — comes from the instructions):
+    ///
+    /// * a Type-III read becomes a `MemRead` on its compiled channel,
+    ///   feeding the module its Type-I `q_id` routes to;
+    /// * a Type-II step becomes an `Spmv` (M1), a `Dot` (pure scalar
+    ///   modules), or a stall-freeze `Pipe` whose taps sit at the
+    ///   compiled output stages, with FIFO depths from the §5.6 rule;
+    /// * an output vector with several sinks streams through a depth-1
+    ///   fork (the vector-control module's copy, §4.2);
+    /// * a Type-III write becomes a `MemWrite` on its compiled channel.
+    ///
+    /// Node order is canonical — per computation step: its memory
+    /// reads (input order), the module, its forks; all memory writes
+    /// last in vector-control order — so cycle counts are reproducible
+    /// and pinned by the hand-built-graph equality tests.
+    pub fn from_program(prog: &crate::program::PhaseProgram, spmv_busy: u64) -> Dataflow {
+        use crate::modules::fsm::Endpoint;
+        use crate::program::{
+            edge_fifo_depth, pipe_depth, short_name, tap_stage, STREAM_FIFO_DEPTH, TOTAL_CHANNELS,
+        };
+        use crate::vsr::{Module, Vector};
+
+        const BEAT_LANES: u64 = 8;
+        let beats = |len: u32| (len as u64).div_ceil(BEAT_LANES);
+
+        let mut df = Dataflow::new(TOTAL_CHANNELS);
+
+        // Pass 1: allocate the stream FIFOs every producer output
+        // feeds, in step order (FIFO ids are passive; only node order
+        // affects arbitration).
+        struct OutEdge {
+            producer: Module,
+            vector: Vector,
+            sink: Endpoint,
+            fifo: FifoId,
+        }
+        struct ForkSpec {
+            vector: Vector,
+            input: FifoId,
+            taps: Vec<FifoId>,
+        }
+        let n_steps = prog.comp_steps.len();
+        let mut out_edges: Vec<OutEdge> = Vec::new();
+        let mut prod_taps: Vec<Vec<(Vector, FifoId)>> =
+            (0..n_steps).map(|_| Vec::new()).collect();
+        let mut fork_specs: Vec<Vec<ForkSpec>> = (0..n_steps).map(|_| Vec::new()).collect();
+        for (ci, step) in prog.comp_steps.iter().enumerate() {
+            let mut seen: Vec<Vector> = Vec::new();
+            for (v, _) in &step.outputs {
+                if seen.contains(v) {
+                    continue;
+                }
+                seen.push(*v);
+                let sinks: Vec<Endpoint> = step
+                    .outputs
+                    .iter()
+                    .filter(|(ov, _)| ov == v)
+                    .map(|(_, e)| *e)
+                    .collect();
+                if sinks.len() == 1 {
+                    let f = df.fifo(edge_fifo_depth(step, *v));
+                    out_edges
+                        .push(OutEdge { producer: step.module, vector: *v, sink: sinks[0], fifo: f });
+                    prod_taps[ci].push((*v, f));
+                } else {
+                    let fin = df.fifo(edge_fifo_depth(step, *v));
+                    prod_taps[ci].push((*v, fin));
+                    let mut taps = Vec::new();
+                    for s in sinks {
+                        let f = df.fifo(STREAM_FIFO_DEPTH);
+                        out_edges
+                            .push(OutEdge { producer: step.module, vector: *v, sink: s, fifo: f });
+                        taps.push(f);
+                    }
+                    fork_specs[ci].push(ForkSpec { vector: *v, input: fin, taps });
+                }
+            }
+        }
+        let find_edge = |edges: &[OutEdge], p: Module, v: Vector, sink: Endpoint| -> FifoId {
+            edges
+                .iter()
+                .find(|e| e.producer == p && e.vector == v && e.sink == sink)
+                .map(|e| e.fifo)
+                .unwrap_or_else(|| {
+                    panic!("no compiled stream {} -> {sink:?} for {}", short_name(p), v.name())
+                })
+        };
+
+        // Pass 2: nodes in canonical order.
+        let mut rd_used = vec![false; prog.vec_steps.len()];
+        for (ci, step) in prog.comp_steps.iter().enumerate() {
+            let nb = beats(step.inst.len);
+            let mut ins: Vec<FifoId> = Vec::new();
+            for (v, ep) in &step.inputs {
+                match ep {
+                    Endpoint::Memory => {
+                        let (vi, vs) = prog
+                            .vec_steps
+                            .iter()
+                            .enumerate()
+                            .find(|(vi, vs)| {
+                                !rd_used[*vi]
+                                    && vs.vector == *v
+                                    && vs.rd_to == Some(step.module)
+                            })
+                            .unwrap_or_else(|| {
+                                panic!(
+                                    "no compiled read of {} for {}",
+                                    v.name(),
+                                    short_name(step.module)
+                                )
+                            });
+                        rd_used[vi] = true;
+                        let f = df.fifo(STREAM_FIFO_DEPTH);
+                        let rd = vs.rd_inst.expect("read step carries a Type-III read");
+                        df.mem_read(
+                            &format!("rd_{}@{}", v.name(), short_name(step.module)),
+                            vs.rd_channel,
+                            beats(rd.len),
+                            f,
+                        );
+                        ins.push(f);
+                    }
+                    Endpoint::Module(src) => {
+                        ins.push(find_edge(&out_edges, *src, *v, Endpoint::Module(step.module)));
+                    }
+                    Endpoint::Controller => {}
+                }
+            }
+            let name = short_name(step.module);
+            match step.module {
+                Module::M1 => {
+                    let out = prod_taps[ci][0].1;
+                    df.spmv(name, ins[0], nb, spmv_busy, nb, out);
+                }
+                Module::M2 | Module::M8 => {
+                    df.dot(name, ins, nb, super::iteration::DOT_TAIL);
+                }
+                _ => {
+                    let depth = pipe_depth(step.module);
+                    let outs: Vec<(usize, FifoId)> = prod_taps[ci]
+                        .iter()
+                        .map(|(v, f)| (tap_stage(step.module, *v), *f))
+                        .collect();
+                    df.pipe(name, ins, outs, depth, nb);
+                }
+            }
+            for fork in &fork_specs[ci] {
+                let outs: Vec<(usize, FifoId)> = fork.taps.iter().map(|f| (0usize, *f)).collect();
+                df.pipe(&format!("fork_{}", fork.vector.name()), vec![fork.input], outs, 1, nb);
+            }
+        }
+        for vs in &prog.vec_steps {
+            if let Some(wr) = vs.wr_inst {
+                let m = vs.wr_from.expect("write step has a producing module");
+                let f = find_edge(&out_edges, m, vs.vector, Endpoint::Memory);
+                df.mem_write(
+                    &format!("wr_{}", vs.vector.name()),
+                    vs.wr_channel,
+                    beats(wr.len),
+                    f,
+                );
+            }
+        }
+        df
+    }
+
     /// One simulated cycle; reports what progressed.
     fn step(&mut self, cycle: u64) -> StepOutcome {
         // `other` — progress that changes FIFO/pipe/transfer state;

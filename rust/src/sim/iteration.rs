@@ -1,24 +1,31 @@
-//! Per-iteration cycle model: builds the Fig. 5 phase graphs on the
-//! dataflow engine and turns (matrix, accelerator config) into
+//! Per-iteration cycle model: turns (matrix, accelerator config) into
 //! cycles/iteration and solver seconds.
 //!
-//! Channel map (a U280 has 32): 0-15 nnz streams, 16 the Jacobi diagonal
-//! M, then one or two channels per long vector depending on the §5.7
-//! channel mode.  The VSR flag switches between the Fig. 5 reuse graphs
-//! and the store-everything baseline (§5.5), which also serializes the
-//! per-module memory round-trips the way XcgSolver's kernel-sequential
-//! execution does.
+//! The VSR (Fig. 5) phase graphs are **derived from the compiled
+//! instruction program** via [`Dataflow::from_program`] — the same
+//! Type-I/II/III steps the value plane executes, so the cycle model's
+//! node/FIFO graph, channels and issue counts cannot drift from the
+//! ISA.  Channels and addresses come from the program's
+//! [`HbmMemoryMap`](crate::program::HbmMemoryMap): 0-15 nnz streams,
+//! 16 the Jacobi diagonal M, then a channel pair per long vector under
+//! the §5.7 policy.  The no-VSR baseline (§5.5 store-everything,
+//! kernel-sequential like XcgSolver) is deliberately *not* program
+//! driven — it models the machine that lacks the ISA schedule — and
+//! keeps its hand-built per-module passes.
 
-use crate::hbm::{ChannelMode, HbmConfig};
+use crate::hbm::HbmConfig;
 use crate::precision::Scheme;
+use crate::program::Program;
 use crate::sparse::{NUM_CHANNELS, PES_PER_CHANNEL};
+use crate::vsr::Phase;
 
 use super::dataflow::{Dataflow, SimError};
 
 /// f64 lanes per 64-byte beat.
 const LANES: u64 = 8;
-/// M5 left-divide pipeline depth (Fig. 7: L = 33).
-pub const M5_DEPTH: usize = 33;
+/// M5 left-divide pipeline depth (Fig. 7: L = 33) — canonically defined
+/// next to the other module micro-architecture tables in `program`.
+pub use crate::program::M5_DEPTH;
 /// Dot-product Phase-II tail: II=5 over the 8-lane delay buffer.
 pub const DOT_TAIL: u64 = 5 * 8;
 /// Per-phase control overhead (instruction issue + FSM transitions).
@@ -101,111 +108,29 @@ pub fn spmv_busy_cycles(nnz: usize, scheme: Scheme, padding: f64) -> u64 {
     (nnz as f64 * padding * slot_factor / lanes).ceil() as u64
 }
 
-// Channel ids.
+// Channel ids for the *no-VSR* baseline machine (the VSR graphs get
+// their channels from the compiled program's memory map).
 const CH_M: usize = 16;
 const CH_AP: usize = 17;
 const CH_AP2: usize = 18;
 const CH_P: usize = 19;
-const CH_P2: usize = 20;
 const CH_X: usize = 21;
-const CH_X2: usize = 22;
 const CH_R: usize = 23;
-const CH_R2: usize = 24;
 const TOTAL_CH: usize = 32;
-
-/// Second channel of a pair under the §5.7 ping-pong, or the same
-/// channel when the build is single-channel.
-fn wr_ch(cfg: &AccelSimConfig, rd: usize, pair: usize) -> usize {
-    match cfg.hbm.vector_mode {
-        ChannelMode::Double => pair,
-        ChannelMode::Single => rd,
-    }
-}
 
 const FIFO_DEPTH: usize = 64; // default stream FIFO depth
 const LIMIT: u64 = 500_000_000;
 
-/// Phase-1 with VSR: M1 (SpMV) streams ap into a fork feeding both M2
-/// (dot-alpha) and the ap write-back; p read twice (M1, then M2).
-fn phase1_vsr(cfg: &AccelSimConfig, n: usize, nnz: usize) -> u64 {
-    let nb = beats(n);
+/// One VSR iteration: the three Fig. 5 phase graphs, each derived from
+/// the compiled instruction program (same steps as the value plane).
+fn iteration_vsr(cfg: &AccelSimConfig, n: usize, nnz: usize) -> IterationBreakdown {
+    let program = Program::compile(n as u32, cfg.hbm.vector_mode);
     let busy = spmv_busy_cycles(nnz, cfg.scheme, cfg.nnz_padding);
-    let mut df = Dataflow::new(TOTAL_CH);
-    let p1 = df.fifo(FIFO_DEPTH);
-    let ap_raw = df.fifo(FIFO_DEPTH);
-    let ap_dot = df.fifo(FIFO_DEPTH);
-    let ap_wr = df.fifo(FIFO_DEPTH);
-    let p2 = df.fifo(FIFO_DEPTH);
-    df.mem_read("rd_p_m1", CH_P, nb, p1);
-    df.spmv("M1", p1, nb, busy, nb, ap_raw);
-    // VecCtrl-ap forks the stream: one copy to M2, one to memory.
-    df.pipe("fork_ap", vec![ap_raw], vec![(0, ap_dot), (0, ap_wr)], 1, nb);
-    df.mem_read("rd_p_m2", CH_P2, nb, p2);
-    df.dot("M2", vec![p2, ap_dot], nb, DOT_TAIL);
-    df.mem_write("wr_ap", wr_ch(cfg, CH_AP, CH_AP2), nb, ap_wr);
-    run_phase(df)
-}
-
-/// Phase-2 with VSR: the consume-and-send chain M4 -> M5 -> M6 -> M8 on
-/// one memory read of r; M5's z FIFO is deep (L+1) per §5.6.
-fn phase2_vsr(_cfg: &AccelSimConfig, n: usize) -> u64 {
-    let nb = beats(n);
-    let mut df = Dataflow::new(TOTAL_CH);
-    let r_in = df.fifo(FIFO_DEPTH);
-    let ap_in = df.fifo(FIFO_DEPTH);
-    let m_in = df.fifo(FIFO_DEPTH);
-    let r_m4 = df.fifo(FIFO_DEPTH);
-    let r_m5 = df.fifo(M5_DEPTH + 1); // fast FIFO, Fig. 7(b)
-    let z_m5 = df.fifo(FIFO_DEPTH);
-    let r_m6 = df.fifo(FIFO_DEPTH);
-    df.mem_read("rd_r", CH_R, nb, r_in);
-    df.mem_read("rd_ap", CH_AP, nb, ap_in);
-    df.mem_read("rd_m", CH_M, nb, m_in);
-    // M4: r' = r - alpha*ap, forwards r' (depth ~ FP mul-add pipe).
-    df.pipe("M4", vec![r_in, ap_in], vec![(7, r_m4)], 8, nb);
-    // M5: consume-and-send r' fast, z after the divide pipeline.
-    df.pipe("M5", vec![r_m4, m_in], vec![(0, r_m5), (M5_DEPTH - 1, z_m5)], M5_DEPTH, nb);
-    // M6: dot rz, forwarding r to M8 (tail folded into M8's).
-    df.pipe("M6", vec![r_m5, z_m5], vec![(4, r_m6)], 5, nb);
-    df.dot("M8", vec![r_m6], nb, DOT_TAIL);
-    run_phase(df)
-}
-
-/// Phase-3 with VSR: M4+M5 recompute z (r, ap, M re-read), M7 updates p
-/// (streamed on to M3 and memory), M3 updates x.
-fn phase3_vsr(cfg: &AccelSimConfig, n: usize) -> u64 {
-    let nb = beats(n);
-    let mut df = Dataflow::new(TOTAL_CH);
-    let r_in = df.fifo(FIFO_DEPTH);
-    let ap_in = df.fifo(FIFO_DEPTH);
-    let m_in = df.fifo(FIFO_DEPTH);
-    let p_in = df.fifo(FIFO_DEPTH);
-    let x_in = df.fifo(FIFO_DEPTH);
-    let r_m4 = df.fifo(FIFO_DEPTH);
-    let r_wr = df.fifo(M5_DEPTH + 1);
-    let z_m5 = df.fifo(FIFO_DEPTH);
-    let p_fork_in = df.fifo(FIFO_DEPTH);
-    let p_m3 = df.fifo(FIFO_DEPTH);
-    let p_wr = df.fifo(FIFO_DEPTH);
-    let x_wr = df.fifo(FIFO_DEPTH);
-    df.mem_read("rd_r", CH_R, nb, r_in);
-    df.mem_read("rd_ap", CH_AP, nb, ap_in);
-    df.mem_read("rd_m", CH_M, nb, m_in);
-    df.mem_read("rd_p", CH_P, nb, p_in);
-    df.mem_read("rd_x", CH_X, nb, x_in);
-    df.pipe("M4", vec![r_in, ap_in], vec![(7, r_m4)], 8, nb);
-    // M5 recompute: r forwarded to memory write, z into M7.
-    df.pipe("M5", vec![r_m4, m_in], vec![(0, r_wr), (M5_DEPTH - 1, z_m5)], M5_DEPTH, nb);
-    df.mem_write("wr_r", wr_ch(cfg, CH_R, CH_R2), nb, r_wr);
-    // M7: p' = z + beta p; forks to M3 and memory.
-    df.pipe("M7", vec![z_m5, p_in], vec![(7, p_fork_in)], 8, nb);
-    df.pipe("fork_p", vec![p_fork_in], vec![(0, p_m3), (0, p_wr)], 1, nb);
-    df.mem_write("wr_p", wr_ch(cfg, CH_P, CH_P2), nb, p_wr);
-    // M3: x' = x + alpha p_old ... the stream M7 forwards carries the
-    // old-p lane alongside; modelled as consuming the forked stream.
-    df.pipe("M3", vec![x_in, p_m3], vec![(7, x_wr)], 8, nb);
-    df.mem_write("wr_x", wr_ch(cfg, CH_X, CH_X2), nb, x_wr);
-    run_phase(df)
+    let cycles = |p: Phase| run_phase(Dataflow::from_program(program.phase(p), busy));
+    let p1 = cycles(Phase::Phase1) + PHASE_OVERHEAD;
+    let p2 = cycles(Phase::Phase2) + PHASE_OVERHEAD;
+    let p3 = cycles(Phase::Phase3) + PHASE_OVERHEAD;
+    IterationBreakdown { phase1: p1, phase2: p2, phase3: p3, total: p1 + p2 + p3 }
 }
 
 /// Without VSR (§5.5 baseline): every module is its own memory-to-memory
@@ -294,10 +219,7 @@ fn run_phase(mut df: Dataflow) -> u64 {
 /// Cycles for one JPCG iteration under a configuration.
 pub fn iteration_cycles(cfg: &AccelSimConfig, n: usize, nnz: usize) -> IterationBreakdown {
     if cfg.vsr {
-        let p1 = phase1_vsr(cfg, n, nnz) + PHASE_OVERHEAD;
-        let p2 = phase2_vsr(cfg, n) + PHASE_OVERHEAD;
-        let p3 = phase3_vsr(cfg, n) + PHASE_OVERHEAD;
-        IterationBreakdown { phase1: p1, phase2: p2, phase3: p3, total: p1 + p2 + p3 }
+        iteration_vsr(cfg, n, nnz)
     } else {
         let mut b = iteration_no_vsr(cfg, n, nnz);
         b.phase1 += PHASE_OVERHEAD;
@@ -342,6 +264,7 @@ pub fn gpu_solver_seconds(n: usize, nnz: usize, iters: u32) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::hbm::ChannelMode;
 
     const N: usize = 16_384;
     const NNZ: usize = 320_000;
@@ -416,5 +339,143 @@ mod tests {
         let t1 = solver_seconds(&cfg, N, NNZ, 100);
         let t2 = solver_seconds(&cfg, N, NNZ, 200);
         assert!((t2 / t1 - 2.0).abs() < 0.02);
+    }
+
+    // ------------------------------------------------------------------
+    // Program-derived graphs vs hand-built equivalents.  The hand
+    // graphs below replicate the compiled Fig. 5 topologies (channels,
+    // FIFO depths, canonical node order) with raw Dataflow primitives;
+    // cycle counts must match exactly — this pins `from_program`'s
+    // wiring as a contract.
+    // ------------------------------------------------------------------
+
+    fn run(mut df: Dataflow) -> (u64, Vec<Option<u64>>) {
+        let stats = df.run(LIMIT).unwrap();
+        (stats.cycles, stats.node_done_at)
+    }
+
+    fn hand_phase1(nb: u64, busy: u64) -> Dataflow {
+        let mut df = Dataflow::new(TOTAL_CH);
+        let ap_fork_in = df.fifo(FIFO_DEPTH);
+        let ap_m2 = df.fifo(FIFO_DEPTH);
+        let ap_wr = df.fifo(FIFO_DEPTH);
+        let p_m1 = df.fifo(FIFO_DEPTH);
+        df.mem_read("rd_p@M1", 19, nb, p_m1);
+        df.spmv("M1", p_m1, nb, busy, nb, ap_fork_in);
+        df.pipe("fork_ap", vec![ap_fork_in], vec![(0, ap_m2), (0, ap_wr)], 1, nb);
+        let p_m2 = df.fifo(FIFO_DEPTH);
+        df.mem_read("rd_p@M2", 20, nb, p_m2);
+        df.dot("M2", vec![p_m2, ap_m2], nb, DOT_TAIL);
+        df.mem_write("wr_ap", 18, nb, ap_wr);
+        df
+    }
+
+    fn hand_phase2(nb: u64) -> Dataflow {
+        let mut df = Dataflow::new(TOTAL_CH);
+        // Pass-1 FIFOs in comp order M4, M8, M5, M6.
+        let r_m4_m5 = df.fifo(FIFO_DEPTH);
+        let z_m5_m6 = df.fifo(FIFO_DEPTH);
+        let r_m5_m6 = df.fifo(M5_DEPTH + 1); // fast FIFO, Fig. 7(b)
+        let r_m6_m8 = df.fifo(FIFO_DEPTH);
+        // Pass-2 nodes: reads precede their consumer; M8 hoisted.
+        let r_in = df.fifo(FIFO_DEPTH);
+        df.mem_read("rd_r@M4", 23, nb, r_in);
+        let ap_in = df.fifo(FIFO_DEPTH);
+        df.mem_read("rd_ap@M4", 17, nb, ap_in);
+        df.pipe("M4", vec![r_in, ap_in], vec![(7, r_m4_m5)], 8, nb);
+        df.dot("M8", vec![r_m6_m8], nb, DOT_TAIL);
+        let m_in = df.fifo(FIFO_DEPTH);
+        df.mem_read("rd_M@M5", 16, nb, m_in);
+        df.pipe(
+            "M5",
+            vec![m_in, r_m4_m5],
+            vec![(M5_DEPTH - 1, z_m5_m6), (0, r_m5_m6)],
+            M5_DEPTH,
+            nb,
+        );
+        df.pipe("M6", vec![r_m5_m6, z_m5_m6], vec![(4, r_m6_m8)], 5, nb);
+        df
+    }
+
+    fn hand_phase3(nb: u64) -> Dataflow {
+        let mut df = Dataflow::new(TOTAL_CH);
+        // Pass-1 FIFOs in comp order M4, M5, M7, M3.
+        let r_m4_m5 = df.fifo(FIFO_DEPTH);
+        let z_m5_m7 = df.fifo(FIFO_DEPTH);
+        let r_m5_wr = df.fifo(M5_DEPTH + 1);
+        let p_fork_in = df.fifo(FIFO_DEPTH);
+        let p_m3 = df.fifo(FIFO_DEPTH);
+        let p_wr = df.fifo(FIFO_DEPTH);
+        let x_wr = df.fifo(FIFO_DEPTH);
+        // Pass-2 nodes.
+        let r_in = df.fifo(FIFO_DEPTH);
+        df.mem_read("rd_r@M4", 23, nb, r_in);
+        let ap_in = df.fifo(FIFO_DEPTH);
+        df.mem_read("rd_ap@M4", 17, nb, ap_in);
+        df.pipe("M4", vec![r_in, ap_in], vec![(7, r_m4_m5)], 8, nb);
+        let m_in = df.fifo(FIFO_DEPTH);
+        df.mem_read("rd_M@M5", 16, nb, m_in);
+        df.pipe(
+            "M5",
+            vec![m_in, r_m4_m5],
+            vec![(M5_DEPTH - 1, z_m5_m7), (0, r_m5_wr)],
+            M5_DEPTH,
+            nb,
+        );
+        let p_in = df.fifo(FIFO_DEPTH);
+        df.mem_read("rd_p@M7", 19, nb, p_in);
+        df.pipe("M7", vec![z_m5_m7, p_in], vec![(7, p_fork_in)], 8, nb);
+        df.pipe("fork_p", vec![p_fork_in], vec![(0, p_m3), (0, p_wr)], 1, nb);
+        let x_in = df.fifo(FIFO_DEPTH);
+        df.mem_read("rd_x@M3", 21, nb, x_in);
+        df.pipe("M3", vec![x_in, p_m3], vec![(7, x_wr)], 8, nb);
+        // Writes last, in vector-control order (p, r, x).
+        df.mem_write("wr_p", 20, nb, p_wr);
+        df.mem_write("wr_r", 24, nb, r_m5_wr);
+        df.mem_write("wr_x", 22, nb, x_wr);
+        df
+    }
+
+    #[test]
+    fn from_program_matches_hand_built_graphs() {
+        let n = 16_384usize;
+        let nb = beats(n);
+        let busy = spmv_busy_cycles(320_000, Scheme::MixV3, 1.06);
+        let program = Program::compile(n as u32, ChannelMode::Double);
+        for (phase, hand) in [
+            (Phase::Phase1, hand_phase1(nb, busy)),
+            (Phase::Phase2, hand_phase2(nb)),
+            (Phase::Phase3, hand_phase3(nb)),
+        ] {
+            let derived = Dataflow::from_program(program.phase(phase), busy);
+            let (dc, dd) = run(derived);
+            let (hc, hd) = run(hand);
+            assert_eq!(dc, hc, "{phase:?} cycle count drifted from hand-built graph");
+            assert_eq!(dd, hd, "{phase:?} per-node completion drifted");
+        }
+    }
+
+    #[test]
+    fn from_program_respects_channel_mode() {
+        // Single-channel builds turn the read channel around for the
+        // write-back; the phase-3 r/p/x round trips serialize and the
+        // phase gets slower (§5.7's motivation).
+        let program_d = Program::compile(N as u32, ChannelMode::Double);
+        let program_s = Program::compile(N as u32, ChannelMode::Single);
+        let p3d = run_phase(Dataflow::from_program(program_d.phase(Phase::Phase3), 0));
+        let p3s = run_phase(Dataflow::from_program(program_s.phase(Phase::Phase3), 0));
+        assert!(p3s > p3d, "single={p3s} double={p3d}");
+    }
+
+    #[test]
+    fn init_and_exit_trips_simulate_cleanly() {
+        // The merged-init and converged-exit trips are programs too —
+        // their graphs must complete without deadlock.
+        let program = Program::compile(N as u32, ChannelMode::Double);
+        let busy = spmv_busy_cycles(NNZ, Scheme::MixV3, 1.06);
+        let init = run_phase(Dataflow::from_program(&program.init, busy));
+        assert!(init > 0);
+        let exit = run_phase(Dataflow::from_program(&program.exit, 0));
+        assert!(exit > 0);
     }
 }

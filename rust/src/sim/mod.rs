@@ -4,9 +4,14 @@
 //! [`dataflow`] is a token-level FIFO/pipeline engine with the exact
 //! stall semantics of an HLS dataflow design — a write to a full FIFO
 //! freezes the whole pipeline, which is what makes the Fig. 7 deadlock
-//! reproducible (and the §5.6 depth rule checkable).  [`iteration`]
-//! builds the Fig. 5 per-phase graphs on top of it and produces
-//! cycles-per-iteration for each accelerator configuration.
+//! reproducible (and the §5.6 depth rule checkable).
+//! [`Dataflow::from_program`] derives a phase graph from one trip of
+//! the compiled instruction program (`crate::program`) — the same
+//! Type-I/II/III steps the value plane executes — and [`iteration`]
+//! runs those graphs to produce cycles-per-iteration for each
+//! accelerator configuration (the no-VSR baseline keeps hand-built
+//! per-module passes: it models the machine *without* the ISA
+//! schedule).
 
 pub mod dataflow;
 pub mod iteration;

@@ -181,6 +181,34 @@ pub fn can_vsr(
     }
 }
 
+/// Legality of one *compiled* reuse edge (`crate::program`), given which
+/// controller scalars are already bound when the trip starts.  This is
+/// §5.2 mechanized for a schedule rather than for a module pair in
+/// isolation: [`can_vsr`]'s raw verdict is waived when
+///
+/// * the blocking scalar is bound before the phase begins — the Fig. 5
+///   phase split exists precisely to create these bindings (beta is
+///   known by Phase-3 because M6 ran in Phase-2; the merged-init trip
+///   pre-binds alpha = 1 and beta = 0), or
+/// * the forwarded vector is the producer's own *output* — rule 2
+///   (full consumption) only forbids forwarding such a producer's
+///   input stream onward (p through M1), never the stream it emits
+///   (ap out of M1).
+pub fn edge_legal(
+    producer: Module,
+    consumer: Module,
+    vector: Vector,
+    fifo_budget: usize,
+    skew: usize,
+    bound_scalars: &[&str],
+) -> Result<(), VsrBlock> {
+    match can_vsr(producer, consumer, fifo_budget, skew) {
+        Err(VsrBlock::ScalarDependency { scalar }) if bound_scalars.contains(&scalar) => Ok(()),
+        Err(VsrBlock::FullConsumption) if producer.io().produces.contains(&vector) => Ok(()),
+        other => other,
+    }
+}
+
 /// Phase assignment of Fig. 5.
 pub fn phase_of(m: Module) -> Vec<Phase> {
     use Module::*;
@@ -350,6 +378,21 @@ mod tests {
         assert!(can_vsr(Module::M4, Module::M7, 64, 1).is_ok());
         // Phase-3 p reuse M7 -> M3.
         assert!(can_vsr(Module::M7, Module::M3, 64, 1).is_ok());
+    }
+
+    #[test]
+    fn edge_legal_waives_bound_scalars_and_output_forwarding() {
+        // ap out of M1 into M2 is the stream M1 *produces*: legal even
+        // though forwarding p through M1 is not.
+        assert!(edge_legal(Module::M1, Module::M2, Vector::Ap, 64, 0, &[]).is_ok());
+        // z M5 -> M7 is illegal while beta is unbound...
+        assert!(edge_legal(Module::M5, Module::M7, Vector::Z, 64, 0, &[]).is_err());
+        // ...and legal in Phase-3, where beta was bound in Phase-2.
+        assert!(edge_legal(Module::M5, Module::M7, Vector::Z, 64, 0, &["alpha", "beta"]).is_ok());
+        // Binding scalars never waives a FIFO overflow.
+        assert!(edge_legal(Module::M4, Module::M5, Vector::R, 8, 16, &["alpha", "beta"]).is_err());
+        // Forwarding p *through* M1 stays illegal: p is M1's input.
+        assert!(edge_legal(Module::M1, Module::M2, Vector::P, 64, 0, &["alpha", "beta"]).is_err());
     }
 
     #[test]

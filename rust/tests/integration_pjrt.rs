@@ -6,9 +6,15 @@
 //! The whole file is gated on the `pjrt` feature: without it the crate
 //! has no `runtime` module (and no `xla` dependency), so offline
 //! `cargo test` never touches libxla_extension.
+//!
+//! The native reference values are computed straight from the module
+//! implementations (`modules::compute`) + the prepared-matrix plan —
+//! the same operations the instruction interpreter dispatches.
 #![cfg(feature = "pjrt")]
 
-use callipepla::coordinator::{Coordinator, CoordinatorConfig, NativeExecutor, PhaseExecutor};
+use callipepla::coordinator::{Coordinator, CoordinatorConfig, PhaseExecutor};
+use callipepla::engine::PreparedMatrix;
+use callipepla::modules::compute::{AxpyModule, DotModule, LeftDivideModule, UpdatePModule};
 use callipepla::precision::Scheme;
 use callipepla::runtime::{default_artifact_dir, PjrtExecutor, PjrtRuntime};
 use callipepla::solver::{jpcg_solve, SolveOptions};
@@ -29,10 +35,12 @@ fn pjrt_phase1_matches_native_numerics() {
     let Some(mut rt) = runtime_or_skip() else { return };
     let a = synth::banded_spd(900, 8_000, 1e-3, 17);
     let mut exec = PjrtExecutor::new(&mut rt, &a, Scheme::MixV3).unwrap();
-    let mut native = NativeExecutor::new(&a, Scheme::MixV3);
+    let prep = PreparedMatrix::new(&a, 1);
     let p: Vec<f64> = (0..a.n).map(|i| ((i * 31) % 101) as f64 / 101.0 - 0.5).collect();
     let (ap_p, pap_p) = exec.phase1(&p);
-    let (ap_n, pap_n) = native.phase1(&p);
+    let mut ap_n = vec![0.0; a.n];
+    prep.spmv(Scheme::MixV3, &p, &mut ap_n);
+    let pap_n = DotModule.run(&p, &ap_n);
     for i in 0..a.n {
         assert!(
             (ap_p[i] - ap_n[i]).abs() <= 1e-9 * ap_n[i].abs().max(1.0),
@@ -49,12 +57,18 @@ fn pjrt_phase2_and_phase3_match_native() {
     let Some(mut rt) = runtime_or_skip() else { return };
     let a = synth::laplace2d_shifted(1_000, 0.05);
     let mut exec = PjrtExecutor::new(&mut rt, &a, Scheme::MixV3).unwrap();
-    let mut native = NativeExecutor::new(&a, Scheme::MixV3);
+    let prep = PreparedMatrix::new(&a, 1);
     let n = a.n;
     let r: Vec<f64> = (0..n).map(|i| ((i * 13) % 37) as f64 / 37.0 - 0.5).collect();
     let ap: Vec<f64> = (0..n).map(|i| ((i * 7) % 23) as f64 / 23.0 - 0.5).collect();
     let (r1p, rzp, rrp) = exec.phase2(&r, &ap, 0.37);
-    let (r1n, rzn, rrn) = native.phase2(&r, &ap, 0.37);
+    // Native: M4 axpy, M5 left-divide, M6/M8 dots.
+    let mut r1n = r.clone();
+    AxpyModule.run(-0.37, &ap, &mut r1n);
+    let mut zn = vec![0.0; n];
+    LeftDivideModule.run(&r1n, prep.diag(), &mut zn);
+    let rzn = DotModule.run(&r1n, &zn);
+    let rrn = DotModule.run(&r1n, &r1n);
     for i in 0..n {
         assert!((r1p[i] - r1n[i]).abs() <= 1e-12 * r1n[i].abs().max(1.0));
     }
@@ -64,7 +78,13 @@ fn pjrt_phase2_and_phase3_match_native() {
     let p: Vec<f64> = (0..n).map(|i| (i as f64 * 0.01).sin()).collect();
     let x = vec![0.25; n];
     let (p1p, x1p) = exec.phase3(&r, &p, &x, 0.3, 0.9);
-    let (p1n, x1n) = native.phase3(&r, &p, &x, 0.3, 0.9);
+    // Native: M5 recompute z from r, M3 axpy on old p, M7 update p.
+    let mut z3 = vec![0.0; n];
+    LeftDivideModule.run(&r, prep.diag(), &mut z3);
+    let mut x1n = x.clone();
+    AxpyModule.run(0.3, &p, &mut x1n);
+    let mut p1n = p.clone();
+    UpdatePModule.run(0.9, &z3, &mut p1n);
     for i in 0..n {
         assert!((p1p[i] - p1n[i]).abs() <= 1e-12 * p1n[i].abs().max(1.0));
         assert!((x1p[i] - x1n[i]).abs() <= 1e-12 * x1n[i].abs().max(1.0));

@@ -1,0 +1,132 @@
+//! The instruction-program oracle: the compiled-ISA execution path must
+//! be **bitwise identical** to the monolithic reference solver
+//! (`jpcg_solve`), and the compiled program itself must satisfy the
+//! paper's §5 schedule invariants.
+
+use callipepla::coordinator::{Coordinator, CoordinatorConfig, NativeExecutor};
+use callipepla::hbm::ChannelMode;
+use callipepla::precision::{AccumulatorModel, Scheme};
+use callipepla::program::Program;
+use callipepla::solver::{jpcg_solve, DotKind, SolveOptions};
+use callipepla::sparse::synth;
+use callipepla::vsr::{accesses_with_vsr, count_accesses, edge_legal};
+
+/// Options matching the instruction path's hardware models: delay-buffer
+/// dots + (benign) out-of-order accumulation; the SpMV is the serial
+/// gather the engine kernels reproduce bitwise at any thread count.
+fn oracle_opts(scheme: Scheme) -> SolveOptions {
+    SolveOptions {
+        scheme,
+        dot: DotKind::DelayBuffer,
+        accumulator: AccumulatorModel::OutOfOrder,
+        ..SolveOptions::default()
+    }
+}
+
+#[test]
+fn instruction_driven_solve_is_bitwise_identical_to_jpcg() {
+    for &(n, nnz, delta, seed) in
+        &[(1_500usize, 12_000usize, 1e-4, 21u64), (900, 7_200, 1e-3, 23)]
+    {
+        let a = synth::banded_spd(n, nnz, delta, seed);
+        for scheme in [Scheme::Fp64, Scheme::MixV3] {
+            let reference = jpcg_solve(&a, None, None, &oracle_opts(scheme));
+            assert!(reference.converged, "reference must converge (n={n}, {scheme:?})");
+            for threads in [1usize, 8] {
+                let mut coord = Coordinator::new(CoordinatorConfig {
+                    record_instructions: true,
+                    ..Default::default()
+                });
+                let mut exec = NativeExecutor::with_threads(&a, scheme, threads);
+                let b = vec![1.0; a.n];
+                let x0 = vec![0.0; a.n];
+                let res = coord.solve(&mut exec, &b, &x0);
+                assert_eq!(
+                    res.iters, reference.iters,
+                    "iteration count drifted ({scheme:?}, {threads} threads)"
+                );
+                assert_eq!(
+                    res.final_rr.to_bits(),
+                    reference.final_rr.to_bits(),
+                    "final rr drifted ({scheme:?}, {threads} threads)"
+                );
+                assert!(
+                    res.x.iter().zip(&reference.x).all(|(u, v)| u.to_bits() == v.to_bits()),
+                    "solution bits drifted ({scheme:?}, {threads} threads)"
+                );
+                // The residual trace is the same run, bit for bit.
+                assert_eq!(res.trace.values().len(), reference.trace.values().len());
+            }
+        }
+    }
+}
+
+#[test]
+fn warm_start_and_nonuniform_rhs_stay_bitwise() {
+    // The oracle must hold for arbitrary b / x0, not just the paper's
+    // ones/zeros setup — this exercises the init trip's b preload and
+    // the x0 SpMV.
+    let a = synth::banded_spd(1_100, 8_800, 1e-3, 77);
+    let b: Vec<f64> = (0..a.n).map(|i| 0.5 + ((i * 29) % 13) as f64 / 13.0).collect();
+    let x0: Vec<f64> = (0..a.n).map(|i| ((i * 7) % 5) as f64 / 50.0).collect();
+    let scheme = Scheme::MixV3;
+    let reference = jpcg_solve(&a, Some(&b), Some(&x0), &oracle_opts(scheme));
+    let mut coord = Coordinator::new(CoordinatorConfig::default());
+    let mut exec = NativeExecutor::with_threads(&a, scheme, 8);
+    let res = coord.solve(&mut exec, &b, &x0);
+    assert_eq!(res.iters, reference.iters);
+    assert!(res.x.iter().zip(&reference.x).all(|(u, v)| u.to_bits() == v.to_bits()));
+}
+
+#[test]
+fn compiled_program_reuse_edges_all_pass_vsr() {
+    // Property sweep across sizes and channel modes: every reuse edge
+    // of every trip is legal under the §5.1/§5.2 rules with the trip's
+    // bound scalars.
+    for n in [8u32, 513, 10_000, 250_007] {
+        for mode in [ChannelMode::Double, ChannelMode::Single] {
+            let prog = Program::compile(n, mode);
+            for trip in prog.all_trips() {
+                for e in &trip.reuse_edges {
+                    edge_legal(
+                        e.producer,
+                        e.consumer,
+                        e.vector,
+                        e.fifo_depth,
+                        e.skew,
+                        trip.kind.bound_scalars(),
+                    )
+                    .unwrap_or_else(|b| {
+                        panic!("illegal edge {e:?} in {} (n={n}): {b:?}", trip.kind.label())
+                    });
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn compiled_accesses_match_section_5_5_counts() {
+    let prog = Program::compile(65_536, ChannelMode::Double);
+    let (mut reads, mut writes) = (0, 0);
+    for p in &prog.phases {
+        let (r, w) = p.access_counts();
+        reads += r;
+        writes += w;
+    }
+    assert_eq!((reads, writes), count_accesses(&accesses_with_vsr()), "10 reads + 4 writes");
+}
+
+#[test]
+fn no_two_live_vectors_overlap_in_any_channel() {
+    for mode in [ChannelMode::Double, ChannelMode::Single] {
+        let prog = Program::compile(1_437_960, mode);
+        prog.mem_map.check_no_overlap().unwrap();
+        // And every compiled address is non-zero (the old placeholder).
+        for trip in prog.all_trips() {
+            for s in &trip.vec_steps {
+                assert_ne!(s.vctrl.base_addr, 0, "placeholder base_addr in {}", trip.kind.label());
+            }
+        }
+    }
+}
