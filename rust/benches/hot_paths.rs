@@ -5,10 +5,14 @@
 //!   parallel kernels at 2 / 8 threads (f64 and Mix-V3)
 //! * stream-replay Mix-V3 SpMV, delay-buffer dot
 //! * 10 JPCG iterations — serial baseline vs the prepared-matrix plan
-//!   at 8 threads, plus an 8-RHS `solve_batch`
+//!   at 8 threads, plus an 8-RHS batch on both batch paths: the
+//!   worker-per-RHS model path (`solve_batch_workers`) and the batched
+//!   instruction program (`solve_batch` -> `Coordinator::solve_batch`,
+//!   the multi-RHS throughput row)
 //! * coordinator-path iterations (instruction issue + module dispatch)
 //! * time-plane: the fig9/ablation-style phase graph with busy-counter
-//!   fast-forwarding on vs off, and a full `iteration_cycles` call
+//!   fast-forwarding on vs off, a full `iteration_cycles` call, and the
+//!   8-lane batched iteration + its modeled RHS-iters/s throughput
 //! * one PJRT phase1 executable call (feature `pjrt`, artifacts built)
 //!
 //! `--json` additionally writes `BENCH_hot_paths.json` (median seconds
@@ -23,7 +27,10 @@ use callipepla::coordinator::PhaseExecutor;
 #[cfg(feature = "pjrt")]
 use callipepla::runtime::{default_artifact_dir, PjrtExecutor, PjrtRuntime};
 use callipepla::sim::dataflow::Dataflow;
-use callipepla::sim::iteration::{iteration_cycles, spmv_busy_cycles, AccelSimConfig};
+use callipepla::sim::iteration::{
+    batched_iteration_cycles, batched_rhs_iterations_per_second, iteration_cycles, spmv_busy_cycles,
+    AccelSimConfig,
+};
 use callipepla::solver::{jpcg_solve, SolveOptions};
 use callipepla::sparse::{pack_nnz_streams, synth, DEP_DIST_SERPENS};
 
@@ -133,19 +140,34 @@ fn main() {
     record(&mut recs, &r, None);
     println!("    => {} per iteration", human_time(r.median_s / 10.0));
 
-    // Batch API: 8 right-hand sides against one prepared matrix.
+    // Batch API: 8 right-hand sides against one prepared matrix, on the
+    // worker-per-RHS model path (the pre-batched-program baseline).
     let rhs: Vec<Vec<f64>> = (0..8)
         .map(|k| (0..a.n).map(|i| ((i + k * 37) % 11) as f64 / 11.0).collect())
         .collect();
     let r = bench("solve_batch_8rhs_t8_10_iters", 1, 3, || {
-        std::hint::black_box(prep8.solve_batch(&rhs, &opts));
+        std::hint::black_box(prep8.solve_batch_workers(&rhs, &opts));
     });
     record(&mut recs, &r, None);
     let prep1 = PreparedMatrix::new(&a, 1);
     let r = bench("solve_batch_8rhs_t1_10_iters", 1, 3, || {
-        std::hint::black_box(prep1.solve_batch(&rhs, &opts));
+        std::hint::black_box(prep1.solve_batch_workers(&rhs, &opts));
     });
     record(&mut recs, &r, None);
+
+    // Multi-RHS throughput of the batched *program* path: the same 8
+    // right-hand sides as one compiled instruction stream vectorized
+    // over the batch lanes (Coordinator::solve_batch + NativeExecutor;
+    // this is what PreparedMatrix::solve_batch now routes to for the
+    // shipping options).  RHS-iterations/s = 8 * 10 / median_s.
+    let r = bench("program_batch_8rhs_10_iters", 1, 3, || {
+        std::hint::black_box(prep8.solve_batch(&rhs, &opts));
+    });
+    record(&mut recs, &r, None);
+    println!(
+        "    => {:.1} rhs-iterations/s through the batched program",
+        8.0 * 10.0 / r.median_s
+    );
 
     // Coordinator-path iteration (instruction issue + module dispatch).
     let r = bench("coordinator_native_10_iters", 1, 5, || {
@@ -184,6 +206,20 @@ fn main() {
         std::hint::black_box(iteration_cycles(&cal, sim_n, sim_nnz));
     });
     record(&mut recs, &r, None);
+
+    // Time plane, multi-RHS: cycles for one 8-lane batched iteration and
+    // the modeled RHS-iteration throughput it implies.
+    let r = bench("sim_batched_iteration_cycles_b8", 1, 5, || {
+        std::hint::black_box(batched_iteration_cycles(&cal, sim_n, sim_nnz, 8));
+    });
+    record(&mut recs, &r, None);
+    let thr1 = batched_rhs_iterations_per_second(&cal, sim_n, sim_nnz, 1);
+    let thr8 = batched_rhs_iterations_per_second(&cal, sim_n, sim_nnz, 8);
+    println!(
+        "    => modeled throughput: {thr8:.0} rhs-iters/s at batch 8 vs {thr1:.0} at batch 1 \
+         ({:.2}x)",
+        thr8 / thr1
+    );
 
     // PJRT phase call, when the feature and artifacts exist.
     #[cfg(feature = "pjrt")]

@@ -13,15 +13,21 @@ use crate::sparse::CsrMatrix;
 /// The four evaluated accelerators/platforms (Table 2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Accel {
+    /// The Vitis-library CG solver FPGA baseline.
     XcgSolver,
+    /// Serpens SpMV + CG assembled as a solver.
     SerpensCG,
+    /// The paper's accelerator.
     Callipepla,
+    /// NVIDIA A100 (cuSPARSE/cuBLAS analytic model).
     A100,
 }
 
 impl Accel {
+    /// Every evaluated platform, in Table-2 order.
     pub const ALL: [Accel; 4] = [Accel::XcgSolver, Accel::SerpensCG, Accel::Callipepla, Accel::A100];
 
+    /// Display name (table headers).
     pub fn name(self) -> &'static str {
         match self {
             Accel::XcgSolver => "XcgSolver",
@@ -117,24 +123,38 @@ impl Accel {
 /// Table 2 specification record.
 #[derive(Debug, Clone, Copy)]
 pub struct PlatformSpec {
+    /// Process node in nm.
     pub process_nm: u32,
+    /// Achieved clock in Hz.
     pub freq_hz: f64,
+    /// Device memory in GiB.
     pub mem_gb: u32,
+    /// Achievable bandwidth in bytes/s.
     pub bandwidth_bps: f64,
+    /// Measured board/device power in W.
     pub power_w: f64,
+    /// Peak FP64 throughput in GFLOP/s.
     pub peak_gflops: f64,
 }
 
 /// One accelerator x matrix evaluation: value plane + time plane.
 #[derive(Debug, Clone)]
 pub struct EvalResult {
+    /// The platform evaluated.
     pub accel: Accel,
+    /// Value-plane iteration count.
     pub iters: u32,
+    /// Whether the solve converged within the cap.
     pub converged: bool,
+    /// OOM cell (Table 4 "FAIL").
     pub failed: bool,
+    /// Time-plane solver seconds.
     pub solver_seconds: f64,
+    /// FLOPs executed by the solve.
     pub flops: u64,
+    /// Throughput in GFLOP/s.
     pub gflops: f64,
+    /// Energy efficiency in GFLOP/J.
     pub gflops_per_joule: f64,
 }
 

@@ -6,24 +6,34 @@
 //! derived Callipepla totals are pinned to Table 6 by tests within a
 //! tolerance, which validates the per-module model.
 
-/// U280 totals (Alveo U280 data sheet).
+/// U280 LUT total (Alveo U280 data sheet).
 pub const U280_LUT: u64 = 1_303_680;
+/// U280 flip-flop total.
 pub const U280_FF: u64 = 2_607_360;
+/// U280 DSP-slice total.
 pub const U280_DSP: u64 = 9_024;
+/// U280 BRAM-36 total.
 pub const U280_BRAM: u64 = 2_016;
+/// U280 URAM total.
 pub const U280_URAM: u64 = 960;
 
 /// One module's resource cost.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Resources {
+    /// Look-up tables.
     pub lut: u64,
+    /// Flip-flops.
     pub ff: u64,
+    /// DSP slices.
     pub dsp: u64,
+    /// BRAM-36 blocks.
     pub bram: u64,
+    /// UltraRAM blocks.
     pub uram: u64,
 }
 
 impl Resources {
+    /// Component-wise sum.
     pub fn add(self, o: Resources) -> Resources {
         Resources {
             lut: self.lut + o.lut,
@@ -34,6 +44,7 @@ impl Resources {
         }
     }
 
+    /// Component-wise multiply (k instances of a module).
     pub fn scale(self, k: u64) -> Resources {
         Resources {
             lut: self.lut * k,

@@ -12,11 +12,15 @@ use crate::sparse::{suite36, CsrMatrix, MatrixSpec};
 
 /// One matrix's evaluation across all four accelerators.
 pub struct MatrixEval {
+    /// The Table-3 row evaluated.
     pub spec: MatrixSpec,
+    /// Generated dimension (after scaling).
     pub n: usize,
+    /// Generated nnz (after scaling).
     pub nnz: usize,
     /// CPU FP64 golden iteration count (Table 7 reference row).
     pub cpu_iters: u32,
+    /// One [`EvalResult`] per accelerator, in [`Accel::ALL`] order.
     pub results: Vec<EvalResult>,
 }
 
@@ -85,6 +89,7 @@ fn by_accel<'e>(e: &'e MatrixEval, a: Accel) -> &'e EvalResult {
 
 // ------------------------------------------------------------------ T3
 
+/// Table 3: the benchmark-suite listing (id, stand-in name, n, nnz).
 pub fn print_table3() -> String {
     let mut out = String::from(
         "Table 3: evaluated matrices (synthetic stand-ins; paper dims at scale=1.0)\n",
@@ -197,6 +202,7 @@ pub fn print_table5(evals: &[MatrixEval]) -> String {
 
 // ------------------------------------------------------------------ T6
 
+/// Table 6: FPGA resource utilization (derived + measured rows).
 pub fn print_table6() -> String {
     let mut out = String::from("Table 6: FPGA resource utilization on the U280\n");
     for name in ["XcgSolver", "SerpensCG", "Callipepla"] {

@@ -7,15 +7,22 @@ use std::time::Instant;
 /// Result of one benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark id.
     pub name: String,
+    /// Timed runs (after warmup).
     pub runs: usize,
+    /// Mean seconds per run.
     pub mean_s: f64,
+    /// Median seconds per run.
     pub median_s: f64,
+    /// Fastest run.
     pub min_s: f64,
+    /// Slowest run.
     pub max_s: f64,
 }
 
 impl BenchResult {
+    /// The stable one-line report the bench binaries print.
     pub fn report(&self) -> String {
         format!(
             "{:<44} {:>6} runs  mean {:>12}  median {:>12}  min {:>12}",

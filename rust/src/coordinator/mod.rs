@@ -29,7 +29,8 @@ use crate::hbm::ChannelMode;
 use crate::isa::InstTrace;
 use crate::precision::Scheme;
 use crate::program::{
-    DispatchReturn, InstDispatch, InstructionBus, Program, Scalars, ScalarRole, VectorFile,
+    DispatchReturn, HbmMemoryMap, InstDispatch, InstructionBus, Program, Scalars, ScalarRole,
+    VectorFile,
 };
 use crate::solver::ResidualTrace;
 use crate::sparse::CsrMatrix;
@@ -62,8 +63,11 @@ pub trait PhaseExecutor {
 /// Controller configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct CoordinatorConfig {
+    /// Convergence threshold tau on rr = |r|^2.
     pub tol: f64,
+    /// Iteration cap per right-hand side.
     pub max_iters: u32,
+    /// Record rr per iteration (Fig. 9 traces).
     pub record_trace: bool,
     /// Record every issued instruction (tests / time plane).
     pub record_instructions: bool,
@@ -86,11 +90,17 @@ impl Default for CoordinatorConfig {
 /// Outcome of a coordinated solve.
 #[derive(Debug)]
 pub struct CoordResult {
+    /// The solution iterate.
     pub x: Vec<f64>,
+    /// Main-loop iterations executed.
     pub iters: u32,
+    /// Whether rr reached the threshold.
     pub converged: bool,
+    /// Final rr = |r|^2.
     pub final_rr: f64,
+    /// rr per iteration, if recorded.
     pub trace: ResidualTrace,
+    /// Every instruction issued for this system, if recorded.
     pub instructions: InstTrace,
     /// Type-III write acknowledgements received (§4.2).
     pub mem_acks: usize,
@@ -98,10 +108,12 @@ pub struct CoordResult {
 
 /// The global controller.
 pub struct Coordinator {
+    /// Controller configuration.
     pub cfg: CoordinatorConfig,
 }
 
 impl Coordinator {
+    /// A controller with the given configuration.
     pub fn new(cfg: CoordinatorConfig) -> Self {
         Self { cfg }
     }
@@ -118,62 +130,223 @@ impl Coordinator {
     /// Run the Fig. 4 controller program to completion: compile once,
     /// then dispatch trips through the instruction bus, binding alpha /
     /// beta on the fly and deciding termination from the returned
-    /// scalars.
+    /// scalars.  Every solve is a batch of one: this is the lane-count-1
+    /// case of [`Coordinator::solve_batch`], so the batched program is
+    /// the one execution path.
     pub fn solve<D: InstDispatch>(&mut self, exec: &mut D, b: &[f64], x0: &[f64]) -> CoordResult {
-        use crate::vsr::Phase;
-        let n = b.len() as u32;
-        let program = Program::compile(n, self.cfg.channel_mode);
-        let mut bus = InstructionBus::new(self.cfg.record_instructions);
-        let mut mem = VectorFile::new(b, x0);
-        let mut trace = ResidualTrace::new(self.cfg.record_trace);
+        self.solve_batch(exec, &[b], Some(&[x0])).pop().expect("one lane in, one result out")
+    }
 
-        // Merged init, alpha = 1 / beta = 0 pre-bound (Fig. 4, rp = -1).
-        let ret = bus.dispatch(&program.init, Scalars { alpha: 1.0, beta: 0.0 }, exec, &mut mem);
-        let mut rz = Self::scalar(&ret, ScalarRole::Rz);
-        let mut rr = Self::scalar(&ret, ScalarRole::Rr);
-        trace.push(rr);
-
-        let mut iters = 0u32;
-        let mut converged = rr <= self.cfg.tol;
-        while iters < self.cfg.max_iters && !converged {
-            // Phase 1 -> pap -> alpha (scalar unit, line 8).
-            let r1 = bus.dispatch(program.phase(Phase::Phase1), Scalars::default(), exec, &mut mem);
-            let alpha = rz / Self::scalar(&r1, ScalarRole::Pap);
-            // Phase 2 (M8's rr checked immediately: Fig. 4 opt 2).
-            let r2 = bus.dispatch(
-                program.phase(Phase::Phase2),
-                Scalars { alpha, beta: 0.0 },
-                exec,
-                &mut mem,
-            );
-            rr = Self::scalar(&r2, ScalarRole::Rr);
-            let rz_new = Self::scalar(&r2, ScalarRole::Rz);
-            if rr <= self.cfg.tol {
-                // Converged: skip M5-M7, dispatch the exit trip (M3
-                // alone finishes x).
-                bus.dispatch(&program.exit, Scalars { alpha, beta: 0.0 }, exec, &mut mem);
-                iters += 1;
-                trace.push(rr);
-                converged = true;
-                break;
+    /// Solve many right-hand sides through **one compiled instruction
+    /// stream**: the trips are vectorized over the batch lanes
+    /// (trip-major, lane-minor issue order), each lane's scalar slots
+    /// (alpha, beta, rz, rr) are bound at issue time, and a lane whose
+    /// hoisted M8 reports rr <= tau dispatches its converged-exit trip
+    /// and stops issuing — individual systems terminate on the fly
+    /// (the paper's §2.3.1 capability, at batch granularity) without
+    /// stalling or perturbing the rest of the batch.
+    ///
+    /// `x0` supplies per-lane starts (`None` = all zeros).  Batches
+    /// larger than [`HbmMemoryMap::max_batch`] lanes are transparently
+    /// processed in channel-window-sized chunks.  Results come back in
+    /// input order, each bitwise identical to a lone
+    /// [`Coordinator::solve`] on the same system.
+    ///
+    /// ```
+    /// use callipepla::coordinator::{Coordinator, CoordinatorConfig, NativeExecutor};
+    /// use callipepla::precision::Scheme;
+    /// use callipepla::sparse::synth;
+    ///
+    /// let a = synth::laplace2d_shifted(100, 0.2);
+    /// let mut coord = Coordinator::new(CoordinatorConfig::default());
+    /// let mut exec = NativeExecutor::new(&a, Scheme::MixV3);
+    /// let b0 = vec![1.0; a.n];
+    /// let b1 = vec![2.0; a.n];
+    /// let results = coord.solve_batch(&mut exec, &[b0.as_slice(), b1.as_slice()], None);
+    /// assert!(results.iter().all(|r| r.converged));
+    /// ```
+    pub fn solve_batch<D: InstDispatch>(
+        &mut self,
+        exec: &mut D,
+        rhs: &[&[f64]],
+        x0: Option<&[&[f64]]>,
+    ) -> Vec<CoordResult> {
+        if rhs.is_empty() {
+            return Vec::new();
+        }
+        let n = rhs[0].len();
+        for b in rhs {
+            assert_eq!(b.len(), n, "every batch lane must share the vector length");
+        }
+        if let Some(x0s) = x0 {
+            assert_eq!(x0s.len(), rhs.len(), "one x0 per right-hand side");
+            for x in x0s {
+                assert_eq!(x.len(), n, "x0 length must match the right-hand side");
             }
-            // Phase 3 with beta bound (scalar unit, line 13 coefficient).
-            let beta = rz_new / rz;
-            bus.dispatch(program.phase(Phase::Phase3), Scalars { alpha, beta }, exec, &mut mem);
-            rz = rz_new;
-            iters += 1;
-            trace.push(rr);
+        }
+        // Only materialized when lanes actually start from zero.
+        let zeros = if x0.is_none() { vec![0.0; n] } else { Vec::new() };
+        // cap == 0 means even one lane outgrows a channel window; let
+        // the single-lane compile raise the precise per-vector panic
+        // (same behavior as the pre-batch memory map).
+        let cap = (HbmMemoryMap::max_batch(n as u32) as usize).max(1);
+        let mut out = Vec::with_capacity(rhs.len());
+        let mut start = 0;
+        while start < rhs.len() {
+            let end = (start + cap).min(rhs.len());
+            let x0_chunk: Vec<&[f64]> = (start..end)
+                .map(|k| x0.map_or(zeros.as_slice(), |xs| xs[k]))
+                .collect();
+            out.extend(self.solve_chunk(exec, &rhs[start..end], &x0_chunk));
+            start = end;
+        }
+        out
+    }
+
+    /// One channel-window-sized chunk of [`Coordinator::solve_batch`]:
+    /// compile the batched program, then walk the Fig. 4 controller
+    /// schedule trip-major across the live lanes.
+    fn solve_chunk<D: InstDispatch>(
+        &mut self,
+        exec: &mut D,
+        rhs: &[&[f64]],
+        x0: &[&[f64]],
+    ) -> Vec<CoordResult> {
+        use crate::vsr::Phase;
+        let n = rhs[0].len() as u32;
+        let lanes = rhs.len() as u32;
+        let program = Program::compile_batched(n, self.cfg.channel_mode, lanes);
+
+        /// Per-lane controller state: its own bus (instruction trace +
+        /// write acks), value-plane vector file, and scalar slots.
+        struct LaneState {
+            bus: InstructionBus,
+            mem: VectorFile,
+            trace: ResidualTrace,
+            offset: u32,
+            rz: f64,
+            rr: f64,
+            iters: u32,
+            converged: bool,
+            /// Still issuing trips; a converged or iteration-capped
+            /// lane's slot is freed and never issues again.
+            live: bool,
         }
 
-        CoordResult {
-            x: std::mem::take(&mut mem.x),
-            iters,
-            converged,
-            final_rr: rr,
-            trace,
-            instructions: bus.take_trace(),
-            mem_acks: bus.acks().len(),
+        let mut lane_states: Vec<LaneState> = (0..lanes)
+            .map(|k| LaneState {
+                bus: InstructionBus::new(self.cfg.record_instructions),
+                mem: VectorFile::new(rhs[k as usize], x0[k as usize]),
+                trace: ResidualTrace::new(self.cfg.record_trace),
+                offset: program.lane_offset_beats(k),
+                rz: 0.0,
+                rr: 0.0,
+                iters: 0,
+                converged: false,
+                live: true,
+            })
+            .collect();
+
+        // Merged init for every lane, alpha = 1 / beta = 0 pre-bound
+        // (Fig. 4, rp = -1).
+        for lane in lane_states.iter_mut() {
+            let ret = lane.bus.dispatch_lane(
+                &program.init,
+                Scalars { alpha: 1.0, beta: 0.0 },
+                lane.offset,
+                exec,
+                &mut lane.mem,
+            );
+            lane.rz = Self::scalar(&ret, ScalarRole::Rz);
+            lane.rr = Self::scalar(&ret, ScalarRole::Rr);
+            lane.trace.push(lane.rr);
+            lane.converged = lane.rr <= self.cfg.tol;
+            lane.live = !lane.converged && self.cfg.max_iters > 0;
         }
+
+        let mut alphas = vec![0.0f64; lanes as usize];
+        let mut rz_news = vec![0.0f64; lanes as usize];
+        while lane_states.iter().any(|l| l.live) {
+            // Phase-1 trip across the live lanes -> per-lane pap ->
+            // alpha (scalar unit, line 8).
+            for (k, lane) in lane_states.iter_mut().enumerate() {
+                if !lane.live {
+                    continue;
+                }
+                let r1 = lane.bus.dispatch_lane(
+                    program.phase(Phase::Phase1),
+                    Scalars::default(),
+                    lane.offset,
+                    exec,
+                    &mut lane.mem,
+                );
+                alphas[k] = lane.rz / Self::scalar(&r1, ScalarRole::Pap);
+            }
+            // Phase-2 trip (each lane's hoisted M8 rr is checked
+            // immediately: Fig. 4 opt 2, per RHS).
+            for (k, lane) in lane_states.iter_mut().enumerate() {
+                if !lane.live {
+                    continue;
+                }
+                let r2 = lane.bus.dispatch_lane(
+                    program.phase(Phase::Phase2),
+                    Scalars { alpha: alphas[k], beta: 0.0 },
+                    lane.offset,
+                    exec,
+                    &mut lane.mem,
+                );
+                lane.rr = Self::scalar(&r2, ScalarRole::Rr);
+                rz_news[k] = Self::scalar(&r2, ScalarRole::Rz);
+            }
+            // Converged lanes dispatch the exit trip (M3 alone) and free
+            // their slot; the rest run Phase-3 with beta bound.
+            for (k, lane) in lane_states.iter_mut().enumerate() {
+                if !lane.live {
+                    continue;
+                }
+                if lane.rr <= self.cfg.tol {
+                    lane.bus.dispatch_lane(
+                        &program.exit,
+                        Scalars { alpha: alphas[k], beta: 0.0 },
+                        lane.offset,
+                        exec,
+                        &mut lane.mem,
+                    );
+                    lane.iters += 1;
+                    lane.trace.push(lane.rr);
+                    lane.converged = true;
+                    lane.live = false;
+                    continue;
+                }
+                let beta = rz_news[k] / lane.rz;
+                lane.bus.dispatch_lane(
+                    program.phase(Phase::Phase3),
+                    Scalars { alpha: alphas[k], beta },
+                    lane.offset,
+                    exec,
+                    &mut lane.mem,
+                );
+                lane.rz = rz_news[k];
+                lane.iters += 1;
+                lane.trace.push(lane.rr);
+                if lane.iters >= self.cfg.max_iters {
+                    lane.live = false;
+                }
+            }
+        }
+
+        lane_states
+            .into_iter()
+            .map(|mut lane| CoordResult {
+                x: std::mem::take(&mut lane.mem.x),
+                iters: lane.iters,
+                converged: lane.converged,
+                final_rr: lane.rr,
+                trace: lane.trace,
+                instructions: lane.bus.take_trace(),
+                mem_acks: lane.bus.acks().len(),
+            })
+            .collect()
     }
 }
 
@@ -198,13 +371,19 @@ use crate::vsr::{Module, Vector};
 /// path replays the scheduled nnz streams instead (stream-order
 /// accumulation — time-plane-faithful, not bitwise-oracle-exact).
 pub struct NativeExecutor<'a> {
+    /// The system matrix.
     pub a: &'a CsrMatrix,
+    /// SpMV precision scheme (Table 1).
     pub scheme: Scheme,
     stream: Option<NnzStream>,
-    prep: PreparedMatrix<'a>,
+    /// Owned when the executor derived its own plan, borrowed when a
+    /// caller's prepared matrix is being served ([`Self::with_plan`]).
+    prep: std::borrow::Cow<'a, PreparedMatrix<'a>>,
 }
 
 impl<'a> NativeExecutor<'a> {
+    /// An executor over a fresh solve plan sized to the machine's
+    /// available parallelism.
     pub fn new(a: &'a CsrMatrix, scheme: Scheme) -> Self {
         let threads =
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
@@ -213,7 +392,22 @@ impl<'a> NativeExecutor<'a> {
 
     /// Explicit thread budget for the engine SpMV (1 = serial).
     pub fn with_threads(a: &'a CsrMatrix, scheme: Scheme, threads: usize) -> Self {
-        Self { a, scheme, stream: None, prep: PreparedMatrix::new(a, threads) }
+        Self {
+            a,
+            scheme,
+            stream: None,
+            prep: std::borrow::Cow::Owned(PreparedMatrix::new(a, threads)),
+        }
+    }
+
+    /// Serve an already-prepared solve plan (cached f32 view, diagonal,
+    /// partition) by reference instead of deriving or copying one —
+    /// what
+    /// [`PreparedMatrix::solve_batch`](crate::engine::PreparedMatrix::solve_batch)
+    /// uses so serving a batch never re-derives (or clones) the matrix
+    /// caches.
+    pub fn with_plan(prep: &'a PreparedMatrix<'a>, scheme: Scheme) -> Self {
+        Self { a: prep.matrix(), scheme, stream: None, prep: std::borrow::Cow::Borrowed(prep) }
     }
 
     /// Mix-V3 over the scheduled Serpens nnz streams (§6 stream value
@@ -225,7 +419,7 @@ impl<'a> NativeExecutor<'a> {
             a,
             scheme: Scheme::MixV3,
             stream: Some(pack_nnz_streams(a, DEP_DIST_SERPENS)),
-            prep: PreparedMatrix::new(a, 1),
+            prep: std::borrow::Cow::Owned(PreparedMatrix::new(a, 1)),
         }
     }
 

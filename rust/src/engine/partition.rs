@@ -29,6 +29,7 @@ impl RowPartition {
         Self { bounds: vec![0, a.n] }
     }
 
+    /// Number of row blocks.
     pub fn num_parts(&self) -> usize {
         self.bounds.len() - 1
     }

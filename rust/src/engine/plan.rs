@@ -44,14 +44,18 @@ impl<'a> PreparedMatrix<'a> {
         Self::new(a, threads)
     }
 
-    pub fn matrix(&self) -> &CsrMatrix {
+    /// The borrowed matrix this plan serves (the full `'a` borrow, so a
+    /// wrapper like `NativeExecutor` can hold both plan and matrix).
+    pub fn matrix(&self) -> &'a CsrMatrix {
         self.a
     }
 
+    /// The plan's worker-thread budget.
     pub fn threads(&self) -> usize {
         self.threads
     }
 
+    /// The nnz-balanced row partition the SpMV runs on.
     pub fn partition(&self) -> &RowPartition {
         &self.partition
     }
@@ -86,6 +90,16 @@ impl<'a> PreparedMatrix<'a> {
     /// Solve one right-hand side (`None` = ones, paper setup) with the
     /// parallel SpMV inside the fused JPCG loop.  Numerics are bitwise
     /// identical to [`crate::solver::jpcg_solve`] at any thread count.
+    ///
+    /// ```
+    /// use callipepla::{PreparedMatrix, SolveOptions};
+    /// use callipepla::sparse::synth;
+    ///
+    /// let a = synth::laplace2d_shifted(100, 0.2);
+    /// let prep = PreparedMatrix::new(&a, 2);
+    /// let res = prep.solve(None, None, &SolveOptions::callipepla());
+    /// assert!(res.converged);
+    /// ```
     pub fn solve(
         &self,
         b: Option<&[f64]>,
@@ -119,13 +133,95 @@ impl<'a> PreparedMatrix<'a> {
 
     /// Solve many right-hand sides against this one prepared matrix.
     ///
-    /// Scaling strategy: parallelism goes *across* solves (one worker
-    /// per right-hand side chunk, serial SpMV inside each) — for a batch
-    /// this dominates per-solve SpMV threading because it also overlaps
-    /// the vector sweeps, and every solve still produces bitwise the
-    /// result of a lone [`crate::solver::jpcg_solve`] call.  Results
-    /// come back in input order.
+    /// When the options match the instruction path's hardware models
+    /// (delay-buffer dots, a value-neutral accumulator — i.e. the
+    /// shipping [`SolveOptions::callipepla`] family), the batch runs as
+    /// **one compiled batched program** through
+    /// [`Coordinator::solve_batch`](crate::coordinator::Coordinator::solve_batch)
+    /// + [`NativeExecutor`](crate::coordinator::NativeExecutor): one
+    /// instruction stream vectorized over the RHS lanes, per-lane
+    /// scalars bound at issue, per-lane converged exit.  Options that
+    /// model *other* machines (sequential golden-reference dots, the
+    /// XcgSolver padded-unstable accumulator) fall back to
+    /// [`PreparedMatrix::solve_batch_workers`], which exists precisely
+    /// for those model studies.
+    ///
+    /// Either way every result is bitwise the result of a lone
+    /// [`crate::solver::jpcg_solve`] call, in input order.
+    ///
+    /// ```
+    /// use callipepla::{PreparedMatrix, SolveOptions};
+    /// use callipepla::sparse::synth;
+    ///
+    /// let a = synth::laplace2d_shifted(100, 0.2);
+    /// let prep = PreparedMatrix::new(&a, 2);
+    /// let rhs: Vec<Vec<f64>> = (0..3)
+    ///     .map(|k| (0..a.n).map(|i| 1.0 + ((i + k) % 5) as f64).collect())
+    ///     .collect();
+    /// // Shipping options -> one compiled batched instruction stream.
+    /// let results = prep.solve_batch(&rhs, &SolveOptions::callipepla());
+    /// assert_eq!(results.len(), 3);
+    /// assert!(results.iter().all(|r| r.converged));
+    /// ```
     pub fn solve_batch(&self, rhs: &[Vec<f64>], opts: &SolveOptions) -> Vec<SolveResult> {
+        use crate::precision::AccumulatorModel;
+        use crate::solver::DotKind;
+        if rhs.is_empty() {
+            return Vec::new();
+        }
+        let program_path = opts.dot == DotKind::DelayBuffer
+            && !matches!(opts.accumulator, AccumulatorModel::PaddedUnstable { .. });
+        if program_path {
+            return self.solve_batch_program(rhs, opts);
+        }
+        self.solve_batch_workers(rhs, opts)
+    }
+
+    /// The batched-program execution path: one
+    /// [`Program`](crate::program::Program) compiled over the RHS lanes,
+    /// dispatched through the coordinator's instruction bus to the
+    /// native executor (engine SpMV inside).  Callers normally reach
+    /// this through [`PreparedMatrix::solve_batch`].
+    fn solve_batch_program(&self, rhs: &[Vec<f64>], opts: &SolveOptions) -> Vec<SolveResult> {
+        use crate::coordinator::{Coordinator, CoordinatorConfig, NativeExecutor};
+        use crate::solver::jpcg::flops_per_iter;
+        let cfg = CoordinatorConfig {
+            tol: opts.tol,
+            max_iters: opts.max_iters,
+            record_trace: opts.record_trace,
+            ..Default::default()
+        };
+        let mut coord = Coordinator::new(cfg);
+        // The executor borrows this plan, so the cached f32 view /
+        // diagonal / partition are shared, not copied — and a lazily
+        // derived f32 cache persists on `self` across batch calls.
+        let mut exec = NativeExecutor::with_plan(self, opts.scheme);
+        let rhs_refs: Vec<&[f64]> = rhs.iter().map(Vec::as_slice).collect();
+        let (n, nnz) = (self.a.n, self.a.nnz());
+        coord
+            .solve_batch(&mut exec, &rhs_refs, None)
+            .into_iter()
+            .map(|r| SolveResult {
+                x: r.x,
+                iters: r.iters,
+                converged: r.converged,
+                final_rr: r.final_rr,
+                trace: r.trace,
+                // Mirror the reference solver's accounting: init pass +
+                // one full iteration's FLOPs per executed iteration.
+                flops: 2 * nnz as u64 + 6 * n as u64 + r.iters as u64 * flops_per_iter(n, nnz),
+            })
+            .collect()
+    }
+
+    /// The worker-per-RHS-chunk batch path: parallelism goes *across*
+    /// solves (serial SpMV inside each), which also overlaps the vector
+    /// sweeps.  This is the execution model for option sets the
+    /// instruction path does not model (sequential dots, the XcgSolver
+    /// accumulator) and the baseline the batched-program bench rows
+    /// compare against.  Results are bitwise those of lone
+    /// [`crate::solver::jpcg_solve`] calls, in input order.
+    pub fn solve_batch_workers(&self, rhs: &[Vec<f64>], opts: &SolveOptions) -> Vec<SolveResult> {
         if rhs.is_empty() {
             return Vec::new();
         }

@@ -23,37 +23,51 @@ pub type QId = u8;
 /// Type-I: vector control instruction (5 fields, Fig. 2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct InstVCtrl {
+    /// Stream the vector in from memory this trip.
     pub rd: bool,
+    /// Write the vector back to memory this trip.
     pub wr: bool,
+    /// Base address in 64-byte beats (channel window + offset).
     pub base_addr: u32,
+    /// Vector length in elements.
     pub len: u32,
+    /// Destination module queue for the read stream.
     pub q_id: QId,
 }
 
 /// Type-II: computation instruction (3 fields, Fig. 2).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct InstCmp {
+    /// Stream length in elements.
     pub len: u32,
     /// The `double alpha` field: alpha for M3/M4, beta for M7, unused 0.0
     /// for the dot/divide modules.
     pub alpha: f64,
+    /// Destination module queue for the output stream.
     pub q_id: QId,
 }
 
 /// Type-III: memory instruction (4 fields, Fig. 2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct InstRdWr {
+    /// Read transfer.
     pub rd: bool,
+    /// Write transfer.
     pub wr: bool,
+    /// Base address in 64-byte beats.
     pub base_addr: u32,
+    /// Transfer length in elements.
     pub len: u32,
 }
 
 /// Any instruction, for traces and the issue queue.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Instruction {
+    /// A Type-I vector-control word.
     VCtrl(InstVCtrl),
+    /// A Type-II computation word.
     Cmp(InstCmp),
+    /// A Type-III memory word.
     RdWr(InstRdWr),
 }
 
@@ -68,6 +82,7 @@ pub enum Instruction {
 // ---------------------------------------------------------------------
 
 impl InstVCtrl {
+    /// Pack into the 69-bit wire word (see the layout table above).
     pub fn encode(&self) -> u128 {
         (self.rd as u128)
             | (self.wr as u128) << 1
@@ -76,6 +91,7 @@ impl InstVCtrl {
             | (self.q_id as u128 & 0b111) << 66
     }
 
+    /// Unpack a 69-bit wire word.
     pub fn decode(bits: u128) -> Self {
         Self {
             rd: bits & 1 != 0,
@@ -88,12 +104,14 @@ impl InstVCtrl {
 }
 
 impl InstCmp {
+    /// Pack into the 99-bit wire word (alpha as raw IEEE-754 bits).
     pub fn encode(&self) -> u128 {
         (self.len as u128)
             | (self.alpha.to_bits() as u128) << 32
             | (self.q_id as u128 & 0b111) << 96
     }
 
+    /// Unpack a 99-bit wire word (alpha bits preserved exactly).
     pub fn decode(bits: u128) -> Self {
         Self {
             len: bits as u32,
@@ -104,6 +122,7 @@ impl InstCmp {
 }
 
 impl InstRdWr {
+    /// Pack into the 66-bit wire word.
     pub fn encode(&self) -> u128 {
         (self.rd as u128)
             | (self.wr as u128) << 1
@@ -111,6 +130,7 @@ impl InstRdWr {
             | (self.len as u128) << 34
     }
 
+    /// Unpack a 66-bit wire word.
     pub fn decode(bits: u128) -> Self {
         Self {
             rd: bits & 1 != 0,
@@ -126,7 +146,9 @@ impl InstRdWr {
 /// consistency when modules read vectors another module just wrote.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct MemResponse {
+    /// Beat address of the completed write.
     pub base_addr: u32,
+    /// Elements written.
     pub len: u32,
 }
 
@@ -138,14 +160,17 @@ pub struct MemResponse {
 /// long instruction-recorded solve costs one `Vec` push per issue.
 #[derive(Debug, Clone, Default)]
 pub struct InstTrace {
+    /// (target module, instruction) pairs, in issue order.
     pub issued: Vec<(&'static str, Instruction)>,
 }
 
 impl InstTrace {
+    /// Append one issued instruction.
     pub fn record(&mut self, target: &'static str, inst: Instruction) {
         self.issued.push((target, inst));
     }
 
+    /// Number of instructions issued to `target`.
     pub fn count_for(&self, target: &str) -> usize {
         self.issued.iter().filter(|(t, _)| *t == target).count()
     }

@@ -30,8 +30,31 @@
 //! | L1 Pallas kernels | `python/compile/kernels/` | §6 mixed-precision SpMV |
 //! | runtime | `runtime` (xla crate / PJRT, feature `pjrt`) | — |
 //!
+//! Since PR 3 the program layer is **multi-RHS**:
+//! [`Program`](program::Program) compiles batched trips — one instruction stream vectorized over a `BatchId`
+//! lane axis with per-RHS scalar slots and per-RHS converged exit — and
+//! `PreparedMatrix::solve_batch` routes whole batches through
+//! `Coordinator::solve_batch` on that one path (bitwise-identical per
+//! RHS to lone [`jpcg_solve`] calls).  The complete Type-I/II/III
+//! instruction reference, wire encodings, and the batch-axis extension
+//! live in `docs/ISA.md`; build/quickstart walkthroughs in the
+//! top-level `README.md`.
+//!
 //! Performance notes (bench methodology, measured numbers, and the
 //! bitwise-parallelism invariants) live in `PERF.md` at the repo root.
+//!
+//! # Quickstart
+//!
+//! ```
+//! use callipepla::{jpcg_solve, SolveOptions};
+//! use callipepla::sparse::synth;
+//!
+//! let a = synth::laplace2d_shifted(400, 0.1);
+//! let res = jpcg_solve(&a, None, None, &SolveOptions::callipepla());
+//! assert!(res.converged);
+//! ```
+
+#![warn(missing_docs)]
 
 pub mod accel;
 pub mod bench_harness;

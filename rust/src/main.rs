@@ -11,9 +11,12 @@
 //! callipepla table6
 //! callipepla table7 [--scale 0.02] [--matrices ...]
 //! callipepla fig9   [--out traces/] [--scale 0.05]
-//! callipepla sim    --matrix M7 [--scale 0.05]      (cycle breakdown)
-//! callipepla program [--n 16384] [--mode double]    (compiled ISA dump)
+//! callipepla sim    --matrix M7 [--scale 0.05] [--batch 8]   (cycle breakdown)
+//! callipepla program [--n 16384] [--mode double] [--batch 8] (compiled ISA dump)
 //! ```
+//!
+//! `solve --batch N` runs N right-hand sides through one compiled
+//! batched program (the multi-RHS path of `PreparedMatrix::solve_batch`).
 //!
 //! (Arg parsing is hand-rolled: clap is not available offline.)
 
@@ -71,8 +74,9 @@ fn print_usage() {
          commands: solve suite table4 table5 table6 table7 fig9 sim program\n\
          common flags: --matrix <Mxx|name>  --mtx <file>  --scale <f>  --scheme <fp64|mixv1|mixv2|mixv3>\n\
          \u{20}                --matrices M1,M2  --max-iters <n>  --threads <n>  --pjrt  --out <dir>\n\
-         \u{20}                solve: --coordinator [--serpens-stream]\n\
-         \u{20}                program: --n <len>  --mode <double|single>"
+         \u{20}                solve: --coordinator [--serpens-stream]  --batch <rhs>\n\
+         \u{20}                program: --n <len>  --mode <double|single>  --batch <rhs>\n\
+         \u{20}                sim: --batch <rhs>"
     );
 }
 
@@ -132,6 +136,28 @@ fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
     let (name, a) = load_matrix(flags)?;
     let scheme = parse_scheme(flags)?;
     let max_iters = flag_u32(flags, "max-iters", 20_000);
+    // --batch is its own execution path; reject malformed or conflicting
+    // uses instead of silently falling through to a single solve.
+    let batch = match flags.get("batch") {
+        Some(v) => {
+            let b: usize = v
+                .parse()
+                .ok()
+                .filter(|b| *b > 0)
+                .ok_or_else(|| anyhow!("--batch needs a positive integer, got {v:?}"))?;
+            if flags.contains_key("coordinator")
+                || flags.contains_key("pjrt")
+                || flags.contains_key("serpens-stream")
+            {
+                bail!(
+                    "--batch is not combinable with --coordinator/--pjrt/--serpens-stream \
+                     (the batch path already runs through the coordinator, on the engine SpMV)"
+                );
+            }
+            Some(b)
+        }
+        None => None,
+    };
     println!("solving {name}: n={} nnz={} scheme={}", a.n, a.nnz(), scheme.name());
     let t0 = std::time::Instant::now();
     if flags.contains_key("pjrt") {
@@ -191,6 +217,30 @@ fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
             res.final_rr,
             res.instructions.issued.len(),
             res.mem_acks,
+            t0.elapsed()
+        );
+    } else if let Some(batch) = batch {
+        // Multi-RHS: `batch` deterministic right-hand sides through one
+        // compiled batched instruction program (per-RHS results bitwise
+        // identical to lone solves; early lanes exit on the fly).
+        let mut opts = SolveOptions::callipepla();
+        opts.scheme = scheme;
+        opts.max_iters = max_iters;
+        let threads = flag_u32(flags, "threads", 0).max(1) as usize;
+        let prep = PreparedMatrix::new(&a, threads);
+        let rhs: Vec<Vec<f64>> = (0..batch)
+            .map(|k| (0..a.n).map(|i| 1.0 + ((i + 31 * k) % 7) as f64 / 7.0).collect())
+            .collect();
+        let results = prep.solve_batch(&rhs, &opts);
+        for (k, r) in results.iter().enumerate() {
+            println!(
+                "  rhs {k}: converged={} iters={} rr={:.3e}",
+                r.converged, r.iters, r.final_rr
+            );
+        }
+        let total_iters: u64 = results.iter().map(|r| r.iters as u64).sum();
+        println!(
+            "batched program path: {batch} rhs, {total_iters} rhs-iterations, wall={:?}",
             t0.elapsed()
         );
     } else {
@@ -293,16 +343,24 @@ fn cmd_fig9(flags: &HashMap<String, String>) -> Result<()> {
 /// Type-I/II/III steps, real HBM addresses, and validated reuse edges.
 fn cmd_program(flags: &HashMap<String, String>) -> Result<()> {
     use callipepla::hbm::ChannelMode;
-    use callipepla::program::{short_name, Program};
+    use callipepla::program::{short_name, HbmMemoryMap, Program};
 
     let n = flag_u32(flags, "n", 16_384);
+    let batch = flag_u32(flags, "batch", 1).max(1);
+    if batch > HbmMemoryMap::max_batch(n) {
+        bail!(
+            "{batch} lanes of {n} elems exceed a 256 MiB channel window \
+             (max_batch = {})",
+            HbmMemoryMap::max_batch(n)
+        );
+    }
     let mode = match flags.get("mode").map(String::as_str) {
         None | Some("double") => ChannelMode::Double,
         Some("single") => ChannelMode::Single,
         Some(other) => bail!("unknown channel mode {other:?}"),
     };
-    let program = Program::compile(n, mode);
-    println!("compiled program: n={n} mode={mode:?}");
+    let program = Program::compile_batched(n, mode, batch);
+    println!("compiled program: n={n} mode={mode:?} batch={batch}");
     println!("\nmemory map (addresses in 64-byte beats):");
     for r in program.mem_map.regions() {
         println!(
@@ -311,6 +369,14 @@ fn cmd_program(flags: &HashMap<String, String>) -> Result<()> {
             r.channels,
             r.rd_addr(0),
             r.beats()
+        );
+    }
+    if batch > 1 {
+        println!(
+            "  batch axis: {} RHS lanes per channel pair, lane stride {} beats;\n\
+             \u{20} lane k rebases ap/p/x/r addresses by k * stride at issue time\n\
+             \u{20} (M and the nnz streams are shared — one matrix serves every lane)",
+            batch, program.mem_map.lane_stride_beats
         );
     }
     for trip in program.all_trips() {
@@ -381,5 +447,24 @@ fn cmd_sim(flags: &HashMap<String, String>) -> Result<()> {
         "A100 (analytic): {:.3} us/iter",
         sim::iteration::gpu_iteration_seconds(a.n, a.nnz()) * 1e6
     );
+    if let Some(v) = flags.get("batch") {
+        let batch: u32 = v
+            .parse()
+            .ok()
+            .filter(|b| *b > 0)
+            .ok_or_else(|| anyhow!("--batch needs a positive integer, got {v:?}"))?;
+        let cfg = AccelSimConfig::callipepla();
+        let b1 = sim::iteration::batched_rhs_iterations_per_second(&cfg, a.n, a.nnz(), 1);
+        let bb = sim::iteration::batched_rhs_iterations_per_second(&cfg, a.n, a.nnz(), batch);
+        let cyc = sim::iteration::batched_iteration_cycles(&cfg, a.n, a.nnz(), batch);
+        println!(
+            "batched program (batch={batch}): {} cycles/batched-iter, \
+             {:.0} rhs-iters/s (1 rhs: {:.0}, {:.2}x throughput)",
+            cyc.total,
+            bb,
+            b1,
+            bb / b1
+        );
+    }
     Ok(())
 }

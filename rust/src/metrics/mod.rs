@@ -39,11 +39,15 @@ pub fn fraction_of_peak_pct(max_gflops: f64, peak_gflops: f64) -> f64 {
 /// Min / max / geomean summary of a metric across the suite.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Summary {
+    /// Smallest finite value.
     pub min: f64,
+    /// Largest finite value.
     pub max: f64,
+    /// Geometric mean of the finite values.
     pub geomean: f64,
 }
 
+/// Min / max / geomean over the finite entries of `values`.
 pub fn summarize(values: &[f64]) -> Summary {
     let finite: Vec<f64> = values.iter().copied().filter(|v| v.is_finite()).collect();
     if finite.is_empty() {

@@ -18,11 +18,13 @@ pub enum ModuleOutput {
 
 /// A computation module: one function, no opcode (§4.1.2).
 pub trait ComputeModule {
+    /// The module's descriptive id.
     fn name(&self) -> &'static str;
 }
 
 /// M1 — SpMV over the packed nnz streams (Fig. 8).
 pub struct SpMvModule<'a> {
+    /// The scheduled Serpens nnz streams to replay.
     pub stream: &'a NnzStream,
 }
 
@@ -54,6 +56,7 @@ impl ComputeModule for SpMvModule<'_> {
 pub struct DotModule;
 
 impl DotModule {
+    /// a . b through the 8-lane delay buffer.
     pub fn run(&self, a: &[f64], b: &[f64]) -> f64 {
         dot_delay_buffer(a, b)
     }
@@ -70,6 +73,7 @@ impl ComputeModule for DotModule {
 pub struct AxpyModule;
 
 impl AxpyModule {
+    /// y += alpha * x, element-wise in index order.
     pub fn run(&self, alpha: f64, x: &[f64], y: &mut [f64]) {
         for (yi, xi) in y.iter_mut().zip(x) {
             *yi += alpha * xi;
@@ -87,6 +91,7 @@ impl ComputeModule for AxpyModule {
 pub struct LeftDivideModule;
 
 impl LeftDivideModule {
+    /// z = r / m, element-wise.
     pub fn run(&self, r: &[f64], m: &[f64], z: &mut [f64]) {
         for ((zi, ri), mi) in z.iter_mut().zip(r).zip(m) {
             *zi = ri / mi;
@@ -104,6 +109,7 @@ impl ComputeModule for LeftDivideModule {
 pub struct UpdatePModule;
 
 impl UpdatePModule {
+    /// p = z + beta * p, element-wise.
     pub fn run(&self, beta: f64, z: &[f64], p: &mut [f64]) {
         for (pi, zi) in p.iter_mut().zip(z) {
             *pi = zi + beta * *pi;

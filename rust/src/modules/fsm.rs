@@ -11,7 +11,9 @@ use crate::vsr::{Module, Phase, Vector};
 /// Where a stream comes from / goes to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Endpoint {
+    /// HBM, through the vector's memory module.
     Memory,
+    /// An on-chip stream to/from another computation module.
     Module(Module),
     /// Scalar delivered to the global controller (dot modules).
     Controller,
@@ -20,6 +22,7 @@ pub enum Endpoint {
 /// One state of a vector-control FSM: what this vector does in one phase.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct VecCtrlState {
+    /// The Fig. 5 phase this state belongs to.
     pub phase: Phase,
     /// Read from memory toward this module (None = no read).
     pub rd_to: Option<Module>,
@@ -31,6 +34,7 @@ pub struct VecCtrlState {
 /// the left, output streams on the right.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct CompState {
+    /// The Fig. 5 phase this state belongs to.
     pub phase: Phase,
     /// (vector, source).
     pub inputs: Vec<(Vector, Endpoint)>,
@@ -41,12 +45,16 @@ pub struct CompState {
 /// A whole FSM: the cyclic state list (one full cycle == one iteration).
 #[derive(Debug, Clone)]
 pub struct ModuleFsm<S> {
+    /// The module's trace-target id.
     pub name: &'static str,
+    /// One full cycle of states == one iteration.
     pub states: Vec<S>,
+    /// Index of the state [`ModuleFsm::step`] returns next.
     pub current: usize,
 }
 
 impl<S: Clone> ModuleFsm<S> {
+    /// An FSM starting at its first state.
     pub fn new(name: &'static str, states: Vec<S>) -> Self {
         Self { name, states, current: 0 }
     }
@@ -58,6 +66,7 @@ impl<S: Clone> ModuleFsm<S> {
         s
     }
 
+    /// The state [`ModuleFsm::step`] would return, without advancing.
     pub fn peek(&self) -> &S {
         &self.states[self.current]
     }

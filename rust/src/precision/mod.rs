@@ -31,8 +31,10 @@ pub enum Scheme {
 }
 
 impl Scheme {
+    /// Every scheme, in Table-1 order.
     pub const ALL: [Scheme; 4] = [Scheme::Fp64, Scheme::MixV1, Scheme::MixV2, Scheme::MixV3];
 
+    /// Short lowercase id (CLI `--scheme` values).
     pub fn name(self) -> &'static str {
         match self {
             Scheme::Fp64 => "fp64",
@@ -76,6 +78,7 @@ pub enum AccumulatorModel {
 }
 
 impl AccumulatorModel {
+    /// The calibrated XcgSolver instability (§7.5.1).
     pub const XCGSOLVER: AccumulatorModel = AccumulatorModel::PaddedUnstable { eps: 3e-9 };
 }
 

@@ -20,9 +20,12 @@ use super::{
     Program, ReuseEdge, ScalarBind, ScalarRole, TripKind, VecStep,
 };
 
-/// Compile and validate the five-trip program for vectors of length `n`.
-pub fn compile(n: u32, mode: ChannelMode) -> Program {
-    let mem_map = HbmMemoryMap::new(n, mode);
+/// Compile and validate the five-trip program for vectors of length `n`,
+/// vectorized over `batch` right-hand-side lanes (the trips carry
+/// lane-0 addresses; the memory map records the lane stride the bus
+/// applies at issue time).
+pub fn compile(n: u32, mode: ChannelMode, batch: super::BatchId) -> Program {
+    let mem_map = HbmMemoryMap::new_batched(n, mode, batch);
     let phases = [
         build_steady(TripKind::Phase1, n, &mem_map),
         build_steady(TripKind::Phase2, n, &mem_map),
@@ -30,7 +33,7 @@ pub fn compile(n: u32, mode: ChannelMode) -> Program {
     ];
     let init = build_init(n, &mem_map);
     let exit = build_exit(n, &mem_map);
-    let prog = Program { n, mem_map, init, phases, exit };
+    let prog = Program { n, batch, mem_map, init, phases, exit };
     validate(&prog);
     prog
 }

@@ -25,15 +25,20 @@ use super::{PhaseProgram, ScalarBind, TripKind};
 /// The controller scalars live at a trip's issue time.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Scalars {
+    /// Step length alpha (Alg. 1 line 8).
     pub alpha: f64,
+    /// Direction coefficient beta (Alg. 1 line 13).
     pub beta: f64,
 }
 
 /// Scalars a trip's dot modules returned to the controller.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct DispatchReturn {
+    /// M2's p . ap, when the trip ran M2.
     pub pap: Option<f64>,
+    /// M6's r . z, when the trip ran M6.
     pub rz: Option<f64>,
+    /// M8's r . r, when the trip ran M8.
     pub rr: Option<f64>,
 }
 
@@ -42,13 +47,21 @@ pub struct DispatchReturn {
 pub struct VectorFile {
     /// The right-hand side (host memory; also preloaded into r).
     pub b: Vec<f64>,
+    /// Committed x (HBM contents).
     pub x: Vec<f64>,
+    /// Committed r.
     pub r: Vec<f64>,
+    /// Committed p.
     pub p: Vec<f64>,
+    /// Committed ap.
     pub ap: Vec<f64>,
+    /// Staged x (this trip's on-chip stream).
     pub stage_x: Vec<f64>,
+    /// Staged r.
     pub stage_r: Vec<f64>,
+    /// Staged p.
     pub stage_p: Vec<f64>,
+    /// Staged ap.
     pub stage_ap: Vec<f64>,
     /// z is on-chip only (§5.3): staged, never committed.
     pub stage_z: Vec<f64>,
@@ -222,6 +235,7 @@ pub struct InstructionBus {
 }
 
 impl InstructionBus {
+    /// A fresh bus; `record` keeps a full [`InstTrace`] of every issue.
     pub fn new(record: bool) -> Self {
         Self { record, ..Default::default() }
     }
@@ -231,6 +245,7 @@ impl InstructionBus {
         &self.acks
     }
 
+    /// Drain the recorded instruction trace.
     pub fn take_trace(&mut self) -> InstTrace {
         std::mem::take(&mut self.trace)
     }
@@ -244,10 +259,31 @@ impl InstructionBus {
         exec: &mut D,
         mem: &mut VectorFile,
     ) -> DispatchReturn {
+        self.dispatch_lane(prog, scalars, 0, exec, mem)
+    }
+
+    /// [`InstructionBus::dispatch`] for one lane of a batched program:
+    /// the same compiled trip, with every per-RHS address (ap, p, x, r)
+    /// rebased by `lane_offset_beats` at issue time and the lane's live
+    /// scalars bound into the Type-II fields.  Reads of the shared
+    /// diagonal M are **not** rebased — one matrix serves every lane,
+    /// the block-CG traffic amortization the batch axis exists for.
+    pub fn dispatch_lane<D: InstDispatch>(
+        &mut self,
+        prog: &PhaseProgram,
+        scalars: Scalars,
+        lane_offset_beats: u32,
+        exec: &mut D,
+        mem: &mut VectorFile,
+    ) -> DispatchReturn {
+        let lane_off = |v: Vector| if v == Vector::M { 0 } else { lane_offset_beats };
         if self.record {
             for s in &prog.vec_steps {
-                self.trace.record(s.name, Instruction::VCtrl(s.vctrl));
-                if let Some(rd) = s.rd_inst {
+                let mut vctrl = s.vctrl;
+                vctrl.base_addr += lane_off(s.vector);
+                self.trace.record(s.name, Instruction::VCtrl(vctrl));
+                if let Some(mut rd) = s.rd_inst {
+                    rd.base_addr += lane_off(s.vector);
                     self.trace.record(s.mem_name, Instruction::RdWr(rd));
                 }
             }
@@ -267,7 +303,8 @@ impl InstructionBus {
         }
         let ret = exec.dispatch(prog, &self.bound, mem);
         for s in &prog.vec_steps {
-            if let Some(wr) = s.wr_inst {
+            if let Some(mut wr) = s.wr_inst {
+                wr.base_addr += lane_off(s.vector);
                 if self.record {
                     self.trace.record(s.mem_name, Instruction::RdWr(wr));
                 }
@@ -325,5 +362,55 @@ mod tests {
         assert_eq!(trace.count_for("VecCtrl-p"), 2);
         assert_eq!(trace.count_for("VecCtrl-p/mem"), 2);
         assert_eq!(trace.count_for("VecCtrl-ap/mem"), 1);
+    }
+
+    #[test]
+    fn dispatch_lane_rebases_per_rhs_addresses_but_not_the_diagonal() {
+        struct Null;
+        impl InstDispatch for Null {
+            fn dispatch(
+                &mut self,
+                _p: &PhaseProgram,
+                _c: &[InstCmp],
+                _m: &mut VectorFile,
+            ) -> DispatchReturn {
+                DispatchReturn::default()
+            }
+        }
+        let prog = Program::compile_batched(64, ChannelMode::Double, 4);
+        let off = prog.lane_offset_beats(3);
+        assert!(off > 0);
+        let mut bus = InstructionBus::new(true);
+        let mut mem = VectorFile::new(&[1.0; 64], &[0.0; 64]);
+        let p3 = prog.phase(crate::vsr::Phase::Phase3);
+        bus.dispatch_lane(p3, Scalars { alpha: 0.5, beta: 0.25 }, off, &mut Null, &mut mem);
+        let trace = bus.take_trace();
+        for (target, inst) in &trace.issued {
+            let (vector, compiled_addr) = match p3
+                .vec_steps
+                .iter()
+                .find(|s| s.name == *target || s.mem_name == *target)
+            {
+                Some(s) => (s.vector, s.vctrl.base_addr),
+                None => continue, // Type-II targets carry no address
+            };
+            let addr = match inst {
+                Instruction::VCtrl(v) => v.base_addr,
+                Instruction::RdWr(m) => m.base_addr,
+                Instruction::Cmp(_) => continue,
+            };
+            use crate::program::mem_map::CHANNEL_WINDOW_BEATS as W;
+            if vector == Vector::M {
+                assert_eq!(addr % W, 0, "the shared diagonal is never rebased");
+            } else {
+                // Rebased exactly one lane-3 stride past the compiled
+                // lane-0 address (modulo the channel the word targets).
+                assert_eq!(addr % W, (compiled_addr + off) % W);
+            }
+        }
+        // The write acks came back with the rebased addresses too.
+        use crate::program::mem_map::CHANNEL_WINDOW_BEATS as W;
+        assert_eq!(bus.acks().len(), 3, "phase-3 writes back p, r, x");
+        assert!(bus.acks().iter().all(|a| a.base_addr % W == off));
     }
 }

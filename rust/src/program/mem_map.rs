@@ -12,9 +12,22 @@
 //!
 //! Addresses are in 64-byte *beats* (the 512-bit AXI transfer unit), so
 //! the full 8 GiB device space fits the ISA's 32-bit address fields.
+//!
+//! **Batch axis.**  A map built with [`HbmMemoryMap::new_batched`] lays
+//! out `batch` right-hand-side *lanes* per channel pair: lane `k`'s
+//! copy of each read-modify-write vector (ap, p, x, r) sits at beat
+//! offset `k * lane_stride_beats` inside the same channel window.  The
+//! Jacobi diagonal M and the nnz streams are **batch-invariant** — one
+//! matrix serves every lane, which is exactly the traffic amortization
+//! block-CG multi-RHS solvers are built around — and z still has no
+//! region at all (§5.3).  The compiled instruction stream carries
+//! lane-0 addresses; the instruction bus rebases them per lane at
+//! issue time (see `crate::program::bus`).
 
 use crate::hbm::ChannelMode;
 use crate::vsr::Vector;
+
+use super::BatchId;
 
 /// Beats per 256 MiB channel window (256 MiB / 64 B).
 pub const CHANNEL_WINDOW_BEATS: u32 = 1 << 22;
@@ -32,6 +45,7 @@ pub const BEAT_LANES: u32 = 8;
 /// pair — the ping-pong alternates channels, not offsets).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct VectorRegion {
+    /// The vector stored here.
     pub vector: Vector,
     /// `[primary, pair]`; equal for single-channel vectors (the diagonal).
     pub channels: [usize; 2],
@@ -47,6 +61,7 @@ impl VectorRegion {
         self.elems.div_ceil(BEAT_LANES)
     }
 
+    /// Bytes the vector occupies (8 per f64 element).
     pub fn bytes(&self) -> u64 {
         8 * self.elems as u64
     }
@@ -81,10 +96,20 @@ impl VectorRegion {
 
 /// The full map for one solve: every *stored* vector of Algorithm 1
 /// gets a region; [`Vector::Z`] stays on-chip and has none.
+///
+/// A batched map ([`HbmMemoryMap::new_batched`]) additionally records
+/// how many right-hand-side lanes share each channel pair and the beat
+/// stride between consecutive lanes' regions.
 #[derive(Debug, Clone)]
 pub struct HbmMemoryMap {
+    /// Vector length in f64 elements.
     pub n: u32,
+    /// Channel policy (§5.7 ping-pong vs single-channel turnaround).
     pub mode: ChannelMode,
+    /// Right-hand-side lanes laid out per channel pair (>= 1).
+    pub batch: BatchId,
+    /// Beat stride between consecutive lanes' vector regions.
+    pub lane_stride_beats: u32,
     regions: Vec<VectorRegion>,
 }
 
@@ -93,6 +118,25 @@ impl HbmMemoryMap {
     /// a vector outgrows its 256 MiB channel window (n > 32 Mi doubles),
     /// which is far beyond the largest suite matrix.
     pub fn new(n: u32, mode: ChannelMode) -> Self {
+        Self::new_batched(n, mode, 1)
+    }
+
+    /// Lay out `batch` right-hand-side lanes of length `n` under a
+    /// channel policy.  Lane `k`'s ap/p/x/r regions sit `k` strides into
+    /// the shared channel windows; M is batch-invariant.  Panics when
+    /// the lanes outgrow a 256 MiB channel window (use
+    /// [`HbmMemoryMap::max_batch`] to size chunks).
+    pub fn new_batched(n: u32, mode: ChannelMode, batch: BatchId) -> Self {
+        assert!(batch >= 1, "a batched map needs at least one lane");
+        let lane_stride_beats = n.div_ceil(BEAT_LANES);
+        // (The per-region assert below reports the batch-1 case — a
+        // single lane outgrowing its window — with the precise vector.)
+        assert!(
+            batch == 1 || batch as u64 * lane_stride_beats as u64 <= CHANNEL_WINDOW_BEATS as u64,
+            "{batch} lanes of {n} elems exceed the 256 MiB channel window \
+             (max_batch = {})",
+            Self::max_batch(n)
+        );
         let region = |vector, primary: usize, pair: usize| VectorRegion {
             vector,
             channels: [primary, pair],
@@ -114,22 +158,60 @@ impl HbmMemoryMap {
                 r.elems
             );
         }
-        Self { n, mode, regions }
+        Self { n, mode, batch, lane_stride_beats, regions }
     }
 
-    /// The region of a stored vector; `None` for on-chip-only z.
+    /// Most right-hand-side lanes of length `n` one channel window can
+    /// hold: >= 1 whenever a single lane fits, 0 when even one lane
+    /// outgrows the window (such an `n` cannot be mapped at all).
+    pub fn max_batch(n: u32) -> BatchId {
+        let stride = n.div_ceil(BEAT_LANES).max(1);
+        CHANNEL_WINDOW_BEATS / stride
+    }
+
+    /// The lane-0 region of a stored vector; `None` for on-chip-only z.
     pub fn region(&self, v: Vector) -> Option<&VectorRegion> {
         self.regions.iter().find(|r| r.vector == v)
     }
 
+    /// The region lane `k` of a stored vector occupies: the lane-0
+    /// region shifted by `k` lane strides — except the batch-invariant
+    /// diagonal M, which every lane shares.  `None` for z.
+    pub fn lane_region(&self, v: Vector, lane: BatchId) -> Option<VectorRegion> {
+        assert!(lane < self.batch, "lane {lane} out of range (batch {})", self.batch);
+        let mut r = *self.region(v)?;
+        if v != Vector::M {
+            r.offset_beats += lane * self.lane_stride_beats;
+        }
+        Some(r)
+    }
+
+    /// Beat offset the instruction bus adds to lane `k`'s addresses for
+    /// the per-RHS vectors (the shared M reads are never rebased).
+    pub fn lane_offset_beats(&self, lane: BatchId) -> u32 {
+        assert!(lane < self.batch, "lane {lane} out of range (batch {})", self.batch);
+        lane * self.lane_stride_beats
+    }
+
+    /// The lane-0 regions, in layout order.
     pub fn regions(&self) -> &[VectorRegion] {
         &self.regions
     }
 
     /// Every byte range two live vectors occupy in one channel must be
     /// disjoint (a vector may legitimately appear in two channels — its
-    /// ping-pong pair — but never on top of another vector).
+    /// ping-pong pair — but never on top of another vector).  Lanes of
+    /// one vector are disjoint by construction (the lane stride covers
+    /// a lane's beats exactly), so the check compares each vector's
+    /// whole *batch footprint* — first lane start to last lane end —
+    /// pairwise across vectors.
     pub fn check_no_overlap(&self) -> Result<(), String> {
+        let footprint = |r: &VectorRegion| {
+            let lanes = if r.vector == Vector::M { 1u64 } else { self.batch as u64 };
+            let start = r.offset_beats as u64 * 64;
+            let end = start + (lanes - 1) * self.lane_stride_beats as u64 * 64 + r.bytes();
+            (start, end)
+        };
         for (i, a) in self.regions.iter().enumerate() {
             for b in self.regions.iter().skip(i + 1) {
                 for &ca in &a.channels {
@@ -137,10 +219,8 @@ impl HbmMemoryMap {
                         if ca != cb {
                             continue;
                         }
-                        let a0 = a.offset_beats as u64 * 64;
-                        let a1 = a0 + a.bytes();
-                        let b0 = b.offset_beats as u64 * 64;
-                        let b1 = b0 + b.bytes();
+                        let (a0, a1) = footprint(a);
+                        let (b0, b1) = footprint(b);
                         if a0 < b1 && b0 < a1 {
                             return Err(format!(
                                 "vectors {} and {} overlap in channel {ca}: \
@@ -205,6 +285,44 @@ mod tests {
         assert_eq!(p_sgl.wr_channel(ChannelMode::Single), p_sgl.rd_channel(0));
         // Two same-phase reads alternate the pair either way.
         assert_ne!(p_dbl.rd_channel(0), p_dbl.rd_channel(1));
+    }
+
+    #[test]
+    fn batched_lanes_are_disjoint_and_share_channels() {
+        let n = 10_000;
+        let map = HbmMemoryMap::new_batched(n, ChannelMode::Double, 6);
+        map.check_no_overlap().unwrap();
+        assert_eq!(map.lane_stride_beats, n.div_ceil(BEAT_LANES));
+        let l0 = map.lane_region(Vector::P, 0).unwrap();
+        let l3 = map.lane_region(Vector::P, 3).unwrap();
+        assert_eq!(l0.channels, l3.channels, "lanes share the channel pair");
+        assert_eq!(l3.offset_beats, 3 * map.lane_stride_beats);
+        assert_eq!(map.lane_offset_beats(3), 3 * map.lane_stride_beats);
+        // The diagonal is batch-invariant: every lane reads one copy.
+        let m0 = map.lane_region(Vector::M, 0).unwrap();
+        let m5 = map.lane_region(Vector::M, 5).unwrap();
+        assert_eq!(m0.offset_beats, m5.offset_beats);
+    }
+
+    #[test]
+    fn max_batch_bounds_the_lane_count() {
+        // 4 Mi beats per window / 2048 beats per 16384-elem lane.
+        assert_eq!(HbmMemoryMap::max_batch(16_384), CHANNEL_WINDOW_BEATS / 2_048);
+        // A window-filling vector leaves room for exactly one lane; one
+        // element more and nothing fits at all.
+        assert_eq!(HbmMemoryMap::max_batch(8 * CHANNEL_WINDOW_BEATS), 1);
+        assert_eq!(HbmMemoryMap::max_batch(8 * CHANNEL_WINDOW_BEATS + 1), 0);
+        let n = 1_000;
+        let cap = HbmMemoryMap::max_batch(n);
+        let map = HbmMemoryMap::new_batched(n, ChannelMode::Single, cap);
+        map.check_no_overlap().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "exceed the 256 MiB channel window")]
+    fn overfull_batch_panics() {
+        let n = 1_000_000;
+        let _ = HbmMemoryMap::new_batched(n, ChannelMode::Double, HbmMemoryMap::max_batch(n) + 1);
     }
 
     #[test]

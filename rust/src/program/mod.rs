@@ -113,14 +113,18 @@ pub fn short_name(m: Module) -> &'static str {
 pub enum TripKind {
     /// Merged init (Fig. 4, `rp = -1`): alpha = 1, beta = 0 pre-bound.
     Init,
+    /// Steady-state Fig. 5 phase 1 (M1, M2).
     Phase1,
+    /// Steady-state Fig. 5 phase 2 (M4, M8, M5, M6 — M8 hoisted).
     Phase2,
+    /// Steady-state Fig. 5 phase 3 (M4, M5, M7, M3).
     Phase3,
     /// Converged exit: M3 alone finishes x (Fig. 4 opt. 2).
     ConvergedExit,
 }
 
 impl TripKind {
+    /// Short lowercase id used in dumps and panics.
     pub fn label(self) -> &'static str {
         match self {
             TripKind::Init => "init",
@@ -158,8 +162,11 @@ impl TripKind {
 /// Scalar a dot module returns to the controller (§4.2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ScalarRole {
+    /// M2's p . ap (the alpha denominator).
     Pap,
+    /// M6's r . z (feeds beta).
     Rz,
+    /// M8's r . r (the termination test).
     Rr,
 }
 
@@ -167,8 +174,11 @@ pub enum ScalarRole {
 /// at issue time.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ScalarBind {
+    /// The module takes no scalar (dots, left-divide, SpMV).
     Unbound,
+    /// Bind the live alpha (M3, M4).
     Alpha,
+    /// Bind the live beta (M7).
     Beta,
 }
 
@@ -177,15 +187,25 @@ pub enum ScalarBind {
 /// example), with real channels and addresses.
 #[derive(Debug, Clone)]
 pub struct VecStep {
+    /// Vector-control module id ("VecCtrl-p" style trace target).
     pub name: &'static str,
+    /// Its memory module's trace target ("VecCtrl-p/mem").
     pub mem_name: &'static str,
+    /// The vector this step controls.
     pub vector: Vector,
+    /// Module the read stream feeds, if the step reads.
     pub rd_to: Option<Module>,
+    /// Module whose output the step writes back, if it writes.
     pub wr_from: Option<Module>,
+    /// HBM channel serving the read.
     pub rd_channel: usize,
+    /// HBM channel taking the write.
     pub wr_channel: usize,
+    /// The compiled Type-I word.
     pub vctrl: InstVCtrl,
+    /// The decomposed Type-III read, if any.
     pub rd_inst: Option<InstRdWr>,
+    /// The decomposed Type-III write, if any.
     pub wr_inst: Option<InstRdWr>,
 }
 
@@ -194,34 +214,48 @@ pub struct VecStep {
 /// from and where its outputs go.
 #[derive(Debug, Clone)]
 pub struct CompStep {
+    /// The computation module triggered.
     pub module: Module,
+    /// Trace target ("M1".."M8").
     pub target: &'static str,
     /// `alpha` is a placeholder here; the bus binds the live scalar at
     /// issue time (the controller owns alpha/beta, §4.3).
     pub inst: InstCmp,
+    /// Scalar this module returns to the controller, if it is a dot.
     pub scalar: Option<ScalarRole>,
+    /// Controller scalar bound into the instruction at issue time.
     pub bind: ScalarBind,
+    /// Input streams: (vector, where it comes from).
     pub inputs: Vec<(Vector, Endpoint)>,
+    /// Output streams: (vector, where it goes).
     pub outputs: Vec<(Vector, Endpoint)>,
 }
 
 /// A module-to-module on-chip stream, with the §5.6 bookkeeping.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ReuseEdge {
+    /// Module emitting the stream.
     pub producer: Module,
+    /// Module consuming it.
     pub consumer: Module,
+    /// The vector streamed.
     pub vector: Vector,
     /// Stage gap to the producer's slowest sibling tap.
     pub skew: usize,
+    /// Compiled FIFO depth (the §5.6 rule).
     pub fifo_depth: usize,
 }
 
 /// One trip's compiled instruction sequence.
 #[derive(Debug, Clone)]
 pub struct PhaseProgram {
+    /// Which controller trip this is.
     pub kind: TripKind,
+    /// Type-I steps (with their Type-III decompositions).
     pub vec_steps: Vec<VecStep>,
+    /// Type-II steps, in controller issue order.
     pub comp_steps: Vec<CompStep>,
+    /// The validated on-chip streams between the comp steps.
     pub reuse_edges: Vec<ReuseEdge>,
 }
 
@@ -234,22 +268,71 @@ impl PhaseProgram {
     }
 }
 
-/// The whole compiled program for one solve.
+/// Identifies one right-hand-side lane of a batched program (also the
+/// type of lane *counts*, e.g. [`Program::batch`]).
+///
+/// The batch axis never appears in the wire format: lane `k`'s
+/// instructions are ordinary Type-I/II/III words whose addresses are
+/// rebased by `k` lane strides and whose scalar fields carry lane `k`'s
+/// live alpha / beta — the same ISA "supports an arbitrary problem"
+/// argument of §4, extended to many problems per compiled stream.
+pub type BatchId = u32;
+
+/// The whole compiled program for one solve (or one batch of solves).
 #[derive(Debug, Clone)]
 pub struct Program {
+    /// Vector length in f64 elements.
     pub n: u32,
+    /// Right-hand-side lanes this program's trips are vectorized over
+    /// (1 for a plain single-RHS program).
+    pub batch: BatchId,
+    /// The HBM layout every instruction address was drawn from.
     pub mem_map: HbmMemoryMap,
+    /// The merged-init trip (Fig. 4, `rp = -1`).
     pub init: PhaseProgram,
+    /// The three steady-state phase trips of Fig. 5.
     pub phases: [PhaseProgram; 3],
+    /// The converged-exit trip (M3 alone finishes x).
     pub exit: PhaseProgram,
 }
 
 impl Program {
-    /// Compile and validate the full five-trip program.
+    /// Compile and validate the full five-trip program for one RHS.
+    ///
+    /// ```
+    /// use callipepla::hbm::ChannelMode;
+    /// use callipepla::program::Program;
+    ///
+    /// let prog = Program::compile(4_096, ChannelMode::Double);
+    /// // Five trips, every reuse edge validated at build time.
+    /// assert_eq!(prog.all_trips().len(), 5);
+    /// // z is never mapped: it lives on-chip (§5.3).
+    /// assert!(prog.mem_map.region(callipepla::vsr::Vector::Z).is_none());
+    /// ```
     pub fn compile(n: u32, mode: ChannelMode) -> Program {
-        builder::compile(n, mode)
+        builder::compile(n, mode, 1)
     }
 
+    /// Compile one instruction stream vectorized over `batch` RHS lanes:
+    /// the trips carry lane-0 addresses, the memory map lays the lanes
+    /// out per channel pair, and the bus rebases per lane at issue time.
+    /// Panics when the lanes outgrow a channel window
+    /// ([`HbmMemoryMap::max_batch`] bounds the lane count).
+    ///
+    /// ```
+    /// use callipepla::hbm::ChannelMode;
+    /// use callipepla::program::Program;
+    ///
+    /// let prog = Program::compile_batched(4_096, ChannelMode::Double, 4);
+    /// assert_eq!(prog.batch, 4);
+    /// // Lane 2's per-RHS addresses sit two strides into the window.
+    /// assert_eq!(prog.lane_offset_beats(2), 2 * prog.mem_map.lane_stride_beats);
+    /// ```
+    pub fn compile_batched(n: u32, mode: ChannelMode, batch: BatchId) -> Program {
+        builder::compile(n, mode, batch)
+    }
+
+    /// The steady-state trip instantiating Fig. 5 phase `p`.
     pub fn phase(&self, p: Phase) -> &PhaseProgram {
         match p {
             Phase::Phase1 => &self.phases[0],
@@ -258,8 +341,15 @@ impl Program {
         }
     }
 
+    /// All five trips in controller order.
     pub fn all_trips(&self) -> [&PhaseProgram; 5] {
         [&self.init, &self.phases[0], &self.phases[1], &self.phases[2], &self.exit]
+    }
+
+    /// Beat offset the bus adds to lane `lane`'s per-RHS addresses (the
+    /// shared diagonal M is never rebased).
+    pub fn lane_offset_beats(&self, lane: BatchId) -> u32 {
+        self.mem_map.lane_offset_beats(lane)
     }
 }
 
@@ -390,6 +480,42 @@ mod tests {
         // Init reads x0, b (via r's region) and M; writes r and p.
         assert_eq!(prog.init.access_counts(), (3, 2));
         assert_eq!(prog.exit.access_counts(), (2, 1));
+    }
+
+    #[test]
+    fn batched_compile_shares_the_instruction_stream() {
+        // One compiled stream serves every lane: the batched program's
+        // trips are *identical* to the single-RHS program's (lane-0
+        // addresses); only the memory map gains the lane axis.
+        let single = Program::compile(10_000, ChannelMode::Double);
+        let batched = Program::compile_batched(10_000, ChannelMode::Double, 7);
+        assert_eq!(batched.batch, 7);
+        for (s, b) in single.all_trips().iter().zip(batched.all_trips()) {
+            assert_eq!(s.vec_steps.len(), b.vec_steps.len());
+            for (sv, bv) in s.vec_steps.iter().zip(&b.vec_steps) {
+                assert_eq!(sv.vctrl, bv.vctrl);
+                assert_eq!(sv.rd_inst, bv.rd_inst);
+                assert_eq!(sv.wr_inst, bv.wr_inst);
+            }
+            assert_eq!(s.reuse_edges, b.reuse_edges);
+        }
+        // Every lane's rebased addresses stay inside the channel window.
+        batched.mem_map.check_no_overlap().unwrap();
+        for lane in 0..batched.batch {
+            let off = batched.lane_offset_beats(lane);
+            for trip in batched.all_trips() {
+                for s in &trip.vec_steps {
+                    if s.vector == crate::vsr::Vector::M {
+                        continue;
+                    }
+                    if let Some(rd) = s.rd_inst {
+                        let rebased = rd.base_addr + off;
+                        let region = batched.mem_map.lane_region(s.vector, lane).unwrap();
+                        assert_eq!(rebased % mem_map::CHANNEL_WINDOW_BEATS, region.offset_beats);
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -31,7 +31,9 @@
 
 use std::collections::VecDeque;
 
+/// Index of a FIFO in a [`Dataflow`] graph.
 pub type FifoId = usize;
+/// Index of a node in a [`Dataflow`] graph.
 pub type NodeId = usize;
 
 #[derive(Debug, Clone)]
@@ -73,6 +75,7 @@ struct Node {
 /// Simulation outcome.
 #[derive(Debug, Clone)]
 pub struct SimStats {
+    /// Total cycles until every node finished.
     pub cycles: u64,
     /// Per-node completion cycle; `None` while unfinished.  A node that
     /// is already complete before the first step (e.g. zero beats)
@@ -81,10 +84,16 @@ pub struct SimStats {
     pub node_done_at: Vec<Option<u64>>,
 }
 
+/// Why a simulation run did not complete.
 #[derive(Debug, Clone)]
 pub enum SimError {
     /// No progress while nodes are unfinished: the Fig. 7 condition.
-    Deadlock { cycle: u64, stuck: Vec<String> },
+    Deadlock {
+        /// Cycle at which progress stopped.
+        cycle: u64,
+        /// Names of the unfinished nodes.
+        stuck: Vec<String>,
+    },
     /// Safety valve.
     CycleLimit(u64),
 }
@@ -131,6 +140,7 @@ impl Default for Dataflow {
 }
 
 impl Dataflow {
+    /// An empty graph arbitrating `num_channels` HBM channels.
     pub fn new(num_channels: usize) -> Self {
         Self {
             fifos: Vec::new(),
@@ -148,16 +158,19 @@ impl Dataflow {
         self.fast_forward = on;
     }
 
+    /// Allocate a FIFO of capacity `cap` tokens.
     pub fn fifo(&mut self, cap: usize) -> FifoId {
         self.fifos.push(Fifo { cap, len: 0 });
         self.fifos.len() - 1
     }
 
+    /// A memory-read node: one beat per cycle from `channel` into `out`.
     pub fn mem_read(&mut self, name: &str, channel: usize, beats: u64, out: FifoId) -> NodeId {
         assert!(channel < self.num_channels);
         self.push(name, NodeKind::MemRead { channel, beats, done: 0, out })
     }
 
+    /// A memory-write node: one beat per cycle from `input` to `channel`.
     pub fn mem_write(&mut self, name: &str, channel: usize, beats: u64, input: FifoId) -> NodeId {
         assert!(channel < self.num_channels);
         self.push(name, NodeKind::MemWrite { channel, beats, done: 0, input })
@@ -326,16 +339,64 @@ impl Dataflow {
     /// last in vector-control order — so cycle counts are reproducible
     /// and pinned by the hand-built-graph equality tests.
     pub fn from_program(prog: &crate::program::PhaseProgram, spmv_busy: u64) -> Dataflow {
+        Self::from_batched_program(prog, 1, spmv_busy)
+    }
+
+    /// [`Dataflow::from_program`] vectorized over `batch` RHS lanes: the
+    /// one compiled trip is instantiated once per lane (lane-major node
+    /// order, lane-0 names unsuffixed so the single-lane graph is
+    /// byte-identical to `from_program`'s).
+    ///
+    /// Pricing model for the batch axis:
+    ///
+    /// * every lane's vector streams land on the **shared** compiled
+    ///   channels, so the round-robin channel arbitration prices the
+    ///   contention — per-RHS vector traffic scales with the batch;
+    /// * each lane carries its own `Spmv` busy window and the windows
+    ///   overlap — the nnz stream is read once and applied to every
+    ///   lane (the block-CG matrix-traffic amortization the batch axis
+    ///   exists for), so SpMV time does *not* scale with the batch
+    ///   while the §6 PE array has headroom;
+    /// * per-trip control overhead is charged once per batched trip,
+    ///   not once per lane (`sim::iteration` adds it outside).
+    pub fn from_batched_program(
+        prog: &crate::program::PhaseProgram,
+        batch: crate::program::BatchId,
+        spmv_busy: u64,
+    ) -> Dataflow {
+        let mut df = Dataflow::new(crate::program::TOTAL_CHANNELS);
+        for lane in 0..batch.max(1) {
+            Self::add_program_lane(&mut df, prog, spmv_busy, lane);
+        }
+        df
+    }
+
+    /// Append one RHS lane's instantiation of a compiled trip to `df` —
+    /// the per-lane body of [`Dataflow::from_batched_program`].
+    fn add_program_lane(
+        df: &mut Dataflow,
+        prog: &crate::program::PhaseProgram,
+        spmv_busy: u64,
+        lane: crate::program::BatchId,
+    ) {
         use crate::modules::fsm::Endpoint;
         use crate::program::{
-            edge_fifo_depth, pipe_depth, short_name, tap_stage, STREAM_FIFO_DEPTH, TOTAL_CHANNELS,
+            edge_fifo_depth, pipe_depth, short_name, tap_stage, STREAM_FIFO_DEPTH,
         };
         use crate::vsr::{Module, Vector};
 
         const BEAT_LANES: u64 = 8;
         let beats = |len: u32| (len as u64).div_ceil(BEAT_LANES);
 
-        let mut df = Dataflow::new(TOTAL_CHANNELS);
+        // Lane-0 names match the single-RHS graph exactly; later lanes
+        // get a `#k` suffix.
+        let tag = move |base: String| -> String {
+            if lane == 0 {
+                base
+            } else {
+                format!("{base}#{lane}")
+            }
+        };
 
         // Pass 1: allocate the stream FIFOs every producer output
         // feeds, in step order (FIFO ids are passive; only node order
@@ -426,7 +487,7 @@ impl Dataflow {
                         let f = df.fifo(STREAM_FIFO_DEPTH);
                         let rd = vs.rd_inst.expect("read step carries a Type-III read");
                         df.mem_read(
-                            &format!("rd_{}@{}", v.name(), short_name(step.module)),
+                            &tag(format!("rd_{}@{}", v.name(), short_name(step.module))),
                             vs.rd_channel,
                             beats(rd.len),
                             f,
@@ -439,14 +500,14 @@ impl Dataflow {
                     Endpoint::Controller => {}
                 }
             }
-            let name = short_name(step.module);
+            let name = tag(short_name(step.module).to_string());
             match step.module {
                 Module::M1 => {
                     let out = prod_taps[ci][0].1;
-                    df.spmv(name, ins[0], nb, spmv_busy, nb, out);
+                    df.spmv(&name, ins[0], nb, spmv_busy, nb, out);
                 }
                 Module::M2 | Module::M8 => {
-                    df.dot(name, ins, nb, super::iteration::DOT_TAIL);
+                    df.dot(&name, ins, nb, super::iteration::DOT_TAIL);
                 }
                 _ => {
                     let depth = pipe_depth(step.module);
@@ -454,12 +515,18 @@ impl Dataflow {
                         .iter()
                         .map(|(v, f)| (tap_stage(step.module, *v), *f))
                         .collect();
-                    df.pipe(name, ins, outs, depth, nb);
+                    df.pipe(&name, ins, outs, depth, nb);
                 }
             }
             for fork in &fork_specs[ci] {
                 let outs: Vec<(usize, FifoId)> = fork.taps.iter().map(|f| (0usize, *f)).collect();
-                df.pipe(&format!("fork_{}", fork.vector.name()), vec![fork.input], outs, 1, nb);
+                df.pipe(
+                    &tag(format!("fork_{}", fork.vector.name())),
+                    vec![fork.input],
+                    outs,
+                    1,
+                    nb,
+                );
             }
         }
         for vs in &prog.vec_steps {
@@ -467,14 +534,13 @@ impl Dataflow {
                 let m = vs.wr_from.expect("write step has a producing module");
                 let f = find_edge(&out_edges, m, vs.vector, Endpoint::Memory);
                 df.mem_write(
-                    &format!("wr_{}", vs.vector.name()),
+                    &tag(format!("wr_{}", vs.vector.name())),
                     vs.wr_channel,
                     beats(wr.len),
                     f,
                 );
             }
         }
-        df
     }
 
     /// One simulated cycle; reports what progressed.

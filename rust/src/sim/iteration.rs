@@ -15,7 +15,7 @@
 
 use crate::hbm::HbmConfig;
 use crate::precision::Scheme;
-use crate::program::Program;
+use crate::program::{BatchId, Program};
 use crate::sparse::{NUM_CHANNELS, PES_PER_CHANNEL};
 use crate::vsr::Phase;
 
@@ -34,6 +34,7 @@ pub const PHASE_OVERHEAD: u64 = 32;
 /// Simulation-facing accelerator description.
 #[derive(Debug, Clone, Copy)]
 pub struct AccelSimConfig {
+    /// HBM channel count, frequency, and channel policy (Table 2).
     pub hbm: HbmConfig,
     /// Vector streaming reuse + decentralized scheduling (§5) on?
     pub vsr: bool,
@@ -48,6 +49,7 @@ pub struct AccelSimConfig {
 }
 
 impl AccelSimConfig {
+    /// The Callipepla build: VSR + Mix-V3 + double channels.
     pub fn callipepla() -> Self {
         Self {
             hbm: HbmConfig::callipepla(),
@@ -58,6 +60,7 @@ impl AccelSimConfig {
         }
     }
 
+    /// The SerpensCG comparator: FP64 stream, no VSR reuse graph.
     pub fn serpenscg() -> Self {
         Self {
             hbm: HbmConfig::serpenscg(),
@@ -72,6 +75,7 @@ impl AccelSimConfig {
         }
     }
 
+    /// The XcgSolver comparator: kernel-sequential, padded accumulator.
     pub fn xcgsolver() -> Self {
         Self {
             hbm: HbmConfig::xcgsolver(),
@@ -89,9 +93,13 @@ impl AccelSimConfig {
 /// Cycle breakdown of one JPCG iteration.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct IterationBreakdown {
+    /// Fig. 5 phase-1 cycles (SpMV + pap dot).
     pub phase1: u64,
+    /// Phase-2 cycles (r update / rr / z / rz chain).
     pub phase2: u64,
+    /// Phase-3 cycles (z recompute + p / x updates).
     pub phase3: u64,
+    /// Whole-iteration cycles (the three phases summed).
     pub total: u64,
 }
 
@@ -124,13 +132,56 @@ const LIMIT: u64 = 500_000_000;
 /// One VSR iteration: the three Fig. 5 phase graphs, each derived from
 /// the compiled instruction program (same steps as the value plane).
 fn iteration_vsr(cfg: &AccelSimConfig, n: usize, nnz: usize) -> IterationBreakdown {
-    let program = Program::compile(n as u32, cfg.hbm.vector_mode);
+    batched_iteration_cycles(cfg, n, nnz, 1)
+}
+
+/// Cycles for one **batched** VSR iteration: the three phase graphs of
+/// a program compiled over `batch` RHS lanes
+/// ([`Dataflow::from_batched_program`]).  Lane vector streams contend
+/// on the shared channel pairs while the SpMV busy windows overlap (the
+/// nnz stream prices once per iteration, block-CG style), and the
+/// per-trip control overhead is paid once per batched trip — the
+/// instruction-stream amortization the batch axis buys.
+///
+/// A non-VSR config has no compiled program to batch: `batch` must be
+/// 1 there, and the call falls back to [`iteration_cycles`]'s
+/// kernel-sequential pricing (so the two APIs always agree at the
+/// single-RHS base case).
+pub fn batched_iteration_cycles(
+    cfg: &AccelSimConfig,
+    n: usize,
+    nnz: usize,
+    batch: BatchId,
+) -> IterationBreakdown {
+    if !cfg.vsr {
+        assert!(
+            batch <= 1,
+            "batched trips require the compiled VSR program (cfg.vsr); \
+             the kernel-sequential baseline has no batch axis"
+        );
+        return iteration_cycles(cfg, n, nnz);
+    }
+    let program = Program::compile_batched(n as u32, cfg.hbm.vector_mode, batch.max(1));
     let busy = spmv_busy_cycles(nnz, cfg.scheme, cfg.nnz_padding);
-    let cycles = |p: Phase| run_phase(Dataflow::from_program(program.phase(p), busy));
+    let cycles =
+        |p: Phase| run_phase(Dataflow::from_batched_program(program.phase(p), program.batch, busy));
     let p1 = cycles(Phase::Phase1) + PHASE_OVERHEAD;
     let p2 = cycles(Phase::Phase2) + PHASE_OVERHEAD;
     let p3 = cycles(Phase::Phase3) + PHASE_OVERHEAD;
     IterationBreakdown { phase1: p1, phase2: p2, phase3: p3, total: p1 + p2 + p3 }
+}
+
+/// Multi-RHS throughput of a batched program: right-hand-side
+/// iterations retired per second (`batch` lanes advance one JPCG
+/// iteration per batched trip sequence).
+pub fn batched_rhs_iterations_per_second(
+    cfg: &AccelSimConfig,
+    n: usize,
+    nnz: usize,
+    batch: BatchId,
+) -> f64 {
+    let cycles = batched_iteration_cycles(cfg, n, nnz, batch).total;
+    batch.max(1) as f64 / (cycles as f64 * cfg.hbm.cycle_time())
 }
 
 /// Without VSR (§5.5 baseline): every module is its own memory-to-memory
@@ -452,6 +503,53 @@ mod tests {
             let (hc, hd) = run(hand);
             assert_eq!(dc, hc, "{phase:?} cycle count drifted from hand-built graph");
             assert_eq!(dd, hd, "{phase:?} per-node completion drifted");
+        }
+    }
+
+    #[test]
+    fn batched_iteration_amortizes_the_instruction_stream() {
+        let cfg = AccelSimConfig::callipepla();
+        let single = batched_iteration_cycles(&cfg, N, NNZ, 1);
+        assert_eq!(single.total, iteration_cycles(&cfg, N, NNZ).total, "batch=1 is the base case");
+        let b4 = batched_iteration_cycles(&cfg, N, NNZ, 4);
+        // Four lanes cost more than one (the vector streams contend on
+        // the shared channel pairs) but less than four full iterations:
+        // the SpMV busy window overlaps across lanes and the per-trip
+        // overhead is paid once per batched trip.
+        assert!(b4.total > single.total, "b4={} single={}", b4.total, single.total);
+        assert!(
+            b4.total < 4 * single.total,
+            "no amortization: b4={} 4x single={}",
+            b4.total,
+            4 * single.total
+        );
+        // Which is exactly a throughput win per right-hand side.
+        let t1 = batched_rhs_iterations_per_second(&cfg, N, NNZ, 1);
+        let t4 = batched_rhs_iterations_per_second(&cfg, N, NNZ, 4);
+        assert!(t4 > t1, "t4={t4} t1={t1}");
+    }
+
+    #[test]
+    fn batched_cycles_agree_with_iteration_cycles_for_non_vsr() {
+        // A non-VSR machine has no batch axis: the batched API must fall
+        // back to the same kernel-sequential pricing, not silently build
+        // a VSR graph the config says the machine lacks.
+        for cfg in [AccelSimConfig::xcgsolver(), AccelSimConfig::serpenscg()] {
+            let batched = batched_iteration_cycles(&cfg, N, NNZ, 1);
+            let base = iteration_cycles(&cfg, N, NNZ);
+            assert_eq!(batched.total, base.total);
+        }
+    }
+
+    #[test]
+    fn batched_graphs_simulate_all_trips_cleanly() {
+        // Every trip of a batched program — init and exit included —
+        // must complete without deadlock at several lane counts.
+        let program = Program::compile_batched(4_096, ChannelMode::Double, 3);
+        let busy = spmv_busy_cycles(80_000, Scheme::MixV3, 1.06);
+        for trip in program.all_trips() {
+            let cycles = run_phase(Dataflow::from_batched_program(trip, program.batch, busy));
+            assert!(cycles > 0, "{}", trip.kind.label());
         }
     }
 

@@ -17,4 +17,7 @@ pub mod dataflow;
 pub mod iteration;
 
 pub use dataflow::{Dataflow, FifoId, NodeId, SimError, SimStats};
-pub use iteration::{iteration_cycles, solver_seconds, AccelSimConfig, IterationBreakdown};
+pub use iteration::{
+    batched_iteration_cycles, batched_rhs_iterations_per_second, iteration_cycles, solver_seconds,
+    AccelSimConfig, IterationBreakdown,
+};

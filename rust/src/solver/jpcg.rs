@@ -35,11 +35,15 @@ pub enum DotKind {
 /// (§7.1.1): b = ones, x0 = 0, |r|^2 < 1e-12, max 20 000 iterations.
 #[derive(Debug, Clone, Copy)]
 pub struct SolveOptions {
+    /// SpMV precision scheme (Table 1).
     pub scheme: Scheme,
+    /// SpMV accumulator-architecture model (§7.5.1).
     pub accumulator: AccumulatorModel,
+    /// Dot-product hardware model.
     pub dot: DotKind,
     /// Convergence threshold tau on rr = |r|^2.
     pub tol: f64,
+    /// Iteration cap (paper setup: 20 000).
     pub max_iters: u32,
     /// Record rr per iteration (Fig. 9 traces).
     pub record_trace: bool,
@@ -98,9 +102,11 @@ impl SolveOptions {
 /// Outcome of a solve, including everything the metrics/time planes need.
 #[derive(Debug, Clone)]
 pub struct SolveResult {
+    /// The solution iterate.
     pub x: Vec<f64>,
     /// Main-loop iterations executed (Table 7).
     pub iters: u32,
+    /// Whether rr reached the threshold within the cap.
     pub converged: bool,
     /// Final rr = |r|^2.
     pub final_rr: f64,
@@ -122,6 +128,7 @@ pub struct SolveWorkspace {
 }
 
 impl SolveWorkspace {
+    /// Empty workspace; vectors are sized on first use.
     pub fn new() -> Self {
         Self::default()
     }

@@ -9,20 +9,24 @@ pub struct ResidualTrace {
 }
 
 impl ResidualTrace {
+    /// A trace that records only when `enabled`.
     pub fn new(enabled: bool) -> Self {
         Self { enabled, values: Vec::new() }
     }
 
+    /// Append one iteration's rr (no-op when disabled).
     pub fn push(&mut self, rr: f64) {
         if self.enabled {
             self.values.push(rr);
         }
     }
 
+    /// The recorded rr values, oldest first.
     pub fn values(&self) -> &[f64] {
         &self.values
     }
 
+    /// True when nothing was recorded.
     pub fn is_empty(&self) -> bool {
         self.values.is_empty()
     }

@@ -10,17 +10,23 @@
 /// Matrix-Market ingestion.
 #[derive(Debug, Clone, Default)]
 pub struct CooMatrix {
+    /// Matrix dimension (square).
     pub n: usize,
+    /// Row index per triplet.
     pub rows: Vec<u32>,
+    /// Column index per triplet.
     pub cols: Vec<u32>,
+    /// Value per triplet.
     pub vals: Vec<f64>,
 }
 
 impl CooMatrix {
+    /// An empty n x n triplet matrix.
     pub fn new(n: usize) -> Self {
         Self { n, rows: Vec::new(), cols: Vec::new(), vals: Vec::new() }
     }
 
+    /// Append one (row, col, value) triplet.
     pub fn push(&mut self, r: usize, c: usize, v: f64) {
         debug_assert!(r < self.n && c < self.n);
         self.rows.push(r as u32);
@@ -28,6 +34,7 @@ impl CooMatrix {
         self.vals.push(v);
     }
 
+    /// Stored triplet count (duplicates not yet merged).
     pub fn nnz(&self) -> usize {
         self.vals.len()
     }
@@ -67,14 +74,18 @@ impl CooMatrix {
 /// Compressed-sparse-row matrix, FP64 values.
 #[derive(Debug, Clone)]
 pub struct CsrMatrix {
+    /// Matrix dimension (square).
     pub n: usize,
     /// `indptr[i]..indptr[i+1]` is the index range of row `i`. Length n+1.
     pub indptr: Vec<u32>,
+    /// Column index per non-zero.
     pub indices: Vec<u32>,
+    /// FP64 value per non-zero (the master copy).
     pub vals: Vec<f64>,
 }
 
 impl CsrMatrix {
+    /// Stored non-zero count.
     pub fn nnz(&self) -> usize {
         self.vals.len()
     }

@@ -20,6 +20,7 @@ pub fn read_mtx(path: &Path) -> Result<CsrMatrix> {
     read_mtx_from(BufReader::new(f))
 }
 
+/// [`read_mtx`] over any buffered reader (tests feed in-memory strings).
 pub fn read_mtx_from<R: BufRead>(mut r: R) -> Result<CsrMatrix> {
     let mut header = String::new();
     r.read_line(&mut header)?;

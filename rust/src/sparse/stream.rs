@@ -42,8 +42,10 @@ pub const DEP_DIST_XCGSOLVER: usize = 14;
 pub struct PackedNnz(pub u64);
 
 impl PackedNnz {
+    /// The padding beat (all-ones word).
     pub const NOP: PackedNnz = PackedNnz(u64::MAX);
 
+    /// Pack (col offset, row offset, f32 value) into one 64-bit word.
     pub fn pack(col_off: u32, row_off: u32, val: f32) -> Self {
         debug_assert!(col_off < COL_WINDOW as u32);
         debug_assert!(row_off < ROW_WINDOW as u32);
@@ -56,18 +58,22 @@ impl PackedNnz {
         PackedNnz(bits)
     }
 
+    /// Is this the padding beat?
     pub fn is_nop(self) -> bool {
         self == Self::NOP
     }
 
+    /// 14-bit column offset within the tile's col window.
     pub fn col_off(self) -> u32 {
         (self.0 >> 50) as u32 & (COL_WINDOW as u32 - 1)
     }
 
+    /// 18-bit row offset within the tile's row window.
     pub fn row_off(self) -> u32 {
         (self.0 >> 32) as u32 & (ROW_WINDOW as u32 - 1)
     }
 
+    /// The f32 matrix value.
     pub fn val(self) -> f32 {
         f32::from_bits(self.0 as u32)
     }
@@ -76,6 +82,7 @@ impl PackedNnz {
 /// The scheduled stream for one HBM channel: `beats[cycle][pe]`.
 #[derive(Debug, Clone)]
 pub struct ChannelStream {
+    /// One beat per scheduled cycle: 8 packed nnz slots.
     pub beats: Vec<[PackedNnz; PES_PER_CHANNEL]>,
 }
 
@@ -83,15 +90,20 @@ pub struct ChannelStream {
 /// the window origins needed to reconstruct absolute indices.
 #[derive(Debug, Clone)]
 pub struct TileStream {
+    /// First absolute row of the tile's row window.
     pub row_base: u32,
+    /// First absolute column of the tile's col window.
     pub col_base: u32,
+    /// The 16 per-channel scheduled streams.
     pub channels: Vec<ChannelStream>,
 }
 
 /// All tiles of a matrix, in processing order, plus stream statistics.
 #[derive(Debug, Clone)]
 pub struct NnzStream {
+    /// Matrix dimension.
     pub n: usize,
+    /// Tiles in processing order.
     pub tiles: Vec<TileStream>,
     /// Real non-zeros packed (== matrix nnz).
     pub nnz: usize,

@@ -43,6 +43,7 @@ pub struct MatrixSpec {
     /// Paper's CPU-FP64 JPCG iteration count (Table 7); 20_000 == did
     /// not converge within the cap.
     pub cpu_iters: u32,
+    /// Which synthetic generator family reproduces it.
     pub kind: SynthKind,
 }
 

@@ -13,15 +13,22 @@ use anyhow::{bail, Result};
 /// Parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document.
     pub fn parse(s: &str) -> Result<Json> {
         let mut p = Parser { b: s.as_bytes(), i: 0 };
         let v = p.value()?;
@@ -32,6 +39,7 @@ impl Json {
         Ok(v)
     }
 
+    /// Object field lookup (`None` for non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -39,6 +47,7 @@ impl Json {
         }
     }
 
+    /// The array contents, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -46,6 +55,7 @@ impl Json {
         }
     }
 
+    /// The string contents, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -53,6 +63,7 @@ impl Json {
         }
     }
 
+    /// The number, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -60,6 +71,7 @@ impl Json {
         }
     }
 
+    /// The number truncated to usize, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|f| f as usize)
     }
@@ -230,15 +242,18 @@ pub struct ObjWriter {
 }
 
 impl ObjWriter {
+    /// An empty object.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Add a string field (value quoted and escaped).
     pub fn field_str(&mut self, k: &str, v: &str) -> &mut Self {
         self.fields.push(format!("{}:{}", quote(k), quote(v)));
         self
     }
 
+    /// Add a numeric field.
     pub fn field_num(&mut self, k: &str, v: f64) -> &mut Self {
         let mut s = String::new();
         let _ = write!(s, "{}:{}", quote(k), v);
@@ -246,11 +261,13 @@ impl ObjWriter {
         self
     }
 
+    /// Add a pre-serialized field (nested object/array).
     pub fn field_raw(&mut self, k: &str, v: &str) -> &mut Self {
         self.fields.push(format!("{}:{}", quote(k), v));
         self
     }
 
+    /// Serialize the accumulated object.
     pub fn finish(&self) -> String {
         format!("{{{}}}", self.fields.join(","))
     }

@@ -3,12 +3,14 @@
 //! beyond what SPD-pattern sampling needs, and the stream is stable
 //! across platforms, which keeps every generated matrix reproducible.
 
+/// xoshiro256++ state.
 #[derive(Debug, Clone)]
 pub struct Rng64 {
     s: [u64; 4],
 }
 
 impl Rng64 {
+    /// Seed the generator deterministically from one u64.
     pub fn seed_from_u64(seed: u64) -> Self {
         // splitmix64 expansion, as recommended by the xoshiro authors.
         let mut sm = seed;
@@ -22,6 +24,7 @@ impl Rng64 {
         Self { s: [next(), next(), next(), next()] }
     }
 
+    /// Next raw 64-bit draw.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let res = (self.s[0].wrapping_add(self.s[3]))

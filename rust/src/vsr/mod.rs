@@ -20,16 +20,22 @@ use std::collections::BTreeSet;
 /// The named long vectors of Algorithm 1.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Vector {
+    /// Search direction p.
     P,
+    /// SpMV product ap = A p.
     Ap,
+    /// Residual r.
     R,
+    /// Preconditioned residual z = M^-1 r (on-chip only, §5.3).
     Z,
+    /// Solution iterate x.
     X,
     /// The Jacobi diagonal M (read-only).
     M,
 }
 
 impl Vector {
+    /// Every Algorithm-1 vector.
     pub const ALL: [Vector; 6] = [
         Vector::P,
         Vector::Ap,
@@ -39,6 +45,7 @@ impl Vector {
         Vector::M,
     ];
 
+    /// Short lowercase id used in traces and dumps.
     pub fn name(self) -> &'static str {
         match self {
             Vector::P => "p",
@@ -73,6 +80,7 @@ pub enum Module {
 }
 
 impl Module {
+    /// Every computation module, in Fig. 1 order.
     pub const ALL: [Module; 8] = [
         Module::M1,
         Module::M2,
@@ -84,6 +92,7 @@ impl Module {
         Module::M8,
     ];
 
+    /// Long descriptive id ("M5:left-divide" style).
     pub fn name(self) -> &'static str {
         match self {
             Module::M1 => "M1:spmv",
@@ -117,7 +126,9 @@ impl Module {
 /// Data-flow signature of a module.
 #[derive(Debug, Clone)]
 pub struct ModuleIo {
+    /// Vectors streamed in.
     pub consumes: Vec<Vector>,
+    /// Vectors streamed out.
     pub produces: Vec<Vector>,
     /// Scalar-reducing module: its output depends on the *whole* input
     /// vector, which is exactly the VSR-blocking condition of §5.1.
@@ -134,8 +145,11 @@ impl ModuleIo {
 /// (M2) in the paper; we keep them as ordered stages within phase 1.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Phase {
+    /// M1 SpMV then M2 dot (Fig. 5 stages 1.1 / 1.2).
     Phase1,
+    /// The consume-and-send chain M4 -> M5 -> M6 -> M8.
     Phase2,
+    /// M4/M5 rerun (z recompute) feeding M7 and M3.
     Phase3,
 }
 
@@ -225,8 +239,11 @@ pub fn phase_of(m: Module) -> Vec<Phase> {
 /// One vector's memory activity within a phase.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub struct Access {
+    /// The vector accessed.
     pub vector: Vector,
+    /// Streamed in from HBM.
     pub read: bool,
+    /// Written back to HBM.
     pub write: bool,
 }
 

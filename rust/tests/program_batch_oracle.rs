@@ -1,0 +1,182 @@
+//! The batched-program oracle: one compiled instruction stream
+//! vectorized over many right-hand sides must be **bitwise identical
+//! per RHS** to sequential [`jpcg_solve`] calls, individual systems
+//! must terminate on the fly without perturbing the rest of the batch,
+//! and a freed lane's trips must stop issuing.
+
+use callipepla::coordinator::{Coordinator, CoordinatorConfig, NativeExecutor};
+use callipepla::engine::PreparedMatrix;
+use callipepla::precision::{AccumulatorModel, Scheme};
+use callipepla::solver::{jpcg_solve, DotKind, SolveOptions};
+use callipepla::sparse::synth;
+
+/// Options matching the instruction path's hardware models (see
+/// `tests/program_oracle.rs`): delay-buffer dots + the value-neutral
+/// out-of-order accumulator.
+fn oracle_opts(scheme: Scheme) -> SolveOptions {
+    SolveOptions {
+        scheme,
+        dot: DotKind::DelayBuffer,
+        accumulator: AccumulatorModel::OutOfOrder,
+        ..SolveOptions::default()
+    }
+}
+
+fn bitwise_eq(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(u, v)| u.to_bits() == v.to_bits())
+}
+
+/// Deterministic, per-lane-distinct right-hand sides.
+fn make_rhs(n: usize, lanes: usize) -> Vec<Vec<f64>> {
+    (0..lanes)
+        .map(|k| (0..n).map(|i| 0.25 + ((i * 17 + k * 101) % 23) as f64 / 23.0).collect())
+        .collect()
+}
+
+#[test]
+fn batched_program_is_bitwise_identical_per_rhs() {
+    let a = synth::banded_spd(1_200, 9_600, 1e-3, 19);
+    let rhs = make_rhs(a.n, 5);
+    for scheme in [Scheme::Fp64, Scheme::MixV3] {
+        let opts = oracle_opts(scheme);
+        let prep = PreparedMatrix::new(&a, 4);
+        // The routed path: PreparedMatrix::solve_batch -> batched
+        // program -> Coordinator::solve_batch -> NativeExecutor.
+        let batch = prep.solve_batch(&rhs, &opts);
+        assert_eq!(batch.len(), rhs.len());
+        for (k, b) in rhs.iter().enumerate() {
+            let lone = jpcg_solve(&a, Some(b), None, &opts);
+            assert!(lone.converged, "reference must converge (rhs {k}, {scheme:?})");
+            assert_eq!(batch[k].iters, lone.iters, "rhs {k} iteration count ({scheme:?})");
+            assert_eq!(
+                batch[k].final_rr.to_bits(),
+                lone.final_rr.to_bits(),
+                "rhs {k} final rr ({scheme:?})"
+            );
+            assert!(bitwise_eq(&batch[k].x, &lone.x), "rhs {k} solution bits ({scheme:?})");
+            assert_eq!(batch[k].flops, lone.flops, "rhs {k} flops accounting ({scheme:?})");
+        }
+        // And the worker-per-RHS model path agrees bit for bit.
+        let workers = prep.solve_batch_workers(&rhs, &opts);
+        for (k, (p, w)) in batch.iter().zip(&workers).enumerate() {
+            assert_eq!(p.iters, w.iters, "rhs {k}: paths disagree");
+            assert!(bitwise_eq(&p.x, &w.x), "rhs {k}: paths disagree on bits");
+        }
+    }
+}
+
+#[test]
+fn early_convergence_frees_the_lane_without_perturbing_survivors() {
+    let a = synth::banded_spd(900, 7_200, 1e-3, 23);
+    let scheme = Scheme::MixV3;
+    // Lane 1 warm-starts at the solution and converges within a couple
+    // of trips; lanes 0 and 2 run cold to full convergence — a
+    // mixed-size batch by construction.
+    let b = vec![1.0; a.n];
+    let warm = jpcg_solve(&a, Some(&b), None, &oracle_opts(scheme));
+    assert!(warm.converged);
+    let cold = vec![0.0; a.n];
+    let b2: Vec<f64> = (0..a.n).map(|i| 0.5 + ((i * 29) % 13) as f64 / 13.0).collect();
+    let rhs: Vec<&[f64]> = vec![&b, &b, &b2];
+    let x0s: Vec<&[f64]> = vec![&cold, &warm.x, &cold];
+
+    let cfg = CoordinatorConfig {
+        record_instructions: true,
+        record_trace: true,
+        ..Default::default()
+    };
+    let mut coord = Coordinator::new(cfg);
+    let mut exec = NativeExecutor::with_threads(&a, scheme, 4);
+    let batch = coord.solve_batch(&mut exec, &rhs, Some(&x0s));
+    assert_eq!(batch.len(), 3);
+    assert!(batch.iter().all(|r| r.converged));
+
+    // The warm lane terminated on the fly, well before the cold ones.
+    assert!(
+        batch[1].iters + 2 < batch[0].iters,
+        "warm lane should exit early: warm={} cold={}",
+        batch[1].iters,
+        batch[0].iters
+    );
+
+    // Every lane — survivors included — is bitwise the lone solve of
+    // the same system: the freed slot perturbed nothing.
+    for (k, r) in batch.iter().enumerate() {
+        let mut solo_coord = Coordinator::new(cfg);
+        let mut solo_exec = NativeExecutor::with_threads(&a, scheme, 4);
+        let solo = solo_coord.solve(&mut solo_exec, rhs[k], x0s[k]);
+        assert_eq!(r.iters, solo.iters, "lane {k} iters");
+        assert_eq!(r.final_rr.to_bits(), solo.final_rr.to_bits(), "lane {k} rr");
+        assert!(bitwise_eq(&r.x, &solo.x), "lane {k} solution bits");
+        let (rt, st) = (r.trace.values(), solo.trace.values());
+        assert_eq!(rt.len(), st.len(), "lane {k} trace length");
+        assert!(bitwise_eq(rt, st), "lane {k} residual trace bits");
+    }
+
+    // The freed slot's trips stopped issuing: per-lane instruction
+    // counts scale with the lane's own iterations (one M1 per phase-1
+    // trip plus the merged init), and the write-ack stream stops with
+    // them (init writes 2; a full iteration 4; the converged iteration
+    // 2 — ap and the exit x).
+    for (k, r) in batch.iter().enumerate() {
+        assert_eq!(
+            r.instructions.count_for("M1") as u32,
+            r.iters + 1,
+            "lane {k}: M1 issues after the lane was freed"
+        );
+        let want_acks = if r.iters == 0 { 2 } else { 4 * r.iters };
+        assert_eq!(r.mem_acks as u32, want_acks, "lane {k}: ack stream ran on");
+        // The converged iteration dispatched the exit trip (M3 without
+        // M7): one M7 for the init p = z copy + one per full phase-3.
+        let want_m7 = if r.iters == 0 { 1 } else { r.iters };
+        assert_eq!(
+            r.instructions.count_for("M7") as u32,
+            want_m7,
+            "lane {k}: converged-exit trip should skip M7"
+        );
+    }
+}
+
+#[test]
+fn batch_results_are_independent_of_batch_composition() {
+    // A system's result must not depend on which other systems share
+    // the batch — solve lane 0 alone, in a pair, and in a quad.
+    let a = synth::laplace2d_shifted(400, 0.1);
+    let rhs = make_rhs(a.n, 4);
+    let opts = oracle_opts(Scheme::MixV3);
+    let prep = PreparedMatrix::new(&a, 2);
+    let solo = prep.solve_batch(&rhs[0..1], &opts);
+    let pair = prep.solve_batch(&rhs[0..2], &opts);
+    let quad = prep.solve_batch(&rhs, &opts);
+    for other in [&pair[0], &quad[0]] {
+        assert_eq!(solo[0].iters, other.iters);
+        assert!(bitwise_eq(&solo[0].x, &other.x));
+    }
+}
+
+#[test]
+fn zero_rhs_lane_converges_on_the_init_trip_inside_a_batch() {
+    let a = synth::laplace2d_shifted(100, 0.1);
+    let zero = vec![0.0; a.n];
+    let one = vec![1.0; a.n];
+    let rhs: Vec<&[f64]> = vec![&zero, &one];
+    let cfg = CoordinatorConfig { record_instructions: true, ..Default::default() };
+    let mut coord = Coordinator::new(cfg);
+    let mut exec = NativeExecutor::new(&a, Scheme::MixV3);
+    let batch = coord.solve_batch(&mut exec, &rhs, None);
+    assert!(batch[0].converged);
+    assert_eq!(batch[0].iters, 0, "zero RHS converges on the merged init alone");
+    assert_eq!(batch[0].instructions.count_for("M2"), 0, "no iteration trips issued");
+    assert!(batch[1].converged);
+    assert!(batch[1].iters > 0);
+}
+
+#[test]
+fn empty_batch_is_empty_on_the_program_path() {
+    let a = synth::laplace2d_shifted(64, 0.1);
+    let mut coord = Coordinator::new(CoordinatorConfig::default());
+    let mut exec = NativeExecutor::new(&a, Scheme::MixV3);
+    assert!(coord.solve_batch(&mut exec, &[], None).is_empty());
+    let prep = PreparedMatrix::new(&a, 4);
+    assert!(prep.solve_batch(&[], &oracle_opts(Scheme::MixV3)).is_empty());
+}
