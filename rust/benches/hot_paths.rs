@@ -9,6 +9,8 @@
 //!   worker-per-RHS model path (`solve_batch_workers`) and the batched
 //!   instruction program (`solve_batch` -> `Coordinator::solve_batch`,
 //!   the multi-RHS throughput row)
+//! * spawn overhead on a small system: the worker batch on per-call
+//!   `thread::scope` spawns vs the persistent pool (PERF §7/§8)
 //! * coordinator-path iterations (instruction issue + module dispatch)
 //! * time-plane: the fig9/ablation-style phase graph with busy-counter
 //!   fast-forwarding on vs off, a full `iteration_cycles` call, and the
@@ -152,6 +154,25 @@ fn main() {
     let prep1 = PreparedMatrix::new(&a, 1);
     let r = bench("solve_batch_8rhs_t1_10_iters", 1, 3, || {
         std::hint::black_box(prep1.solve_batch_workers(&rhs, &opts));
+    });
+    record(&mut recs, &r, None);
+
+    // Spawn-overhead re-measurement (PERF §7 -> §8): the same 8-RHS
+    // worker batch on a *small* system, where per-call thread::scope
+    // spawns were a visible tax, against the persistent pool the batch
+    // paths now run on.
+    let (small_n, small_nnz) = if tiny { (2_000, 24_000) } else { (8_000, 96_000) };
+    let small = synth::banded_spd(small_n, small_nnz, 1e-3, 11);
+    let prep_small = PreparedMatrix::new(&small, 8);
+    let rhs_small: Vec<Vec<f64>> = (0..8)
+        .map(|k| (0..small.n).map(|i| ((i + k * 13) % 9) as f64 / 9.0).collect())
+        .collect();
+    let r = bench("solve_batch_8rhs_small_scope_10_iters", 2, 20, || {
+        std::hint::black_box(prep_small.solve_batch_workers_scoped(&rhs_small, &opts));
+    });
+    record(&mut recs, &r, None);
+    let r = bench("solve_batch_8rhs_small_pool_10_iters", 2, 20, || {
+        std::hint::black_box(prep_small.solve_batch_workers(&rhs_small, &opts));
     });
     record(&mut recs, &r, None);
 

@@ -1,0 +1,125 @@
+//! Service-layer bench (PERF §8): replay a synthetic multi-tenant
+//! request trace through the coalescing scheduler and compare
+//! end-to-end RHS-iterations/s against the no-coalescing baseline.
+//!
+//! Rows:
+//!
+//! * `service_replay_64req_8rhs` — 64 requests from 8 tenants over 4
+//!   matrices, coalesced into batches of up to 8 lanes, executed on
+//!   the persistent pool through the bucketed program cache.
+//! * `service_coalesce_vs_sequential` — the same trace, one request at
+//!   a time, each its own single-RHS program execution with no cache
+//!   (the pre-service path).  The coalesced row must beat this one on
+//!   RHS-iterations/s.
+//!
+//! Iterations are capped (10 per request) so the rows measure the
+//! serving machinery at a fixed, path-identical amount of numerical
+//! work.  `--json` writes `BENCH_service_replay.json` (median seconds +
+//! RHS-iterations/s per row); `--tiny` shrinks the matrices for the CI
+//! `service-smoke` arm.
+
+use callipepla::bench_harness::timing::{bench, BenchResult};
+use callipepla::service::{
+    replay_coalesced, replay_sequential, synth_trace, ServiceConfig, SolverService, TraceConfig,
+};
+use callipepla::sim::AccelSimConfig;
+use callipepla::solver::SolveOptions;
+use callipepla::sparse::synth;
+
+struct Rec {
+    name: String,
+    median_s: f64,
+    mean_s: f64,
+    rhs_iters_per_s: f64,
+}
+
+fn record(recs: &mut Vec<Rec>, r: &BenchResult, rhs_iters: u64) {
+    let per_s = rhs_iters as f64 / r.median_s;
+    println!("{}   {per_s:.1} rhs-iters/s end-to-end", r.report());
+    recs.push(Rec {
+        name: r.name.clone(),
+        median_s: r.median_s,
+        mean_s: r.mean_s,
+        rhs_iters_per_s: per_s,
+    });
+}
+
+fn main() {
+    let json_mode = std::env::args().any(|a| a == "--json");
+    let tiny = std::env::args().any(|a| a == "--tiny");
+    let mut recs: Vec<Rec> = Vec::new();
+
+    // 4 matrices across several size buckets; capped iterations keep
+    // the numerical work identical on both paths.
+    let base = if tiny { 600 } else { 6_000 };
+    let mut opts = SolveOptions::callipepla();
+    opts.max_iters = 10;
+    let cfg = ServiceConfig { max_batch: 8, opts, ..Default::default() };
+    let mut svc = SolverService::new(cfg);
+    let ids: Vec<_> = (0..4)
+        .map(|k| svc.register(synth::laplace2d_shifted(base * (k + 1), 0.05 + 0.02 * k as f64)))
+        .collect();
+    for &id in &ids {
+        let e = svc.registry().entry(id);
+        println!("matrix {id}: n={} nnz={}", e.n(), e.nnz());
+    }
+    let trace_cfg = TraceConfig { requests: 64, tenants: 8, ..Default::default() };
+    let trace = synth_trace(svc.registry(), &ids, &trace_cfg);
+
+    // One untimed replay pins the workload (deterministic iteration
+    // counts) and warms the program cache to serving steady state.
+    let warm = replay_coalesced(&mut svc, &trace);
+    let rhs_iters = warm.rhs_iterations;
+    println!(
+        "trace: 64 requests, {} rhs-iterations, {} batches so far",
+        rhs_iters,
+        svc.stats().batches
+    );
+
+    let runs = if tiny { 3 } else { 5 };
+    let r = bench("service_replay_64req_8rhs", 1, runs, || {
+        std::hint::black_box(replay_coalesced(&mut svc, &trace));
+    });
+    record(&mut recs, &r, rhs_iters);
+
+    let r = bench("service_coalesce_vs_sequential", 1, runs, || {
+        std::hint::black_box(replay_sequential(svc.registry(), &trace, &opts));
+    });
+    record(&mut recs, &r, rhs_iters);
+
+    let stats = svc.drain();
+    println!(
+        "program cache at exit: {} compiled, {} hits / {} misses",
+        stats.compiled_programs, stats.cache_hits, stats.cache_misses
+    );
+    let sim_cfg = AccelSimConfig::callipepla();
+    println!(
+        "time plane: {:.0} modeled rhs-iters/s for the executed trace",
+        stats.modeled_rhs_iterations_per_second(&sim_cfg)
+    );
+    let speedup = recs[0].rhs_iters_per_s / recs[1].rhs_iters_per_s;
+    println!("coalesced vs sequential: {speedup:.2}x rhs-iters/s");
+
+    if json_mode {
+        let mut out = String::from("{\n  \"bench\": \"service_replay\",\n");
+        out.push_str(&format!(
+            "  \"trace\": {{ \"requests\": 64, \"tenants\": 8, \"matrices\": 4, \
+             \"max_batch\": 8, \"rhs_iterations\": {rhs_iters} }},\n  \"results\": [\n"
+        ));
+        for (k, rec) in recs.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{ \"name\": \"{}\", \"median_s\": {:e}, \"mean_s\": {:e}, \
+                 \"rhs_iters_per_s\": {:.4} }}{}\n",
+                rec.name,
+                rec.median_s,
+                rec.mean_s,
+                rec.rhs_iters_per_s,
+                if k + 1 < recs.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        std::fs::write("BENCH_service_replay.json", &out)
+            .expect("write BENCH_service_replay.json");
+        println!("wrote BENCH_service_replay.json ({} rows)", recs.len());
+    }
+}

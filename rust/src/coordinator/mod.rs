@@ -25,12 +25,14 @@
 //! module implementations, while any [`PhaseExecutor`] (the PJRT
 //! artifact runtime) is adapted automatically at phase granularity.
 
+use std::sync::Arc;
+
 use crate::hbm::ChannelMode;
 use crate::isa::InstTrace;
 use crate::precision::Scheme;
 use crate::program::{
-    DispatchReturn, HbmMemoryMap, InstDispatch, InstructionBus, Program, Scalars, ScalarRole,
-    VectorFile,
+    bucket_ceiling, DispatchReturn, HbmMemoryMap, InstDispatch, InstructionBus, Program,
+    ProgramCache, Scalars, ScalarRole, VectorFile,
 };
 use crate::solver::ResidualTrace;
 use crate::sparse::CsrMatrix;
@@ -110,12 +112,38 @@ pub struct CoordResult {
 pub struct Coordinator {
     /// Controller configuration.
     pub cfg: CoordinatorConfig,
+    /// Shared compiled-program memo; `None` compiles per solve (the
+    /// pre-cache behavior, still what one-shot CLI solves use).
+    cache: Option<Arc<ProgramCache>>,
 }
 
 impl Coordinator {
-    /// A controller with the given configuration.
+    /// A controller with the given configuration, compiling its program
+    /// fresh per solve.
     pub fn new(cfg: CoordinatorConfig) -> Self {
-        Self { cfg }
+        Self { cfg, cache: None }
+    }
+
+    /// A controller that draws its compiled programs from a shared
+    /// [`ProgramCache`]: solves are executed through the *bucket*
+    /// program ([`bucket_ceiling`]-sized memory map, actual-`n` vectors
+    /// rebased into it) so repeated solves for the same (bucket, mode,
+    /// lane-bucket) key never recompile.  Results are bitwise identical
+    /// to a fresh-compile [`Coordinator::new`] controller's (pinned in
+    /// `tests/service.rs`).
+    pub fn with_cache(cfg: CoordinatorConfig, cache: Arc<ProgramCache>) -> Self {
+        Self { cfg, cache: Some(cache) }
+    }
+
+    /// The length the compiled program is (or would be) built at for an
+    /// `n`-element system: the bucket ceiling when caching, exact `n`
+    /// when compiling fresh.
+    fn compile_n(&self, n: u32) -> u32 {
+        if self.cache.is_some() {
+            bucket_ceiling(n)
+        } else {
+            n
+        }
     }
 
     fn scalar(ret: &DispatchReturn, role: ScalarRole) -> f64 {
@@ -188,8 +216,10 @@ impl Coordinator {
         let zeros = if x0.is_none() { vec![0.0; n] } else { Vec::new() };
         // cap == 0 means even one lane outgrows a channel window; let
         // the single-lane compile raise the precise per-vector panic
-        // (same behavior as the pre-batch memory map).
-        let cap = (HbmMemoryMap::max_batch(n as u32) as usize).max(1);
+        // (same behavior as the pre-batch memory map).  Under a cache
+        // the lanes are laid out at the *bucket* stride, so the window
+        // caps fewer of them.
+        let cap = (HbmMemoryMap::max_batch(self.compile_n(n as u32)) as usize).max(1);
         let mut out = Vec::with_capacity(rhs.len());
         let mut start = 0;
         while start < rhs.len() {
@@ -215,7 +245,14 @@ impl Coordinator {
         use crate::vsr::Phase;
         let n = rhs[0].len() as u32;
         let lanes = rhs.len() as u32;
-        let program = Program::compile_batched(n, self.cfg.channel_mode, lanes);
+        // Cached path: the bucket program (ceiling-sized map, possibly
+        // more compiled lanes than live ones — extra lanes are just
+        // unused address windows).  The interpreter executes the actual
+        // `n`-element vectors either way, so the numerics are identical.
+        let program: Arc<Program> = match &self.cache {
+            Some(cache) => cache.get_batched(n, self.cfg.channel_mode, lanes),
+            None => Arc::new(Program::compile_batched(n, self.cfg.channel_mode, lanes)),
+        };
 
         /// Per-lane controller state: its own bus (instruction trace +
         /// write acks), value-plane vector file, and scalar slots.

@@ -15,17 +15,23 @@
 //!   kernels — Table-7 iteration counts cannot drift (asserted in
 //!   `tests/engine_parallel.rs`).
 //! * [`PreparedMatrix`] — a solve plan that derives `vals_f32`, the
-//!   Jacobi diagonal and the partition once, then serves any number of
-//!   solves: [`PreparedMatrix::solve`] runs one right-hand side with the
-//!   parallel SpMV inside the fused JPCG loop, and
-//!   [`PreparedMatrix::solve_batch`] runs many right-hand sides across
-//!   worker threads with per-worker reusable workspaces — the batching
-//!   story for serving concurrent solve requests.
+//!   Jacobi diagonal and the partition once (behind `Arc`s, so clones
+//!   and the [`service`](crate::service) registry share one copy), then
+//!   serves any number of solves: [`PreparedMatrix::solve`] runs one
+//!   right-hand side with the parallel SpMV inside the fused JPCG loop,
+//!   and [`PreparedMatrix::solve_batch`] runs many right-hand sides
+//!   through one compiled batched program — the batching story for
+//!   serving concurrent solve requests.
+//! * [`pool`] — the persistent [`WorkerPool`] (std mpsc) that replaces
+//!   per-call `thread::scope` spawns on the batch paths and executes
+//!   the service layer's coalesced batches.
 
 mod partition;
 mod plan;
+pub mod pool;
 mod spmv;
 
 pub use partition::RowPartition;
 pub use plan::PreparedMatrix;
+pub use pool::WorkerPool;
 pub use spmv::{spmv_f64_parallel, spmv_parallel};

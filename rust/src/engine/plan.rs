@@ -2,13 +2,16 @@
 //! then serve solves — singly (parallel SpMV inside one solve) or in
 //! batches (solves spread across workers, serial SpMV inside each).
 
+use std::sync::{Arc, OnceLock};
+
 use crate::precision::{apply_accumulator_model, Scheme};
+use crate::program::ProgramCache;
 use crate::solver::{
     jpcg_solve_cached_ws, jpcg_solve_with_spmv, SolveOptions, SolveResult, SolveWorkspace,
 };
 use crate::sparse::CsrMatrix;
 
-use super::{spmv_parallel, RowPartition};
+use super::{pool, spmv_parallel, RowPartition};
 
 /// A matrix prepared for repeated solving: cached f32 value view
 /// (derived lazily, on the first Mix-scheme use — a pure-FP64 plan
@@ -16,12 +19,18 @@ use super::{spmv_parallel, RowPartition};
 /// nnz-balanced [`RowPartition`] sized to the thread budget, and the
 /// scheme-independent glue to run the fused JPCG loop over the parallel
 /// SpMV.  Everything a solve needs besides the right-hand side.
+///
+/// The derived state sits behind `Arc`s, so `clone()` is cheap and
+/// every clone (and every view the
+/// [service registry](crate::service::MatrixRegistry) hands out)
+/// shares one copy — including the lazy f32 view: whichever plan
+/// derives it first fills it for all.
 #[derive(Debug, Clone)]
 pub struct PreparedMatrix<'a> {
     a: &'a CsrMatrix,
-    vals32: std::sync::OnceLock<Vec<f32>>,
-    diag: Vec<f64>,
-    partition: RowPartition,
+    vals32: Arc<OnceLock<Vec<f32>>>,
+    diag: Arc<Vec<f64>>,
+    partition: Arc<RowPartition>,
     threads: usize,
 }
 
@@ -31,11 +40,24 @@ impl<'a> PreparedMatrix<'a> {
         let threads = threads.max(1);
         Self {
             a,
-            vals32: std::sync::OnceLock::new(),
-            diag: a.jacobi_diag(),
-            partition: RowPartition::nnz_balanced(a, threads),
+            vals32: Arc::new(OnceLock::new()),
+            diag: Arc::new(a.jacobi_diag()),
+            partition: Arc::new(RowPartition::nnz_balanced(a, threads)),
             threads,
         }
+    }
+
+    /// A plan over caches that were derived elsewhere (the service
+    /// registry's matrix entries own them and hand out borrowing views
+    /// without re-deriving or copying anything).
+    pub(crate) fn from_shared(
+        a: &'a CsrMatrix,
+        diag: Arc<Vec<f64>>,
+        vals32: Arc<OnceLock<Vec<f32>>>,
+        partition: Arc<RowPartition>,
+        threads: usize,
+    ) -> Self {
+        Self { a, vals32, diag, partition, threads: threads.max(1) }
     }
 
     /// Prepare with one block per available hardware thread.
@@ -164,6 +186,22 @@ impl<'a> PreparedMatrix<'a> {
     /// assert!(results.iter().all(|r| r.converged));
     /// ```
     pub fn solve_batch(&self, rhs: &[Vec<f64>], opts: &SolveOptions) -> Vec<SolveResult> {
+        self.solve_batch_with_cache(rhs, opts, None)
+    }
+
+    /// [`PreparedMatrix::solve_batch`] drawing its compiled program
+    /// from a shared [`ProgramCache`]: the batch executes through the
+    /// bucket program for this matrix's size class, so repeated batches
+    /// (and other matrices in the same bucket) stop recompiling.  This
+    /// is the execution path of every [`service`](crate::service)
+    /// worker.  Results are bitwise identical to the uncached path —
+    /// the cache changes compile traffic, not one bit of arithmetic.
+    pub fn solve_batch_with_cache(
+        &self,
+        rhs: &[Vec<f64>],
+        opts: &SolveOptions,
+        cache: Option<&Arc<ProgramCache>>,
+    ) -> Vec<SolveResult> {
         use crate::precision::AccumulatorModel;
         use crate::solver::DotKind;
         if rhs.is_empty() {
@@ -172,17 +210,23 @@ impl<'a> PreparedMatrix<'a> {
         let program_path = opts.dot == DotKind::DelayBuffer
             && !matches!(opts.accumulator, AccumulatorModel::PaddedUnstable { .. });
         if program_path {
-            return self.solve_batch_program(rhs, opts);
+            return self.solve_batch_program(rhs, opts, cache);
         }
         self.solve_batch_workers(rhs, opts)
     }
 
     /// The batched-program execution path: one
-    /// [`Program`](crate::program::Program) compiled over the RHS lanes,
-    /// dispatched through the coordinator's instruction bus to the
-    /// native executor (engine SpMV inside).  Callers normally reach
-    /// this through [`PreparedMatrix::solve_batch`].
-    fn solve_batch_program(&self, rhs: &[Vec<f64>], opts: &SolveOptions) -> Vec<SolveResult> {
+    /// [`Program`](crate::program::Program) compiled over the RHS lanes
+    /// (or fetched from `cache`), dispatched through the coordinator's
+    /// instruction bus to the native executor (engine SpMV inside).
+    /// Callers normally reach this through
+    /// [`PreparedMatrix::solve_batch`].
+    fn solve_batch_program(
+        &self,
+        rhs: &[Vec<f64>],
+        opts: &SolveOptions,
+        cache: Option<&Arc<ProgramCache>>,
+    ) -> Vec<SolveResult> {
         use crate::coordinator::{Coordinator, CoordinatorConfig, NativeExecutor};
         use crate::solver::jpcg::flops_per_iter;
         let cfg = CoordinatorConfig {
@@ -191,7 +235,10 @@ impl<'a> PreparedMatrix<'a> {
             record_trace: opts.record_trace,
             ..Default::default()
         };
-        let mut coord = Coordinator::new(cfg);
+        let mut coord = match cache {
+            Some(cache) => Coordinator::with_cache(cfg, Arc::clone(cache)),
+            None => Coordinator::new(cfg),
+        };
         // The executor borrows this plan, so the cached f32 view /
         // diagonal / partition are shared, not copied — and a lazily
         // derived f32 cache persists on `self` across batch calls.
@@ -219,7 +266,9 @@ impl<'a> PreparedMatrix<'a> {
     /// sweeps.  This is the execution model for option sets the
     /// instruction path does not model (sequential dots, the XcgSolver
     /// accumulator) and the baseline the batched-program bench rows
-    /// compare against.  Results are bitwise those of lone
+    /// compare against.  The chunks run on the persistent
+    /// [`pool::global`] worker pool (PERF §7: no per-call thread spawn
+    /// cost).  Results are bitwise those of lone
     /// [`crate::solver::jpcg_solve`] calls, in input order.
     pub fn solve_batch_workers(&self, rhs: &[Vec<f64>], opts: &SolveOptions) -> Vec<SolveResult> {
         if rhs.is_empty() {
@@ -236,6 +285,40 @@ impl<'a> PreparedMatrix<'a> {
                 })
                 .collect();
         }
+        let chunk = rhs.len().div_ceil(workers);
+        let mut out: Vec<Option<SolveResult>> = Vec::with_capacity(rhs.len());
+        out.resize_with(rhs.len(), || None);
+        let (a, diag) = (self.a, self.diag.as_slice());
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(workers);
+        for (out_chunk, rhs_chunk) in out.chunks_mut(chunk).zip(rhs.chunks(chunk)) {
+            jobs.push(Box::new(move || {
+                let mut ws = SolveWorkspace::new();
+                for (slot, b) in out_chunk.iter_mut().zip(rhs_chunk) {
+                    *slot =
+                        Some(jpcg_solve_cached_ws(a, vals32, diag, Some(b), None, opts, &mut ws));
+                }
+            }));
+        }
+        pool::global().run_scoped(jobs);
+        out.into_iter().map(|r| r.expect("every batch slot solved")).collect()
+    }
+
+    /// [`PreparedMatrix::solve_batch_workers`] on per-call
+    /// `std::thread::scope` spawns — the pre-pool execution, kept as
+    /// the spawn-overhead baseline for the
+    /// `solve_batch_8rhs_small_{scope,pool}_10_iters` bench rows
+    /// (PERF §7/§8).  Semantics and results are identical to the pooled
+    /// path.
+    pub fn solve_batch_workers_scoped(
+        &self,
+        rhs: &[Vec<f64>],
+        opts: &SolveOptions,
+    ) -> Vec<SolveResult> {
+        if rhs.is_empty() {
+            return Vec::new();
+        }
+        let workers = self.threads.min(rhs.len()).max(1);
+        let vals32 = self.vals32_for(opts.scheme);
         let chunk = rhs.len().div_ceil(workers);
         let mut out: Vec<Option<SolveResult>> = Vec::with_capacity(rhs.len());
         out.resize_with(rhs.len(), || None);

@@ -1,0 +1,333 @@
+//! The persistent worker pool (PERF §7 follow-up): a fixed set of
+//! threads fed over std `mpsc`, replacing per-call `thread::scope`
+//! spawns on the batch paths.  Spawning an OS thread costs tens of
+//! microseconds; on small systems (n ≲ 10k) a whole 10-iteration solve
+//! is of that order, so per-call spawning was a measurable tax
+//! (`solve_batch_8rhs_small_*` rows in `BENCH_hot_paths.json`).
+//!
+//! Two entry points:
+//!
+//! * [`WorkerPool::spawn`] — fire-and-forget `'static` jobs, what the
+//!   [`service`](crate::service) scheduler uses to execute coalesced
+//!   batches (results come back through its completion handles).
+//! * [`WorkerPool::run_scoped`] — a `thread::scope` replacement for
+//!   *borrowing* jobs: blocks until every job has run.  The caller
+//!   participates in draining its own job queue, so the call makes
+//!   progress even when every pool thread is busy (or when called from
+//!   *inside* a pool job) — submission never deadlocks on pool
+//!   capacity.
+//!
+//! A process-wide pool sized to the machine is available via
+//! [`global`]; the engine's
+//! [`solve_batch_workers`](crate::engine::PreparedMatrix::solve_batch_workers)
+//! runs on it.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// A lifetime-erased scoped job (see the safety notes in
+/// [`WorkerPool::run_scoped`]).
+type ScopedJob = Box<dyn FnOnce() + Send + 'static>;
+
+/// One `run_scoped` call's shared state: the job queue, the count of
+/// jobs not yet finished, and the panic flag.
+struct ScopeState {
+    queue: Mutex<VecDeque<ScopedJob>>,
+    pending: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+impl ScopeState {
+    /// Pop and run one queued job; `false` when the queue is empty.
+    /// Panics inside the job are caught and flagged, so this never
+    /// unwinds into the worker loop.
+    fn run_one(&self) -> bool {
+        let job = self.queue.lock().expect("scope queue poisoned").pop_front();
+        let Some(job) = job else { return false };
+        if catch_unwind(AssertUnwindSafe(job)).is_err() {
+            self.panicked.store(true, Ordering::SeqCst);
+        }
+        self.finish_one();
+        true
+    }
+
+    fn finish_one(&self) {
+        let mut p = self.pending.lock().expect("scope counter poisoned");
+        *p -= 1;
+        if *p == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// Block until every job of the scope has finished.
+    fn wait(&self) {
+        let mut p = self.pending.lock().expect("scope counter poisoned");
+        while *p > 0 {
+            p = self.done.wait(p).expect("scope counter poisoned");
+        }
+    }
+}
+
+/// What travels down the pool channel.
+enum Task {
+    /// A fire-and-forget job.
+    Once(Box<dyn FnOnce() + Send + 'static>),
+    /// An invitation to help drain one scoped call's queue.
+    Scope(Arc<ScopeState>),
+}
+
+/// A fixed-size persistent thread pool (std `mpsc`, no dependencies).
+/// Dropping the pool closes the channel; workers finish every job
+/// already submitted, then exit, and the drop joins them.
+pub struct WorkerPool {
+    tx: Option<Sender<Task>>,
+    handles: Vec<JoinHandle<()>>,
+    workers: usize,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool").field("workers", &self.workers).finish()
+    }
+}
+
+impl WorkerPool {
+    /// A pool of `workers` threads (>= 1).
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let (tx, rx) = channel::<Task>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..workers)
+            .map(|k| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("callipepla-pool-{k}"))
+                    .spawn(move || Self::worker_loop(&rx))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self { tx: Some(tx), handles, workers }
+    }
+
+    /// A pool with one thread per available hardware thread.
+    pub fn with_default_threads() -> Self {
+        Self::new(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+    }
+
+    fn worker_loop(rx: &Mutex<Receiver<Task>>) {
+        loop {
+            // Hold the lock only for the blocking recv; the channel
+            // disconnects (Err) when the pool is dropped.
+            let task = match rx.lock().expect("pool receiver poisoned").recv() {
+                Ok(t) => t,
+                Err(_) => return,
+            };
+            match task {
+                Task::Once(job) => {
+                    // A panicking fire-and-forget job must not kill the
+                    // worker; the submitter observes failure through its
+                    // own completion channel (e.g. service tickets).
+                    let _ = catch_unwind(AssertUnwindSafe(job));
+                }
+                Task::Scope(scope) => while scope.run_one() {},
+            }
+        }
+    }
+
+    /// Worker-thread count.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    fn sender(&self) -> &Sender<Task> {
+        self.tx.as_ref().expect("pool channel open until drop")
+    }
+
+    /// Submit a fire-and-forget job.  A panic inside the job is caught
+    /// by the worker (the pool survives); deliver failure through the
+    /// job's own result channel.
+    pub fn spawn(&self, job: impl FnOnce() + Send + 'static) {
+        self.sender().send(Task::Once(Box::new(job))).expect("pool workers alive");
+    }
+
+    /// Run borrowing jobs to completion — the persistent-pool
+    /// replacement for per-call `std::thread::scope`.  Blocks until
+    /// every job has finished; pool threads help, and the calling
+    /// thread drains its own queue too, so the call completes even
+    /// with zero free workers (including when called from inside a
+    /// pool job — nested use cannot deadlock).
+    ///
+    /// Like `thread::scope`, panics in jobs are collected and re-raised
+    /// here (as one panic) after every job has ended.
+    pub fn run_scoped<'env>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        if jobs.is_empty() {
+            return;
+        }
+        let n = jobs.len();
+        // SAFETY: the 'env borrows captured by the jobs outlive this
+        // call, and this function does not return (or unwind — nothing
+        // below panics outside the caught job closures) until
+        // `pending == 0`, i.e. until every erased job has been consumed
+        // and finished.  No job can run after return, so no borrow is
+        // ever used past its lifetime.
+        let erased: VecDeque<ScopedJob> = jobs
+            .into_iter()
+            .map(|j| unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, ScopedJob>(j)
+            })
+            .collect();
+        let scope = Arc::new(ScopeState {
+            queue: Mutex::new(erased),
+            pending: Mutex::new(n),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        // Invite up to one helper per remaining job; the caller runs
+        // jobs too, so n == 1 needs no helper at all.
+        for _ in 0..self.workers.min(n.saturating_sub(1)) {
+            self.sender().send(Task::Scope(Arc::clone(&scope))).expect("pool workers alive");
+        }
+        while scope.run_one() {}
+        scope.wait();
+        if scope.panicked.load(Ordering::SeqCst) {
+            panic!("a job submitted to WorkerPool::run_scoped panicked");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Closing the channel lets workers drain what was already
+        // submitted, then exit; joining makes shutdown deterministic.
+        self.tx.take();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The process-wide pool (one thread per hardware thread), created on
+/// first use.  The engine's batch paths run on it so back-to-back batch
+/// calls stop paying per-call spawn cost.
+pub fn global() -> &'static WorkerPool {
+    static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+    GLOBAL.get_or_init(WorkerPool::with_default_threads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn scoped_jobs_all_run_and_borrow_locals() {
+        let pool = WorkerPool::new(4);
+        let mut outputs = vec![0usize; 64];
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = outputs
+            .iter_mut()
+            .enumerate()
+            .map(|(k, slot)| Box::new(move || *slot = k + 1) as Box<dyn FnOnce() + Send + '_>)
+            .collect();
+        pool.run_scoped(jobs);
+        assert!(outputs.iter().enumerate().all(|(k, v)| *v == k + 1));
+    }
+
+    #[test]
+    fn scoped_call_completes_with_a_single_worker_and_nested_scopes() {
+        // One worker, nested run_scoped on the *same* pool from inside
+        // a scoped job: the callers drain their own queues, so this
+        // cannot deadlock on pool capacity.
+        let pool = WorkerPool::new(1);
+        let count = AtomicUsize::new(0);
+        let outer: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+            .map(|_| {
+                let (pool, count) = (&pool, &count);
+                let job = move || {
+                    let inner: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                        .map(|_| {
+                            let job = move || {
+                                count.fetch_add(1, Ordering::SeqCst);
+                            };
+                            Box::new(job) as Box<dyn FnOnce() + Send + '_>
+                        })
+                        .collect();
+                    pool.run_scoped(inner);
+                };
+                Box::new(job) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(outer);
+        assert_eq!(count.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_alive() {
+        let before = global().workers();
+        assert!(before >= 1);
+        let flag = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..3)
+            .map(|_| {
+                let flag = &flag;
+                Box::new(move || {
+                    flag.fetch_add(1, Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        global().run_scoped(jobs);
+        assert_eq!(flag.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn spawn_runs_detached_jobs() {
+        let pool = WorkerPool::new(2);
+        let (tx, rx) = channel();
+        for k in 0..8 {
+            let tx = tx.clone();
+            pool.spawn(move || tx.send(k).expect("receiver alive"));
+        }
+        let mut got: Vec<i32> = (0..8).map(|_| rx.recv().expect("job ran")).collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_panic_is_propagated_after_all_jobs_finish() {
+        let pool = WorkerPool::new(2);
+        let ran = AtomicUsize::new(0);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..6)
+                .map(|k| {
+                    Box::new(move || {
+                        if k == 3 {
+                            panic!("boom");
+                        }
+                        ran.fetch_add(1, Ordering::SeqCst);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_scoped(jobs);
+        }));
+        assert!(result.is_err(), "the scope re-raises the job panic");
+        assert_eq!(ran.load(Ordering::SeqCst), 5, "the other jobs still ran");
+    }
+
+    #[test]
+    fn dropping_the_pool_finishes_submitted_work() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = WorkerPool::new(2);
+            for _ in 0..16 {
+                let c = Arc::clone(&counter);
+                pool.spawn(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        } // drop joins the workers after the queue drains
+        assert_eq!(counter.load(Ordering::SeqCst), 16);
+    }
+}

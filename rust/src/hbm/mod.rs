@@ -17,7 +17,7 @@
 pub const BEAT_BYTES: u64 = 64;
 
 /// Channel configuration for one long vector.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ChannelMode {
     /// One channel: read and write serialize (Fig. 7c).
     Single,

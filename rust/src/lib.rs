@@ -22,6 +22,7 @@
 //!
 //! | Layer | Where | Paper section |
 //! |---|---|---|
+//! | service layer | [`service`] (matrix registry, bucketed program cache, coalescing batch scheduler) | serving extension of §4 |
 //! | L3 coordinator | [`coordinator`] (controller + native interpreter) | §3, §4.3, Fig. 4 |
 //! | instruction program | [`program`] (HBM memory map, compiled trips, bus), [`isa`], [`modules`], [`vsr`] | §4–§5 |
 //! | time plane | [`sim`] (graphs derived from the program), [`hbm`] | §5.6–§5.7, §7 |
@@ -35,7 +36,11 @@
 //! lane axis with per-RHS scalar slots and per-RHS converged exit — and
 //! `PreparedMatrix::solve_batch` routes whole batches through
 //! `Coordinator::solve_batch` on that one path (bitwise-identical per
-//! RHS to lone [`jpcg_solve`] calls).  The complete Type-I/II/III
+//! RHS to lone [`jpcg_solve`] calls).  Since PR 4 the [`service`]
+//! layer turns that into a serving system: a matrix registry, a
+//! bucketed compiled-program cache, and a coalescing batch scheduler
+//! on a persistent worker pool (`callipepla serve`, `docs/SERVICE.md`).
+//! The complete Type-I/II/III
 //! instruction reference, wire encodings, and the batch-axis extension
 //! live in `docs/ISA.md`; build/quickstart walkthroughs in the
 //! top-level `README.md`.
@@ -68,6 +73,7 @@ pub mod precision;
 pub mod program;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod solver;
 pub mod sparse;

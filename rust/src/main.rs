@@ -13,10 +13,16 @@
 //! callipepla fig9   [--out traces/] [--scale 0.05]
 //! callipepla sim    --matrix M7 [--scale 0.05] [--batch 8]   (cycle breakdown)
 //! callipepla program [--n 16384] [--mode double] [--batch 8] (compiled ISA dump)
+//! callipepla serve  [--requests 64] [--matrices 4] [--max-batch 8]
 //! ```
 //!
 //! `solve --batch N` runs N right-hand sides through one compiled
 //! batched program (the multi-RHS path of `PreparedMatrix::solve_batch`).
+//! `serve` replays a synthetic multi-tenant request trace through the
+//! service layer (registry + bucketed program cache + coalescing
+//! scheduler, `docs/SERVICE.md`) and reports end-to-end RHS-iterations/s
+//! against the no-coalescing baseline, plus the time-plane pricing of
+//! the same trace.
 //!
 //! (Arg parsing is hand-rolled: clap is not available offline.)
 
@@ -56,6 +62,7 @@ fn main() {
         "fig9" => cmd_fig9(&flags),
         "sim" => cmd_sim(&flags),
         "program" => cmd_program(&flags),
+        "serve" => cmd_serve(&flags),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -71,12 +78,14 @@ fn main() {
 fn print_usage() {
     eprintln!(
         "callipepla — stream-centric ISA + mixed-precision JPCG (FPGA'23 reproduction)\n\
-         commands: solve suite table4 table5 table6 table7 fig9 sim program\n\
+         commands: solve suite table4 table5 table6 table7 fig9 sim program serve\n\
          common flags: --matrix <Mxx|name>  --mtx <file>  --scale <f>  --scheme <fp64|mixv1|mixv2|mixv3>\n\
          \u{20}                --matrices M1,M2  --max-iters <n>  --threads <n>  --pjrt  --out <dir>\n\
          \u{20}                solve: --coordinator [--serpens-stream]  --batch <rhs>\n\
          \u{20}                program: --n <len>  --mode <double|single>  --batch <rhs>\n\
-         \u{20}                sim: --batch <rhs>"
+         \u{20}                sim: --batch <rhs>\n\
+         \u{20}                serve: --requests <n>  --matrices <k>  --tenants <t>  --max-batch <b>\n\
+         \u{20}                       --workers <w>  --seed <s>  (plus --scale/--scheme/--max-iters)"
     );
 }
 
@@ -420,6 +429,107 @@ fn cmd_program(flags: &HashMap<String, String>) -> Result<()> {
                 e.fifo_depth
             );
         }
+    }
+    Ok(())
+}
+
+/// Replay a synthetic multi-tenant request trace through the solver
+/// service (registry + bucketed program cache + coalescing scheduler)
+/// and report end-to-end RHS-iterations/s against the no-coalescing
+/// baseline, plus the time plane's pricing of the same trace.
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    use callipepla::service::{
+        replay_coalesced, replay_sequential, synth_trace, ServiceConfig, SolverService,
+        TraceConfig,
+    };
+
+    let requests = flag_u32(flags, "requests", 64).max(1) as usize;
+    let num_matrices = flag_u32(flags, "matrices", 4).max(1) as usize;
+    let tenants = flag_u32(flags, "tenants", 8).max(1);
+    let max_batch = flag_u32(flags, "max-batch", 8).max(1) as usize;
+    let workers = flag_u32(flags, "workers", 0) as usize; // 0 = machine default
+    let scale = flag_f64(flags, "scale", 0.02);
+    let seed = flags.get("seed").and_then(|v| v.parse().ok()).unwrap_or(0xCA111_9E91A_u64);
+    let scheme = parse_scheme(flags)?;
+    let max_iters = flag_u32(flags, "max-iters", 20_000);
+
+    let mut opts = SolveOptions::callipepla();
+    opts.scheme = scheme;
+    opts.max_iters = max_iters;
+    let mut cfg = ServiceConfig { max_batch, opts, ..Default::default() };
+    if workers > 0 {
+        cfg.workers = workers;
+    }
+    let mut svc = SolverService::new(cfg);
+
+    // Few matrices, sizes spread so several land in different buckets.
+    let ids: Vec<_> = (0..num_matrices)
+        .map(|k| {
+            let n = (((k + 1) as f64) * 60_000.0 * scale).round().max(64.0) as usize;
+            let a = sparse::synth::laplace2d_shifted(n, 0.05 + 0.02 * k as f64);
+            let id = svc.register(a);
+            let e = svc.registry().entry(id);
+            println!("registered {id}: n={} nnz={}", e.n(), e.nnz());
+            id
+        })
+        .collect();
+
+    let trace_cfg = TraceConfig { requests, tenants, rate: 1.0, seed };
+    let trace = synth_trace(svc.registry(), &ids, &trace_cfg);
+    println!(
+        "replaying {requests} requests from {tenants} tenants over {num_matrices} matrices \
+         (max_batch={max_batch}, workers={}, seed={seed:#x})",
+        svc.config().workers
+    );
+
+    let coal = replay_coalesced(&mut svc, &trace);
+    let stats = svc.drain();
+    let seq = replay_sequential(svc.registry(), &trace, &opts);
+
+    let identical = coal.results.iter().zip(&seq.results).all(|(a, b)| {
+        a.iters == b.iters
+            && a.final_rr.to_bits() == b.final_rr.to_bits()
+            && a.x.iter().zip(&b.x).all(|(u, v)| u.to_bits() == v.to_bits())
+    });
+    println!(
+        "coalesced:  {:>10.1} rhs-iters/s  ({} rhs-iterations in {:.3}s, {} batches)",
+        coal.rhs_iterations_per_second(),
+        coal.rhs_iterations,
+        coal.wall_s,
+        stats.batches
+    );
+    println!(
+        "sequential: {:>10.1} rhs-iters/s  ({} rhs-iterations in {:.3}s, {} program runs)",
+        seq.rhs_iterations_per_second(),
+        seq.rhs_iterations,
+        seq.wall_s,
+        requests
+    );
+    println!(
+        "speedup: {:.2}x   per-request results bitwise identical to lone solves: {identical}",
+        coal.rhs_iterations_per_second() / seq.rhs_iterations_per_second().max(1e-12)
+    );
+    println!(
+        "program cache: {} compiled, {} hits / {} misses",
+        stats.compiled_programs, stats.cache_hits, stats.cache_misses
+    );
+    for &id in &ids {
+        let submitted = trace.iter().filter(|t| t.request.matrix == id).count();
+        let execs = stats.executions_for(id);
+        println!(
+            "  {id}: {submitted} requests -> {execs} batch executions \
+             (bound: ceil({submitted}/{max_batch}) = {})",
+            submitted.div_ceil(max_batch)
+        );
+    }
+    let sim_cfg = AccelSimConfig::callipepla();
+    println!(
+        "time plane: {} modeled cycles for the executed trace, {:.0} modeled rhs-iters/s",
+        stats.modeled_cycles(&sim_cfg),
+        stats.modeled_rhs_iterations_per_second(&sim_cfg)
+    );
+    if !identical {
+        bail!("coalesced results diverged from the sequential baseline");
     }
     Ok(())
 }

@@ -1,0 +1,216 @@
+//! The bucketed program cache: compile a [`Program`] once per matrix
+//! *bucket*, reuse it for every solve that fits (the ROADMAP "one
+//! program per matrix bucket" follow-up).
+//!
+//! §4's whole point is that one instruction stream "supports an
+//! arbitrary problem" — the compiled trips depend only on the memory
+//! map, not the matrix values — so recompiling per solve was pure
+//! waste.  The cache keys programs by
+//! `(bucket ceiling, channel mode, lane bucket)`:
+//!
+//! * **bucket ceiling** — `n` rounded up to the next power of two (at
+//!   least [`MIN_BUCKET`]), so every size inside a bucket shares one
+//!   program.  The [`HbmMemoryMap`](super::HbmMemoryMap) is sized to
+//!   the ceiling and a smaller `n` is *rebased into it*: the value
+//!   plane executes on the actual vectors (the interpreter never reads
+//!   the compiled `len`), so a bucket program's results are **bitwise
+//!   identical** to an exact-`n` program's (pinned in
+//!   `tests/service.rs`).  Only the recorded addresses/beat counts
+//!   carry the ceiling — the same conservatism a real deployment pays
+//!   by provisioning HBM windows for the largest tenant in the bucket.
+//! * **lane bucket** — the requested lane count rounded up to the next
+//!   power of two (clamped to the bucket's
+//!   [`HbmMemoryMap::max_batch`](super::HbmMemoryMap::max_batch)), so a
+//!   partial flush of 5 right-hand sides reuses the 8-lane program
+//!   instead of compiling a fresh 5-lane one.  Executing fewer live
+//!   lanes than the program was compiled for is always legal — lanes
+//!   are independent address windows.
+//!
+//! The cache is `Sync` (a mutexed map + atomic hit/miss counters) and
+//! meant to be shared: one [`Arc<ProgramCache>`] serves every
+//! [`Coordinator`](crate::coordinator::Coordinator) and every worker of
+//! the [`service`](crate::service) layer.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::hbm::ChannelMode;
+
+use super::mem_map::CHANNEL_WINDOW_BEATS;
+use super::{BatchId, HbmMemoryMap, Program};
+
+/// Smallest bucket ceiling: below this every program is the same size,
+/// so finer buckets would only multiply compiles without saving memory.
+pub const MIN_BUCKET: u32 = 1024;
+
+/// f64 elements one 256 MiB channel window holds (the largest mappable
+/// vector, hence the largest possible bucket ceiling).
+const WINDOW_ELEMS: u32 = 8 * CHANNEL_WINDOW_BEATS;
+
+/// The bucket ceiling `n` compiles under: the next power of two, at
+/// least [`MIN_BUCKET`].  An `n` at or beyond the channel-window
+/// capacity is returned unchanged (there is no headroom to round into —
+/// and past the window the compile itself reports the precise error).
+///
+/// ```
+/// use callipepla::program::cache::bucket_ceiling;
+/// assert_eq!(bucket_ceiling(700), 1024);
+/// assert_eq!(bucket_ceiling(1024), 1024);
+/// assert_eq!(bucket_ceiling(1025), 2048);
+/// assert_eq!(bucket_ceiling(100_000), 131_072);
+/// ```
+pub fn bucket_ceiling(n: u32) -> u32 {
+    if n >= WINDOW_ELEMS {
+        return n;
+    }
+    n.max(1).next_power_of_two().max(MIN_BUCKET)
+}
+
+/// The lane count a `lanes`-wide batch compiles under: the next power
+/// of two, clamped to what the bucket's channel window can hold (and
+/// never below the request itself — an over-window request is left to
+/// the compile's own diagnostic).
+pub fn lane_bucket(bucket_n: u32, lanes: BatchId) -> BatchId {
+    let cap = HbmMemoryMap::max_batch(bucket_n).max(1);
+    lanes.max(1).next_power_of_two().min(cap).max(lanes)
+}
+
+/// A shared, thread-safe memo of compiled [`Program`]s keyed by
+/// `(bucket ceiling, channel mode, lane bucket)`.
+///
+/// ```
+/// use std::sync::Arc;
+/// use callipepla::hbm::ChannelMode;
+/// use callipepla::program::ProgramCache;
+///
+/// let cache = Arc::new(ProgramCache::new());
+/// let a = cache.get_batched(700, ChannelMode::Double, 3);
+/// let b = cache.get_batched(900, ChannelMode::Double, 4);
+/// // Same (1024, Double, 4) bucket: one compile served both.
+/// assert!(Arc::ptr_eq(&a, &b));
+/// assert_eq!((cache.misses(), cache.hits()), (1, 1));
+/// ```
+#[derive(Debug, Default)]
+pub struct ProgramCache {
+    /// Per-key compile slots.  The map mutex is held only to look up /
+    /// insert a slot; the compile itself runs inside the slot's
+    /// `OnceLock`, so a slow first-touch compile for one bucket never
+    /// blocks hits (or first touches) on other buckets.
+    map: Mutex<HashMap<(u32, ChannelMode, BatchId), Arc<OnceLock<Arc<Program>>>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ProgramCache {
+    /// An empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The cached program for a single right-hand side of length `n`.
+    pub fn get(&self, n: u32, mode: ChannelMode) -> Arc<Program> {
+        self.get_batched(n, mode, 1)
+    }
+
+    /// The cached program serving `lanes` right-hand sides of length
+    /// `n`: compiled at the bucket ceiling / lane bucket on the first
+    /// request for that key (concurrent first requests block only each
+    /// other, never other keys), shared ever after.  The returned
+    /// program's `n` and `batch` are the *bucket* values — callers
+    /// execute their actual (smaller or equal) problem inside it.
+    pub fn get_batched(&self, n: u32, mode: ChannelMode, lanes: BatchId) -> Arc<Program> {
+        let bucket = bucket_ceiling(n);
+        let lanes = lane_bucket(bucket, lanes);
+        let slot = {
+            let mut map = self.map.lock().expect("program cache poisoned");
+            Arc::clone(map.entry((bucket, mode, lanes)).or_default())
+        };
+        let mut compiled_here = false;
+        let program = slot.get_or_init(|| {
+            compiled_here = true;
+            Arc::new(Program::compile_batched(bucket, mode, lanes))
+        });
+        if compiled_here {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        Arc::clone(program)
+    }
+
+    /// Lookups served from the memo.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that compiled a fresh program.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Distinct compiled programs held.
+    pub fn len(&self) -> usize {
+        let map = self.map.lock().expect("program cache poisoned");
+        map.values().filter(|slot| slot.get().is_some()).count()
+    }
+
+    /// Whether nothing has been compiled yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_rule_is_pow2_with_floor() {
+        assert_eq!(bucket_ceiling(1), MIN_BUCKET);
+        assert_eq!(bucket_ceiling(1024), 1024);
+        assert_eq!(bucket_ceiling(1025), 2048);
+        assert_eq!(bucket_ceiling(16_384), 16_384);
+        assert_eq!(bucket_ceiling(1_437_960), 1 << 21);
+        // At/above the window there is no rounding headroom.
+        assert_eq!(bucket_ceiling(WINDOW_ELEMS), WINDOW_ELEMS);
+        assert_eq!(bucket_ceiling(WINDOW_ELEMS + 3), WINDOW_ELEMS + 3);
+    }
+
+    #[test]
+    fn lane_bucket_rounds_up_within_the_window() {
+        assert_eq!(lane_bucket(1024, 1), 1);
+        assert_eq!(lane_bucket(1024, 5), 8);
+        assert_eq!(lane_bucket(1024, 8), 8);
+        // 1024-elem lanes are 128 beats: 32768 lanes fill the window.
+        let cap = HbmMemoryMap::max_batch(1024);
+        assert_eq!(lane_bucket(1024, cap), cap);
+    }
+
+    #[test]
+    fn same_bucket_shares_one_compile() {
+        let cache = ProgramCache::new();
+        let a = cache.get_batched(700, ChannelMode::Double, 3);
+        let b = cache.get_batched(1000, ChannelMode::Double, 4);
+        assert!(Arc::ptr_eq(&a, &b), "both live in the (1024, Double, 4) bucket");
+        assert_eq!(a.n, 1024);
+        assert_eq!(a.batch, 4);
+        assert_eq!(cache.len(), 1);
+        assert_eq!((cache.misses(), cache.hits()), (1, 1));
+        // A different mode or lane bucket is a different program.
+        let c = cache.get_batched(700, ChannelMode::Single, 3);
+        assert!(!Arc::ptr_eq(&a, &c));
+        let d = cache.get_batched(700, ChannelMode::Double, 9);
+        assert_eq!(d.batch, 16);
+        assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn single_rhs_get_is_the_lane_1_bucket() {
+        let cache = ProgramCache::new();
+        let a = cache.get(4_096, ChannelMode::Double);
+        let b = cache.get_batched(4_096, ChannelMode::Double, 1);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(a.batch, 1);
+    }
+}

@@ -1,0 +1,60 @@
+//! The solver **service layer**: what turns the repo from "a solver you
+//! call" into "a solver you run".
+//!
+//! Callipepla's premise is sustained throughput — one compiled
+//! instruction stream drives the whole solve, and since PR 3 it
+//! amortizes over many right-hand sides.  A production deployment adds
+//! one more axis: many *requests* against few *matrices* (the reservoir
+//! simulator of Hogervorst et al., arXiv:2101.01745, and the repeated
+//! Dirac-operator solves of Korcyl & Korcyl, arXiv:2001.05218, are both
+//! this shape).  This module is that serving layer, in four pieces:
+//!
+//! * [`MatrixRegistry`] — admit a matrix once, derive its
+//!   [`PreparedMatrix`](crate::engine::PreparedMatrix) state once,
+//!   share it (`Arc`-held entries, zero-copy plan views) for every
+//!   solve that follows.
+//! * a **bucketed program cache**
+//!   ([`ProgramCache`](crate::program::ProgramCache)) — one compiled
+//!   [`Program`](crate::program::Program) per (size bucket, channel
+//!   mode, lane bucket), with smaller systems rebased into the bucket's
+//!   memory map; solves stop recompiling per call.
+//! * the **coalescing scheduler** ([`SolverService`]) — a submission
+//!   queue that groups pending right-hand sides by matrix into lanes of
+//!   one batched program (up to `max_batch`), flushing deterministically
+//!   on batch-full or queue-drain; per-request [`SolveTicket`]
+//!   completion handles; at most ⌈requests / max_batch⌉ program
+//!   executions per matrix.  Every result stays **bitwise identical**
+//!   to a lone [`jpcg_solve`](crate::solver::jpcg_solve) call.
+//! * execution on the persistent
+//!   [`WorkerPool`](crate::engine::WorkerPool) (no per-solve thread
+//!   spawns), with [`replay`] providing the synthetic multi-tenant
+//!   trace scenario, the no-coalescing baseline, and — through
+//!   [`ServiceStats::modeled_cycles`] — the time-plane pricing of the
+//!   same serving trace via
+//!   [`sim::schedule_cycles`](crate::sim::schedule_cycles).
+//!
+//! Design notes, the flush policy, and the bucket sizing rule live in
+//! `docs/SERVICE.md`; the CLI front-end is `callipepla serve`.
+//!
+//! ```
+//! use callipepla::service::{ServiceConfig, SolveRequest, SolverService};
+//! use callipepla::sparse::synth;
+//!
+//! let mut svc = SolverService::new(ServiceConfig::default());
+//! let id = svc.register(synth::laplace2d_shifted(100, 0.2));
+//! let ticket = svc.submit(SolveRequest::new(id, vec![1.0; 100]));
+//! svc.flush(); // queue-drained flush (the batch was not full)
+//! assert!(ticket.wait().converged);
+//! ```
+
+pub mod registry;
+pub mod replay;
+pub mod scheduler;
+
+pub use registry::{MatrixEntry, MatrixId, MatrixRegistry};
+pub use replay::{
+    replay_coalesced, replay_sequential, synth_trace, ReplayOutcome, TraceConfig, TracedRequest,
+};
+pub use scheduler::{
+    BatchRecord, ServiceConfig, ServiceStats, SolveRequest, SolveTicket, SolverService,
+};

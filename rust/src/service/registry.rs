@@ -1,0 +1,169 @@
+//! The matrix registry: admit a matrix once, derive its solve state
+//! once, serve it forever.
+//!
+//! A serving deployment sees many solves against few matrices (the
+//! reservoir-simulation and lattice-QCD deployments of arXiv:2101.01745
+//! and arXiv:2001.05218 are exactly this shape), so everything a solve
+//! needs besides the right-hand side — the Jacobi diagonal, the
+//! nnz-balanced row partition, the lazy f32 value view — is derived at
+//! admission and shared from then on.  Entries are `Arc`-held so worker
+//! threads keep a matrix alive for as long as its batches run.
+
+use std::sync::{Arc, OnceLock};
+
+use crate::engine::{PreparedMatrix, RowPartition};
+use crate::sparse::CsrMatrix;
+
+/// Handle to an admitted matrix (index into the registry, stable for
+/// the registry's lifetime).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct MatrixId(pub(crate) u32);
+
+impl MatrixId {
+    /// The registry slot this id names.
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl std::fmt::Display for MatrixId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "A{}", self.0)
+    }
+}
+
+/// One admitted matrix plus its derived solve state.  [`MatrixEntry::plan`]
+/// hands out borrowing [`PreparedMatrix`] views whose caches are the
+/// entry's own `Arc`s — building a view is O(1) and the lazy f32 view,
+/// once derived by any worker, is filled for all.
+#[derive(Debug)]
+pub struct MatrixEntry {
+    a: Arc<CsrMatrix>,
+    diag: Arc<Vec<f64>>,
+    vals32: Arc<OnceLock<Vec<f32>>>,
+    partition: Arc<RowPartition>,
+    threads: usize,
+}
+
+impl MatrixEntry {
+    /// Derive the solve state for `a` with an SpMV thread budget of
+    /// `threads` (>= 1) per plan view.
+    pub fn new(a: Arc<CsrMatrix>, threads: usize) -> Self {
+        let threads = threads.max(1);
+        let diag = Arc::new(a.jacobi_diag());
+        let partition = Arc::new(RowPartition::nnz_balanced(&a, threads));
+        Self { a, diag, vals32: Arc::new(OnceLock::new()), partition, threads }
+    }
+
+    /// The admitted matrix.
+    pub fn matrix(&self) -> &CsrMatrix {
+        &self.a
+    }
+
+    /// Vector length.
+    pub fn n(&self) -> usize {
+        self.a.n
+    }
+
+    /// Nonzero count.
+    pub fn nnz(&self) -> usize {
+        self.a.nnz()
+    }
+
+    /// A [`PreparedMatrix`] view over this entry's shared caches —
+    /// nothing is re-derived or copied.
+    pub fn plan(&self) -> PreparedMatrix<'_> {
+        PreparedMatrix::from_shared(
+            &self.a,
+            Arc::clone(&self.diag),
+            Arc::clone(&self.vals32),
+            Arc::clone(&self.partition),
+            self.threads,
+        )
+    }
+}
+
+/// Append-only registry of admitted matrices.
+///
+/// ```
+/// use callipepla::service::MatrixRegistry;
+/// use callipepla::sparse::synth;
+///
+/// let mut reg = MatrixRegistry::new();
+/// let id = reg.admit(synth::laplace2d_shifted(100, 0.2), 1);
+/// assert_eq!(reg.entry(id).n(), reg.entry(id).matrix().n);
+/// assert_eq!(reg.len(), 1);
+/// ```
+#[derive(Debug, Default)]
+pub struct MatrixRegistry {
+    entries: Vec<Arc<MatrixEntry>>,
+}
+
+impl MatrixRegistry {
+    /// An empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Admit a matrix: derive its solve state once, get a stable id.
+    pub fn admit(&mut self, a: CsrMatrix, threads: usize) -> MatrixId {
+        let id = MatrixId(u32::try_from(self.entries.len()).expect("registry ids fit u32"));
+        self.entries.push(Arc::new(MatrixEntry::new(Arc::new(a), threads)));
+        id
+    }
+
+    /// The entry behind an id (panics on a foreign id — ids are only
+    /// minted by [`MatrixRegistry::admit`] on this registry).
+    pub fn entry(&self, id: MatrixId) -> &Arc<MatrixEntry> {
+        &self.entries[id.index()]
+    }
+
+    /// Ids in admission order.
+    pub fn ids(&self) -> impl Iterator<Item = MatrixId> + '_ {
+        (0..self.entries.len() as u32).map(MatrixId)
+    }
+
+    /// Number of admitted matrices.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether nothing has been admitted.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::{jpcg_solve, SolveOptions};
+    use crate::sparse::synth;
+
+    #[test]
+    fn entry_plans_share_caches_and_solve_bitwise() {
+        let a = synth::laplace2d_shifted(400, 0.1);
+        let reference = jpcg_solve(&a, None, None, &SolveOptions::callipepla());
+        let entry = MatrixEntry::new(Arc::new(a), 2);
+        // Two views, one shared lazy f32 cache: deriving through the
+        // first fills it for the second.
+        let p1 = entry.plan();
+        let p2 = entry.plan();
+        let v1 = p1.vals32().as_ptr();
+        let v2 = p2.vals32().as_ptr();
+        assert_eq!(v1, v2, "views share one f32 cache");
+        let res = p2.solve(None, None, &SolveOptions::callipepla());
+        assert_eq!(res.iters, reference.iters);
+        assert!(res.x.iter().zip(&reference.x).all(|(u, v)| u.to_bits() == v.to_bits()));
+    }
+
+    #[test]
+    fn registry_ids_are_stable_and_ordered() {
+        let mut reg = MatrixRegistry::new();
+        let a = reg.admit(synth::laplace2d_shifted(100, 0.2), 1);
+        let b = reg.admit(synth::laplace2d_shifted(150, 0.2), 1);
+        assert_ne!(a, b);
+        assert_eq!(reg.ids().collect::<Vec<_>>(), vec![a, b]);
+        assert_eq!(reg.entry(b).n(), reg.entry(b).matrix().n);
+    }
+}

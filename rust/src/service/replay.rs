@@ -1,0 +1,180 @@
+//! Synthetic request-trace replay: the service's end-to-end benchmark
+//! scenario (many tenants, few matrices, Poisson-ish arrivals) and the
+//! no-coalescing baseline it is measured against.
+//!
+//! The trace generator draws everything from the deterministic
+//! [`Rng64`](crate::util::rng::Rng64) stream, so a (seed, shape) pair
+//! names one exact workload on every platform: per request an
+//! exponential inter-arrival gap (that is the Poisson part — arrival
+//! *order* across tenants is what it shapes; the replay submits in
+//! arrival order at full speed), a tenant, a matrix drawn from the few
+//! registered ones, and a right-hand side derived from (tenant,
+//! sequence number) — so the same logical request always carries the
+//! same bits no matter how the trace interleaves.
+
+use crate::solver::SolveResult;
+use crate::util::rng::Rng64;
+
+use super::registry::{MatrixId, MatrixRegistry};
+use super::scheduler::{SolveRequest, SolverService};
+
+/// Shape of a synthetic request trace.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceConfig {
+    /// Total requests in the trace.
+    pub requests: usize,
+    /// Distinct tenants issuing them.
+    pub tenants: u32,
+    /// Mean arrivals per unit time (only shapes the recorded arrival
+    /// stamps; the replay submits in arrival order).
+    pub rate: f64,
+    /// PRNG seed naming this exact trace.
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self { requests: 64, tenants: 8, rate: 1.0, seed: 0xCA111_9E91A }
+    }
+}
+
+/// One generated request plus its arrival stamp.
+#[derive(Debug, Clone)]
+pub struct TracedRequest {
+    /// Poisson-ish arrival time (unit-free; monotone over the trace).
+    pub arrival: f64,
+    /// The request itself.
+    pub request: SolveRequest,
+}
+
+/// The right-hand side tenant `tenant`'s `seq`-th request carries
+/// against an `n`-vector system: deterministic, per-tenant distinct,
+/// independent of arrival interleaving.
+pub fn tenant_rhs(n: usize, tenant: u32, seq: u32) -> Vec<f64> {
+    let phase = (tenant as usize * 31 + seq as usize * 7) % 13;
+    (0..n).map(|i| 1.0 + ((i + phase) % 11) as f64 / 11.0).collect()
+}
+
+/// Generate a trace over the registered `matrices` (every request's
+/// matrix is drawn uniformly from this slice).  Requests come back in
+/// arrival order.
+pub fn synth_trace(
+    registry: &MatrixRegistry,
+    matrices: &[MatrixId],
+    cfg: &TraceConfig,
+) -> Vec<TracedRequest> {
+    assert!(!matrices.is_empty(), "a trace needs at least one matrix");
+    let mut rng = Rng64::seed_from_u64(cfg.seed);
+    let mut clock = 0.0f64;
+    let mut seq_per_tenant = vec![0u32; cfg.tenants.max(1) as usize];
+    (0..cfg.requests)
+        .map(|_| {
+            // Exponential inter-arrival gap: -ln(u) / rate.
+            clock += -(rng.gen_f64().max(1e-12)).ln() / cfg.rate.max(1e-9);
+            let tenant = rng.gen_range(cfg.tenants.max(1) as usize) as u32;
+            let matrix = matrices[rng.gen_range(matrices.len())];
+            let seq = seq_per_tenant[tenant as usize];
+            seq_per_tenant[tenant as usize] += 1;
+            let b = tenant_rhs(registry.entry(matrix).n(), tenant, seq);
+            TracedRequest { arrival: clock, request: SolveRequest { matrix, b, tenant } }
+        })
+        .collect()
+}
+
+/// Outcome of one replay run.
+#[derive(Debug)]
+pub struct ReplayOutcome {
+    /// Per-request results, in submission order.
+    pub results: Vec<SolveResult>,
+    /// End-to-end wall-clock seconds (submit of the first request to
+    /// the last result).
+    pub wall_s: f64,
+    /// RHS-iterations retired.
+    pub rhs_iterations: u64,
+}
+
+impl ReplayOutcome {
+    /// End-to-end RHS-iterations/s — the serving throughput metric.
+    pub fn rhs_iterations_per_second(&self) -> f64 {
+        self.rhs_iterations as f64 / self.wall_s.max(1e-12)
+    }
+}
+
+/// Replay a trace through the coalescing service: submit every request
+/// in arrival order, flush the queue-drained remainder, wait for all
+/// tickets.  Results come back in submission order, each bitwise a lone
+/// [`jpcg_solve`](crate::solver::jpcg_solve).
+pub fn replay_coalesced(svc: &mut SolverService, trace: &[TracedRequest]) -> ReplayOutcome {
+    let t0 = std::time::Instant::now();
+    let tickets: Vec<_> = trace.iter().map(|t| svc.submit(t.request.clone())).collect();
+    svc.flush();
+    let results: Vec<SolveResult> = tickets.into_iter().map(|t| t.wait()).collect();
+    let wall_s = t0.elapsed().as_secs_f64();
+    let rhs_iterations = results.iter().map(|r| r.iters as u64).sum();
+    ReplayOutcome { results, wall_s, rhs_iterations }
+}
+
+/// The no-coalescing baseline: the same trace, one request at a time,
+/// each as its own single-RHS program execution with **no** program
+/// cache (what calling the solver per request looked like before the
+/// service existed).  Prepared-matrix state is still shared via the
+/// registry, and `opts` should match the service's so both paths do
+/// identical numerical work — the baseline is honest about everything
+/// except the serving layer under test.
+pub fn replay_sequential(
+    registry: &MatrixRegistry,
+    trace: &[TracedRequest],
+    opts: &crate::solver::SolveOptions,
+) -> ReplayOutcome {
+    let t0 = std::time::Instant::now();
+    let results: Vec<SolveResult> = trace
+        .iter()
+        .map(|t| {
+            let entry = registry.entry(t.request.matrix);
+            let batch_of_one = vec![t.request.b.clone()];
+            entry.plan().solve_batch(&batch_of_one, opts).pop().expect("one lane in, one out")
+        })
+        .collect();
+    let wall_s = t0.elapsed().as_secs_f64();
+    let rhs_iterations = results.iter().map(|r| r.iters as u64).sum();
+    ReplayOutcome { results, wall_s, rhs_iterations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::synth;
+
+    #[test]
+    fn traces_are_deterministic_and_arrival_ordered() {
+        let mut reg = MatrixRegistry::new();
+        let ids = vec![
+            reg.admit(synth::laplace2d_shifted(100, 0.2), 1),
+            reg.admit(synth::laplace2d_shifted(150, 0.2), 1),
+        ];
+        let cfg = TraceConfig { requests: 32, tenants: 4, ..Default::default() };
+        let a = synth_trace(&reg, &ids, &cfg);
+        let b = synth_trace(&reg, &ids, &cfg);
+        assert_eq!(a.len(), 32);
+        assert!(a.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.request.matrix, y.request.matrix);
+            assert_eq!(x.request.tenant, y.request.tenant);
+            assert_eq!(x.request.b, y.request.b);
+        }
+        // A different seed reshuffles the trace.
+        let c = synth_trace(&reg, &ids, &TraceConfig { seed: 1, ..cfg });
+        assert!(a.iter().zip(&c).any(|(x, y)| {
+            x.request.matrix != y.request.matrix || x.request.tenant != y.request.tenant
+        }));
+    }
+
+    #[test]
+    fn tenant_rhs_depends_on_identity_not_arrival() {
+        let r1 = tenant_rhs(64, 3, 5);
+        let r2 = tenant_rhs(64, 3, 5);
+        assert_eq!(r1, r2);
+        assert_ne!(tenant_rhs(64, 3, 6), r1);
+        assert_ne!(tenant_rhs(64, 4, 5), r1);
+    }
+}

@@ -1,0 +1,502 @@
+//! The coalescing batch scheduler: submission queue, deterministic
+//! flush policy, persistent-pool execution, per-request completion
+//! handles.
+//!
+//! **Coalescing rule.**  Pending requests are grouped *per matrix* in
+//! per-matrix submission order and cut into batches of at most
+//! `max_batch` lanes.  A group flushes when it reaches `max_batch`
+//! (batch-full) or when the caller drains the queue
+//! ([`SolverService::flush`] / [`SolverService::drain`]) — there is no
+//! timer, so batch composition is a pure function of the per-matrix
+//! request sequence: the same request set produces the same batches
+//! (and, since every lane is bitwise a lone
+//! [`jpcg_solve`](crate::solver::jpcg_solve), bitwise the same results)
+//! no matter how arrivals from different tenants interleave.
+//!
+//! **Execution.**  A flushed batch becomes one fire-and-forget job on
+//! the service's [`WorkerPool`]: build a zero-copy plan view from the
+//! registry entry, fetch the bucket program from the shared
+//! [`ProgramCache`], run
+//! [`PreparedMatrix::solve_batch_with_cache`](crate::engine::PreparedMatrix::solve_batch_with_cache),
+//! fulfill each lane's [`SolveTicket`].  One job per batch means at
+//! most ⌈requests / max_batch⌉ program executions per matrix — the
+//! serving-layer amortization the ROADMAP asked for.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::engine::WorkerPool;
+use crate::program::ProgramCache;
+use crate::sim::{schedule_cycles, AccelSimConfig, ScheduledBatch};
+use crate::solver::{SolveOptions, SolveResult};
+use crate::sparse::CsrMatrix;
+
+use super::registry::{MatrixEntry, MatrixId, MatrixRegistry};
+
+/// One queued solve: a right-hand side against an admitted matrix.
+/// (`x0` is always zero in the serving path, the paper's setup.)
+#[derive(Debug, Clone)]
+pub struct SolveRequest {
+    /// The admitted matrix to solve against.
+    pub matrix: MatrixId,
+    /// The right-hand side (length must match the matrix).
+    pub b: Vec<f64>,
+    /// Submitting tenant — a label carried into the batch records so
+    /// traces and fairness studies can attribute lanes; never affects
+    /// scheduling or results.
+    pub tenant: u32,
+}
+
+impl SolveRequest {
+    /// A request from the anonymous tenant 0.
+    pub fn new(matrix: MatrixId, b: Vec<f64>) -> Self {
+        Self { matrix, b, tenant: 0 }
+    }
+}
+
+/// How one request ended.  `Failed` and `Taken` are terminal; `Done`
+/// transitions to `Taken` exactly once, when the result is handed out.
+#[derive(Debug)]
+enum CompletionState {
+    Pending,
+    Done(SolveResult),
+    /// The result was already handed out through
+    /// [`SolveTicket::try_take`].
+    Taken,
+    /// The batch job panicked or the service was dropped before flush.
+    Failed(&'static str),
+}
+
+#[derive(Debug)]
+struct Completion {
+    state: Mutex<CompletionState>,
+    cv: Condvar,
+}
+
+impl Completion {
+    fn new() -> Arc<Self> {
+        Arc::new(Self { state: Mutex::new(CompletionState::Pending), cv: Condvar::new() })
+    }
+
+    fn fulfill(&self, res: SolveResult) {
+        *self.state.lock().expect("completion poisoned") = CompletionState::Done(res);
+        self.cv.notify_all();
+    }
+
+    fn fail(&self, why: &'static str) {
+        let mut s = self.state.lock().expect("completion poisoned");
+        if matches!(*s, CompletionState::Pending) {
+            *s = CompletionState::Failed(why);
+            self.cv.notify_all();
+        }
+    }
+}
+
+/// Completion handle for one submitted request.
+#[derive(Debug)]
+pub struct SolveTicket {
+    slot: Arc<Completion>,
+}
+
+impl SolveTicket {
+    /// Block until the request's batch has executed and take the
+    /// result (bitwise the result of a lone
+    /// [`jpcg_solve`](crate::solver::jpcg_solve) on the same system).
+    /// A ticket only resolves after its batch is flushed — call
+    /// [`SolverService::flush`] (or `drain`) before waiting on
+    /// requests that haven't filled a batch.
+    ///
+    /// Panics if the executing batch job panicked, the service was
+    /// dropped with the request still queued, or the result was
+    /// already taken through [`SolveTicket::try_take`].
+    pub fn wait(self) -> SolveResult {
+        let mut s = self.slot.state.lock().expect("completion poisoned");
+        loop {
+            match std::mem::replace(&mut *s, CompletionState::Taken) {
+                CompletionState::Done(res) => return res,
+                CompletionState::Failed(why) => {
+                    // Failure is terminal: keep it visible to any other
+                    // observer of this slot.
+                    *s = CompletionState::Failed(why);
+                    panic!("solve request failed: {why}");
+                }
+                CompletionState::Taken => panic!("solve result was already taken"),
+                CompletionState::Pending => {
+                    *s = CompletionState::Pending;
+                    s = self.slot.cv.wait(s).expect("completion poisoned");
+                }
+            }
+        }
+    }
+
+    /// Non-blocking take: the result if the batch already executed
+    /// (`None` while pending, and `None` again after a successful
+    /// take — the result is handed out exactly once).  Panics on a
+    /// failed request, like [`SolveTicket::wait`].
+    pub fn try_take(&self) -> Option<SolveResult> {
+        let mut s = self.slot.state.lock().expect("completion poisoned");
+        match std::mem::replace(&mut *s, CompletionState::Taken) {
+            CompletionState::Done(res) => Some(res),
+            CompletionState::Failed(why) => {
+                *s = CompletionState::Failed(why);
+                panic!("solve request failed: {why}");
+            }
+            CompletionState::Taken => None,
+            CompletionState::Pending => {
+                *s = CompletionState::Pending;
+                None
+            }
+        }
+    }
+}
+
+/// One executed batch, as recorded by the worker that ran it.
+#[derive(Debug, Clone)]
+pub struct BatchRecord {
+    /// The matrix the batch solved against.
+    pub matrix: MatrixId,
+    /// Vector length of that matrix.
+    pub n: usize,
+    /// Nonzeros of that matrix.
+    pub nnz: usize,
+    /// Right-hand-side lanes the batch carried.
+    pub lanes: u32,
+    /// Tenants the lanes belonged to, in lane order.
+    pub tenants: Vec<u32>,
+    /// Slowest lane's iteration count (how long the batch held the
+    /// device).
+    pub max_iters: u32,
+    /// Sum of lane iteration counts (RHS-iterations retired).
+    pub rhs_iters: u64,
+}
+
+impl BatchRecord {
+    /// The time-plane view of this batch, ready for
+    /// [`schedule_cycles`].
+    pub fn scheduled(&self) -> ScheduledBatch {
+        ScheduledBatch { n: self.n, nnz: self.nnz, lanes: self.lanes, trips: self.max_iters as u64 }
+    }
+}
+
+/// Shared mutable scheduler state the workers report into.
+#[derive(Debug, Default)]
+struct StatsInner {
+    records: Mutex<Vec<BatchRecord>>,
+    /// Batches dispatched but not yet finished.
+    active: Mutex<u64>,
+    idle: Condvar,
+}
+
+impl StatsInner {
+    fn batch_started(&self) {
+        *self.active.lock().expect("stats poisoned") += 1;
+    }
+
+    fn batch_finished(&self, record: Option<BatchRecord>) {
+        if let Some(r) = record {
+            self.records.lock().expect("stats poisoned").push(r);
+        }
+        let mut a = self.active.lock().expect("stats poisoned");
+        *a -= 1;
+        if *a == 0 {
+            self.idle.notify_all();
+        }
+    }
+
+    fn wait_idle(&self) {
+        let mut a = self.active.lock().expect("stats poisoned");
+        while *a > 0 {
+            a = self.idle.wait(a).expect("stats poisoned");
+        }
+    }
+}
+
+/// A snapshot of the service's counters (complete once
+/// [`SolverService::drain`] has returned).
+#[derive(Debug, Clone)]
+pub struct ServiceStats {
+    /// Requests submitted so far.
+    pub requests: u64,
+    /// Batches executed (== program executions issued by the service).
+    pub batches: u64,
+    /// RHS-iterations retired across all executed batches.
+    pub rhs_iterations: u64,
+    /// Program-cache hits across all workers.
+    pub cache_hits: u64,
+    /// Program-cache misses (fresh compiles).
+    pub cache_misses: u64,
+    /// Distinct compiled programs held by the cache.
+    pub compiled_programs: usize,
+    /// Every executed batch, in completion order (sort by matrix/lane
+    /// content for deterministic comparisons).
+    pub records: Vec<BatchRecord>,
+}
+
+impl ServiceStats {
+    /// Batches executed for one matrix — the acceptance bound is
+    /// ⌈requests(matrix) / max_batch⌉.
+    pub fn executions_for(&self, id: MatrixId) -> u64 {
+        self.records.iter().filter(|r| r.matrix == id).count() as u64
+    }
+
+    /// Modeled cycles for the recorded trace on the given accelerator
+    /// (the time plane pricing the same serving scenario the value
+    /// plane just executed).
+    pub fn modeled_cycles(&self, cfg: &AccelSimConfig) -> u64 {
+        let batches: Vec<ScheduledBatch> =
+            self.records.iter().map(BatchRecord::scheduled).collect();
+        schedule_cycles(cfg, &batches)
+    }
+
+    /// Modeled RHS-iterations/s for the recorded trace: retired
+    /// RHS-iterations over the modeled wall time of
+    /// [`ServiceStats::modeled_cycles`].
+    pub fn modeled_rhs_iterations_per_second(&self, cfg: &AccelSimConfig) -> f64 {
+        let cycles = self.modeled_cycles(cfg);
+        if cycles == 0 {
+            return 0.0;
+        }
+        self.rhs_iterations as f64 / (cycles as f64 * cfg.hbm.cycle_time())
+    }
+}
+
+/// Service configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ServiceConfig {
+    /// Most lanes a coalesced batch carries (the flush threshold).
+    pub max_batch: usize,
+    /// Worker-pool threads executing batches.
+    pub workers: usize,
+    /// SpMV thread budget *inside* each batch execution (parallelism in
+    /// a service lives across batches first, so the default is 1).
+    pub spmv_threads: usize,
+    /// Solve options every request runs under.  Options outside the
+    /// batched-program family (sequential dots, the XcgSolver
+    /// accumulator) execute on the worker-per-RHS model path instead —
+    /// either way each result is bitwise a lone solve.
+    pub opts: SolveOptions,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 8,
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            spmv_threads: 1,
+            opts: SolveOptions::callipepla(),
+        }
+    }
+}
+
+/// One pending lane: the right-hand side plus its completion slot.
+#[derive(Debug)]
+struct Lane {
+    b: Vec<f64>,
+    tenant: u32,
+    slot: Arc<Completion>,
+}
+
+/// The solver service: registry + program cache + coalescing queue +
+/// worker pool.  See the [module docs](self) for the flush policy and
+/// the execution path.
+///
+/// ```
+/// use callipepla::service::{ServiceConfig, SolveRequest, SolverService};
+/// use callipepla::sparse::synth;
+///
+/// let mut svc = SolverService::new(ServiceConfig { max_batch: 4, ..Default::default() });
+/// let id = svc.register(synth::laplace2d_shifted(100, 0.2));
+/// let tickets: Vec<_> = (0..6)
+///     .map(|k| svc.submit(SolveRequest::new(id, vec![1.0 + k as f64; 100])))
+///     .collect();
+/// svc.flush(); // 6 requests, max_batch 4 -> batches of 4 and 2
+/// let results: Vec<_> = tickets.into_iter().map(|t| t.wait()).collect();
+/// assert!(results.iter().all(|r| r.converged));
+/// assert_eq!(svc.drain().batches, 2);
+/// ```
+#[derive(Debug)]
+pub struct SolverService {
+    cfg: ServiceConfig,
+    registry: MatrixRegistry,
+    cache: Arc<ProgramCache>,
+    pool: WorkerPool,
+    /// Pending lanes per matrix id (indexed by registry slot).
+    pending: Vec<Vec<Lane>>,
+    stats: Arc<StatsInner>,
+    submitted: u64,
+}
+
+impl SolverService {
+    /// Start a service: spawns the worker pool, creates an empty
+    /// registry and program cache.
+    pub fn new(cfg: ServiceConfig) -> Self {
+        assert!(cfg.max_batch >= 1, "a batch needs at least one lane");
+        Self {
+            cfg,
+            registry: MatrixRegistry::new(),
+            cache: Arc::new(ProgramCache::new()),
+            pool: WorkerPool::new(cfg.workers),
+            pending: Vec::new(),
+            stats: Arc::new(StatsInner::default()),
+            submitted: 0,
+        }
+    }
+
+    /// Admit a matrix (derives its solve state once — see
+    /// [`MatrixRegistry`]).
+    pub fn register(&mut self, a: CsrMatrix) -> MatrixId {
+        let id = self.registry.admit(a, self.cfg.spmv_threads);
+        self.pending.push(Vec::new());
+        id
+    }
+
+    /// The matrix registry.
+    pub fn registry(&self) -> &MatrixRegistry {
+        &self.registry
+    }
+
+    /// The shared bucketed program cache.
+    pub fn cache(&self) -> &Arc<ProgramCache> {
+        &self.cache
+    }
+
+    /// The service configuration.
+    pub fn config(&self) -> &ServiceConfig {
+        &self.cfg
+    }
+
+    /// Queue one solve.  The request joins its matrix's pending group;
+    /// a full group (`max_batch` lanes) flushes immediately.  The
+    /// returned ticket resolves once the batch has executed.
+    pub fn submit(&mut self, req: SolveRequest) -> SolveTicket {
+        let n = self.registry.entry(req.matrix).n();
+        assert_eq!(
+            req.b.len(),
+            n,
+            "right-hand side length must match matrix {} (n = {n})",
+            req.matrix
+        );
+        self.submitted += 1;
+        let slot = Completion::new();
+        let ticket = SolveTicket { slot: Arc::clone(&slot) };
+        self.pending[req.matrix.index()].push(Lane { b: req.b, tenant: req.tenant, slot });
+        if self.pending[req.matrix.index()].len() >= self.cfg.max_batch {
+            self.dispatch(req.matrix);
+        }
+        ticket
+    }
+
+    /// Queue-drained flush: dispatch every pending partial batch, in
+    /// matrix-admission order (deterministic).
+    pub fn flush(&mut self) {
+        for id in self.registry.ids().collect::<Vec<_>>() {
+            while !self.pending[id.index()].is_empty() {
+                self.dispatch(id);
+            }
+        }
+    }
+
+    /// Flush, then block until every in-flight batch has finished, and
+    /// return the (now complete) statistics snapshot.
+    pub fn drain(&mut self) -> ServiceStats {
+        self.flush();
+        self.stats.wait_idle();
+        self.stats_snapshot()
+    }
+
+    /// The current statistics snapshot (complete only after
+    /// [`SolverService::drain`]).
+    pub fn stats(&self) -> ServiceStats {
+        self.stats_snapshot()
+    }
+
+    fn stats_snapshot(&self) -> ServiceStats {
+        let records = self.stats.records.lock().expect("stats poisoned").clone();
+        ServiceStats {
+            requests: self.submitted,
+            batches: records.len() as u64,
+            rhs_iterations: records.iter().map(|r| r.rhs_iters).sum(),
+            cache_hits: self.cache.hits(),
+            cache_misses: self.cache.misses(),
+            compiled_programs: self.cache.len(),
+            records,
+        }
+    }
+
+    /// Cut one batch (up to `max_batch` oldest lanes) off a matrix's
+    /// pending group and hand it to the pool.
+    fn dispatch(&mut self, id: MatrixId) {
+        let group = &mut self.pending[id.index()];
+        if group.is_empty() {
+            return;
+        }
+        let take = group.len().min(self.cfg.max_batch);
+        let lanes: Vec<Lane> = group.drain(..take).collect();
+        let entry = Arc::clone(self.registry.entry(id));
+        let cache = Arc::clone(&self.cache);
+        let stats = Arc::clone(&self.stats);
+        let opts = self.cfg.opts;
+        stats.batch_started();
+        self.pool.spawn(move || run_batch(id, entry, cache, stats, opts, lanes));
+    }
+}
+
+impl Drop for SolverService {
+    fn drop(&mut self) {
+        // Jobs already dispatched drain inside the pool's Drop; lanes
+        // never flushed can no longer run — fail their tickets so
+        // waiters get a diagnostic instead of a deadlock.
+        for group in &self.pending {
+            for lane in group {
+                lane.slot.fail("service dropped before the request's batch was flushed");
+            }
+        }
+    }
+}
+
+/// Execute one coalesced batch on a pool worker: plan view → cached
+/// bucket program → per-lane results → tickets.
+fn run_batch(
+    id: MatrixId,
+    entry: Arc<MatrixEntry>,
+    cache: Arc<ProgramCache>,
+    stats: Arc<StatsInner>,
+    opts: SolveOptions,
+    lanes: Vec<Lane>,
+) {
+    let mut bs = Vec::with_capacity(lanes.len());
+    let mut tenants = Vec::with_capacity(lanes.len());
+    let mut slots = Vec::with_capacity(lanes.len());
+    for lane in lanes {
+        bs.push(lane.b);
+        tenants.push(lane.tenant);
+        slots.push(lane.slot);
+    }
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        entry.plan().solve_batch_with_cache(&bs, &opts, Some(&cache))
+    }));
+    match outcome {
+        Ok(results) => {
+            debug_assert_eq!(results.len(), slots.len());
+            let record = BatchRecord {
+                matrix: id,
+                n: entry.n(),
+                nnz: entry.nnz(),
+                lanes: slots.len() as u32,
+                tenants,
+                max_iters: results.iter().map(|r| r.iters).max().unwrap_or(0),
+                rhs_iters: results.iter().map(|r| r.iters as u64).sum(),
+            };
+            for (slot, res) in slots.iter().zip(results) {
+                slot.fulfill(res);
+            }
+            stats.batch_finished(Some(record));
+        }
+        Err(_) => {
+            for slot in &slots {
+                slot.fail("the batch job executing this request panicked");
+            }
+            stats.batch_finished(None);
+        }
+    }
+}

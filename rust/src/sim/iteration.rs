@@ -184,6 +184,44 @@ pub fn batched_rhs_iterations_per_second(
     batch.max(1) as f64 / (cycles as f64 * cfg.hbm.cycle_time())
 }
 
+/// One executed scheduler batch to price on the time plane: `lanes`
+/// right-hand sides of an (n, nnz) system advancing together for
+/// `trips` batched JPCG iterations (the slowest lane's count — freed
+/// lanes stop issuing but the batch retires with its stragglers).
+/// The [`service`](crate::service) layer records one of these per
+/// executed batch (`BatchRecord::scheduled`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScheduledBatch {
+    /// Vector length of the batch's matrix.
+    pub n: usize,
+    /// Nonzeros of the batch's matrix.
+    pub nnz: usize,
+    /// Right-hand-side lanes the batch ran.
+    pub lanes: BatchId,
+    /// Batched iterations the batch executed (max over its lanes).
+    pub trips: u64,
+}
+
+/// Price a whole scheduler trace: total modeled cycles to execute the
+/// given batches back-to-back on one accelerator (batches of one
+/// service run on one device, so they serialize).  Per-shape cycle
+/// counts are memoized across the trace — a serving trace repeats few
+/// (matrix, lane) shapes many times, the same redundancy the value
+/// plane's [`ProgramCache`](crate::program::ProgramCache) removes.
+pub fn schedule_cycles(cfg: &AccelSimConfig, batches: &[ScheduledBatch]) -> u64 {
+    let mut per_shape: std::collections::HashMap<(usize, usize, BatchId), u64> =
+        std::collections::HashMap::new();
+    batches
+        .iter()
+        .map(|b| {
+            let cycles = *per_shape
+                .entry((b.n, b.nnz, b.lanes))
+                .or_insert_with(|| batched_iteration_cycles(cfg, b.n, b.nnz, b.lanes).total);
+            cycles * b.trips
+        })
+        .sum()
+}
+
 /// Without VSR (§5.5 baseline): every module is its own memory-to-memory
 /// pass, serialized (XcgSolver's kernel-sequential execution; also the
 /// SerpensCG data path, which has the ISA but not the reuse graph).
@@ -563,6 +601,18 @@ mod tests {
         let p3d = run_phase(Dataflow::from_program(program_d.phase(Phase::Phase3), 0));
         let p3s = run_phase(Dataflow::from_program(program_s.phase(Phase::Phase3), 0));
         assert!(p3s > p3d, "single={p3s} double={p3d}");
+    }
+
+    #[test]
+    fn schedule_pricing_sums_and_memoizes_batches() {
+        let cfg = AccelSimConfig::callipepla();
+        let one = ScheduledBatch { n: N, nnz: NNZ, lanes: 4, trips: 10 };
+        let per_iter = batched_iteration_cycles(&cfg, N, NNZ, 4).total;
+        assert_eq!(schedule_cycles(&cfg, &[one]), 10 * per_iter);
+        // Repeated shapes price identically (memo hit) and sum linearly.
+        let trace = [one, ScheduledBatch { trips: 3, ..one }];
+        assert_eq!(schedule_cycles(&cfg, &trace), 13 * per_iter);
+        assert_eq!(schedule_cycles(&cfg, &[]), 0);
     }
 
     #[test]

@@ -18,6 +18,6 @@ pub mod iteration;
 
 pub use dataflow::{Dataflow, FifoId, NodeId, SimError, SimStats};
 pub use iteration::{
-    batched_iteration_cycles, batched_rhs_iterations_per_second, iteration_cycles, solver_seconds,
-    AccelSimConfig, IterationBreakdown,
+    batched_iteration_cycles, batched_rhs_iterations_per_second, iteration_cycles,
+    schedule_cycles, solver_seconds, AccelSimConfig, IterationBreakdown, ScheduledBatch,
 };
