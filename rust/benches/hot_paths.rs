@@ -190,6 +190,26 @@ fn main() {
         8.0 * 10.0 / r.median_s
     );
 
+    // Lane-parallel dispatch of the same batched program (PR 5): the 8
+    // lanes fan out across the machine's workers with a serial SpMV
+    // inside each lane, so whole lanes (SpMV + vector sweeps + dots)
+    // run concurrently instead of just the SpMV.  Guard first: the
+    // results must be bitwise the sequential row's.
+    let seq = prep8.solve_batch(&rhs, &opts);
+    let par = prep8.solve_batch_parallel(&rhs, &opts, None, 0);
+    let bitwise = seq.iter().zip(&par).all(|(s, p)| {
+        s.iters == p.iters && s.x.iter().zip(&p.x).all(|(u, v)| u.to_bits() == v.to_bits())
+    });
+    assert!(bitwise, "lane-parallel dispatch changed bits");
+    let r = bench("program_batch_8rhs_par", 1, 3, || {
+        std::hint::black_box(prep8.solve_batch_parallel(&rhs, &opts, None, 0));
+    });
+    record(&mut recs, &r, None);
+    println!(
+        "    => {:.1} rhs-iterations/s with lane-parallel dispatch",
+        8.0 * 10.0 / r.median_s
+    );
+
     // Coordinator-path iteration (instruction issue + module dispatch).
     let r = bench("coordinator_native_10_iters", 1, 5, || {
         let cfg = CoordinatorConfig { max_iters: 10, ..Default::default() };

@@ -27,15 +27,17 @@
 
 use std::sync::Arc;
 
+use crate::engine::pool::{self, WorkerPool};
 use crate::hbm::ChannelMode;
 use crate::isa::InstTrace;
 use crate::precision::Scheme;
 use crate::program::{
-    bucket_ceiling, DispatchReturn, HbmMemoryMap, InstDispatch, InstructionBus, Program,
-    ProgramCache, Scalars, ScalarRole, VectorFile,
+    bucket_ceiling, DispatchReturn, HbmMemoryMap, InstDispatch, LaneSlice, Program, ProgramCache,
+    Scalars, ScalarRole, VectorFile,
 };
 use crate::solver::ResidualTrace;
 use crate::sparse::CsrMatrix;
+use crate::vsr::Phase;
 
 /// The three per-iteration phase computations + the init pass, at phase
 /// granularity.  This is the artifact-runtime interface (PJRT executes
@@ -75,6 +77,19 @@ pub struct CoordinatorConfig {
     pub record_instructions: bool,
     /// Channel policy baked into the compiled memory map (§5.7).
     pub channel_mode: ChannelMode,
+    /// Lanes dispatched concurrently per trip by
+    /// [`Coordinator::solve_batch_parallel`] (the sequential
+    /// [`Coordinator::solve_batch`] ignores it).  `0` resolves to the
+    /// machine default via
+    /// [`pool::default_lane_workers`](crate::engine::pool::default_lane_workers),
+    /// which honors the `CALLIPEPLA_LANE_WORKERS` environment override.
+    pub lane_workers: usize,
+    /// Extra bound on the lanes a compiled chunk carries (`0` = none:
+    /// chunks are sized by [`HbmMemoryMap::max_batch`] alone).  Lets
+    /// scheduling studies — and the chunk-seam tests — exercise the
+    /// batch-splitting path at small `n`; results are chunk-invariant
+    /// either way (lanes are independent).
+    pub max_chunk_lanes: u32,
 }
 
 impl Default for CoordinatorConfig {
@@ -85,6 +100,8 @@ impl Default for CoordinatorConfig {
             record_trace: false,
             record_instructions: false,
             channel_mode: ChannelMode::Double,
+            lane_workers: 0,
+            max_chunk_lanes: 0,
         }
     }
 }
@@ -146,15 +163,6 @@ impl Coordinator {
         }
     }
 
-    fn scalar(ret: &DispatchReturn, role: ScalarRole) -> f64 {
-        match role {
-            ScalarRole::Pap => ret.pap,
-            ScalarRole::Rz => ret.rz,
-            ScalarRole::Rr => ret.rr,
-        }
-        .unwrap_or_else(|| panic!("backend did not return {role:?}"))
-    }
-
     /// Run the Fig. 4 controller program to completion: compile once,
     /// then dispatch trips through the instruction bus, binding alpha /
     /// beta on the fly and deciding termination from the returned
@@ -202,189 +210,355 @@ impl Coordinator {
         if rhs.is_empty() {
             return Vec::new();
         }
+        check_batch_shapes(rhs, x0);
         let n = rhs[0].len();
-        for b in rhs {
-            assert_eq!(b.len(), n, "every batch lane must share the vector length");
-        }
-        if let Some(x0s) = x0 {
-            assert_eq!(x0s.len(), rhs.len(), "one x0 per right-hand side");
-            for x in x0s {
-                assert_eq!(x.len(), n, "x0 length must match the right-hand side");
-            }
-        }
         // Only materialized when lanes actually start from zero.
         let zeros = if x0.is_none() { vec![0.0; n] } else { Vec::new() };
-        // cap == 0 means even one lane outgrows a channel window; let
-        // the single-lane compile raise the precise per-vector panic
-        // (same behavior as the pre-batch memory map).  Under a cache
-        // the lanes are laid out at the *bucket* stride, so the window
-        // caps fewer of them.
-        let cap = (HbmMemoryMap::max_batch(self.compile_n(n as u32)) as usize).max(1);
+        let cap = self.chunk_cap(n as u32);
+        // Chunk walk: keep in lockstep with solve_batch_parallel's.
         let mut out = Vec::with_capacity(rhs.len());
         let mut start = 0;
         while start < rhs.len() {
             let end = (start + cap).min(rhs.len());
-            let x0_chunk: Vec<&[f64]> = (start..end)
-                .map(|k| x0.map_or(zeros.as_slice(), |xs| xs[k]))
-                .collect();
+            let x0_chunk = x0_for_chunk(x0, &zeros, start..end);
             out.extend(self.solve_chunk(exec, &rhs[start..end], &x0_chunk));
             start = end;
         }
         out
     }
 
+    /// [`Coordinator::solve_batch`] with **lane-parallel dispatch**:
+    /// each trip's per-lane instruction streams are fanned out across
+    /// up to [`CoordinatorConfig::lane_workers`] workers of the
+    /// process-wide pool, one lane's [`LaneSlice`] (bus + vector file)
+    /// and executor per worker, with a barrier at every trip boundary —
+    /// the Fig. 4 trip-major schedule and the per-lane converged exit
+    /// are unchanged, only *who* walks the lanes differs.
+    ///
+    /// Because the lanes share nothing mutable (each has its own
+    /// executor in `execs`, one per right-hand side), the results are
+    /// **bitwise identical** to the sequential [`Coordinator::solve_batch`]
+    /// walk at every worker count — a scheduling refactor, not a
+    /// rounding change (pinned in `tests/lane_parallel.rs`).
+    ///
+    /// ```
+    /// use callipepla::coordinator::{Coordinator, CoordinatorConfig, NativeExecutor};
+    /// use callipepla::precision::Scheme;
+    /// use callipepla::sparse::synth;
+    ///
+    /// let a = synth::laplace2d_shifted(100, 0.2);
+    /// let mut coord = Coordinator::new(CoordinatorConfig::default());
+    /// let mut execs: Vec<_> =
+    ///     (0..2).map(|_| NativeExecutor::with_threads(&a, Scheme::MixV3, 1)).collect();
+    /// let b0 = vec![1.0; a.n];
+    /// let b1 = vec![2.0; a.n];
+    /// let results = coord.solve_batch_parallel(&mut execs, &[b0.as_slice(), b1.as_slice()], None);
+    /// assert!(results.iter().all(|r| r.converged));
+    /// ```
+    pub fn solve_batch_parallel<D: InstDispatch + Send>(
+        &mut self,
+        execs: &mut [D],
+        rhs: &[&[f64]],
+        x0: Option<&[&[f64]]>,
+    ) -> Vec<CoordResult> {
+        assert_eq!(execs.len(), rhs.len(), "one executor per batch lane");
+        if rhs.is_empty() {
+            return Vec::new();
+        }
+        check_batch_shapes(rhs, x0);
+        let n = rhs[0].len();
+        let zeros = if x0.is_none() { vec![0.0; n] } else { Vec::new() };
+        let cap = self.chunk_cap(n as u32);
+        // Chunk walk: keep in lockstep with solve_batch's.
+        let mut out = Vec::with_capacity(rhs.len());
+        let mut start = 0;
+        while start < rhs.len() {
+            let end = (start + cap).min(rhs.len());
+            let x0_chunk = x0_for_chunk(x0, &zeros, start..end);
+            let chunk =
+                self.solve_chunk_parallel(&mut execs[start..end], &rhs[start..end], &x0_chunk);
+            out.extend(chunk);
+            start = end;
+        }
+        out
+    }
+
+    /// Lanes per compiled chunk: the channel-window bound, optionally
+    /// tightened by [`CoordinatorConfig::max_chunk_lanes`].  A window
+    /// bound of 0 means even one lane outgrows a channel window; let
+    /// the single-lane compile raise the precise per-vector panic (same
+    /// behavior as the pre-batch memory map).  Under a cache the lanes
+    /// are laid out at the *bucket* stride, so the window caps fewer of
+    /// them.
+    fn chunk_cap(&self, n: u32) -> usize {
+        let window = (HbmMemoryMap::max_batch(self.compile_n(n)) as usize).max(1);
+        match self.cfg.max_chunk_lanes {
+            0 => window,
+            cap => window.min(cap as usize),
+        }
+    }
+
+    /// The compiled program a chunk of `lanes` lanes executes: the
+    /// cached bucket program (ceiling-sized map, possibly more compiled
+    /// lanes than live ones — extra lanes are just unused address
+    /// windows) or a fresh exact-shape compile.  The interpreter
+    /// executes the actual `n`-element vectors either way, so the
+    /// numerics are identical.
+    fn chunk_program(&mut self, n: u32, lanes: u32) -> Arc<Program> {
+        match &self.cache {
+            Some(cache) => cache.get_batched(n, self.cfg.channel_mode, lanes),
+            None => Arc::new(Program::compile_batched(n, self.cfg.channel_mode, lanes)),
+        }
+    }
+
+    /// Fresh per-lane controller states for one chunk.
+    fn make_lanes(&self, program: &Program, rhs: &[&[f64]], x0: &[&[f64]]) -> Vec<LaneState> {
+        let mut lanes = Vec::with_capacity(rhs.len());
+        for (k, (b, xs)) in rhs.iter().zip(x0).enumerate() {
+            lanes.push(LaneState::new(b, xs, program.lane_offset_beats(k as u32), &self.cfg));
+        }
+        lanes
+    }
+
     /// One channel-window-sized chunk of [`Coordinator::solve_batch`]:
     /// compile the batched program, then walk the Fig. 4 controller
-    /// schedule trip-major across the live lanes.
+    /// schedule trip-major across the live lanes — lane-minor within
+    /// each trip, on the calling thread.  This sequential walk is the
+    /// oracle the lane-parallel path is bitwise-pinned against.
     fn solve_chunk<D: InstDispatch>(
         &mut self,
         exec: &mut D,
         rhs: &[&[f64]],
         x0: &[&[f64]],
     ) -> Vec<CoordResult> {
-        use crate::vsr::Phase;
-        let n = rhs[0].len() as u32;
-        let lanes = rhs.len() as u32;
-        // Cached path: the bucket program (ceiling-sized map, possibly
-        // more compiled lanes than live ones — extra lanes are just
-        // unused address windows).  The interpreter executes the actual
-        // `n`-element vectors either way, so the numerics are identical.
-        let program: Arc<Program> = match &self.cache {
-            Some(cache) => cache.get_batched(n, self.cfg.channel_mode, lanes),
-            None => Arc::new(Program::compile_batched(n, self.cfg.channel_mode, lanes)),
-        };
-
-        /// Per-lane controller state: its own bus (instruction trace +
-        /// write acks), value-plane vector file, and scalar slots.
-        struct LaneState {
-            bus: InstructionBus,
-            mem: VectorFile,
-            trace: ResidualTrace,
-            offset: u32,
-            rz: f64,
-            rr: f64,
-            iters: u32,
-            converged: bool,
-            /// Still issuing trips; a converged or iteration-capped
-            /// lane's slot is freed and never issues again.
-            live: bool,
+        let program = self.chunk_program(rhs[0].len() as u32, rhs.len() as u32);
+        let cfg = self.cfg;
+        let mut lanes = self.make_lanes(&program, rhs, x0);
+        for lane in lanes.iter_mut() {
+            lane_init(&cfg, &program, lane, exec);
         }
-
-        let mut lane_states: Vec<LaneState> = (0..lanes)
-            .map(|k| LaneState {
-                bus: InstructionBus::new(self.cfg.record_instructions),
-                mem: VectorFile::new(rhs[k as usize], x0[k as usize]),
-                trace: ResidualTrace::new(self.cfg.record_trace),
-                offset: program.lane_offset_beats(k),
-                rz: 0.0,
-                rr: 0.0,
-                iters: 0,
-                converged: false,
-                live: true,
-            })
-            .collect();
-
-        // Merged init for every lane, alpha = 1 / beta = 0 pre-bound
-        // (Fig. 4, rp = -1).
-        for lane in lane_states.iter_mut() {
-            let ret = lane.bus.dispatch_lane(
-                &program.init,
-                Scalars { alpha: 1.0, beta: 0.0 },
-                lane.offset,
-                exec,
-                &mut lane.mem,
-            );
-            lane.rz = Self::scalar(&ret, ScalarRole::Rz);
-            lane.rr = Self::scalar(&ret, ScalarRole::Rr);
-            lane.trace.push(lane.rr);
-            lane.converged = lane.rr <= self.cfg.tol;
-            lane.live = !lane.converged && self.cfg.max_iters > 0;
-        }
-
-        let mut alphas = vec![0.0f64; lanes as usize];
-        let mut rz_news = vec![0.0f64; lanes as usize];
-        while lane_states.iter().any(|l| l.live) {
-            // Phase-1 trip across the live lanes -> per-lane pap ->
-            // alpha (scalar unit, line 8).
-            for (k, lane) in lane_states.iter_mut().enumerate() {
-                if !lane.live {
-                    continue;
-                }
-                let r1 = lane.bus.dispatch_lane(
-                    program.phase(Phase::Phase1),
-                    Scalars::default(),
-                    lane.offset,
-                    exec,
-                    &mut lane.mem,
-                );
-                alphas[k] = lane.rz / Self::scalar(&r1, ScalarRole::Pap);
+        while lanes.iter().any(|l| l.live) {
+            for lane in lanes.iter_mut().filter(|l| l.live) {
+                lane_phase1(&program, lane, exec);
             }
-            // Phase-2 trip (each lane's hoisted M8 rr is checked
-            // immediately: Fig. 4 opt 2, per RHS).
-            for (k, lane) in lane_states.iter_mut().enumerate() {
-                if !lane.live {
-                    continue;
-                }
-                let r2 = lane.bus.dispatch_lane(
-                    program.phase(Phase::Phase2),
-                    Scalars { alpha: alphas[k], beta: 0.0 },
-                    lane.offset,
-                    exec,
-                    &mut lane.mem,
-                );
-                lane.rr = Self::scalar(&r2, ScalarRole::Rr);
-                rz_news[k] = Self::scalar(&r2, ScalarRole::Rz);
+            for lane in lanes.iter_mut().filter(|l| l.live) {
+                lane_phase2(&program, lane, exec);
             }
-            // Converged lanes dispatch the exit trip (M3 alone) and free
-            // their slot; the rest run Phase-3 with beta bound.
-            for (k, lane) in lane_states.iter_mut().enumerate() {
-                if !lane.live {
-                    continue;
-                }
-                if lane.rr <= self.cfg.tol {
-                    lane.bus.dispatch_lane(
-                        &program.exit,
-                        Scalars { alpha: alphas[k], beta: 0.0 },
-                        lane.offset,
-                        exec,
-                        &mut lane.mem,
-                    );
-                    lane.iters += 1;
-                    lane.trace.push(lane.rr);
-                    lane.converged = true;
-                    lane.live = false;
-                    continue;
-                }
-                let beta = rz_news[k] / lane.rz;
-                lane.bus.dispatch_lane(
-                    program.phase(Phase::Phase3),
-                    Scalars { alpha: alphas[k], beta },
-                    lane.offset,
-                    exec,
-                    &mut lane.mem,
-                );
-                lane.rz = rz_news[k];
-                lane.iters += 1;
-                lane.trace.push(lane.rr);
-                if lane.iters >= self.cfg.max_iters {
-                    lane.live = false;
-                }
+            for lane in lanes.iter_mut().filter(|l| l.live) {
+                lane_phase3_or_exit(&cfg, &program, lane, exec);
             }
         }
-
-        lane_states
-            .into_iter()
-            .map(|mut lane| CoordResult {
-                x: std::mem::take(&mut lane.mem.x),
-                iters: lane.iters,
-                converged: lane.converged,
-                final_rr: lane.rr,
-                trace: lane.trace,
-                instructions: lane.bus.take_trace(),
-                mem_acks: lane.bus.acks().len(),
-            })
-            .collect()
+        lanes.into_iter().map(LaneState::into_result).collect()
     }
+
+    /// One chunk of [`Coordinator::solve_batch_parallel`]: the same
+    /// trip-major schedule as [`Coordinator::solve_chunk`], with every
+    /// trip's live lanes fanned out across the pool and a barrier
+    /// before the next trip starts.
+    fn solve_chunk_parallel<D: InstDispatch + Send>(
+        &mut self,
+        execs: &mut [D],
+        rhs: &[&[f64]],
+        x0: &[&[f64]],
+    ) -> Vec<CoordResult> {
+        let program = self.chunk_program(rhs[0].len() as u32, rhs.len() as u32);
+        let cfg = self.cfg;
+        let workers =
+            if cfg.lane_workers == 0 { pool::default_lane_workers() } else { cfg.lane_workers };
+        // The caller participates in every fan-out, so a budget of `w`
+        // workers is the caller plus w - 1 pool helpers.
+        let helpers = workers.saturating_sub(1);
+        let pool = pool::global();
+        let mut lanes = self.make_lanes(&program, rhs, x0);
+        fan_trips(pool, helpers, &mut lanes, execs, false, |l, e| lane_init(&cfg, &program, l, e));
+        while lanes.iter().any(|l| l.live) {
+            fan_trips(pool, helpers, &mut lanes, execs, true, |l, e| lane_phase1(&program, l, e));
+            fan_trips(pool, helpers, &mut lanes, execs, true, |l, e| lane_phase2(&program, l, e));
+            fan_trips(pool, helpers, &mut lanes, execs, true, |l, e| {
+                lane_phase3_or_exit(&cfg, &program, l, e)
+            });
+        }
+        lanes.into_iter().map(LaneState::into_result).collect()
+    }
+}
+
+// --------------------------------------------------------------------
+// Per-lane controller state and the trip steps both dispatch paths
+// share.  Each function touches exactly one lane's state and executor,
+// which is the whole lane-parallel safety argument: nothing here can
+// contend, so fanning lanes across workers cannot change a bit.
+// --------------------------------------------------------------------
+
+/// Per-lane controller state: the lane's dispatch slice (bus + vector
+/// file + beat offset) plus its scalar slots and liveness.
+struct LaneState {
+    slice: LaneSlice,
+    trace: ResidualTrace,
+    rz: f64,
+    rr: f64,
+    /// Step length bound for the lane's current iteration (line 8).
+    alpha: f64,
+    /// M6's r.z of the current iteration (feeds beta, then becomes rz).
+    rz_new: f64,
+    iters: u32,
+    converged: bool,
+    /// Still issuing trips; a converged or iteration-capped lane's slot
+    /// is freed and never issues again.
+    live: bool,
+}
+
+impl LaneState {
+    fn new(b: &[f64], x0: &[f64], offset_beats: u32, cfg: &CoordinatorConfig) -> Self {
+        Self {
+            slice: LaneSlice::new(b, x0, offset_beats, cfg.record_instructions),
+            trace: ResidualTrace::new(cfg.record_trace),
+            rz: 0.0,
+            rr: 0.0,
+            alpha: 0.0,
+            rz_new: 0.0,
+            iters: 0,
+            converged: false,
+            live: true,
+        }
+    }
+
+    fn into_result(mut self) -> CoordResult {
+        CoordResult {
+            x: std::mem::take(&mut self.slice.mem.x),
+            iters: self.iters,
+            converged: self.converged,
+            final_rr: self.rr,
+            trace: self.trace,
+            instructions: self.slice.bus.take_trace(),
+            mem_acks: self.slice.bus.acks().len(),
+        }
+    }
+}
+
+/// Scalar a trip returned, or a fail-fast panic on a shape bug.
+fn ret_scalar(ret: &DispatchReturn, role: ScalarRole) -> f64 {
+    match role {
+        ScalarRole::Pap => ret.pap,
+        ScalarRole::Rz => ret.rz,
+        ScalarRole::Rr => ret.rr,
+    }
+    .unwrap_or_else(|| panic!("backend did not return {role:?}"))
+}
+
+/// Merged init for one lane, alpha = 1 / beta = 0 pre-bound (Fig. 4,
+/// rp = -1).
+fn lane_init<D: InstDispatch>(
+    cfg: &CoordinatorConfig,
+    program: &Program,
+    lane: &mut LaneState,
+    exec: &mut D,
+) {
+    let ret = lane.slice.trip(&program.init, Scalars { alpha: 1.0, beta: 0.0 }, exec);
+    lane.rz = ret_scalar(&ret, ScalarRole::Rz);
+    lane.rr = ret_scalar(&ret, ScalarRole::Rr);
+    lane.trace.push(lane.rr);
+    lane.converged = lane.rr <= cfg.tol;
+    lane.live = !lane.converged && cfg.max_iters > 0;
+}
+
+/// Phase-1 trip for one lane -> its pap -> its alpha (scalar unit,
+/// line 8).
+fn lane_phase1<D: InstDispatch>(program: &Program, lane: &mut LaneState, exec: &mut D) {
+    let r1 = lane.slice.trip(program.phase(Phase::Phase1), Scalars::default(), exec);
+    lane.alpha = lane.rz / ret_scalar(&r1, ScalarRole::Pap);
+}
+
+/// Phase-2 trip for one lane (its hoisted M8 rr is checked by the
+/// following trip step: Fig. 4 opt 2, per RHS).
+fn lane_phase2<D: InstDispatch>(program: &Program, lane: &mut LaneState, exec: &mut D) {
+    let r2 = lane.slice.trip(
+        program.phase(Phase::Phase2),
+        Scalars { alpha: lane.alpha, beta: 0.0 },
+        exec,
+    );
+    lane.rr = ret_scalar(&r2, ScalarRole::Rr);
+    lane.rz_new = ret_scalar(&r2, ScalarRole::Rz);
+}
+
+/// A converged lane dispatches the exit trip (M3 alone) and frees its
+/// slot; a live one runs Phase-3 with beta bound.
+fn lane_phase3_or_exit<D: InstDispatch>(
+    cfg: &CoordinatorConfig,
+    program: &Program,
+    lane: &mut LaneState,
+    exec: &mut D,
+) {
+    if lane.rr <= cfg.tol {
+        lane.slice.trip(&program.exit, Scalars { alpha: lane.alpha, beta: 0.0 }, exec);
+        lane.iters += 1;
+        lane.trace.push(lane.rr);
+        lane.converged = true;
+        lane.live = false;
+        return;
+    }
+    let beta = lane.rz_new / lane.rz;
+    lane.slice.trip(program.phase(Phase::Phase3), Scalars { alpha: lane.alpha, beta }, exec);
+    lane.rz = lane.rz_new;
+    lane.iters += 1;
+    lane.trace.push(lane.rr);
+    if lane.iters >= cfg.max_iters {
+        lane.live = false;
+    }
+}
+
+/// The per-lane starts of one chunk: the caller's x0 slices, or
+/// `zeros` for every lane when none were given.  Shared by both batch
+/// entry points so the chunking seam cannot drift between them.
+fn x0_for_chunk<'x>(
+    x0: Option<&[&'x [f64]]>,
+    zeros: &'x [f64],
+    lanes: std::ops::Range<usize>,
+) -> Vec<&'x [f64]> {
+    lanes.map(|k| x0.map_or(zeros, |xs| xs[k])).collect()
+}
+
+/// Shape checks shared by both batch entry points.
+fn check_batch_shapes(rhs: &[&[f64]], x0: Option<&[&[f64]]>) {
+    let n = rhs[0].len();
+    for b in rhs {
+        assert_eq!(b.len(), n, "every batch lane must share the vector length");
+    }
+    if let Some(x0s) = x0 {
+        assert_eq!(x0s.len(), rhs.len(), "one x0 per right-hand side");
+        for x in x0s {
+            assert_eq!(x.len(), n, "x0 length must match the right-hand side");
+        }
+    }
+}
+
+/// Fan one trip across the (live) lanes: one scoped job per lane, at
+/// most `helpers` pool threads assisting the caller, and an implicit
+/// barrier when the scope drains.  `helpers == 0` degenerates to the
+/// sequential lane-minor walk on the calling thread (same issue order
+/// as [`Coordinator::solve_batch`]) — without boxing any jobs.
+fn fan_trips<D, F>(
+    pool: &WorkerPool,
+    helpers: usize,
+    lanes: &mut [LaneState],
+    execs: &mut [D],
+    only_live: bool,
+    step: F,
+) where
+    D: InstDispatch + Send,
+    F: Fn(&mut LaneState, &mut D) + Sync,
+{
+    let pairs = lanes.iter_mut().zip(execs.iter_mut()).filter(|(l, _)| !only_live || l.live);
+    if helpers == 0 {
+        for (lane, exec) in pairs {
+            step(lane, exec);
+        }
+        return;
+    }
+    let step = &step;
+    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = pairs
+        .map(|(lane, exec)| Box::new(move || step(lane, exec)) as Box<dyn FnOnce() + Send + '_>)
+        .collect();
+    pool.run_scoped_capped(jobs, helpers);
 }
 
 // --------------------------------------------------------------------

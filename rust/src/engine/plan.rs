@@ -4,6 +4,7 @@
 
 use std::sync::{Arc, OnceLock};
 
+use crate::coordinator::CoordinatorConfig;
 use crate::precision::{apply_accumulator_model, Scheme};
 use crate::program::ProgramCache;
 use crate::solver::{
@@ -64,6 +65,27 @@ impl<'a> PreparedMatrix<'a> {
     pub fn with_default_threads(a: &'a CsrMatrix) -> Self {
         let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         Self::new(a, threads)
+    }
+
+    /// A view of this plan with a different SpMV thread budget: the
+    /// shared caches (f32 view, diagonal) are the same `Arc`s — so
+    /// deriving the f32 view through either plan fills it for both —
+    /// and only the row partition is re-cut.  The lane-parallel batch
+    /// path takes a 1-thread view so each lane runs the serial SpMV
+    /// while the parallelism lives *across* lanes (bitwise identical
+    /// either way — the SpMV is thread-count-invariant).
+    pub fn reshaped(&self, threads: usize) -> PreparedMatrix<'a> {
+        let threads = threads.max(1);
+        if threads == self.threads {
+            return self.clone();
+        }
+        Self {
+            a: self.a,
+            vals32: Arc::clone(&self.vals32),
+            diag: Arc::clone(&self.diag),
+            partition: Arc::new(RowPartition::nnz_balanced(self.a, threads)),
+            threads,
+        }
     }
 
     /// The borrowed matrix this plan serves (the full `'a` borrow, so a
@@ -202,17 +224,96 @@ impl<'a> PreparedMatrix<'a> {
         opts: &SolveOptions,
         cache: Option<&Arc<ProgramCache>>,
     ) -> Vec<SolveResult> {
-        use crate::precision::AccumulatorModel;
-        use crate::solver::DotKind;
         if rhs.is_empty() {
             return Vec::new();
         }
-        let program_path = opts.dot == DotKind::DelayBuffer
-            && !matches!(opts.accumulator, AccumulatorModel::PaddedUnstable { .. });
-        if program_path {
+        if Self::program_family(opts) {
             return self.solve_batch_program(rhs, opts, cache);
         }
         self.solve_batch_workers(rhs, opts)
+    }
+
+    /// [`PreparedMatrix::solve_batch_with_cache`] with **lane-parallel
+    /// dispatch**: the batch still executes as one compiled instruction
+    /// stream, but each trip's per-lane streams are fanned across up to
+    /// `lane_workers` workers (`0` = machine default), one 1-thread
+    /// executor per lane over a shared serial-SpMV view of this plan —
+    /// the parallelism moves from inside each lane's SpMV to across
+    /// whole lanes (SpMV, vector sweeps, and dots alike).  Results are
+    /// **bitwise identical** to [`PreparedMatrix::solve_batch`] at any
+    /// worker count (`tests/lane_parallel.rs`); options outside the
+    /// program family fall back to
+    /// [`PreparedMatrix::solve_batch_workers`], which is already
+    /// lane-parallel by construction.  This is the execution path of
+    /// every [`service`](crate::service) worker.
+    pub fn solve_batch_parallel(
+        &self,
+        rhs: &[Vec<f64>],
+        opts: &SolveOptions,
+        cache: Option<&Arc<ProgramCache>>,
+        lane_workers: usize,
+    ) -> Vec<SolveResult> {
+        use crate::coordinator::{Coordinator, NativeExecutor};
+        if rhs.is_empty() {
+            return Vec::new();
+        }
+        if !Self::program_family(opts) {
+            return self.solve_batch_workers(rhs, opts);
+        }
+        // Force the lazy f32 derivation once, outside the fan-out, so
+        // lanes never serialize on the OnceLock's first fill.
+        let _ = self.vals32_for(opts.scheme);
+        let lane_plan = self.reshaped(1);
+        let cfg = CoordinatorConfig { lane_workers, ..Self::coord_cfg(opts) };
+        let mut coord = match cache {
+            Some(cache) => Coordinator::with_cache(cfg, Arc::clone(cache)),
+            None => Coordinator::new(cfg),
+        };
+        let mut execs: Vec<NativeExecutor> =
+            rhs.iter().map(|_| NativeExecutor::with_plan(&lane_plan, opts.scheme)).collect();
+        let rhs_refs: Vec<&[f64]> = rhs.iter().map(Vec::as_slice).collect();
+        let results = coord.solve_batch_parallel(&mut execs, &rhs_refs, None);
+        self.to_solve_results(results)
+    }
+
+    /// Whether an option set matches the instruction path's hardware
+    /// models (delay-buffer dots, a value-neutral accumulator — the
+    /// shipping [`SolveOptions::callipepla`] family) and therefore runs
+    /// through the compiled batched program.
+    fn program_family(opts: &SolveOptions) -> bool {
+        use crate::precision::AccumulatorModel;
+        use crate::solver::DotKind;
+        opts.dot == DotKind::DelayBuffer
+            && !matches!(opts.accumulator, AccumulatorModel::PaddedUnstable { .. })
+    }
+
+    /// The coordinator configuration a batch under `opts` runs with.
+    fn coord_cfg(opts: &SolveOptions) -> CoordinatorConfig {
+        CoordinatorConfig {
+            tol: opts.tol,
+            max_iters: opts.max_iters,
+            record_trace: opts.record_trace,
+            ..Default::default()
+        }
+    }
+
+    /// Map the coordinator's per-lane results into [`SolveResult`]s,
+    /// mirroring the reference solver's FLOP accounting: init pass +
+    /// one full iteration's FLOPs per executed iteration.
+    fn to_solve_results(&self, results: Vec<crate::coordinator::CoordResult>) -> Vec<SolveResult> {
+        use crate::solver::jpcg::flops_per_iter;
+        let (n, nnz) = (self.a.n, self.a.nnz());
+        results
+            .into_iter()
+            .map(|r| SolveResult {
+                x: r.x,
+                iters: r.iters,
+                converged: r.converged,
+                final_rr: r.final_rr,
+                trace: r.trace,
+                flops: 2 * nnz as u64 + 6 * n as u64 + r.iters as u64 * flops_per_iter(n, nnz),
+            })
+            .collect()
     }
 
     /// The batched-program execution path: one
@@ -227,14 +328,8 @@ impl<'a> PreparedMatrix<'a> {
         opts: &SolveOptions,
         cache: Option<&Arc<ProgramCache>>,
     ) -> Vec<SolveResult> {
-        use crate::coordinator::{Coordinator, CoordinatorConfig, NativeExecutor};
-        use crate::solver::jpcg::flops_per_iter;
-        let cfg = CoordinatorConfig {
-            tol: opts.tol,
-            max_iters: opts.max_iters,
-            record_trace: opts.record_trace,
-            ..Default::default()
-        };
+        use crate::coordinator::{Coordinator, NativeExecutor};
+        let cfg = Self::coord_cfg(opts);
         let mut coord = match cache {
             Some(cache) => Coordinator::with_cache(cfg, Arc::clone(cache)),
             None => Coordinator::new(cfg),
@@ -244,21 +339,8 @@ impl<'a> PreparedMatrix<'a> {
         // derived f32 cache persists on `self` across batch calls.
         let mut exec = NativeExecutor::with_plan(self, opts.scheme);
         let rhs_refs: Vec<&[f64]> = rhs.iter().map(Vec::as_slice).collect();
-        let (n, nnz) = (self.a.n, self.a.nnz());
-        coord
-            .solve_batch(&mut exec, &rhs_refs, None)
-            .into_iter()
-            .map(|r| SolveResult {
-                x: r.x,
-                iters: r.iters,
-                converged: r.converged,
-                final_rr: r.final_rr,
-                trace: r.trace,
-                // Mirror the reference solver's accounting: init pass +
-                // one full iteration's FLOPs per executed iteration.
-                flops: 2 * nnz as u64 + 6 * n as u64 + r.iters as u64 * flops_per_iter(n, nnz),
-            })
-            .collect()
+        let results = coord.solve_batch(&mut exec, &rhs_refs, None);
+        self.to_solve_results(results)
     }
 
     /// The worker-per-RHS-chunk batch path: parallelism goes *across*

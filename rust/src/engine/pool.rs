@@ -165,6 +165,20 @@ impl WorkerPool {
     /// Like `thread::scope`, panics in jobs are collected and re-raised
     /// here (as one panic) after every job has ended.
     pub fn run_scoped<'env>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        self.run_scoped_capped(jobs, usize::MAX);
+    }
+
+    /// [`WorkerPool::run_scoped`] inviting at most `helpers` pool
+    /// threads.  The caller always participates, so `helpers == 0` runs
+    /// every job on the calling thread, in submission order — which is
+    /// how an explicit worker budget (e.g. the coordinator's lane-worker
+    /// count) is honored on the shared [`global`] pool without resizing
+    /// it: a budget of `w` workers is the caller plus `w - 1` helpers.
+    pub fn run_scoped_capped<'env>(
+        &self,
+        jobs: Vec<Box<dyn FnOnce() + Send + 'env>>,
+        helpers: usize,
+    ) {
         if jobs.is_empty() {
             return;
         }
@@ -187,9 +201,10 @@ impl WorkerPool {
             done: Condvar::new(),
             panicked: AtomicBool::new(false),
         });
-        // Invite up to one helper per remaining job; the caller runs
-        // jobs too, so n == 1 needs no helper at all.
-        for _ in 0..self.workers.min(n.saturating_sub(1)) {
+        // Invite up to one helper per remaining job (bounded by the
+        // caller's cap); the caller runs jobs too, so n == 1 needs no
+        // helper at all.
+        for _ in 0..self.workers.min(n.saturating_sub(1)).min(helpers) {
             self.sender().send(Task::Scope(Arc::clone(&scope))).expect("pool workers alive");
         }
         while scope.run_one() {}
@@ -217,6 +232,20 @@ impl Drop for WorkerPool {
 pub fn global() -> &'static WorkerPool {
     static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
     GLOBAL.get_or_init(WorkerPool::with_default_threads)
+}
+
+/// The lane-worker budget a configuration value of 0 ("machine
+/// default") resolves to: the `CALLIPEPLA_LANE_WORKERS` environment
+/// variable when set to a positive integer (the CI thread-matrix arm
+/// pins it to 1 and to the core count so scheduling-order bugs cannot
+/// hide behind one lucky default), otherwise one worker per available
+/// hardware thread.
+pub fn default_lane_workers() -> usize {
+    std::env::var("CALLIPEPLA_LANE_WORKERS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|w| *w >= 1)
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
 }
 
 #[cfg(test)]
@@ -314,6 +343,102 @@ mod tests {
         }));
         assert!(result.is_err(), "the scope re-raises the job panic");
         assert_eq!(ran.load(Ordering::SeqCst), 5, "the other jobs still ran");
+    }
+
+    #[test]
+    fn capped_scope_with_zero_helpers_runs_on_the_caller_in_order() {
+        let pool = WorkerPool::new(4);
+        let me = std::thread::current().id();
+        let log = Mutex::new(Vec::new());
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..8)
+            .map(|k| {
+                let log = &log;
+                Box::new(move || {
+                    log.lock().unwrap().push((k, std::thread::current().id()));
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped_capped(jobs, 0);
+        let log = log.into_inner().unwrap();
+        assert_eq!(log.iter().map(|(k, _)| *k).collect::<Vec<_>>(), (0..8).collect::<Vec<_>>());
+        assert!(log.iter().all(|(_, id)| *id == me), "zero helpers means caller-only");
+    }
+
+    #[test]
+    fn nested_run_scoped_from_a_worker_thread_completes() {
+        // Two outer jobs rendezvous on a barrier, so one of them is
+        // necessarily running on a pool worker (the other on the
+        // caller); both then issue a nested run_scoped on the same
+        // pool.  Workers drain scope queues they are invited to and the
+        // nested callers drain their own, so this cannot wedge.
+        let pool = WorkerPool::new(2);
+        let barrier = std::sync::Barrier::new(2);
+        let count = AtomicUsize::new(0);
+        let outer: Vec<Box<dyn FnOnce() + Send + '_>> = (0..2)
+            .map(|_| {
+                let (pool, barrier, count) = (&pool, &barrier, &count);
+                Box::new(move || {
+                    barrier.wait();
+                    let inner: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                        .map(|_| {
+                            Box::new(move || {
+                                count.fetch_add(1, Ordering::SeqCst);
+                            }) as Box<dyn FnOnce() + Send + '_>
+                        })
+                        .collect();
+                    pool.run_scoped(inner);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(outer);
+        assert_eq!(count.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn a_panicking_spawned_job_leaves_the_workers_serving() {
+        let pool = WorkerPool::new(1);
+        pool.spawn(|| panic!("boom"));
+        let (tx, rx) = channel();
+        pool.spawn(move || tx.send(42).expect("receiver alive"));
+        assert_eq!(rx.recv().expect("the one worker survived the panic"), 42);
+    }
+
+    #[test]
+    fn global_pool_survives_a_panicking_scoped_job() {
+        // A panic inside one scoped job must re-raise at the call site
+        // without wedging the scope or poisoning the process-wide pool
+        // for whoever scopes next (e.g. a subsequent batch solve).
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                .map(|k| {
+                    Box::new(move || {
+                        if k == 2 {
+                            panic!("boom");
+                        }
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            global().run_scoped(jobs);
+        }));
+        assert!(result.is_err(), "the scope re-raises the job panic");
+        let after = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..3)
+            .map(|_| {
+                let after = &after;
+                Box::new(move || {
+                    after.fetch_add(1, Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        global().run_scoped(jobs);
+        assert_eq!(after.load(Ordering::SeqCst), 3, "the global pool still serves scopes");
+    }
+
+    #[test]
+    fn lane_worker_default_is_at_least_one() {
+        // (The env override is exercised by the CI thread-matrix arm,
+        // which runs the whole suite under CALLIPEPLA_LANE_WORKERS.)
+        assert!(default_lane_workers() >= 1);
     }
 
     #[test]

@@ -249,6 +249,97 @@ mod tests {
         assert_eq!(InstRdWr::decode(0x61a8011000002_u128), wr);
     }
 
+    // ------------------------------------------------------------------
+    // Property tests: the golden fixtures above pin hand-picked points;
+    // these pin the whole mapping.  Every field combination must
+    // round-trip encode -> decode -> encode bit-exactly, and every
+    // in-range wire word must decode -> encode back to itself (the
+    // encoding is a bijection onto its bit range).  Seeded via
+    // util::rng, so failures replay deterministically.
+    // ------------------------------------------------------------------
+
+    use crate::util::rng::Rng64;
+
+    const PROPERTY_DRAWS: usize = 20_000;
+
+    #[test]
+    fn random_vctrl_roundtrip_is_bit_exact() {
+        let mut rng = Rng64::seed_from_u64(0xCA11_15A1);
+        for _ in 0..PROPERTY_DRAWS {
+            let bits = rng.next_u64();
+            let i = InstVCtrl {
+                rd: bits & 1 != 0,
+                wr: bits & 2 != 0,
+                base_addr: rng.next_u64() as u32,
+                len: rng.next_u64() as u32,
+                q_id: (bits >> 2 & 0b111) as u8,
+            };
+            let w = i.encode();
+            assert!(w < 1u128 << 69, "Type-I words are 69 bits: {w:#x}");
+            let d = InstVCtrl::decode(w);
+            assert_eq!(d, i);
+            assert_eq!(d.encode(), w, "re-encode must reproduce the wire word");
+        }
+    }
+
+    #[test]
+    fn random_cmp_roundtrip_preserves_every_alpha_bit_pattern() {
+        // alpha is raw IEEE-754: infinities, subnormals and NaN
+        // payloads are all legal wire content.  Compare bit patterns,
+        // not floats — PartialEq would miss NaN == NaN.
+        let mut rng = Rng64::seed_from_u64(0xCA11_15A2);
+        for _ in 0..PROPERTY_DRAWS {
+            let alpha_bits = rng.next_u64();
+            let i = InstCmp {
+                len: rng.next_u64() as u32,
+                alpha: f64::from_bits(alpha_bits),
+                q_id: (rng.next_u64() & 0b111) as u8,
+            };
+            let w = i.encode();
+            assert!(w < 1u128 << 99, "Type-II words are 99 bits: {w:#x}");
+            let d = InstCmp::decode(w);
+            assert_eq!(d.alpha.to_bits(), alpha_bits);
+            assert_eq!(d.len, i.len);
+            assert_eq!(d.q_id, i.q_id);
+            assert_eq!(d.encode(), w, "re-encode must reproduce the wire word");
+        }
+    }
+
+    #[test]
+    fn random_rdwr_roundtrip_is_bit_exact() {
+        let mut rng = Rng64::seed_from_u64(0xCA11_15A3);
+        for _ in 0..PROPERTY_DRAWS {
+            let bits = rng.next_u64();
+            let i = InstRdWr {
+                rd: bits & 1 != 0,
+                wr: bits & 2 != 0,
+                base_addr: rng.next_u64() as u32,
+                len: rng.next_u64() as u32,
+            };
+            let w = i.encode();
+            assert!(w < 1u128 << 66, "Type-III words are 66 bits: {w:#x}");
+            let d = InstRdWr::decode(w);
+            assert_eq!(d, i);
+            assert_eq!(d.encode(), w, "re-encode must reproduce the wire word");
+        }
+    }
+
+    #[test]
+    fn every_in_range_wire_word_is_a_valid_instruction() {
+        // decode is total on each type's bit range and encode inverts
+        // it: random in-range words survive decode -> encode untouched.
+        let mut rng = Rng64::seed_from_u64(0xCA11_15A4);
+        let wide = |r: &mut Rng64| (r.next_u64() as u128) << 64 | r.next_u64() as u128;
+        for _ in 0..PROPERTY_DRAWS {
+            let w = wide(&mut rng) & ((1u128 << 69) - 1);
+            assert_eq!(InstVCtrl::decode(w).encode(), w);
+            let w = wide(&mut rng) & ((1u128 << 99) - 1);
+            assert_eq!(InstCmp::decode(w).encode(), w);
+            let w = wide(&mut rng) & ((1u128 << 66) - 1);
+            assert_eq!(InstRdWr::decode(w).encode(), w);
+        }
+    }
+
     #[test]
     fn trace_counts_per_target() {
         let mut t = InstTrace::default();

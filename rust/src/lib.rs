@@ -40,6 +40,11 @@
 //! layer turns that into a serving system: a matrix registry, a
 //! bucketed compiled-program cache, and a coalescing batch scheduler
 //! on a persistent worker pool (`callipepla serve`, `docs/SERVICE.md`).
+//! Since PR 5 batched dispatch is **lane-parallel**:
+//! `Coordinator::solve_batch_parallel` fans each trip's per-lane
+//! instruction streams across pool workers with trip barriers
+//! preserved — bitwise identical to the sequential lane walk, which
+//! remains the oracle (`PERF.md` §9).
 //! The complete Type-I/II/III
 //! instruction reference, wire encodings, and the batch-axis extension
 //! live in `docs/ISA.md`; build/quickstart walkthroughs in the

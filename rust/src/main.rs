@@ -81,9 +81,9 @@ fn print_usage() {
          commands: solve suite table4 table5 table6 table7 fig9 sim program serve\n\
          common flags: --matrix <Mxx|name>  --mtx <file>  --scale <f>  --scheme <fp64|mixv1|mixv2|mixv3>\n\
          \u{20}                --matrices M1,M2  --max-iters <n>  --threads <n>  --pjrt  --out <dir>\n\
-         \u{20}                solve: --coordinator [--serpens-stream]  --batch <rhs>\n\
+         \u{20}                solve: --coordinator [--serpens-stream]  --batch <rhs>  --lane-workers <w>\n\
          \u{20}                program: --n <len>  --mode <double|single>  --batch <rhs>\n\
-         \u{20}                sim: --batch <rhs>\n\
+         \u{20}                sim: --batch <rhs>  --lane-workers <w>  (w = 0: machine default)\n\
          \u{20}                serve: --requests <n>  --matrices <k>  --tenants <t>  --max-batch <b>\n\
          \u{20}                       --workers <w>  --seed <s>  (plus --scale/--scheme/--max-iters)"
     );
@@ -167,6 +167,9 @@ fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
         }
         None => None,
     };
+    if batch.is_none() && flags.contains_key("lane-workers") {
+        bail!("--lane-workers configures the batched program path; pair it with --batch <rhs>");
+    }
     println!("solving {name}: n={} nnz={} scheme={}", a.n, a.nnz(), scheme.name());
     let t0 = std::time::Instant::now();
     if flags.contains_key("pjrt") {
@@ -232,15 +235,27 @@ fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
         // Multi-RHS: `batch` deterministic right-hand sides through one
         // compiled batched instruction program (per-RHS results bitwise
         // identical to lone solves; early lanes exit on the fly).
+        // --lane-workers <w> fans each trip's lanes across w workers
+        // (0 = machine default) — same bits, more cores.
         let mut opts = SolveOptions::callipepla();
         opts.scheme = scheme;
         opts.max_iters = max_iters;
         let threads = flag_u32(flags, "threads", 0).max(1) as usize;
+        let lane_workers = match flags.get("lane-workers") {
+            None => None,
+            Some(v) => match v.parse::<usize>() {
+                Ok(w) => Some(w),
+                Err(_) => bail!("--lane-workers needs a non-negative integer, got {v:?}"),
+            },
+        };
         let prep = PreparedMatrix::new(&a, threads);
         let rhs: Vec<Vec<f64>> = (0..batch)
             .map(|k| (0..a.n).map(|i| 1.0 + ((i + 31 * k) % 7) as f64 / 7.0).collect())
             .collect();
-        let results = prep.solve_batch(&rhs, &opts);
+        let results = match lane_workers {
+            Some(w) => prep.solve_batch_parallel(&rhs, &opts, None, w),
+            None => prep.solve_batch(&rhs, &opts),
+        };
         for (k, r) in results.iter().enumerate() {
             println!(
                 "  rhs {k}: converged={} iters={} rr={:.3e}",
@@ -248,8 +263,13 @@ fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
             );
         }
         let total_iters: u64 = results.iter().map(|r| r.iters as u64).sum();
+        let dispatch = match lane_workers {
+            Some(0) => "lane-parallel (machine default)".to_string(),
+            Some(w) => format!("lane-parallel ({w} workers)"),
+            None => "sequential dispatch".to_string(),
+        };
         println!(
-            "batched program path: {batch} rhs, {total_iters} rhs-iterations, wall={:?}",
+            "batched program path ({dispatch}): {batch} rhs, {total_iters} rhs-iterations, wall={:?}",
             t0.elapsed()
         );
     } else {
@@ -557,6 +577,9 @@ fn cmd_sim(flags: &HashMap<String, String>) -> Result<()> {
         "A100 (analytic): {:.3} us/iter",
         sim::iteration::gpu_iteration_seconds(a.n, a.nnz()) * 1e6
     );
+    if flags.contains_key("lane-workers") && !flags.contains_key("batch") {
+        bail!("--lane-workers prices the batched dispatch; pair it with --batch <rhs>");
+    }
     if let Some(v) = flags.get("batch") {
         let batch: u32 = v
             .parse()
@@ -575,6 +598,24 @@ fn cmd_sim(flags: &HashMap<String, String>) -> Result<()> {
             b1,
             bb / b1
         );
+        if let Some(v) = flags.get("lane-workers") {
+            let workers: usize = v
+                .parse()
+                .map_err(|_| anyhow!("--lane-workers needs a non-negative integer, got {v:?}"))?;
+            let w = if workers == 0 {
+                callipepla::engine::pool::default_lane_workers()
+            } else {
+                workers
+            };
+            let cyc = sim::lane_parallel_iteration_cycles(&cfg, a.n, a.nnz(), batch, w);
+            let thr = sim::lane_parallel_rhs_iterations_per_second(&cfg, a.n, a.nnz(), batch, w);
+            println!(
+                "lane-parallel dispatch ({w} workers): {} cycles/batched-iter, \
+                 {thr:.0} rhs-iters/s ({:.2}x the sequential lane walk)",
+                cyc.total,
+                thr / sim::lane_parallel_rhs_iterations_per_second(&cfg, a.n, a.nnz(), batch, 1)
+            );
+        }
     }
     Ok(())
 }

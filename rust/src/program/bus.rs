@@ -316,6 +316,44 @@ impl InstructionBus {
     }
 }
 
+/// One batch lane's *slice* of the dispatch state: its instruction bus
+/// (trace + write acks), its value-plane [`VectorFile`], and its beat
+/// offset in the batched memory map.  A slice shares nothing with the
+/// other lanes of a batch — which is exactly what makes it the unit of
+/// lane-parallel dispatch: a worker can drive one slice's trips while
+/// other workers drive their own, and the per-lane arithmetic (hence
+/// every bit of the result) is identical to the sequential lane walk.
+#[derive(Debug)]
+pub struct LaneSlice {
+    /// The lane's instruction bus.
+    pub bus: InstructionBus,
+    /// The lane's value-plane vector state.
+    pub mem: VectorFile,
+    /// Beat offset of the lane's per-RHS regions
+    /// ([`Program::lane_offset_beats`](super::Program::lane_offset_beats)).
+    pub offset_beats: u32,
+}
+
+impl LaneSlice {
+    /// A fresh slice for one lane: right-hand side `b`, start `x0`,
+    /// `offset_beats` into the batched map; `record` keeps the full
+    /// instruction trace.
+    pub fn new(b: &[f64], x0: &[f64], offset_beats: u32, record: bool) -> Self {
+        Self { bus: InstructionBus::new(record), mem: VectorFile::new(b, x0), offset_beats }
+    }
+
+    /// Route one compiled trip for this lane
+    /// (see [`InstructionBus::dispatch_lane`]).
+    pub fn trip<D: InstDispatch>(
+        &mut self,
+        prog: &PhaseProgram,
+        scalars: Scalars,
+        exec: &mut D,
+    ) -> DispatchReturn {
+        self.bus.dispatch_lane(prog, scalars, self.offset_beats, exec, &mut self.mem)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -362,6 +400,34 @@ mod tests {
         assert_eq!(trace.count_for("VecCtrl-p"), 2);
         assert_eq!(trace.count_for("VecCtrl-p/mem"), 2);
         assert_eq!(trace.count_for("VecCtrl-ap/mem"), 1);
+    }
+
+    #[test]
+    fn lane_slice_trip_is_dispatch_lane_on_the_bundled_state() {
+        struct Null;
+        impl InstDispatch for Null {
+            fn dispatch(
+                &mut self,
+                _p: &PhaseProgram,
+                _c: &[InstCmp],
+                _m: &mut VectorFile,
+            ) -> DispatchReturn {
+                DispatchReturn::default()
+            }
+        }
+        let prog = Program::compile_batched(64, ChannelMode::Double, 2);
+        let off = prog.lane_offset_beats(1);
+        let p1 = prog.phase(crate::vsr::Phase::Phase1);
+
+        let mut slice = LaneSlice::new(&[1.0; 64], &[0.0; 64], off, true);
+        slice.trip(p1, Scalars::default(), &mut Null);
+
+        let mut bus = InstructionBus::new(true);
+        let mut mem = VectorFile::new(&[1.0; 64], &[0.0; 64]);
+        bus.dispatch_lane(p1, Scalars::default(), off, &mut Null, &mut mem);
+
+        assert_eq!(slice.bus.acks(), bus.acks());
+        assert_eq!(slice.bus.take_trace().issued, bus.take_trace().issued);
     }
 
     #[test]

@@ -27,7 +27,7 @@ pub mod bus;
 pub mod cache;
 pub mod mem_map;
 
-pub use bus::{DispatchReturn, InstDispatch, InstructionBus, Scalars, VectorFile};
+pub use bus::{DispatchReturn, InstDispatch, InstructionBus, LaneSlice, Scalars, VectorFile};
 pub use cache::{bucket_ceiling, ProgramCache};
 pub use mem_map::{HbmMemoryMap, VectorRegion, CH_DIAG, NNZ_CHANNELS, TOTAL_CHANNELS};
 

@@ -17,10 +17,12 @@
 //! the service's [`WorkerPool`]: build a zero-copy plan view from the
 //! registry entry, fetch the bucket program from the shared
 //! [`ProgramCache`], run
-//! [`PreparedMatrix::solve_batch_with_cache`](crate::engine::PreparedMatrix::solve_batch_with_cache),
-//! fulfill each lane's [`SolveTicket`].  One job per batch means at
-//! most ⌈requests / max_batch⌉ program executions per matrix — the
-//! serving-layer amortization the ROADMAP asked for.
+//! [`PreparedMatrix::solve_batch_parallel`](crate::engine::PreparedMatrix::solve_batch_parallel)
+//! (the batch's lanes fan out across
+//! [`ServiceConfig::lane_workers`] — bitwise the sequential dispatch,
+//! PERF §9), fulfill each lane's [`SolveTicket`].  One job per batch
+//! means at most ⌈requests / max_batch⌉ program executions per matrix
+//! — the serving-layer amortization the ROADMAP asked for.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex};
@@ -267,9 +269,20 @@ pub struct ServiceConfig {
     pub max_batch: usize,
     /// Worker-pool threads executing batches.
     pub workers: usize,
-    /// SpMV thread budget *inside* each batch execution (parallelism in
-    /// a service lives across batches first, so the default is 1).
+    /// SpMV thread budget of the registry's derived plans.  Since the
+    /// lane-parallel dispatch (PR 5) this only governs the *worker*
+    /// fallback path (option sets outside the program family): batches
+    /// on the program path always run serial SpMV inside each lane and
+    /// spread whole lanes across [`ServiceConfig::lane_workers`]
+    /// instead.  Parallelism in a service lives across lanes and
+    /// batches first, so the default is 1.
     pub spmv_threads: usize,
+    /// Lanes dispatched concurrently *inside* each batch execution (the
+    /// lane-parallel value plane; `0` = machine default, see
+    /// [`pool::default_lane_workers`](crate::engine::pool::default_lane_workers)).
+    /// Per-request results are bitwise unchanged at any setting — only
+    /// throughput moves.
+    pub lane_workers: usize,
     /// Solve options every request runs under.  Options outside the
     /// batched-program family (sequential dots, the XcgSolver
     /// accumulator) execute on the worker-per-RHS model path instead —
@@ -283,6 +296,7 @@ impl Default for ServiceConfig {
             max_batch: 8,
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
             spmv_threads: 1,
+            lane_workers: 0,
             opts: SolveOptions::callipepla(),
         }
     }
@@ -436,8 +450,9 @@ impl SolverService {
         let cache = Arc::clone(&self.cache);
         let stats = Arc::clone(&self.stats);
         let opts = self.cfg.opts;
+        let lane_workers = self.cfg.lane_workers;
         stats.batch_started();
-        self.pool.spawn(move || run_batch(id, entry, cache, stats, opts, lanes));
+        self.pool.spawn(move || run_batch(id, entry, cache, stats, opts, lanes, lane_workers));
     }
 }
 
@@ -455,7 +470,12 @@ impl Drop for SolverService {
 }
 
 /// Execute one coalesced batch on a pool worker: plan view → cached
-/// bucket program → per-lane results → tickets.
+/// bucket program → lane-parallel dispatch → per-lane results →
+/// tickets.  The lane fan-out rides the process-wide
+/// [`pool::global`](crate::engine::pool::global) pool (this worker
+/// participates and drains its own queue, so a fully busy service
+/// cannot wedge on it); results are bitwise those of the sequential
+/// dispatch the pre-lane-parallel service used.
 fn run_batch(
     id: MatrixId,
     entry: Arc<MatrixEntry>,
@@ -463,6 +483,7 @@ fn run_batch(
     stats: Arc<StatsInner>,
     opts: SolveOptions,
     lanes: Vec<Lane>,
+    lane_workers: usize,
 ) {
     let mut bs = Vec::with_capacity(lanes.len());
     let mut tenants = Vec::with_capacity(lanes.len());
@@ -473,7 +494,7 @@ fn run_batch(
         slots.push(lane.slot);
     }
     let outcome = catch_unwind(AssertUnwindSafe(|| {
-        entry.plan().solve_batch_with_cache(&bs, &opts, Some(&cache))
+        entry.plan().solve_batch_parallel(&bs, &opts, Some(&cache), lane_workers)
     }));
     match outcome {
         Ok(results) => {

@@ -171,6 +171,61 @@ pub fn batched_iteration_cycles(
     IterationBreakdown { phase1: p1, phase2: p2, phase3: p3, total: p1 + p2 + p3 }
 }
 
+/// Cycles for one batched iteration under **lane-parallel dispatch**:
+/// the controller fans each trip's per-lane instruction streams across
+/// `workers` issue slots, so lanes advance in waves of at most
+/// `workers` lanes.  A wave's lanes execute concurrently and contend on
+/// the shared channel pairs — priced exactly as
+/// [`batched_iteration_cycles`] of the wave size — while the waves of
+/// one trip serialize, and the trip barrier is preserved (the Fig. 4
+/// schedule is unchanged, matching the value plane's
+/// `Coordinator::solve_batch_parallel`).  `workers >= batch` is the
+/// fully-parallel case and equals [`batched_iteration_cycles`];
+/// `workers == 1` prices the sequential lane walk of the oracle path.
+pub fn lane_parallel_iteration_cycles(
+    cfg: &AccelSimConfig,
+    n: usize,
+    nnz: usize,
+    batch: BatchId,
+    workers: usize,
+) -> IterationBreakdown {
+    let batch = batch.max(1);
+    let mut per_wave = workers.max(1) as BatchId;
+    if per_wave > batch {
+        per_wave = batch;
+    }
+    // Memoize per wave shape: 17 lanes at 8 workers is waves of
+    // 8, 8, 1 — two simulations, not three.
+    let mut shapes: std::collections::HashMap<BatchId, IterationBreakdown> =
+        std::collections::HashMap::new();
+    let mut out = IterationBreakdown::default();
+    let mut left = batch;
+    while left > 0 {
+        let wave = left.min(per_wave);
+        let b = *shapes.entry(wave).or_insert_with(|| batched_iteration_cycles(cfg, n, nnz, wave));
+        out.phase1 += b.phase1;
+        out.phase2 += b.phase2;
+        out.phase3 += b.phase3;
+        out.total += b.total;
+        left -= wave;
+    }
+    out
+}
+
+/// Modeled RHS-iterations/s under lane-parallel dispatch
+/// ([`lane_parallel_iteration_cycles`]): `batch` lanes retire one JPCG
+/// iteration each per batched trip sequence.
+pub fn lane_parallel_rhs_iterations_per_second(
+    cfg: &AccelSimConfig,
+    n: usize,
+    nnz: usize,
+    batch: BatchId,
+    workers: usize,
+) -> f64 {
+    let cycles = lane_parallel_iteration_cycles(cfg, n, nnz, batch, workers).total;
+    batch.max(1) as f64 / (cycles as f64 * cfg.hbm.cycle_time())
+}
+
 /// Multi-RHS throughput of a batched program: right-hand-side
 /// iterations retired per second (`batch` lanes advance one JPCG
 /// iteration per batched trip sequence).
@@ -601,6 +656,31 @@ mod tests {
         let p3d = run_phase(Dataflow::from_program(program_d.phase(Phase::Phase3), 0));
         let p3s = run_phase(Dataflow::from_program(program_s.phase(Phase::Phase3), 0));
         assert!(p3s > p3d, "single={p3s} double={p3d}");
+    }
+
+    #[test]
+    fn lane_parallel_pricing_brackets_sequential_and_fully_batched() {
+        let cfg = AccelSimConfig::callipepla();
+        // workers >= batch degenerates to the fully batched dispatch.
+        let full = batched_iteration_cycles(&cfg, N, NNZ, 8);
+        assert_eq!(lane_parallel_iteration_cycles(&cfg, N, NNZ, 8, 8).total, full.total);
+        assert_eq!(lane_parallel_iteration_cycles(&cfg, N, NNZ, 8, 16).total, full.total);
+        // workers == 1 is the sequential lane walk: batch x one lane.
+        let single = batched_iteration_cycles(&cfg, N, NNZ, 1).total;
+        let seq = lane_parallel_iteration_cycles(&cfg, N, NNZ, 8, 1);
+        assert_eq!(seq.total, 8 * single);
+        // In between, waves serialize but amortize within themselves.
+        let mid = lane_parallel_iteration_cycles(&cfg, N, NNZ, 8, 4);
+        assert!(mid.total <= seq.total, "mid={} seq={}", mid.total, seq.total);
+        assert!(mid.total >= full.total, "mid={} full={}", mid.total, full.total);
+        // A 17-lane batch at 8 workers prices waves of 8, 8, 1.
+        let b17 = lane_parallel_iteration_cycles(&cfg, N, NNZ, 17, 8).total;
+        let want = 2 * batched_iteration_cycles(&cfg, N, NNZ, 8).total + single;
+        assert_eq!(b17, want);
+        // More workers -> more modeled throughput per right-hand side.
+        let t1 = lane_parallel_rhs_iterations_per_second(&cfg, N, NNZ, 8, 1);
+        let t8 = lane_parallel_rhs_iterations_per_second(&cfg, N, NNZ, 8, 8);
+        assert!(t8 > t1, "t8={t8} t1={t1}");
     }
 
     #[test]

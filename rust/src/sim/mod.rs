@@ -19,5 +19,6 @@ pub mod iteration;
 pub use dataflow::{Dataflow, FifoId, NodeId, SimError, SimStats};
 pub use iteration::{
     batched_iteration_cycles, batched_rhs_iterations_per_second, iteration_cycles,
-    schedule_cycles, solver_seconds, AccelSimConfig, IterationBreakdown, ScheduledBatch,
+    lane_parallel_iteration_cycles, lane_parallel_rhs_iterations_per_second, schedule_cycles,
+    solver_seconds, AccelSimConfig, IterationBreakdown, ScheduledBatch,
 };

@@ -1,0 +1,211 @@
+//! The lane-parallel determinism wall (ISSUE 5): fanning a batched
+//! program's trips across workers is a *scheduling* refactor, so every
+//! (scheme, batch, worker-count) combination must be **bitwise
+//! identical** to the sequential trip-major/lane-minor oracle walk —
+//! including across the `max_batch` chunking seam — and repeated runs
+//! of the same inputs must never move a bit.
+
+use callipepla::coordinator::{CoordResult, Coordinator, CoordinatorConfig, NativeExecutor};
+use callipepla::engine::{pool, PreparedMatrix};
+use callipepla::precision::{AccumulatorModel, Scheme};
+use callipepla::solver::{DotKind, SolveOptions};
+use callipepla::sparse::{synth, CsrMatrix};
+
+/// Deterministic, per-lane-distinct right-hand sides.
+fn make_rhs(n: usize, lanes: usize) -> Vec<Vec<f64>> {
+    (0..lanes)
+        .map(|k| (0..n).map(|i| 0.5 + ((i * 13 + k * 89) % 19) as f64 / 19.0).collect())
+        .collect()
+}
+
+/// The sequential oracle walk (`Coordinator::solve_batch`), with an
+/// optional chunk-lane cap to exercise the batch-splitting seam.
+fn solve_seq(a: &CsrMatrix, scheme: Scheme, rhs: &[Vec<f64>], chunk: u32) -> Vec<CoordResult> {
+    let cfg = CoordinatorConfig {
+        record_instructions: true,
+        record_trace: true,
+        max_chunk_lanes: chunk,
+        ..Default::default()
+    };
+    let mut coord = Coordinator::new(cfg);
+    let mut exec = NativeExecutor::with_threads(a, scheme, 1);
+    let refs: Vec<&[f64]> = rhs.iter().map(Vec::as_slice).collect();
+    coord.solve_batch(&mut exec, &refs, None)
+}
+
+/// The lane-parallel walk at an explicit worker budget.
+fn solve_par(
+    a: &CsrMatrix,
+    scheme: Scheme,
+    rhs: &[Vec<f64>],
+    workers: usize,
+    chunk: u32,
+) -> Vec<CoordResult> {
+    let cfg = CoordinatorConfig {
+        record_instructions: true,
+        record_trace: true,
+        lane_workers: workers,
+        max_chunk_lanes: chunk,
+        ..Default::default()
+    };
+    let mut coord = Coordinator::new(cfg);
+    let mut execs: Vec<NativeExecutor> =
+        rhs.iter().map(|_| NativeExecutor::with_threads(a, scheme, 1)).collect();
+    let refs: Vec<&[f64]> = rhs.iter().map(Vec::as_slice).collect();
+    coord.solve_batch_parallel(&mut execs, &refs, None)
+}
+
+fn bitwise_eq(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(u, v)| u.to_bits() == v.to_bits())
+}
+
+/// Everything observable must match: solution bits, residual-trace
+/// bits, iteration counts, converged flags, instruction counts, acks.
+fn assert_identical(seq: &[CoordResult], par: &[CoordResult], what: &str) {
+    assert_eq!(seq.len(), par.len(), "{what}: result count");
+    for (k, (s, p)) in seq.iter().zip(par).enumerate() {
+        assert_eq!(s.iters, p.iters, "{what}: lane {k} iters");
+        assert_eq!(s.converged, p.converged, "{what}: lane {k} converged");
+        assert_eq!(s.final_rr.to_bits(), p.final_rr.to_bits(), "{what}: lane {k} rr bits");
+        assert!(bitwise_eq(&s.x, &p.x), "{what}: lane {k} solution bits");
+        assert!(bitwise_eq(s.trace.values(), p.trace.values()), "{what}: lane {k} trace bits");
+        assert_eq!(s.mem_acks, p.mem_acks, "{what}: lane {k} write acks");
+        assert_eq!(
+            s.instructions.issued.len(),
+            p.instructions.issued.len(),
+            "{what}: lane {k} instruction count"
+        );
+    }
+}
+
+#[test]
+fn parallel_dispatch_is_bitwise_pinned_to_the_sequential_walk() {
+    let a = synth::laplace2d_shifted(300, 0.15);
+    for scheme in [Scheme::Fp64, Scheme::MixV3] {
+        for lanes in [1usize, 3, 8, 17] {
+            // Batch 17 is forced across the chunking seam (chunks of
+            // 8, 8, 1); the seam itself is pinned separately below.
+            let chunk = if lanes == 17 { 8 } else { 0 };
+            let rhs = make_rhs(a.n, lanes);
+            let seq = solve_seq(&a, scheme, &rhs, chunk);
+            assert!(seq.iter().all(|r| r.converged), "oracle must converge");
+            for workers in [1usize, 2, 8] {
+                let par = solve_par(&a, scheme, &rhs, workers, chunk);
+                let what = format!("{scheme:?} batch={lanes} workers={workers}");
+                assert_identical(&seq, &par, &what);
+            }
+        }
+    }
+}
+
+#[test]
+fn chunk_seam_is_invariant_under_both_dispatch_paths() {
+    // The same 17-lane batch cut at different chunk caps (and not cut
+    // at all) must produce identical bits — lanes are independent, so
+    // where the compiled chunk boundary falls can never matter.
+    let a = synth::laplace2d_shifted(200, 0.2);
+    let rhs = make_rhs(a.n, 17);
+    let baseline = solve_seq(&a, Scheme::MixV3, &rhs, 0);
+    for chunk in [1u32, 3, 8, 16] {
+        let seq = solve_seq(&a, Scheme::MixV3, &rhs, chunk);
+        assert_identical(&baseline, &seq, &format!("sequential chunk={chunk}"));
+        let par = solve_par(&a, Scheme::MixV3, &rhs, 4, chunk);
+        assert_identical(&baseline, &par, &format!("parallel chunk={chunk}"));
+    }
+}
+
+#[test]
+fn repeated_parallel_runs_are_bit_stable() {
+    // Same inputs, ten runs, full worker fan-out: scheduling noise
+    // (which lanes land on which pool threads, in which order) must
+    // never reach the results.
+    let a = synth::laplace2d_shifted(250, 0.15);
+    let rhs = make_rhs(a.n, 8);
+    let first = solve_par(&a, Scheme::MixV3, &rhs, 8, 0);
+    for run in 1..10 {
+        let again = solve_par(&a, Scheme::MixV3, &rhs, 8, 0);
+        assert_identical(&first, &again, &format!("run {run}"));
+    }
+}
+
+#[test]
+fn prepared_matrix_parallel_batch_matches_the_sequential_entry() {
+    // The shipping entry points: PreparedMatrix::solve_batch (sequential
+    // dispatch, threaded SpMV inside each lane) vs solve_batch_parallel
+    // (lane fan-out, serial SpMV inside each lane).  The SpMV is
+    // thread-count-invariant and the lanes are independent, so the two
+    // must agree bit for bit — including flops accounting.
+    let a = synth::banded_spd(1_000, 8_000, 1e-3, 29);
+    let rhs = make_rhs(a.n, 6);
+    let opts = SolveOptions {
+        scheme: Scheme::MixV3,
+        dot: DotKind::DelayBuffer,
+        accumulator: AccumulatorModel::OutOfOrder,
+        ..SolveOptions::default()
+    };
+    let prep = PreparedMatrix::new(&a, 4);
+    let seq = prep.solve_batch(&rhs, &opts);
+    for workers in [0usize, 1, 2, 8] {
+        let par = prep.solve_batch_parallel(&rhs, &opts, None, workers);
+        assert_eq!(seq.len(), par.len());
+        for (k, (s, p)) in seq.iter().zip(&par).enumerate() {
+            assert_eq!(s.iters, p.iters, "workers={workers} lane {k}");
+            assert_eq!(s.flops, p.flops, "workers={workers} lane {k} flops");
+            assert_eq!(s.final_rr.to_bits(), p.final_rr.to_bits(), "workers={workers} lane {k}");
+            assert!(bitwise_eq(&s.x, &p.x), "workers={workers} lane {k} bits");
+        }
+    }
+}
+
+#[test]
+fn non_program_options_fall_back_to_the_worker_path() {
+    // Sequential-dot options model a different machine; the parallel
+    // entry must route them to solve_batch_workers, bitwise the lone
+    // reference solves.
+    let a = synth::laplace2d_shifted(150, 0.2);
+    let rhs = make_rhs(a.n, 3);
+    let opts = SolveOptions::default(); // sequential dots
+    let prep = PreparedMatrix::new(&a, 2);
+    let want = prep.solve_batch_workers(&rhs, &opts);
+    let got = prep.solve_batch_parallel(&rhs, &opts, None, 4);
+    for (w, g) in want.iter().zip(&got) {
+        assert_eq!(w.iters, g.iters);
+        assert!(bitwise_eq(&w.x, &g.x));
+    }
+}
+
+#[test]
+fn empty_batches_return_cleanly_on_every_entry_point() {
+    let a = synth::laplace2d_shifted(64, 0.1);
+    let opts = SolveOptions::callipepla();
+    let prep = PreparedMatrix::new(&a, 2);
+    assert!(prep.solve_batch_parallel(&[], &opts, None, 4).is_empty());
+    let mut coord = Coordinator::new(CoordinatorConfig::default());
+    let mut execs: Vec<NativeExecutor> = Vec::new();
+    assert!(coord.solve_batch_parallel(&mut execs, &[], None).is_empty());
+}
+
+#[test]
+fn a_panicking_scoped_job_does_not_wedge_later_parallel_solves() {
+    // A panic in unrelated scoped work on the process-wide pool (the
+    // same pool the lane fan-out rides) must re-raise at its call site
+    // and leave subsequent lane-parallel solves bitwise intact.
+    let caught = std::panic::catch_unwind(|| {
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+            .map(|k| {
+                Box::new(move || {
+                    if k == 1 {
+                        panic!("boom");
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool::global().run_scoped(jobs);
+    });
+    assert!(caught.is_err(), "the scope re-raises the panic");
+    let a = synth::laplace2d_shifted(150, 0.2);
+    let rhs = make_rhs(a.n, 4);
+    let seq = solve_seq(&a, Scheme::MixV3, &rhs, 0);
+    let par = solve_par(&a, Scheme::MixV3, &rhs, 4, 0);
+    assert_identical(&seq, &par, "after a pool panic");
+}

@@ -179,4 +179,60 @@ fn empty_batch_is_empty_on_the_program_path() {
     assert!(coord.solve_batch(&mut exec, &[], None).is_empty());
     let prep = PreparedMatrix::new(&a, 4);
     assert!(prep.solve_batch(&[], &oracle_opts(Scheme::MixV3)).is_empty());
+    // The lane-parallel entries return just as cleanly.
+    assert!(prep.solve_batch_parallel(&[], &oracle_opts(Scheme::MixV3), None, 4).is_empty());
+    let mut no_execs: Vec<NativeExecutor> = Vec::new();
+    assert!(coord.solve_batch_parallel(&mut no_execs, &[], None).is_empty());
+}
+
+#[test]
+fn chunk_boundaries_leave_every_lane_a_lone_solve() {
+    // A batch cut into compiled chunks (the max_batch seam, forced here
+    // with the chunk-lane cap so it triggers at test-sized n) must
+    // still hand back per-lane results bitwise identical to lone
+    // reference solves — chunk composition is an addressing detail.
+    let a = synth::laplace2d_shifted(200, 0.2);
+    let rhs = make_rhs(a.n, 11);
+    let opts = oracle_opts(Scheme::MixV3);
+    for chunk in [1u32, 4, 8] {
+        let cfg = CoordinatorConfig { max_chunk_lanes: chunk, ..Default::default() };
+        let mut coord = Coordinator::new(cfg);
+        let mut exec = NativeExecutor::with_threads(&a, Scheme::MixV3, 1);
+        let refs: Vec<&[f64]> = rhs.iter().map(Vec::as_slice).collect();
+        let batch = coord.solve_batch(&mut exec, &refs, None);
+        assert_eq!(batch.len(), rhs.len());
+        for (k, b) in rhs.iter().enumerate() {
+            let lone = jpcg_solve(&a, Some(b), None, &opts);
+            assert_eq!(batch[k].iters, lone.iters, "chunk={chunk} rhs {k}");
+            assert!(bitwise_eq(&batch[k].x, &lone.x), "chunk={chunk} rhs {k} bits");
+        }
+    }
+}
+
+#[test]
+fn one_element_system_solves_in_a_batch() {
+    // n == 1 is the degenerate memory map (one beat per vector): the
+    // compiled program, the dots and the left-divide must all handle a
+    // single-element stream, on both dispatch paths.
+    use callipepla::sparse::CooMatrix;
+    let mut coo = CooMatrix::new(1);
+    coo.push(0, 0, 4.0);
+    let a = coo.to_csr();
+    let rhs: Vec<Vec<f64>> = vec![vec![2.0], vec![-6.0], vec![0.0]];
+    let opts = oracle_opts(Scheme::Fp64);
+    let prep = PreparedMatrix::new(&a, 2);
+    let batch = prep.solve_batch(&rhs, &opts);
+    let par = prep.solve_batch_parallel(&rhs, &opts, None, 2);
+    assert_eq!(batch.len(), 3);
+    for (k, b) in rhs.iter().enumerate() {
+        let lone = jpcg_solve(&a, Some(b), None, &opts);
+        assert!(lone.converged);
+        assert_eq!(batch[k].iters, lone.iters, "rhs {k}");
+        assert!(bitwise_eq(&batch[k].x, &lone.x), "rhs {k}");
+        assert!(bitwise_eq(&par[k].x, &lone.x), "rhs {k} (parallel)");
+    }
+    // 4 x = 2 -> x = 0.5 exactly (powers of two), and the zero lane
+    // converges on the merged init alone.
+    assert_eq!(batch[0].x[0], 0.5);
+    assert_eq!(batch[2].iters, 0);
 }
