@@ -8,7 +8,9 @@
 //!   at 8 threads, plus an 8-RHS batch on both batch paths: the
 //!   worker-per-RHS model path (`solve_batch_workers`) and the batched
 //!   instruction program (`solve_batch` -> `Coordinator::solve_batch`,
-//!   the multi-RHS throughput row)
+//!   the multi-RHS throughput row), plus the block-CG SpMV rows
+//!   (`solve_batch_block[_parallel]`: one nnz pass per batched
+//!   iteration feeding every lane)
 //! * spawn overhead on a small system: the worker batch on per-call
 //!   `thread::scope` spawns vs the persistent pool (PERF §7/§8)
 //! * coordinator-path iterations (instruction issue + module dispatch)
@@ -30,8 +32,8 @@ use callipepla::coordinator::PhaseExecutor;
 use callipepla::runtime::{default_artifact_dir, PjrtExecutor, PjrtRuntime};
 use callipepla::sim::dataflow::Dataflow;
 use callipepla::sim::iteration::{
-    batched_iteration_cycles, batched_rhs_iterations_per_second, iteration_cycles, spmv_busy_cycles,
-    AccelSimConfig,
+    batched_iteration_cycles, batched_iteration_cycles_mode, batched_rhs_iterations_per_second,
+    iteration_cycles, spmv_busy_cycles, AccelSimConfig, BatchSpmvMode,
 };
 use callipepla::solver::{jpcg_solve, SolveOptions};
 use callipepla::sparse::{pack_nnz_streams, synth, DEP_DIST_SERPENS};
@@ -210,6 +212,29 @@ fn main() {
         8.0 * 10.0 / r.median_s
     );
 
+    // Block-CG SpMV (PR 6): the same 8-RHS batch with one nnz pass per
+    // batched iteration feeding every lane through the interleaved
+    // lane-major kernel, instead of one matrix stream per lane per
+    // trip.  Guard first: block mode is an execution-strategy switch,
+    // so the results must be bitwise the per-lane row's.
+    let blk = prep8.solve_batch_block(&rhs, &opts);
+    let bitwise = seq.iter().zip(&blk).all(|(s, p)| {
+        s.iters == p.iters && s.x.iter().zip(&p.x).all(|(u, v)| u.to_bits() == v.to_bits())
+    });
+    assert!(bitwise, "block-CG SpMV changed bits");
+    let r = bench("program_batch_8rhs_block_10_iters", 1, 3, || {
+        std::hint::black_box(prep8.solve_batch_block(&rhs, &opts));
+    });
+    record(&mut recs, &r, None);
+    println!(
+        "    => {:.1} rhs-iterations/s with block-CG SpMV",
+        8.0 * 10.0 / r.median_s
+    );
+    let r = bench("program_batch_8rhs_block_par", 1, 3, || {
+        std::hint::black_box(prep8.solve_batch_block_parallel(&rhs, &opts, None, 0));
+    });
+    record(&mut recs, &r, None);
+
     // Coordinator-path iteration (instruction issue + module dispatch).
     let r = bench("coordinator_native_10_iters", 1, 5, || {
         let cfg = CoordinatorConfig { max_iters: 10, ..Default::default() };
@@ -260,6 +285,15 @@ fn main() {
         "    => modeled throughput: {thr8:.0} rhs-iters/s at batch 8 vs {thr1:.0} at batch 1 \
          ({:.2}x)",
         thr8 / thr1
+    );
+    // Modeled block-vs-per-lane split at batch 8: the block mode's
+    // single nnz pass vs the time-shared matrix port.
+    let blk8 = batched_iteration_cycles_mode(&cal, sim_n, sim_nnz, 8, BatchSpmvMode::Block).total;
+    let per8 = batched_iteration_cycles_mode(&cal, sim_n, sim_nnz, 8, BatchSpmvMode::PerLane).total;
+    println!(
+        "    => modeled batch-8 iteration: {blk8} cycles block-CG vs {per8} per-lane SpMV \
+         ({:.2}x)",
+        per8 as f64 / blk8 as f64
     );
 
     // PJRT phase call, when the feature and artifacts exist.

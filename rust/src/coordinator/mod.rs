@@ -90,6 +90,18 @@ pub struct CoordinatorConfig {
     /// batch-splitting path at small `n`; results are chunk-invariant
     /// either way (lanes are independent).
     pub max_chunk_lanes: u32,
+    /// Block-CG SpMV: dispatch each trip round's Type-II SpMV **once
+    /// per batch** instead of once per lane — the live lanes' inputs
+    /// are gathered into an interleaved lane-major block, one
+    /// [`InstDispatch::batch_spmv`] call streams the matrix a single
+    /// time for all of them, and the outputs are scattered into each
+    /// lane's staged ap for its M1 to consume.  Retired lanes are
+    /// simply not gathered, so they stop costing inner-loop work.
+    /// Per-lane scalars, trip barriers, the instruction streams, and
+    /// every result bit are unchanged (the batch kernel is bitwise the
+    /// per-lane SpMV per lane); backends whose `batch_spmv` declines
+    /// fall back to per-lane SpMV transparently.
+    pub block_spmv: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -102,6 +114,7 @@ impl Default for CoordinatorConfig {
             channel_mode: ChannelMode::Double,
             lane_workers: 0,
             max_chunk_lanes: 0,
+            block_spmv: false,
         }
     }
 }
@@ -334,10 +347,21 @@ impl Coordinator {
         let program = self.chunk_program(rhs[0].len() as u32, rhs.len() as u32);
         let cfg = self.cfg;
         let mut lanes = self.make_lanes(&program, rhs, x0);
+        // Block-CG mode: one batch_spmv ahead of each SpMV trip round
+        // stages every live lane's ap, so the M1s below consume one
+        // shared matrix pass.  A backend that declines (first call
+        // returns false) drops the mode for the whole chunk.
+        let mut block = cfg.block_spmv;
+        if block {
+            block = block_spmv_pass(&mut lanes, exec, true, false);
+        }
         for lane in lanes.iter_mut() {
             lane_init(&cfg, &program, lane, exec);
         }
         while lanes.iter().any(|l| l.live) {
+            if block {
+                block = block_spmv_pass(&mut lanes, exec, false, true);
+            }
             for lane in lanes.iter_mut().filter(|l| l.live) {
                 lane_phase1(&program, lane, exec);
             }
@@ -370,8 +394,19 @@ impl Coordinator {
         let helpers = workers.saturating_sub(1);
         let pool = pool::global();
         let mut lanes = self.make_lanes(&program, rhs, x0);
+        // Block-CG mode: the batch-wide SpMV runs on the first lane's
+        // executor (every executor serves the same matrix) between the
+        // trip barriers, before the lanes fan out; the staged-ap
+        // handshake then makes each fanned M1 a consume, not a stream.
+        let mut block = cfg.block_spmv && !execs.is_empty();
+        if block {
+            block = block_spmv_pass(&mut lanes, &mut execs[0], true, false);
+        }
         fan_trips(pool, helpers, &mut lanes, execs, false, |l, e| lane_init(&cfg, &program, l, e));
         while lanes.iter().any(|l| l.live) {
+            if block {
+                block = block_spmv_pass(&mut lanes, &mut execs[0], false, true);
+            }
             fan_trips(pool, helpers, &mut lanes, execs, true, |l, e| lane_phase1(&program, l, e));
             fan_trips(pool, helpers, &mut lanes, execs, true, |l, e| lane_phase2(&program, l, e));
             fan_trips(pool, helpers, &mut lanes, execs, true, |l, e| {
@@ -531,11 +566,63 @@ fn check_batch_shapes(rhs: &[&[f64]], x0: Option<&[&[f64]]>) {
     }
 }
 
-/// Fan one trip across the (live) lanes: one scoped job per lane, at
-/// most `helpers` pool threads assisting the caller, and an implicit
-/// barrier when the scope drains.  `helpers == 0` degenerates to the
-/// sequential lane-minor walk on the calling thread (same issue order
-/// as [`Coordinator::solve_batch`]) — without boxing any jobs.
+/// One block-CG SpMV round: gather the selected lanes' SpMV inputs (x
+/// on the merged-init round, p on the steady rounds) into an
+/// interleaved lane-major block, stream the matrix **once** through
+/// [`InstDispatch::batch_spmv`], and scatter the outputs into each
+/// lane's staged ap with the [`VectorFile::block_ap_staged`] handshake
+/// set — the lanes' M1 instructions then consume the staged stream.
+/// Retired lanes are never gathered (`only_live`), so the inner loop's
+/// work tracks the *live* lane count.  Returns whether block mode stays
+/// on: `false` means the backend declined and the caller should fall
+/// back to per-lane SpMV for the rest of the chunk (nothing was staged).
+fn block_spmv_pass<D: InstDispatch>(
+    lanes: &mut [LaneState],
+    exec: &mut D,
+    use_x: bool,
+    only_live: bool,
+) -> bool {
+    let picked: Vec<usize> = lanes
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| !only_live || l.live)
+        .map(|(k, _)| k)
+        .collect();
+    let Some(&first) = picked.first() else {
+        return true; // nothing to stage; keep the mode on
+    };
+    let n = lanes[first].slice.mem.x.len();
+    let l = picked.len();
+    let mut xs = vec![0.0; n * l];
+    for (j, &k) in picked.iter().enumerate() {
+        let mem = &lanes[k].slice.mem;
+        let src = if use_x { &mem.x } else { &mem.p };
+        for (i, v) in src.iter().enumerate() {
+            xs[i * l + j] = *v;
+        }
+    }
+    let mut ys = vec![0.0; n * l];
+    if !exec.batch_spmv(&xs, &mut ys, l) {
+        return false;
+    }
+    for (j, &k) in picked.iter().enumerate() {
+        let mem = &mut lanes[k].slice.mem;
+        for (i, dst) in mem.stage_ap.iter_mut().enumerate() {
+            *dst = ys[i * l + j];
+        }
+        mem.block_ap_staged = true;
+    }
+    true
+}
+
+/// Fan one trip across the (live) lanes through the pool's indexed
+/// arena ([`WorkerPool::run_scoped_indexed`]): lanes are claimed off a
+/// shared atomic cursor, so a trip boxes one drain loop per
+/// participating worker instead of one job per lane (PERF §11), with an
+/// implicit barrier when the scope drains.  `helpers == 0` (or a
+/// single live lane) degenerates to the sequential lane-minor walk on
+/// the calling thread (same issue order as
+/// [`Coordinator::solve_batch`]) — without boxing any jobs.
 fn fan_trips<D, F>(
     pool: &WorkerPool,
     helpers: usize,
@@ -547,19 +634,37 @@ fn fan_trips<D, F>(
     D: InstDispatch + Send,
     F: Fn(&mut LaneState, &mut D) + Sync,
 {
-    let pairs = lanes.iter_mut().zip(execs.iter_mut()).filter(|(l, _)| !only_live || l.live);
-    if helpers == 0 {
-        for (lane, exec) in pairs {
-            step(lane, exec);
+    let mut pairs: Vec<(*mut LaneState, *mut D)> = lanes
+        .iter_mut()
+        .zip(execs.iter_mut())
+        .filter(|(l, _)| !only_live || l.live)
+        .map(|(lane, exec)| (lane as *mut LaneState, exec as *mut D))
+        .collect();
+    if helpers == 0 || pairs.len() <= 1 {
+        for &(lane, exec) in &pairs {
+            // SAFETY: the pointers came from disjoint `&mut` borrows
+            // that outlive this loop.
+            unsafe { step(&mut *lane, &mut *exec) };
         }
         return;
     }
-    let step = &step;
-    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = pairs
-        .map(|(lane, exec)| Box::new(move || step(lane, exec)) as Box<dyn FnOnce() + Send + '_>)
-        .collect();
-    pool.run_scoped_capped(jobs, helpers);
+    let base = SyncPtr(pairs.as_mut_ptr());
+    pool.run_scoped_indexed(pairs.len(), helpers, &|i| {
+        // SAFETY: run_scoped_indexed's atomic cursor hands each index
+        // to exactly one worker, and each slot holds pointers derived
+        // from disjoint `&mut` borrows that outlive the call, so this
+        // is the only live reference to lane/executor `i`.
+        let (lane, exec) = unsafe { *base.0.add(i) };
+        unsafe { step(&mut *lane, &mut *exec) };
+    });
 }
+
+/// A raw pointer the trip fan-out can share across workers.  Safety is
+/// argued at each use site: every slot behind the pointer is
+/// dereferenced by exactly one worker.
+struct SyncPtr<T>(*mut T);
+unsafe impl<T> Send for SyncPtr<T> {}
+unsafe impl<T> Sync for SyncPtr<T> {}
 
 // --------------------------------------------------------------------
 // Native executor: an instruction interpreter over the module
@@ -568,7 +673,7 @@ fn fan_trips<D, F>(
 
 use crate::engine::PreparedMatrix;
 use crate::isa::InstCmp;
-use crate::modules::compute::{AxpyModule, DotModule, LeftDivideModule, UpdatePModule};
+use crate::modules::compute::{AxpyModule, LeftDivideModule, UpdatePModule};
 use crate::modules::fsm::Endpoint;
 use crate::program::{CompStep, PhaseProgram};
 use crate::sparse::{pack_nnz_streams, NnzStream, DEP_DIST_SERPENS};
@@ -646,6 +751,15 @@ impl<'a> NativeExecutor<'a> {
         }
     }
 
+    /// The delay-buffer dot, lane-grouped across the plan's thread
+    /// budget — bitwise the serial
+    /// [`DotModule`](crate::modules::compute::DotModule) kernel
+    /// ([`crate::engine::dot_delay_parallel`]'s fixed-partition
+    /// contract), so M2/M6/M8 speed up without touching any oracle.
+    fn dot(&self, a: &[f64], b: &[f64]) -> f64 {
+        crate::engine::dot_delay_parallel(a, b, self.prep.threads())
+    }
+
     /// Execute one Type-II instruction.  Input *sources* follow the
     /// compiled endpoints: a `Memory` endpoint reads the committed
     /// (HBM) vector, a `Module` endpoint reads the staged on-chip
@@ -654,8 +768,14 @@ impl<'a> NativeExecutor<'a> {
         match step.module {
             Module::M1 => {
                 // SpMV input per the Type-I routing: x0 on the merged
-                // init trip, p on the steady trips.
-                if step.inputs.iter().any(|(v, _)| *v == Vector::X) {
+                // init trip, p on the steady trips.  Under block-CG
+                // dispatch a batch-wide pass already streamed the
+                // matrix and staged this lane's ap — M1 consumes the
+                // staged stream instead of re-streaming (the Type-II
+                // issue, dirty bit, and write-back are unchanged).
+                if mem.block_ap_staged {
+                    mem.block_ap_staged = false;
+                } else if step.inputs.iter().any(|(v, _)| *v == Vector::X) {
                     self.spmv_into(&mem.x, &mut mem.stage_ap);
                 } else {
                     self.spmv_into(&mem.p, &mut mem.stage_ap);
@@ -665,7 +785,7 @@ impl<'a> NativeExecutor<'a> {
             }
             Module::M2 => {
                 // pap: p from memory, ap streamed on-chip from M1.
-                Some(DotModule.run(&mem.p, &mem.stage_ap))
+                Some(self.dot(&mem.p, &mem.stage_ap))
             }
             Module::M4 => {
                 // r' = r - alpha·ap into the staging stream.  Phase-2
@@ -690,8 +810,8 @@ impl<'a> NativeExecutor<'a> {
                 LeftDivideModule.run(&mem.stage_r, self.prep.diag(), &mut mem.stage_z);
                 None
             }
-            Module::M6 => Some(DotModule.run(&mem.stage_r, &mem.stage_z)),
-            Module::M8 => Some(DotModule.run(&mem.stage_r, &mem.stage_r)),
+            Module::M6 => Some(self.dot(&mem.stage_r, &mem.stage_z)),
+            Module::M8 => Some(self.dot(&mem.stage_r, &mem.stage_r)),
             Module::M7 => {
                 if step.inputs.iter().any(|(v, _)| *v == Vector::P) {
                     mem.stage_p.copy_from_slice(&mem.p);
@@ -735,6 +855,19 @@ impl InstDispatch for NativeExecutor<'_> {
             }
         }
         ret
+    }
+
+    /// One nnz pass feeds every lane
+    /// ([`crate::engine::spmv_block_parallel`] on the plan's partition),
+    /// bitwise the per-lane [`PreparedMatrix::spmv`] per lane.  The
+    /// Serpens stream replay declines: its accumulation follows the
+    /// scheduled stream order, which has no batch kernel.
+    fn batch_spmv(&mut self, xs: &[f64], ys: &mut [f64], lanes: usize) -> bool {
+        if self.stream.is_some() {
+            return false;
+        }
+        self.prep.spmv_block(self.scheme, xs, ys, lanes);
+        true
     }
 }
 

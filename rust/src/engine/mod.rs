@@ -13,7 +13,11 @@
 //!   Row-parallel CSR never splits a row, so per-row accumulation order
 //!   is untouched and the output is **bitwise identical** to the serial
 //!   kernels — Table-7 iteration counts cannot drift (asserted in
-//!   `tests/engine_parallel.rs`).
+//!   `tests/engine_parallel.rs`).  [`spmv_block_parallel`] is its
+//!   block-CG extension: one nnz pass feeds every RHS lane of an
+//!   interleaved lane-major batch, with the same per-lane bit contract,
+//!   and [`dot_delay_parallel`] splits the delay-buffer dot's fixed
+//!   8-lane partition across workers without moving a bit.
 //! * [`PreparedMatrix`] — a solve plan that derives `vals_f32`, the
 //!   Jacobi diagonal and the partition once (behind `Arc`s, so clones
 //!   and the [`service`](crate::service) registry share one copy), then
@@ -34,4 +38,7 @@ mod spmv;
 pub use partition::RowPartition;
 pub use plan::PreparedMatrix;
 pub use pool::WorkerPool;
-pub use spmv::{spmv_f64_parallel, spmv_parallel};
+pub use spmv::{
+    dot_delay_parallel, spmv_block_parallel, spmv_f64_parallel, spmv_parallel,
+    DOT_PARALLEL_MIN_LEN,
+};

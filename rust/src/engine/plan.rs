@@ -12,7 +12,7 @@ use crate::solver::{
 };
 use crate::sparse::CsrMatrix;
 
-use super::{pool, spmv_parallel, RowPartition};
+use super::{pool, spmv_block_parallel, spmv_parallel, RowPartition};
 
 /// A matrix prepared for repeated solving: cached f32 value view
 /// (derived lazily, on the first Mix-scheme use — a pure-FP64 plan
@@ -131,6 +131,23 @@ impl<'a> PreparedMatrix<'a> {
         spmv_parallel(self.a, self.vals32_for(scheme), x, y, scheme, &self.partition);
     }
 
+    /// Block-CG SpMV: `ys = A xs` for `lanes` interleaved lane-major
+    /// right-hand sides (`xs[col * lanes + lane]`) in **one pass** over
+    /// the nnz structure, on the plan's partition/threads
+    /// ([`crate::engine::spmv_block_parallel`]).  Per lane the output
+    /// is bitwise [`PreparedMatrix::spmv`] of that lane's vector.
+    pub fn spmv_block(&self, scheme: Scheme, xs: &[f64], ys: &mut [f64], lanes: usize) {
+        spmv_block_parallel(
+            self.a,
+            self.vals32_for(scheme),
+            xs,
+            ys,
+            lanes,
+            scheme,
+            &self.partition,
+        );
+    }
+
     /// Solve one right-hand side (`None` = ones, paper setup) with the
     /// parallel SpMV inside the fused JPCG loop.  Numerics are bitwise
     /// identical to [`crate::solver::jpcg_solve`] at any thread count.
@@ -228,7 +245,42 @@ impl<'a> PreparedMatrix<'a> {
             return Vec::new();
         }
         if Self::program_family(opts) {
-            return self.solve_batch_program(rhs, opts, cache);
+            return self.solve_batch_program(rhs, opts, cache, false);
+        }
+        self.solve_batch_workers(rhs, opts)
+    }
+
+    /// [`PreparedMatrix::solve_batch`] under **block-CG SpMV**
+    /// ([`CoordinatorConfig::block_spmv`]): each batched iteration
+    /// streams the matrix **once** for every live lane — the Type-II
+    /// SpMV dispatches per batch, inputs gathered into an interleaved
+    /// lane-major block ([`PreparedMatrix::spmv_block`]) — instead of
+    /// once per lane.  The block kernel preserves each lane's
+    /// accumulation chain exactly, so results are **bitwise identical**
+    /// to [`PreparedMatrix::solve_batch`] (and hence to lone
+    /// [`crate::solver::jpcg_solve`] calls); the Table-7-style
+    /// convergence gate in `tests/block_spmv.rs` documents the
+    /// tolerance contract any future layout change must still meet.
+    /// Options outside the program family fall back to
+    /// [`PreparedMatrix::solve_batch_workers`] (no batch axis there).
+    pub fn solve_batch_block(&self, rhs: &[Vec<f64>], opts: &SolveOptions) -> Vec<SolveResult> {
+        self.solve_batch_block_with_cache(rhs, opts, None)
+    }
+
+    /// [`PreparedMatrix::solve_batch_block`] drawing its compiled
+    /// program from a shared [`ProgramCache`] (see
+    /// [`PreparedMatrix::solve_batch_with_cache`]).
+    pub fn solve_batch_block_with_cache(
+        &self,
+        rhs: &[Vec<f64>],
+        opts: &SolveOptions,
+        cache: Option<&Arc<ProgramCache>>,
+    ) -> Vec<SolveResult> {
+        if rhs.is_empty() {
+            return Vec::new();
+        }
+        if Self::program_family(opts) {
+            return self.solve_batch_program(rhs, opts, cache, true);
         }
         self.solve_batch_workers(rhs, opts)
     }
@@ -253,6 +305,33 @@ impl<'a> PreparedMatrix<'a> {
         cache: Option<&Arc<ProgramCache>>,
         lane_workers: usize,
     ) -> Vec<SolveResult> {
+        self.solve_batch_parallel_impl(rhs, opts, cache, lane_workers, false)
+    }
+
+    /// [`PreparedMatrix::solve_batch_parallel`] under **block-CG SpMV**
+    /// (see [`PreparedMatrix::solve_batch_block`]): the batch-wide
+    /// matrix pass runs between the trip barriers on this plan's full
+    /// thread budget, while the non-SpMV trips still fan across
+    /// `lane_workers` lanes.  Bitwise identical to every other entry
+    /// point of the program family.
+    pub fn solve_batch_block_parallel(
+        &self,
+        rhs: &[Vec<f64>],
+        opts: &SolveOptions,
+        cache: Option<&Arc<ProgramCache>>,
+        lane_workers: usize,
+    ) -> Vec<SolveResult> {
+        self.solve_batch_parallel_impl(rhs, opts, cache, lane_workers, true)
+    }
+
+    fn solve_batch_parallel_impl(
+        &self,
+        rhs: &[Vec<f64>],
+        opts: &SolveOptions,
+        cache: Option<&Arc<ProgramCache>>,
+        lane_workers: usize,
+        block_spmv: bool,
+    ) -> Vec<SolveResult> {
         use crate::coordinator::{Coordinator, NativeExecutor};
         if rhs.is_empty() {
             return Vec::new();
@@ -264,13 +343,26 @@ impl<'a> PreparedMatrix<'a> {
         // lanes never serialize on the OnceLock's first fill.
         let _ = self.vals32_for(opts.scheme);
         let lane_plan = self.reshaped(1);
-        let cfg = CoordinatorConfig { lane_workers, ..Self::coord_cfg(opts) };
+        let cfg = CoordinatorConfig { lane_workers, block_spmv, ..Self::coord_cfg(opts) };
         let mut coord = match cache {
             Some(cache) => Coordinator::with_cache(cfg, Arc::clone(cache)),
             None => Coordinator::new(cfg),
         };
-        let mut execs: Vec<NativeExecutor> =
-            rhs.iter().map(|_| NativeExecutor::with_plan(&lane_plan, opts.scheme)).collect();
+        // Under block dispatch the batch-wide SpMV runs on the *first*
+        // executor; give it the full-thread plan so the one matrix pass
+        // uses the machine, while the per-lane fallback work stays on
+        // serial-SpMV views.
+        let mut execs: Vec<NativeExecutor> = rhs
+            .iter()
+            .enumerate()
+            .map(|(k, _)| {
+                if block_spmv && k == 0 {
+                    NativeExecutor::with_plan(self, opts.scheme)
+                } else {
+                    NativeExecutor::with_plan(&lane_plan, opts.scheme)
+                }
+            })
+            .collect();
         let rhs_refs: Vec<&[f64]> = rhs.iter().map(Vec::as_slice).collect();
         let results = coord.solve_batch_parallel(&mut execs, &rhs_refs, None);
         self.to_solve_results(results)
@@ -327,9 +419,10 @@ impl<'a> PreparedMatrix<'a> {
         rhs: &[Vec<f64>],
         opts: &SolveOptions,
         cache: Option<&Arc<ProgramCache>>,
+        block_spmv: bool,
     ) -> Vec<SolveResult> {
         use crate::coordinator::{Coordinator, NativeExecutor};
-        let cfg = Self::coord_cfg(opts);
+        let cfg = CoordinatorConfig { block_spmv, ..Self::coord_cfg(opts) };
         let mut coord = match cache {
             Some(cache) => Coordinator::with_cache(cfg, Arc::clone(cache)),
             None => Coordinator::new(cfg),

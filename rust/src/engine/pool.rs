@@ -213,6 +213,54 @@ impl WorkerPool {
             panic!("a job submitted to WorkerPool::run_scoped panicked");
         }
     }
+
+    /// Run `job(0..count)` across the caller plus up to `helpers` pool
+    /// threads, indices handed out through one shared atomic cursor —
+    /// the allocation-light fan-out for hot per-trip dispatch
+    /// (PERF §11): where [`WorkerPool::run_scoped_capped`] boxes one
+    /// closure **per item**, this boxes one small drain loop **per
+    /// participating worker**, so a batched solve's per-trip allocation
+    /// count is bounded by the worker budget instead of the lane count.
+    /// Each index is claimed by exactly one worker (the cursor is a
+    /// fetch-add), which is what lets a caller hand out disjoint
+    /// `&mut` state per index.  `helpers == 0` degenerates to the
+    /// caller-only walk in index order, allocation-free.  Panics in
+    /// `job` re-raise here after every claimed index has finished, like
+    /// [`WorkerPool::run_scoped`].
+    pub fn run_scoped_indexed<'env>(
+        &self,
+        count: usize,
+        helpers: usize,
+        job: &(dyn Fn(usize) + Sync + 'env),
+    ) {
+        if count == 0 {
+            return;
+        }
+        let invite = self.workers.min(helpers).min(count.saturating_sub(1));
+        if invite == 0 {
+            for i in 0..count {
+                job(i);
+            }
+            return;
+        }
+        let cursor = std::sync::atomic::AtomicUsize::new(0);
+        // invite + 1 drain loops: one per invited helper plus one for
+        // the caller to pick up (workers that arrive after the cursor
+        // is spent exit immediately).
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..invite + 1)
+            .map(|_| {
+                let cursor = &cursor;
+                Box::new(move || loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= count {
+                        break;
+                    }
+                    job(i);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        self.run_scoped_capped(jobs, invite);
+    }
 }
 
 impl Drop for WorkerPool {
@@ -264,6 +312,24 @@ mod tests {
             .collect();
         pool.run_scoped(jobs);
         assert!(outputs.iter().enumerate().all(|(k, v)| *v == k + 1));
+    }
+
+    #[test]
+    fn indexed_scope_visits_every_index_exactly_once() {
+        let pool = WorkerPool::new(4);
+        for count in [0usize, 1, 2, 17, 256] {
+            for helpers in [0usize, 1, 3, 8] {
+                let visits: Vec<AtomicUsize> =
+                    (0..count).map(|_| AtomicUsize::new(0)).collect();
+                pool.run_scoped_indexed(count, helpers, &|i| {
+                    visits[i].fetch_add(1, Ordering::SeqCst);
+                });
+                assert!(
+                    visits.iter().all(|v| v.load(Ordering::SeqCst) == 1),
+                    "count={count} helpers={helpers}"
+                );
+            }
+        }
     }
 
     #[test]

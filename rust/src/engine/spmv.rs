@@ -8,7 +8,9 @@
 //! count.  That invariant is what allows the solver to go parallel
 //! without moving a single Table-7 iteration count.
 
-use crate::precision::{spmv_scheme_rows, Scheme};
+use crate::precision::{
+    dot_delay_buffer, spmv_scheme_rows, spmv_scheme_rows_block, Scheme, DELAY_LANES,
+};
 use crate::sparse::CsrMatrix;
 
 use super::RowPartition;
@@ -66,6 +68,108 @@ pub fn spmv_f64_parallel(a: &CsrMatrix, x: &[f64], y: &mut [f64], part: &RowPart
     spmv_parallel(a, &[], x, y, Scheme::Fp64, part);
 }
 
+/// Block-CG SpMV over the partition: `ys = A xs` for `lanes`
+/// interleaved lane-major right-hand sides in **one pass** over the nnz
+/// structure per row block (see
+/// [`spmv_scheme_rows_block`](crate::precision::spmv_scheme_rows_block)).
+/// Each worker's disjoint slice of `ys` is `lanes` f64s per row, so the
+/// row-boundary split of the single-lane kernel scales by the lane
+/// stride and nothing else.  Per lane the output is bitwise the serial
+/// per-lane SpMV at any thread count — the same invariant as
+/// [`spmv_parallel`], extended along the batch axis.
+pub fn spmv_block_parallel(
+    a: &CsrMatrix,
+    vals32: &[f32],
+    xs: &[f64],
+    ys: &mut [f64],
+    lanes: usize,
+    scheme: Scheme,
+    part: &RowPartition,
+) {
+    debug_assert_eq!(xs.len(), a.n * lanes);
+    debug_assert_eq!(ys.len(), a.n * lanes);
+    if lanes == 0 {
+        return;
+    }
+    if part.num_parts() <= 1 {
+        spmv_scheme_rows_block(a, vals32, xs, ys, 0, lanes, scheme);
+        return;
+    }
+    // Same mem::take slab idiom as spmv_parallel, with every row block
+    // widened by the lane stride.
+    let mut blocks: Vec<(usize, &mut [f64])> = Vec::with_capacity(part.num_parts());
+    let mut rest = ys;
+    let mut offset = 0usize;
+    for k in 0..part.num_parts() {
+        let range = part.range(k);
+        let slab = std::mem::take(&mut rest);
+        let (head, tail) = slab.split_at_mut((range.end - offset) * lanes);
+        if !head.is_empty() {
+            blocks.push((range.start, head));
+        }
+        rest = tail;
+        offset = range.end;
+    }
+    std::thread::scope(|s| {
+        let mut iter = blocks.into_iter();
+        let first = iter.next();
+        for (row_start, y_rows) in iter {
+            s.spawn(move || spmv_scheme_rows_block(a, vals32, xs, y_rows, row_start, lanes, scheme));
+        }
+        if let Some((row_start, y_rows)) = first {
+            spmv_scheme_rows_block(a, vals32, xs, y_rows, row_start, lanes, scheme);
+        }
+    });
+}
+
+/// Below this length a parallel dot's spawn cost outweighs the work;
+/// [`dot_delay_parallel`] stays on the serial delay-buffer kernel.
+pub const DOT_PARALLEL_MIN_LEN: usize = 8_192;
+
+/// The delay-buffer dot with its 8 lanes split across up to `workers`
+/// threads — **bitwise identical** to
+/// [`dot_delay_buffer`](crate::precision::dot_delay_buffer) at every
+/// worker count, because the delay-buffer grouping is a *fixed
+/// partition*: element `i` belongs to lane `i % 8` no matter who
+/// computes it, each worker walks its lanes' stride-8 index sequences
+/// in increasing order (the exact per-lane chains of the serial
+/// kernel), and the final fold is the same left-to-right lane sum.
+/// This is the bit-exact half of PERF §7: an L-way reduction that never
+/// reassociates.
+pub fn dot_delay_parallel(a: &[f64], b: &[f64], workers: usize) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    if workers <= 1 || a.len() < DOT_PARALLEL_MIN_LEN {
+        return dot_delay_buffer(a, b);
+    }
+    let mut lanes = [0.0f64; DELAY_LANES];
+    let per = DELAY_LANES.div_ceil(workers.min(DELAY_LANES));
+    std::thread::scope(|s| {
+        let mut chunks = lanes.chunks_mut(per).enumerate();
+        let first = chunks.next();
+        for (ci, lane_chunk) in chunks {
+            s.spawn(move || fill_lane_chunk(a, b, ci * per, lane_chunk));
+        }
+        if let Some((ci, lane_chunk)) = first {
+            fill_lane_chunk(a, b, ci * per, lane_chunk);
+        }
+    });
+    lanes.iter().sum()
+}
+
+/// One worker's share of [`dot_delay_parallel`]: the delay-buffer lanes
+/// `lane_start..lane_start + chunk.len()`, each walked in index order.
+fn fill_lane_chunk(a: &[f64], b: &[f64], lane_start: usize, chunk: &mut [f64]) {
+    for (j, lane) in chunk.iter_mut().enumerate() {
+        let mut acc = 0.0f64;
+        let mut i = lane_start + j;
+        while i < a.len() {
+            acc += a[i] * b[i];
+            i += DELAY_LANES;
+        }
+        *lane = acc;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -87,6 +191,58 @@ mod tests {
                     serial.iter().zip(&par).all(|(u, v)| u.to_bits() == v.to_bits()),
                     "scheme {scheme:?} diverged at {threads} threads"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn block_parallel_matches_serial_per_lane_bitwise() {
+        let a = synth::banded_spd(1_000, 8_000, 1e-3, 17);
+        let vals32 = a.vals_f32();
+        let lanes = 5usize;
+        let per_lane: Vec<Vec<f64>> = (0..lanes)
+            .map(|k| (0..a.n).map(|i| (i as f64 * 0.11 + k as f64).sin()).collect())
+            .collect();
+        let mut xs = vec![0.0; a.n * lanes];
+        for (k, x) in per_lane.iter().enumerate() {
+            for i in 0..a.n {
+                xs[i * lanes + k] = x[i];
+            }
+        }
+        for scheme in Scheme::ALL {
+            let mut want: Vec<Vec<f64>> = Vec::new();
+            for x in &per_lane {
+                let mut y = vec![0.0; a.n];
+                spmv_scheme_rows(&a, &vals32, x, &mut y, 0, scheme);
+                want.push(y);
+            }
+            for threads in [1, 2, 8] {
+                let part = RowPartition::nnz_balanced(&a, threads);
+                let mut ys = vec![f64::NAN; a.n * lanes];
+                spmv_block_parallel(&a, &vals32, &xs, &mut ys, lanes, scheme, &part);
+                for (k, w) in want.iter().enumerate() {
+                    assert!(
+                        (0..a.n).all(|i| ys[i * lanes + k].to_bits() == w[i].to_bits()),
+                        "{scheme:?} lane {k} diverged at {threads} threads"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_dot_is_bitwise_the_delay_buffer_dot() {
+        use crate::precision::dot_delay_buffer;
+        // Lengths straddling the parallel threshold, awkward tails, and
+        // a magnitude spread that would expose any reassociation.
+        for n in [0usize, 7, 1_003, DOT_PARALLEL_MIN_LEN - 1, DOT_PARALLEL_MIN_LEN + 5, 40_003] {
+            let a: Vec<f64> =
+                (0..n).map(|i| ((i * 37) % 101) as f64 * 10f64.powi((i % 7) as i32 - 3)).collect();
+            let b: Vec<f64> = (0..n).map(|i| ((i * 53) % 97) as f64 - 48.0).collect();
+            let want = dot_delay_buffer(&a, &b);
+            for workers in [1usize, 2, 3, 8, 16] {
+                let got = dot_delay_parallel(&a, &b, workers);
+                assert_eq!(got.to_bits(), want.to_bits(), "n={n} workers={workers}");
             }
         }
     }

@@ -45,6 +45,13 @@
 //! instruction streams across pool workers with trip barriers
 //! preserved — bitwise identical to the sequential lane walk, which
 //! remains the oracle (`PERF.md` §9).
+//! Since PR 6 the batched SpMV is **true block-CG**:
+//! `PreparedMatrix::solve_batch_block[_parallel]` streams the matrix
+//! once per batched iteration and feeds every live lane from that one
+//! interleaved lane-major pass (`CoordinatorConfig::block_spmv`,
+//! `precision::spmv_scheme_rows_block`), with lane-grouped parallel
+//! dots — still bitwise the per-lane walk, with the nnz traffic cut to
+//! 1/L per RHS-iteration (`PERF.md` §10).
 //! The complete Type-I/II/III
 //! instruction reference, wire encodings, and the batch-axis extension
 //! live in `docs/ISA.md`; build/quickstart walkthroughs in the

@@ -81,7 +81,7 @@ fn print_usage() {
          commands: solve suite table4 table5 table6 table7 fig9 sim program serve\n\
          common flags: --matrix <Mxx|name>  --mtx <file>  --scale <f>  --scheme <fp64|mixv1|mixv2|mixv3>\n\
          \u{20}                --matrices M1,M2  --max-iters <n>  --threads <n>  --pjrt  --out <dir>\n\
-         \u{20}                solve: --coordinator [--serpens-stream]  --batch <rhs>  --lane-workers <w>\n\
+         \u{20}                solve: --coordinator [--serpens-stream]  --batch <rhs>  --lane-workers <w>  --block-spmv\n\
          \u{20}                program: --n <len>  --mode <double|single>  --batch <rhs>\n\
          \u{20}                sim: --batch <rhs>  --lane-workers <w>  (w = 0: machine default)\n\
          \u{20}                serve: --requests <n>  --matrices <k>  --tenants <t>  --max-batch <b>\n\
@@ -170,6 +170,9 @@ fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
     if batch.is_none() && flags.contains_key("lane-workers") {
         bail!("--lane-workers configures the batched program path; pair it with --batch <rhs>");
     }
+    if batch.is_none() && flags.contains_key("block-spmv") {
+        bail!("--block-spmv configures the batched program path; pair it with --batch <rhs>");
+    }
     println!("solving {name}: n={} nnz={} scheme={}", a.n, a.nnz(), scheme.name());
     let t0 = std::time::Instant::now();
     if flags.contains_key("pjrt") {
@@ -252,9 +255,15 @@ fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
         let rhs: Vec<Vec<f64>> = (0..batch)
             .map(|k| (0..a.n).map(|i| 1.0 + ((i + 31 * k) % 7) as f64 / 7.0).collect())
             .collect();
-        let results = match lane_workers {
-            Some(w) => prep.solve_batch_parallel(&rhs, &opts, None, w),
-            None => prep.solve_batch(&rhs, &opts),
+        // --block-spmv streams the matrix once per batched iteration
+        // and feeds every lane from that single pass (block-CG SpMV;
+        // same bits, one nnz stream instead of one per lane).
+        let block = flags.contains_key("block-spmv");
+        let results = match (lane_workers, block) {
+            (Some(w), false) => prep.solve_batch_parallel(&rhs, &opts, None, w),
+            (Some(w), true) => prep.solve_batch_block_parallel(&rhs, &opts, None, w),
+            (None, false) => prep.solve_batch(&rhs, &opts),
+            (None, true) => prep.solve_batch_block(&rhs, &opts),
         };
         for (k, r) in results.iter().enumerate() {
             println!(
@@ -263,11 +272,14 @@ fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
             );
         }
         let total_iters: u64 = results.iter().map(|r| r.iters as u64).sum();
-        let dispatch = match lane_workers {
+        let mut dispatch = match lane_workers {
             Some(0) => "lane-parallel (machine default)".to_string(),
             Some(w) => format!("lane-parallel ({w} workers)"),
             None => "sequential dispatch".to_string(),
         };
+        if block {
+            dispatch.push_str(", block-CG SpMV");
+        }
         println!(
             "batched program path ({dispatch}): {batch} rhs, {total_iters} rhs-iterations, wall={:?}",
             t0.elapsed()

@@ -16,6 +16,34 @@
 
 use crate::sparse::CsrMatrix;
 
+/// Instrumentation for the matrix-traffic story: how many matrix values
+/// the SpMV kernels streamed on *this thread*.
+///
+/// The counter is thread-local on purpose: the tests that assert the
+/// block-CG amortization (`tests/block_spmv.rs`) run serial-path solves
+/// on one thread and measure deltas, and a process-global counter would
+/// be polluted by unrelated tests running concurrently in the same
+/// process.  Multithreaded kernel runs split their increments across
+/// the worker threads, so treat the counter as a serial-path probe.
+pub mod stats {
+    use std::cell::Cell;
+
+    thread_local! {
+        static MATRIX_VALUE_READS: Cell<u64> = const { Cell::new(0) };
+    }
+
+    /// Record `n` streamed matrix values (one per nnz touched).
+    pub(crate) fn add_matrix_value_reads(n: u64) {
+        MATRIX_VALUE_READS.with(|c| c.set(c.get() + n));
+    }
+
+    /// Matrix values streamed by SpMV kernels on this thread so far.
+    /// Take a delta around the region under test.
+    pub fn matrix_value_reads() -> u64 {
+        MATRIX_VALUE_READS.with(Cell::get)
+    }
+}
+
 /// SpMV precision scheme (Table 1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum Scheme {
@@ -137,6 +165,8 @@ pub fn spmv_scheme_rows(
         vals32.len(),
         a.nnz()
     );
+    let span = a.indptr[row_start + y_rows.len()] - a.indptr[row_start];
+    stats::add_matrix_value_reads(span as u64);
     match scheme {
         Scheme::Fp64 => {
             for (j, yj) in y_rows.iter_mut().enumerate() {
@@ -191,6 +221,180 @@ pub fn spmv_scheme_rows(
                     }
                 }
                 *yj = acc64;
+            }
+        }
+    }
+}
+
+/// Lane-block width of the unrolled inner loops in
+/// [`spmv_scheme_rows_block`]: the lane loop is emitted as explicit
+/// 4-wide blocks (one 256-bit SIMD vector of f64) plus a remainder.
+pub const SPMV_LANE_BLOCK: usize = 4;
+
+/// Block-CG SpMV: one pass over the CSR structure feeds **every** RHS
+/// lane.  `xs` and `y_rows` are interleaved lane-major —
+/// `xs[col * lanes + lane]`, `y_rows[(row - row_start) * lanes + lane]`
+/// — so the per-nnz inner loop walks `lanes` contiguous f64s (emitted
+/// as explicit [`SPMV_LANE_BLOCK`]-wide unrolled blocks, the PERF §7
+/// SIMD row kernel).  Each streamed matrix value is read — and, under
+/// the Mix schemes, decoded from f32 — exactly **once** regardless of
+/// the lane count: matrix traffic per iteration is O(nnz), not
+/// O(lanes · nnz), which is the whole block-CG amortization
+/// (instrumented via [`stats::matrix_value_reads`]).
+///
+/// Bit contract: each lane's accumulation chain applies the same
+/// products in the same nnz order as [`spmv_scheme_rows`] on that
+/// lane's deinterleaved vector — the lane loop commutes with the nnz
+/// loop only in *which register* accumulates, never in the order a
+/// lane's own partial sums combine.  Every lane of the output is
+/// therefore bitwise identical to a serial per-lane SpMV, for all four
+/// schemes (pinned in the tests below), and a block-CG solve cannot
+/// drift from the serial oracle.
+pub fn spmv_scheme_rows_block(
+    a: &CsrMatrix,
+    vals32: &[f32],
+    xs: &[f64],
+    y_rows: &mut [f64],
+    row_start: usize,
+    lanes: usize,
+    scheme: Scheme,
+) {
+    assert!(lanes > 0, "a block SpMV needs at least one lane");
+    debug_assert_eq!(y_rows.len() % lanes, 0);
+    let rows = y_rows.len() / lanes;
+    debug_assert!(row_start + rows <= a.n);
+    debug_assert_eq!(xs.len(), a.n * lanes);
+    // Same hard guard as the serial kernel: the Mix-V3 arm uses
+    // get_unchecked on vals32.
+    assert!(
+        !scheme.matrix_f32() || vals32.len() == a.nnz(),
+        "vals32 must be the f32 view of a.vals for {scheme:?} (len {} != nnz {})",
+        vals32.len(),
+        a.nnz()
+    );
+    // One read (and one decode) per nnz, however many lanes ride along.
+    let span = a.indptr[row_start + rows] - a.indptr[row_start];
+    stats::add_matrix_value_reads(span as u64);
+
+    // The f64-accumulating schemes accumulate straight into the row's
+    // output slice; Mix-V1 needs an f32 scratch row to preserve the
+    // serial kernel's f32 accumulation exactly.
+    #[inline(always)]
+    fn fma_lanes(acc: &mut [f64], xs: &[f64], base: usize, v: f64) {
+        let lanes = acc.len();
+        let mut j = 0;
+        while j + SPMV_LANE_BLOCK <= lanes {
+            acc[j] += v * xs[base + j];
+            acc[j + 1] += v * xs[base + j + 1];
+            acc[j + 2] += v * xs[base + j + 2];
+            acc[j + 3] += v * xs[base + j + 3];
+            j += SPMV_LANE_BLOCK;
+        }
+        while j < lanes {
+            acc[j] += v * xs[base + j];
+            j += 1;
+        }
+    }
+
+    match scheme {
+        Scheme::Fp64 => {
+            for (jr, acc) in y_rows.chunks_exact_mut(lanes).enumerate() {
+                let i = row_start + jr;
+                let (s, e) = (a.indptr[i] as usize, a.indptr[i + 1] as usize);
+                acc.fill(0.0);
+                for k in s..e {
+                    let v = a.vals[k];
+                    fma_lanes(acc, xs, a.indices[k] as usize * lanes, v);
+                }
+            }
+        }
+        Scheme::MixV1 => {
+            // All-f32 accumulate, widened once per row — lane for lane
+            // the chain of the serial Mix-V1 kernel.
+            let mut acc32 = vec![0.0f32; lanes];
+            for (jr, out) in y_rows.chunks_exact_mut(lanes).enumerate() {
+                let i = row_start + jr;
+                let (s, e) = (a.indptr[i] as usize, a.indptr[i + 1] as usize);
+                acc32.fill(0.0);
+                for k in s..e {
+                    let v = vals32[k];
+                    let base = a.indices[k] as usize * lanes;
+                    let mut j = 0;
+                    while j + SPMV_LANE_BLOCK <= lanes {
+                        acc32[j] += v * xs[base + j] as f32;
+                        acc32[j + 1] += v * xs[base + j + 1] as f32;
+                        acc32[j + 2] += v * xs[base + j + 2] as f32;
+                        acc32[j + 3] += v * xs[base + j + 3] as f32;
+                        j += SPMV_LANE_BLOCK;
+                    }
+                    while j < lanes {
+                        acc32[j] += v * xs[base + j] as f32;
+                        j += 1;
+                    }
+                }
+                for (o, s32) in out.iter_mut().zip(&acc32) {
+                    *o = *s32 as f64;
+                }
+            }
+        }
+        Scheme::MixV2 => {
+            for (jr, acc) in y_rows.chunks_exact_mut(lanes).enumerate() {
+                let i = row_start + jr;
+                let (s, e) = (a.indptr[i] as usize, a.indptr[i + 1] as usize);
+                acc.fill(0.0);
+                for k in s..e {
+                    // Decode once; x is re-rounded per lane (it differs
+                    // per lane, so there is nothing to hoist).
+                    let v = vals32[k] as f64;
+                    let base = a.indices[k] as usize * lanes;
+                    let mut j = 0;
+                    while j + SPMV_LANE_BLOCK <= lanes {
+                        acc[j] += v * (xs[base + j] as f32) as f64;
+                        acc[j + 1] += v * (xs[base + j + 1] as f32) as f64;
+                        acc[j + 2] += v * (xs[base + j + 2] as f32) as f64;
+                        acc[j + 3] += v * (xs[base + j + 3] as f32) as f64;
+                        j += SPMV_LANE_BLOCK;
+                    }
+                    while j < lanes {
+                        acc[j] += v * (xs[base + j] as f32) as f64;
+                        j += 1;
+                    }
+                }
+            }
+        }
+        Scheme::MixV3 => {
+            // f32 matrix upcast once per nnz, full-f64 lanes.  Bounds
+            // checks lifted like the serial hot path: indices are
+            // validated at matrix build time, and base + j < n·lanes
+            // because indices[k] < n.
+            for (jr, acc) in y_rows.chunks_exact_mut(lanes).enumerate() {
+                let i = row_start + jr;
+                let (s, e) = (a.indptr[i] as usize, a.indptr[i + 1] as usize);
+                acc.fill(0.0);
+                for k in s..e {
+                    // SAFETY: k < nnz and indices[k] < n by CSR construction.
+                    let (v, base) = unsafe {
+                        (
+                            *vals32.get_unchecked(k) as f64,
+                            *a.indices.get_unchecked(k) as usize * lanes,
+                        )
+                    };
+                    let mut j = 0;
+                    while j + SPMV_LANE_BLOCK <= lanes {
+                        // SAFETY: base + j + 3 < n·lanes (see above).
+                        unsafe {
+                            *acc.get_unchecked_mut(j) += v * xs.get_unchecked(base + j);
+                            *acc.get_unchecked_mut(j + 1) += v * xs.get_unchecked(base + j + 1);
+                            *acc.get_unchecked_mut(j + 2) += v * xs.get_unchecked(base + j + 2);
+                            *acc.get_unchecked_mut(j + 3) += v * xs.get_unchecked(base + j + 3);
+                        }
+                        j += SPMV_LANE_BLOCK;
+                    }
+                    while j < lanes {
+                        acc[j] += v * xs[base + j];
+                        j += 1;
+                    }
+                }
             }
         }
     }
@@ -429,6 +633,98 @@ mod tests {
                 "scheme {scheme:?} row blocks diverged"
             );
         }
+    }
+
+    /// Interleave per-lane vectors into the lane-major block layout.
+    fn interleave(vecs: &[Vec<f64>]) -> Vec<f64> {
+        let (lanes, n) = (vecs.len(), vecs[0].len());
+        let mut out = vec![0.0; n * lanes];
+        for (j, v) in vecs.iter().enumerate() {
+            for i in 0..n {
+                out[i * lanes + j] = v[i];
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn block_kernel_is_bitwise_the_serial_kernel_per_lane() {
+        // The load-bearing invariant: every lane of the block output is
+        // bit-for-bit the serial per-lane SpMV, at every lane count
+        // (including the unroll remainders) and for all four schemes.
+        let (a, v32, _) = system(300);
+        for lanes in [1usize, 2, 3, 4, 5, 7, 8] {
+            let xs: Vec<Vec<f64>> = (0..lanes)
+                .map(|k| (0..a.n).map(|i| (i as f64 * 0.13 + k as f64).sin()).collect())
+                .collect();
+            let xi = interleave(&xs);
+            for scheme in Scheme::ALL {
+                let mut ys = vec![f64::NAN; a.n * lanes];
+                spmv_scheme_rows_block(&a, &v32, &xi, &mut ys, 0, lanes, scheme);
+                for (k, x) in xs.iter().enumerate() {
+                    let mut want = vec![0.0; a.n];
+                    spmv_scheme_rows(&a, &v32, x, &mut want, 0, scheme);
+                    assert!(
+                        (0..a.n).all(|i| ys[i * lanes + k].to_bits() == want[i].to_bits()),
+                        "{scheme:?} lane {k} of {lanes} diverged from the serial kernel"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn block_kernel_row_blocks_cover_bitwise() {
+        // Disjoint row blocks (the parallel engine's split) reproduce
+        // the one-call output exactly, like the serial kernel's cover.
+        let (a, v32, _) = system(300);
+        let lanes = 5;
+        let xs: Vec<Vec<f64>> = (0..lanes)
+            .map(|k| (0..a.n).map(|i| (i as f64 * 0.07 + k as f64).cos()).collect())
+            .collect();
+        let xi = interleave(&xs);
+        for scheme in Scheme::ALL {
+            let mut full = vec![0.0; a.n * lanes];
+            spmv_scheme_rows_block(&a, &v32, &xi, &mut full, 0, lanes, scheme);
+            let mut piecewise = vec![0.0; a.n * lanes];
+            for w in [0usize, 37, 170, 299, a.n].windows(2) {
+                spmv_scheme_rows_block(
+                    &a,
+                    &v32,
+                    &xi,
+                    &mut piecewise[w[0] * lanes..w[1] * lanes],
+                    w[0],
+                    lanes,
+                    scheme,
+                );
+            }
+            assert!(
+                full.iter().zip(&piecewise).all(|(u, v)| u.to_bits() == v.to_bits()),
+                "scheme {scheme:?} block row blocks diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn matrix_value_reads_are_independent_of_lane_count() {
+        // The amortization itself: one block call streams nnz values no
+        // matter how many lanes ride along, while per-lane calls stream
+        // lanes x nnz.
+        let (a, v32, x) = system(200);
+        let nnz = a.nnz() as u64;
+        for lanes in [1usize, 3, 8] {
+            let xi = interleave(&vec![x.clone(); lanes]);
+            let mut ys = vec![0.0; a.n * lanes];
+            let before = stats::matrix_value_reads();
+            spmv_scheme_rows_block(&a, &v32, &xi, &mut ys, 0, lanes, Scheme::MixV3);
+            assert_eq!(stats::matrix_value_reads() - before, nnz, "block kernel at {lanes} lanes");
+        }
+        let before = stats::matrix_value_reads();
+        let mut y = vec![0.0; a.n];
+        for _ in 0..3 {
+            spmv_scheme_rows(&a, &v32, &x, &mut y, 0, Scheme::MixV3);
+        }
+        assert_eq!(stats::matrix_value_reads() - before, 3 * nnz, "per-lane path pays per lane");
     }
 
     #[test]

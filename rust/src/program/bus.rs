@@ -65,6 +65,12 @@ pub struct VectorFile {
     pub stage_ap: Vec<f64>,
     /// z is on-chip only (§5.3): staged, never committed.
     pub stage_z: Vec<f64>,
+    /// Block-CG handshake: a batch-wide SpMV already filled `stage_ap`
+    /// for this lane's next M1, which consumes the staged stream (and
+    /// clears the flag) instead of re-streaming the matrix.  In-band
+    /// state, not wire format: the compiled M1 instruction is issued,
+    /// traced, and write-acked exactly as before.
+    pub block_ap_staged: bool,
     dirty: [bool; 4],
 }
 
@@ -84,6 +90,7 @@ impl VectorFile {
             stage_p: vec![0.0; n],
             stage_ap: vec![0.0; n],
             stage_z: vec![0.0; n],
+            block_ap_staged: false,
             dirty: [false; 4],
         }
     }
@@ -154,6 +161,21 @@ pub trait InstDispatch {
         cmds: &[InstCmp],
         mem: &mut VectorFile,
     ) -> DispatchReturn;
+
+    /// Block-CG SpMV over `lanes` interleaved lane-major vectors
+    /// (`xs[col * lanes + lane]` -> `ys[row * lanes + lane]`): one pass
+    /// over the matrix feeds every lane.  Return `true` to signal the
+    /// results are valid — the coordinator then scatters `ys` into each
+    /// lane's staged ap and the lanes' M1 instructions consume the
+    /// staged stream instead of re-streaming the matrix.  The default
+    /// declines (`false`), so backends without a batch kernel — the
+    /// phase-granular [`PhaseExecutor`]s, the Serpens stream replay —
+    /// transparently keep the per-lane SpMV.  An implementation must
+    /// produce, per lane, bitwise the backend's own per-lane SpMV:
+    /// batching is a traffic optimization, never a rounding change.
+    fn batch_spmv(&mut self, _xs: &[f64], _ys: &mut [f64], _lanes: usize) -> bool {
+        false
+    }
 }
 
 /// Scalar bound into module `m`'s instruction in this batch.  A missing

@@ -355,8 +355,12 @@ impl Dataflow {
     /// * each lane carries its own `Spmv` busy window and the windows
     ///   overlap — the nnz stream is read once and applied to every
     ///   lane (the block-CG matrix-traffic amortization the batch axis
-    ///   exists for), so SpMV time does *not* scale with the batch
-    ///   while the §6 PE array has headroom;
+    ///   exists for, implemented in the value plane by
+    ///   `precision::spmv_scheme_rows_block` under
+    ///   `CoordinatorConfig::block_spmv`), so SpMV time does *not*
+    ///   scale with the batch while the §6 PE array has headroom;
+    ///   callers model the per-lane fallback by widening `spmv_busy`
+    ///   (`sim::iteration::BatchSpmvMode::PerLane`);
     /// * per-trip control overhead is charged once per batched trip,
     ///   not once per lane (`sim::iteration` adds it outside).
     pub fn from_batched_program(

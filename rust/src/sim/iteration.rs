@@ -135,13 +135,36 @@ fn iteration_vsr(cfg: &AccelSimConfig, n: usize, nnz: usize) -> IterationBreakdo
     batched_iteration_cycles(cfg, n, nnz, 1)
 }
 
+/// How a batched iteration's Type-II SpMV trips price in the time
+/// plane — mirroring the two execution modes the value plane actually
+/// implements for `Coordinator::solve_batch*`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub enum BatchSpmvMode {
+    /// Block-CG execution (`CoordinatorConfig::block_spmv`): the nnz
+    /// stream is decoded **once per batched iteration** and every
+    /// active lane's y is fed from that single pass
+    /// (`precision::spmv_scheme_rows_block`), so the per-lane SpMV busy
+    /// windows genuinely overlap.  This is the default and the pricing
+    /// [`batched_iteration_cycles`] has always used — previously an
+    /// *assumption* about the batch axis, now earned by the value
+    /// plane's `batch_spmv` kernel.
+    #[default]
+    Block,
+    /// Per-lane execution (block mode off): each lane's M1 streams the
+    /// nnz arrays on its own trip, so the matrix port is time-shared
+    /// and the iteration carries `batch` back-to-back SpMV busy
+    /// windows instead of one.
+    PerLane,
+}
+
 /// Cycles for one **batched** VSR iteration: the three phase graphs of
 /// a program compiled over `batch` RHS lanes
 /// ([`Dataflow::from_batched_program`]).  Lane vector streams contend
 /// on the shared channel pairs while the SpMV busy windows overlap (the
-/// nnz stream prices once per iteration, block-CG style), and the
-/// per-trip control overhead is paid once per batched trip — the
-/// instruction-stream amortization the batch axis buys.
+/// nnz stream prices once per iteration — [`BatchSpmvMode::Block`],
+/// the execution mode the value plane's block-CG kernel implements),
+/// and the per-trip control overhead is paid once per batched trip —
+/// the instruction-stream amortization the batch axis buys.
 ///
 /// A non-VSR config has no compiled program to batch: `batch` must be
 /// 1 there, and the call falls back to [`iteration_cycles`]'s
@@ -153,6 +176,23 @@ pub fn batched_iteration_cycles(
     nnz: usize,
     batch: BatchId,
 ) -> IterationBreakdown {
+    batched_iteration_cycles_mode(cfg, n, nnz, batch, BatchSpmvMode::Block)
+}
+
+/// [`batched_iteration_cycles`] with the SpMV execution mode explicit.
+/// [`BatchSpmvMode::Block`] reproduces it exactly;
+/// [`BatchSpmvMode::PerLane`] widens the SpMV busy window to
+/// `batch x spmv_busy_cycles` — the matrix port is time-shared across
+/// the lanes' M1 trips, so batching still amortizes the instruction
+/// stream and control overhead but not the nnz traffic.  The two modes
+/// agree at `batch == 1`.
+pub fn batched_iteration_cycles_mode(
+    cfg: &AccelSimConfig,
+    n: usize,
+    nnz: usize,
+    batch: BatchId,
+    mode: BatchSpmvMode,
+) -> IterationBreakdown {
     if !cfg.vsr {
         assert!(
             batch <= 1,
@@ -161,8 +201,12 @@ pub fn batched_iteration_cycles(
         );
         return iteration_cycles(cfg, n, nnz);
     }
-    let program = Program::compile_batched(n as u32, cfg.hbm.vector_mode, batch.max(1));
-    let busy = spmv_busy_cycles(nnz, cfg.scheme, cfg.nnz_padding);
+    let batch = batch.max(1);
+    let program = Program::compile_batched(n as u32, cfg.hbm.vector_mode, batch);
+    let mut busy = spmv_busy_cycles(nnz, cfg.scheme, cfg.nnz_padding);
+    if mode == BatchSpmvMode::PerLane {
+        busy *= batch as u64;
+    }
     let cycles =
         |p: Phase| run_phase(Dataflow::from_batched_program(program.phase(p), program.batch, busy));
     let p1 = cycles(Phase::Phase1) + PHASE_OVERHEAD;
@@ -620,6 +664,31 @@ mod tests {
         let t1 = batched_rhs_iterations_per_second(&cfg, N, NNZ, 1);
         let t4 = batched_rhs_iterations_per_second(&cfg, N, NNZ, 4);
         assert!(t4 > t1, "t4={t4} t1={t1}");
+    }
+
+    #[test]
+    fn per_lane_mode_prices_the_time_shared_matrix_port() {
+        let cfg = AccelSimConfig::callipepla();
+        // Block mode is the default pricing, bit for bit.
+        for batch in [1, 4, 8] {
+            let block = batched_iteration_cycles_mode(&cfg, N, NNZ, batch, BatchSpmvMode::Block);
+            assert_eq!(block.total, batched_iteration_cycles(&cfg, N, NNZ, batch).total);
+        }
+        // The two modes agree at batch 1 (one lane, one nnz pass either
+        // way) and diverge as soon as lanes share the matrix port.
+        let b1_block = batched_iteration_cycles_mode(&cfg, N, NNZ, 1, BatchSpmvMode::Block);
+        let b1_per = batched_iteration_cycles_mode(&cfg, N, NNZ, 1, BatchSpmvMode::PerLane);
+        assert_eq!(b1_block.total, b1_per.total);
+        for batch in [2, 4, 8] {
+            let block = batched_iteration_cycles_mode(&cfg, N, NNZ, batch, BatchSpmvMode::Block);
+            let per = batched_iteration_cycles_mode(&cfg, N, NNZ, batch, BatchSpmvMode::PerLane);
+            assert!(
+                per.total > block.total,
+                "batch={batch}: per-lane {} !> block {}",
+                per.total,
+                block.total
+            );
+        }
     }
 
     #[test]

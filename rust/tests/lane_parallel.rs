@@ -158,6 +158,62 @@ fn prepared_matrix_parallel_batch_matches_the_sequential_entry() {
 }
 
 #[test]
+fn lane_grouped_parallel_dot_is_bitwise_the_delay_buffer_dot() {
+    // PERF §7's bit-exact half: the delay buffer's 8-lane partition is
+    // fixed, so splitting the lanes across workers must not move a bit
+    // of any dot — at any worker count, on vectors long enough to
+    // actually engage the parallel path.
+    use callipepla::engine::DOT_PARALLEL_MIN_LEN;
+    use callipepla::precision::dot_delay_buffer;
+    let n = DOT_PARALLEL_MIN_LEN + 1_237;
+    let a: Vec<f64> = (0..n).map(|i| 0.1 + ((i * 7) % 101) as f64 / 101.0).collect();
+    let b: Vec<f64> = (0..n).map(|i| -0.3 + ((i * 11) % 97) as f64 / 97.0).collect();
+    let want = dot_delay_buffer(&a, &b);
+    for workers in [1usize, 2, 8] {
+        let got = callipepla::engine::dot_delay_parallel(&a, &b, workers);
+        assert_eq!(want.to_bits(), got.to_bits(), "workers={workers}");
+    }
+}
+
+#[test]
+fn parallel_dots_leave_every_scheme_solve_bitwise_pinned() {
+    // The executor's M2/M6/M8 dots now run lane-grouped across the
+    // plan's threads; a solve at any thread count must stay bitwise
+    // the single-threaded walk, for all four precision schemes.  The
+    // system is sized past DOT_PARALLEL_MIN_LEN so the parallel dot
+    // path genuinely engages inside the solve.
+    let a = synth::banded_spd(10_000, 80_000, 1e-3, 31);
+    let rhs = make_rhs(a.n, 2);
+    let refs: Vec<&[f64]> = rhs.iter().map(Vec::as_slice).collect();
+    let solve = |threads: usize, scheme: Scheme| {
+        let cfg = CoordinatorConfig { record_trace: true, ..Default::default() };
+        let mut coord = Coordinator::new(cfg);
+        let mut exec = NativeExecutor::with_threads(&a, scheme, threads);
+        coord.solve_batch(&mut exec, &refs, None)
+    };
+    for scheme in Scheme::ALL {
+        let base = solve(1, scheme);
+        assert!(base.iter().all(|r| r.converged), "{scheme:?}: oracle must converge");
+        for threads in [2usize, 8] {
+            let multi = solve(threads, scheme);
+            for (k, (s, m)) in base.iter().zip(&multi).enumerate() {
+                assert_eq!(s.iters, m.iters, "{scheme:?} threads={threads} lane {k}");
+                assert_eq!(
+                    s.final_rr.to_bits(),
+                    m.final_rr.to_bits(),
+                    "{scheme:?} threads={threads} lane {k} rr"
+                );
+                assert!(bitwise_eq(&s.x, &m.x), "{scheme:?} threads={threads} lane {k} bits");
+                assert!(
+                    bitwise_eq(s.trace.values(), m.trace.values()),
+                    "{scheme:?} threads={threads} lane {k} trace"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn non_program_options_fall_back_to_the_worker_path() {
     // Sequential-dot options model a different machine; the parallel
     // entry must route them to solve_batch_workers, bitwise the lone

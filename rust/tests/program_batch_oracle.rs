@@ -138,6 +138,49 @@ fn early_convergence_frees_the_lane_without_perturbing_survivors() {
 }
 
 #[test]
+fn block_kernel_retires_lanes_without_perturbing_survivors() {
+    // Satellite of the block-CG SpMV PR: a mixed-convergence batch under
+    // block mode must hand every lane the iteration count (and bits) of
+    // solving it alone with the block kernel at batch 1 — retired lanes
+    // leave the shared nnz pass without perturbing the survivors.
+    let a = synth::banded_spd(900, 7_200, 1e-3, 23);
+    let scheme = Scheme::MixV3;
+    let b = vec![1.0; a.n];
+    let warm = jpcg_solve(&a, Some(&b), None, &oracle_opts(scheme));
+    assert!(warm.converged);
+    let cold = vec![0.0; a.n];
+    let b2: Vec<f64> = (0..a.n).map(|i| 0.5 + ((i * 29) % 13) as f64 / 13.0).collect();
+    let rhs: Vec<&[f64]> = vec![&b, &b, &b2];
+    let x0s: Vec<&[f64]> = vec![&cold, &warm.x, &cold];
+
+    let cfg = CoordinatorConfig { block_spmv: true, record_instructions: true, ..Default::default() };
+    let mut coord = Coordinator::new(cfg);
+    let mut exec = NativeExecutor::with_threads(&a, scheme, 4);
+    let batch = coord.solve_batch(&mut exec, &rhs, Some(&x0s));
+    assert_eq!(batch.len(), 3);
+    assert!(batch.iter().all(|r| r.converged));
+    assert!(
+        batch[1].iters + 2 < batch[0].iters,
+        "warm lane should retire early: warm={} cold={}",
+        batch[1].iters,
+        batch[0].iters
+    );
+
+    for (k, r) in batch.iter().enumerate() {
+        // The lone reference: the same system through the block kernel
+        // at batch 1.
+        let mut solo_coord = Coordinator::new(cfg);
+        let mut solo_exec = NativeExecutor::with_threads(&a, scheme, 4);
+        let solo = &solo_coord.solve_batch(&mut solo_exec, &rhs[k..k + 1], Some(&x0s[k..k + 1]))[0];
+        assert_eq!(r.iters, solo.iters, "lane {k} iters vs solo block solve");
+        assert_eq!(r.final_rr.to_bits(), solo.final_rr.to_bits(), "lane {k} rr");
+        assert!(bitwise_eq(&r.x, &solo.x), "lane {k} solution bits");
+        // And the retired lane's instruction stream stopped with it.
+        assert_eq!(r.instructions.count_for("M1") as u32, r.iters + 1, "lane {k} M1 count");
+    }
+}
+
+#[test]
 fn batch_results_are_independent_of_batch_composition() {
     // A system's result must not depend on which other systems share
     // the batch — solve lane 0 alone, in a pair, and in a quad.
