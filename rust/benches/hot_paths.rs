@@ -8,9 +8,12 @@
 //!   at 8 threads, plus an 8-RHS batch on both batch paths: the
 //!   worker-per-RHS model path (`solve_batch_workers`) and the batched
 //!   instruction program (`solve_batch` -> `Coordinator::solve_batch`,
-//!   the multi-RHS throughput row), plus the block-CG SpMV rows
-//!   (`solve_batch_block[_parallel]`: one nnz pass per batched
-//!   iteration feeding every lane)
+//!   the multi-RHS throughput row), plus the paired block-CG rows:
+//!   staged (`solve_batch_block_staged[_parallel]`: one nnz pass per
+//!   batched iteration, block re-materialized around each pass) vs
+//!   resident (`solve_batch_block[_parallel]`: same single pass, the
+//!   lane-major block is the live representation — zero steady-state
+//!   boundary moves, PERF §12)
 //! * spawn overhead on a small system: the worker batch on per-call
 //!   `thread::scope` spawns vs the persistent pool (PERF §7/§8)
 //! * coordinator-path iterations (instruction issue + module dispatch)
@@ -212,25 +215,50 @@ fn main() {
         8.0 * 10.0 / r.median_s
     );
 
-    // Block-CG SpMV (PR 6): the same 8-RHS batch with one nnz pass per
-    // batched iteration feeding every lane through the interleaved
-    // lane-major kernel, instead of one matrix stream per lane per
-    // trip.  Guard first: block mode is an execution-strategy switch,
-    // so the results must be bitwise the per-lane row's.
-    let blk = prep8.solve_batch_block(&rhs, &opts);
+    // Block-CG SpMV, staged path (PR 6): the same 8-RHS batch with one
+    // nnz pass per batched iteration feeding every lane through the
+    // interleaved lane-major kernel — but the block is re-materialized
+    // around every pass (2·n·L element moves per iteration).  Guard
+    // first: block mode is an execution-strategy switch, so the results
+    // must be bitwise the per-lane row's.
+    let blk = prep8.solve_batch_block_staged(&rhs, &opts);
     let bitwise = seq.iter().zip(&blk).all(|(s, p)| {
         s.iters == p.iters && s.x.iter().zip(&p.x).all(|(u, v)| u.to_bits() == v.to_bits())
     });
-    assert!(bitwise, "block-CG SpMV changed bits");
+    assert!(bitwise, "staged block-CG SpMV changed bits");
     let r = bench("program_batch_8rhs_block_10_iters", 1, 3, || {
+        std::hint::black_box(prep8.solve_batch_block_staged(&rhs, &opts));
+    });
+    record(&mut recs, &r, None);
+    println!(
+        "    => {:.1} rhs-iterations/s with staged block-CG SpMV",
+        8.0 * 10.0 / r.median_s
+    );
+    let r = bench("program_batch_8rhs_block_par", 1, 3, || {
+        std::hint::black_box(prep8.solve_batch_block_staged_parallel(&rhs, &opts, None, 0));
+    });
+    record(&mut recs, &r, None);
+
+    // Resident block state (PR 7): same single nnz pass, but x/p/r/ap
+    // live in the lane-major arenas for the whole solve and the vector
+    // trips run batch-wide through the block kernels — zero
+    // block-boundary element moves per steady iteration (the paired
+    // staged rows above are the measured baseline).  Bitwise-guarded
+    // against the sequential row like every block row.
+    let res = prep8.solve_batch_block(&rhs, &opts);
+    let bitwise = seq.iter().zip(&res).all(|(s, p)| {
+        s.iters == p.iters && s.x.iter().zip(&p.x).all(|(u, v)| u.to_bits() == v.to_bits())
+    });
+    assert!(bitwise, "resident block-CG changed bits");
+    let r = bench("program_batch_8rhs_block_resident_10_iters", 1, 3, || {
         std::hint::black_box(prep8.solve_batch_block(&rhs, &opts));
     });
     record(&mut recs, &r, None);
     println!(
-        "    => {:.1} rhs-iterations/s with block-CG SpMV",
+        "    => {:.1} rhs-iterations/s with resident block state",
         8.0 * 10.0 / r.median_s
     );
-    let r = bench("program_batch_8rhs_block_par", 1, 3, || {
+    let r = bench("program_batch_8rhs_block_resident_par", 1, 3, || {
         std::hint::black_box(prep8.solve_batch_block_parallel(&rhs, &opts, None, 0));
     });
     record(&mut recs, &r, None);

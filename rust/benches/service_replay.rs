@@ -11,6 +11,10 @@
 //!   a time, each its own single-RHS program execution with no cache
 //!   (the pre-service path).  The coalesced row must beat this one on
 //!   RHS-iterations/s.
+//! * `service_replay_64req_8rhs_block` — the coalesced replay with
+//!   `ServiceConfig::block_spmv` on: every batch runs as one resident
+//!   lane-major block (one nnz stream per batched iteration, zero
+//!   steady-state boundary moves), bitwise the same per-ticket results.
 //!
 //! Iterations are capped (10 per request) so the rows measure the
 //! serving machinery at a fixed, path-identical amount of numerical
@@ -86,6 +90,26 @@ fn main() {
         std::hint::black_box(replay_sequential(svc.registry(), &trace, &opts));
     });
     record(&mut recs, &r, rhs_iters);
+
+    // The same coalesced trace on a block-mode service: batches execute
+    // as resident lane-major blocks.  Guard that the serving layer's
+    // block switch keeps every per-ticket result bitwise unchanged.
+    let blk_cfg = ServiceConfig { max_batch: 8, block_spmv: true, opts, ..Default::default() };
+    let mut blk_svc = SolverService::new(blk_cfg);
+    let blk_ids: Vec<_> = (0..4)
+        .map(|k| blk_svc.register(synth::laplace2d_shifted(base * (k + 1), 0.05 + 0.02 * k as f64)))
+        .collect();
+    let blk_trace = synth_trace(blk_svc.registry(), &blk_ids, &trace_cfg);
+    let blk_warm = replay_coalesced(&mut blk_svc, &blk_trace);
+    let bitwise = warm.results.iter().zip(&blk_warm.results).all(|(a, b)| {
+        a.iters == b.iters && a.x.iter().zip(&b.x).all(|(u, v)| u.to_bits() == v.to_bits())
+    });
+    assert!(bitwise, "block-mode service changed per-ticket bits");
+    let r = bench("service_replay_64req_8rhs_block", 1, runs, || {
+        std::hint::black_box(replay_coalesced(&mut blk_svc, &blk_trace));
+    });
+    record(&mut recs, &r, rhs_iters);
+    blk_svc.drain();
 
     let stats = svc.drain();
     println!(

@@ -30,7 +30,7 @@ use std::sync::Arc;
 use crate::engine::pool::{self, WorkerPool};
 use crate::hbm::ChannelMode;
 use crate::isa::InstTrace;
-use crate::precision::Scheme;
+use crate::precision::{stats, Scheme};
 use crate::program::{
     bucket_ceiling, DispatchReturn, HbmMemoryMap, InstDispatch, LaneSlice, Program, ProgramCache,
     Scalars, ScalarRole, VectorFile,
@@ -64,6 +64,38 @@ pub trait PhaseExecutor {
     fn update_x_only(&mut self, p: &[f64], x: &[f64], alpha: f64) -> Vec<f64>;
 }
 
+/// How the batched solve dispatches its block-CG data plane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BlockMode {
+    /// Every trip's data ops run per lane (the PR 5 dispatch): L nnz
+    /// passes and L vector sweeps per batched iteration.
+    #[default]
+    PerLane,
+    /// The PR 6 staging path: one [`InstDispatch::batch_spmv`] pass per
+    /// iteration feeds every live lane, but the lane-major block is
+    /// re-materialized around it — an O(n·L) gather of the inputs plus
+    /// an O(n·L) scatter of the outputs per pass (`2·n·L` element moves
+    /// per iteration on [`crate::precision::stats::vector_element_moves`]) —
+    /// and the M2–M8 vector sweeps still run per lane.  Kept reachable
+    /// as the measured baseline the resident layout is paired against.
+    Staged,
+    /// The resident layout: `x/p/r/ap/z` live in interleaved lane-major
+    /// arenas from program issue to converged exit.  The batch SpMV
+    /// reads `p` and writes staged `ap` in place (no gather, no
+    /// scatter, no per-pass allocation), the M2–M8 vector trips run
+    /// batch-wide through the [`InstDispatch`] block vector ops, and
+    /// commits are whole-arena swaps — steady-state iterations perform
+    /// **zero** block-boundary element moves.  Per-lane instruction
+    /// streams, traces, and acks are issued exactly as before
+    /// ([`crate::program::InstructionBus::issue_lane`]), and every
+    /// result bit matches the per-lane walk.  Backends that cannot
+    /// serve the block protocol degrade gracefully: no block vector ops
+    /// → the staged path; `batch_spmv` declines → per-lane; a mid-solve
+    /// decline or a single surviving lane → the lanes gather out into
+    /// per-lane [`VectorFile`]s and finish on the per-lane walk.
+    Resident,
+}
+
 /// Controller configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct CoordinatorConfig {
@@ -90,18 +122,13 @@ pub struct CoordinatorConfig {
     /// batch-splitting path at small `n`; results are chunk-invariant
     /// either way (lanes are independent).
     pub max_chunk_lanes: u32,
-    /// Block-CG SpMV: dispatch each trip round's Type-II SpMV **once
-    /// per batch** instead of once per lane — the live lanes' inputs
-    /// are gathered into an interleaved lane-major block, one
-    /// [`InstDispatch::batch_spmv`] call streams the matrix a single
-    /// time for all of them, and the outputs are scattered into each
-    /// lane's staged ap for its M1 to consume.  Retired lanes are
-    /// simply not gathered, so they stop costing inner-loop work.
-    /// Per-lane scalars, trip barriers, the instruction streams, and
-    /// every result bit are unchanged (the batch kernel is bitwise the
-    /// per-lane SpMV per lane); backends whose `batch_spmv` declines
-    /// fall back to per-lane SpMV transparently.
-    pub block_spmv: bool,
+    /// Block-CG dispatch mode for the batched solve paths (see
+    /// [`BlockMode`]).  Per-lane scalars, trip barriers, the
+    /// instruction streams, and every result bit are identical across
+    /// all three modes; only data movement differs.  Single-lane
+    /// batches always run per-lane dispatch — there is no block to
+    /// amortize over, so staging or residency would only add moves.
+    pub block: BlockMode,
 }
 
 impl Default for CoordinatorConfig {
@@ -114,7 +141,7 @@ impl Default for CoordinatorConfig {
             channel_mode: ChannelMode::Double,
             lane_workers: 0,
             max_chunk_lanes: 0,
-            block_spmv: false,
+            block: BlockMode::PerLane,
         }
     }
 }
@@ -346,32 +373,41 @@ impl Coordinator {
     ) -> Vec<CoordResult> {
         let program = self.chunk_program(rhs[0].len() as u32, rhs.len() as u32);
         let cfg = self.cfg;
+        // Resident mode: the whole chunk runs on lane-major arenas when
+        // the backend implements the block vector-op family.  A `Some`
+        // return carries the chunk's lanes — all retired, or gathered
+        // out mid-solve into per-lane vector files — and any survivors
+        // finish on the per-lane walk below.  `None` means the first
+        // batch SpMV declined before anything was issued: restart the
+        // chunk per-lane from scratch (the staged path would need the
+        // same batch kernel, so there is nothing to degrade to).
+        let mut tried_resident = false;
+        if cfg.block == BlockMode::Resident && rhs.len() > 1 && exec.block_vector_ops() {
+            tried_resident = true;
+            if let Some(mut lanes) = solve_chunk_resident(&cfg, &program, exec, rhs, x0) {
+                run_lane_loop(&cfg, &program, &mut lanes, exec, false);
+                return lanes.into_iter().map(LaneState::into_result).collect();
+            }
+        }
         let mut lanes = self.make_lanes(&program, rhs, x0);
-        // Block-CG mode: one batch_spmv ahead of each SpMV trip round
-        // stages every live lane's ap, so the M1s below consume one
-        // shared matrix pass.  A backend that declines (first call
-        // returns false) drops the mode for the whole chunk.
-        let mut block = cfg.block_spmv;
+        // Staged block-CG mode: one batch_spmv ahead of each SpMV trip
+        // round stages every live lane's ap, so the M1s below consume
+        // one shared matrix pass.  A backend that declines (first call
+        // returns false) drops the mode for the whole chunk.  A
+        // resident request degrades to this path when the backend lacks
+        // the block vector ops (its batch kernel may still serve).
+        let mut block = match cfg.block {
+            BlockMode::PerLane => false,
+            BlockMode::Staged => true,
+            BlockMode::Resident => !tried_resident,
+        };
         if block {
             block = block_spmv_pass(&mut lanes, exec, true, false);
         }
         for lane in lanes.iter_mut() {
             lane_init(&cfg, &program, lane, exec);
         }
-        while lanes.iter().any(|l| l.live) {
-            if block {
-                block = block_spmv_pass(&mut lanes, exec, false, true);
-            }
-            for lane in lanes.iter_mut().filter(|l| l.live) {
-                lane_phase1(&program, lane, exec);
-            }
-            for lane in lanes.iter_mut().filter(|l| l.live) {
-                lane_phase2(&program, lane, exec);
-            }
-            for lane in lanes.iter_mut().filter(|l| l.live) {
-                lane_phase3_or_exit(&cfg, &program, lane, exec);
-            }
-        }
+        run_lane_loop(&cfg, &program, &mut lanes, exec, block);
         lanes.into_iter().map(LaneState::into_result).collect()
     }
 
@@ -393,26 +429,39 @@ impl Coordinator {
         // workers is the caller plus w - 1 pool helpers.
         let helpers = workers.saturating_sub(1);
         let pool = pool::global();
+        // Resident mode runs the batch-wide rounds on the first lane's
+        // executor (every executor serves the same matrix); its block
+        // kernels parallelize internally over row ranges / dot lanes,
+        // so the per-trip lane fan-out only resumes for lanes that
+        // gather out.  Same return protocol as the sequential path.
+        let mut tried_resident = false;
+        if cfg.block == BlockMode::Resident
+            && rhs.len() > 1
+            && !execs.is_empty()
+            && execs[0].block_vector_ops()
+        {
+            tried_resident = true;
+            if let Some(mut lanes) = solve_chunk_resident(&cfg, &program, &mut execs[0], rhs, x0) {
+                run_lane_loop_parallel(pool, helpers, &cfg, &program, &mut lanes, execs, false);
+                return lanes.into_iter().map(LaneState::into_result).collect();
+            }
+        }
         let mut lanes = self.make_lanes(&program, rhs, x0);
-        // Block-CG mode: the batch-wide SpMV runs on the first lane's
-        // executor (every executor serves the same matrix) between the
-        // trip barriers, before the lanes fan out; the staged-ap
-        // handshake then makes each fanned M1 a consume, not a stream.
-        let mut block = cfg.block_spmv && !execs.is_empty();
+        // Staged block-CG mode: the batch-wide SpMV runs on the first
+        // lane's executor between the trip barriers, before the lanes
+        // fan out; the staged-ap handshake then makes each fanned M1 a
+        // consume, not a stream.
+        let mut block = !execs.is_empty()
+            && match cfg.block {
+                BlockMode::PerLane => false,
+                BlockMode::Staged => true,
+                BlockMode::Resident => !tried_resident,
+            };
         if block {
             block = block_spmv_pass(&mut lanes, &mut execs[0], true, false);
         }
         fan_trips(pool, helpers, &mut lanes, execs, false, |l, e| lane_init(&cfg, &program, l, e));
-        while lanes.iter().any(|l| l.live) {
-            if block {
-                block = block_spmv_pass(&mut lanes, &mut execs[0], false, true);
-            }
-            fan_trips(pool, helpers, &mut lanes, execs, true, |l, e| lane_phase1(&program, l, e));
-            fan_trips(pool, helpers, &mut lanes, execs, true, |l, e| lane_phase2(&program, l, e));
-            fan_trips(pool, helpers, &mut lanes, execs, true, |l, e| {
-                lane_phase3_or_exit(&cfg, &program, l, e)
-            });
-        }
+        run_lane_loop_parallel(pool, helpers, &cfg, &program, &mut lanes, execs, block);
         lanes.into_iter().map(LaneState::into_result).collect()
     }
 }
@@ -444,8 +493,19 @@ struct LaneState {
 
 impl LaneState {
     fn new(b: &[f64], x0: &[f64], offset_beats: u32, cfg: &CoordinatorConfig) -> Self {
+        Self::with_slice(LaneSlice::new(b, x0, offset_beats, cfg.record_instructions), cfg)
+    }
+
+    /// A lane whose vectors live in the coordinator's resident arenas:
+    /// the [`VectorFile`] starts empty and is materialized only on
+    /// gather-out or converged exit.
+    fn new_resident(offset_beats: u32, cfg: &CoordinatorConfig) -> Self {
+        Self::with_slice(LaneSlice::new_resident(offset_beats, cfg.record_instructions), cfg)
+    }
+
+    fn with_slice(slice: LaneSlice, cfg: &CoordinatorConfig) -> Self {
         Self {
-            slice: LaneSlice::new(b, x0, offset_beats, cfg.record_instructions),
+            slice,
             trace: ResidualTrace::new(cfg.record_trace),
             rz: 0.0,
             rr: 0.0,
@@ -489,11 +549,38 @@ fn lane_init<D: InstDispatch>(
     exec: &mut D,
 ) {
     let ret = lane.slice.trip(&program.init, Scalars { alpha: 1.0, beta: 0.0 }, exec);
-    lane.rz = ret_scalar(&ret, ScalarRole::Rz);
-    lane.rr = ret_scalar(&ret, ScalarRole::Rr);
+    let rz = ret_scalar(&ret, ScalarRole::Rz);
+    let rr = ret_scalar(&ret, ScalarRole::Rr);
+    note_init(cfg, lane, rz, rr);
+}
+
+/// Post-init scalar bookkeeping, shared between the per-lane trip path
+/// and the resident batch-wide rounds (which compute rz / rr with the
+/// block kernels but must track liveness identically).
+fn note_init(cfg: &CoordinatorConfig, lane: &mut LaneState, rz: f64, rr: f64) {
+    lane.rz = rz;
+    lane.rr = rr;
     lane.trace.push(lane.rr);
     lane.converged = lane.rr <= cfg.tol;
     lane.live = !lane.converged && cfg.max_iters > 0;
+}
+
+/// Post-exit-trip bookkeeping (shared with the resident rounds).
+fn note_exit(lane: &mut LaneState) {
+    lane.iters += 1;
+    lane.trace.push(lane.rr);
+    lane.converged = true;
+    lane.live = false;
+}
+
+/// Post-phase-3 bookkeeping (shared with the resident rounds).
+fn note_phase3(cfg: &CoordinatorConfig, lane: &mut LaneState) {
+    lane.rz = lane.rz_new;
+    lane.iters += 1;
+    lane.trace.push(lane.rr);
+    if lane.iters >= cfg.max_iters {
+        lane.live = false;
+    }
 }
 
 /// Phase-1 trip for one lane -> its pap -> its alpha (scalar unit,
@@ -525,19 +612,63 @@ fn lane_phase3_or_exit<D: InstDispatch>(
 ) {
     if lane.rr <= cfg.tol {
         lane.slice.trip(&program.exit, Scalars { alpha: lane.alpha, beta: 0.0 }, exec);
-        lane.iters += 1;
-        lane.trace.push(lane.rr);
-        lane.converged = true;
-        lane.live = false;
+        note_exit(lane);
         return;
     }
     let beta = lane.rz_new / lane.rz;
     lane.slice.trip(program.phase(Phase::Phase3), Scalars { alpha: lane.alpha, beta }, exec);
-    lane.rz = lane.rz_new;
-    lane.iters += 1;
-    lane.trace.push(lane.rr);
-    if lane.iters >= cfg.max_iters {
-        lane.live = false;
+    note_phase3(cfg, lane);
+}
+
+/// The steady-state per-lane trip loop (phases 1–3 until every lane
+/// retires), with the staged block-SpMV pass riding ahead of each SpMV
+/// round while `block` holds.  Factored out of
+/// [`Coordinator::solve_chunk`] so lanes the resident path gathers out
+/// mid-solve resume on exactly the walk they would have run all along.
+fn run_lane_loop<D: InstDispatch>(
+    cfg: &CoordinatorConfig,
+    program: &Program,
+    lanes: &mut [LaneState],
+    exec: &mut D,
+    mut block: bool,
+) {
+    while lanes.iter().any(|l| l.live) {
+        if block {
+            block = block_spmv_pass(lanes, exec, false, true);
+        }
+        for lane in lanes.iter_mut().filter(|l| l.live) {
+            lane_phase1(program, lane, exec);
+        }
+        for lane in lanes.iter_mut().filter(|l| l.live) {
+            lane_phase2(program, lane, exec);
+        }
+        for lane in lanes.iter_mut().filter(|l| l.live) {
+            lane_phase3_or_exit(cfg, program, lane, exec);
+        }
+    }
+}
+
+/// [`run_lane_loop`] with each trip fanned across the pool
+/// ([`fan_trips`]) — the parallel chunk walk's steady-state loop.
+#[allow(clippy::too_many_arguments)]
+fn run_lane_loop_parallel<D: InstDispatch + Send>(
+    pool: &WorkerPool,
+    helpers: usize,
+    cfg: &CoordinatorConfig,
+    program: &Program,
+    lanes: &mut [LaneState],
+    execs: &mut [D],
+    mut block: bool,
+) {
+    while lanes.iter().any(|l| l.live) {
+        if block {
+            block = block_spmv_pass(lanes, &mut execs[0], false, true);
+        }
+        fan_trips(pool, helpers, lanes, execs, true, |l, e| lane_phase1(program, l, e));
+        fan_trips(pool, helpers, lanes, execs, true, |l, e| lane_phase2(program, l, e));
+        fan_trips(pool, helpers, lanes, execs, true, |l, e| {
+            lane_phase3_or_exit(cfg, program, l, e)
+        });
     }
 }
 
@@ -576,6 +707,13 @@ fn check_batch_shapes(rhs: &[&[f64]], x0: Option<&[&[f64]]>) {
 /// work tracks the *live* lane count.  Returns whether block mode stays
 /// on: `false` means the backend declined and the caller should fall
 /// back to per-lane SpMV for the rest of the chunk (nothing was staged).
+///
+/// Gathering the inputs and scattering the outputs each move `n·L`
+/// vector elements across the block boundary — `2·n·L` per pass on
+/// [`crate::precision::stats::vector_element_moves`].  That is exactly
+/// the traffic the resident arenas delete, so a single selected lane
+/// (nothing to amortize the staging over) skips the pass and lets its
+/// M1 stream the matrix per-lane: same nnz traffic, zero moves.
 fn block_spmv_pass<D: InstDispatch>(
     lanes: &mut [LaneState],
     exec: &mut D,
@@ -591,6 +729,9 @@ fn block_spmv_pass<D: InstDispatch>(
     let Some(&first) = picked.first() else {
         return true; // nothing to stage; keep the mode on
     };
+    if picked.len() == 1 {
+        return true; // single lane: per-lane M1 is the cheaper dispatch
+    }
     let n = lanes[first].slice.mem.x.len();
     let l = picked.len();
     let mut xs = vec![0.0; n * l];
@@ -612,7 +753,352 @@ fn block_spmv_pass<D: InstDispatch>(
         }
         mem.block_ap_staged = true;
     }
+    stats::add_vector_element_moves(2 * (n * l) as u64);
     true
+}
+
+// --------------------------------------------------------------------
+// Resident block state: the lane-major block is the *resident*
+// representation for the whole batched solve.  x/p/r/ap (and the staged
+// streams, z included) live in interleaved arenas from program issue to
+// converged exit; the batch SpMV and the block vector ops read and
+// write them in place, and a Type-III commit is a whole-arena swap.
+// Steady-state iterations therefore move **zero** vector elements
+// across the block boundary (counted on
+// [`crate::precision::stats::vector_element_moves`]); elements move
+// only at genuine boundaries — batch entry, lane retirement, and the
+// gather-out fallback.
+// --------------------------------------------------------------------
+
+/// The resident value plane of one chunk: one interleaved lane-major
+/// arena per vector, `slots[j]` naming the lane that owns column `j`.
+/// Slots only ever hold live lanes — retirement extracts the lane's x
+/// and compacts the survivors, so inner-loop work tracks the live
+/// count exactly as per-lane dispatch's retired-lane skip does.
+struct BlockArenas {
+    /// Rows per lane.
+    n: usize,
+    /// Arena column -> index into the chunk's lane vec.
+    slots: Vec<usize>,
+    /// Committed (HBM) x.
+    x: Vec<f64>,
+    /// Committed r.
+    r: Vec<f64>,
+    /// Committed p.
+    p: Vec<f64>,
+    /// Committed ap.
+    ap: Vec<f64>,
+    /// Staged (on-chip stream) x.
+    stage_x: Vec<f64>,
+    /// Staged r.
+    stage_r: Vec<f64>,
+    /// Staged p.
+    stage_p: Vec<f64>,
+    /// Staged ap.
+    stage_ap: Vec<f64>,
+    /// z: on-chip only (§5.3), staged, never committed.
+    stage_z: Vec<f64>,
+}
+
+impl BlockArenas {
+    /// Interleave the chunk's starts into resident arenas — x0 columns
+    /// into x, b columns into r (the same merged-init convention as
+    /// [`VectorFile::new`]: init's M4 turns r into b - A·x0 in place).
+    /// The one-time entry cost is `2·n·L` element moves; every other
+    /// arena starts zeroed, which is initialization, not movement.
+    fn gather_in(rhs: &[&[f64]], x0: &[&[f64]]) -> Self {
+        let n = rhs[0].len();
+        let l = rhs.len();
+        let mut x = vec![0.0; n * l];
+        let mut r = vec![0.0; n * l];
+        for (j, (b, xs)) in rhs.iter().zip(x0).enumerate() {
+            for i in 0..n {
+                x[i * l + j] = xs[i];
+                r[i * l + j] = b[i];
+            }
+        }
+        stats::add_vector_element_moves(2 * (n * l) as u64);
+        Self {
+            n,
+            slots: (0..l).collect(),
+            x,
+            r,
+            p: vec![0.0; n * l],
+            ap: vec![0.0; n * l],
+            stage_x: vec![0.0; n * l],
+            stage_r: vec![0.0; n * l],
+            stage_p: vec![0.0; n * l],
+            stage_ap: vec![0.0; n * l],
+            stage_z: vec![0.0; n * l],
+        }
+    }
+
+    /// Live lanes resident in the arenas.
+    fn lanes(&self) -> usize {
+        self.slots.len()
+    }
+
+    // A Type-III write-back on the resident plane: the staged arena
+    // *becomes* the committed arena.  A swap, not a copy — zero element
+    // moves, which is the whole point of residency.
+    fn commit_x(&mut self) {
+        std::mem::swap(&mut self.x, &mut self.stage_x);
+    }
+    fn commit_r(&mut self) {
+        std::mem::swap(&mut self.r, &mut self.stage_r);
+    }
+    fn commit_p(&mut self) {
+        std::mem::swap(&mut self.p, &mut self.stage_p);
+    }
+    fn commit_ap(&mut self) {
+        std::mem::swap(&mut self.ap, &mut self.stage_ap);
+    }
+
+    /// Drop every column not in `keep` (ascending old-column indices),
+    /// repacking the committed arenas in place — the forward walk's
+    /// write index never passes its read index, so no scratch buffer.
+    /// Costs `4·n·keep.len()` element moves; called only when a lane
+    /// actually retired, so steady-state iterations never pay it.
+    fn compact(&mut self, keep: &[usize]) {
+        let old_l = self.lanes();
+        let new_l = keep.len();
+        if new_l == old_l {
+            return;
+        }
+        let n = self.n;
+        for arena in [&mut self.x, &mut self.r, &mut self.p, &mut self.ap] {
+            for i in 0..n {
+                for (j2, &j) in keep.iter().enumerate() {
+                    arena[i * new_l + j2] = arena[i * old_l + j];
+                }
+            }
+            arena.truncate(n * new_l);
+        }
+        for stage in [
+            &mut self.stage_x,
+            &mut self.stage_r,
+            &mut self.stage_p,
+            &mut self.stage_ap,
+            &mut self.stage_z,
+        ] {
+            // Staged contents are dead across iteration boundaries;
+            // only the capacity needs to match the surviving block.
+            stage.truncate(n * new_l);
+        }
+        self.slots = keep.iter().map(|&j| self.slots[j]).collect();
+        stats::add_vector_element_moves((4 * n * new_l) as u64);
+    }
+}
+
+/// One lane's column of an interleaved lane-major arena, deinterleaved.
+fn arena_col(arena: &[f64], n: usize, l: usize, j: usize) -> Vec<f64> {
+    (0..n).map(|i| arena[i * l + j]).collect()
+}
+
+/// Extract every just-retired lane's solution out of the committed x
+/// arena (`n` moves per retiring lane — its converged-exit boundary
+/// cost) and compact the arenas down to the survivors.
+fn retire_and_compact(ar: &mut BlockArenas, lanes: &mut [LaneState]) {
+    let l = ar.lanes();
+    let mut keep = Vec::with_capacity(l);
+    let mut any_retired = false;
+    for j in 0..l {
+        let k = ar.slots[j];
+        if lanes[k].live {
+            keep.push(j);
+        } else {
+            any_retired = true;
+            lanes[k].slice.mem.x = arena_col(&ar.x, ar.n, l, j);
+            stats::add_vector_element_moves(ar.n as u64);
+        }
+    }
+    if any_retired {
+        ar.compact(&keep);
+    }
+}
+
+/// Materialize every still-resident lane's per-lane [`VectorFile`] from
+/// the committed arenas so the per-lane walk can finish the solve:
+/// x/r/p/ap columns out (`4·n` moves per lane), b restored from the
+/// caller's right-hand side, staging buffers sized (their contents are
+/// dead between trips).  Called only at an iteration boundary, where
+/// the committed plane plus each lane's scalar slots are exactly the
+/// state the per-lane loop resumes from — so the continuation is
+/// bitwise the walk that would have run all along.
+fn gather_out(ar: &mut BlockArenas, lanes: &mut [LaneState], rhs: &[&[f64]]) {
+    let l = ar.lanes();
+    for j in 0..l {
+        let k = ar.slots[j];
+        let mem = &mut lanes[k].slice.mem;
+        mem.x = arena_col(&ar.x, ar.n, l, j);
+        mem.r = arena_col(&ar.r, ar.n, l, j);
+        mem.p = arena_col(&ar.p, ar.n, l, j);
+        mem.ap = arena_col(&ar.ap, ar.n, l, j);
+        mem.b = rhs[k].to_vec();
+        mem.stage_x = vec![0.0; ar.n];
+        mem.stage_r = vec![0.0; ar.n];
+        mem.stage_p = vec![0.0; ar.n];
+        mem.stage_ap = vec![0.0; ar.n];
+        mem.stage_z = vec![0.0; ar.n];
+        stats::add_vector_element_moves(4 * ar.n as u64);
+    }
+    ar.slots.clear();
+}
+
+/// One chunk on the resident block plane.  Every round runs its
+/// arithmetic batch-wide over the arenas (the batch SpMV plus the
+/// [`InstDispatch`] block vector ops, each bitwise the per-lane module
+/// per lane), then issues the per-lane trips through
+/// [`LaneSlice::issue`] — identical instruction streams, traces, and
+/// acks, with arena swaps playing the commit role.  Scalar bookkeeping
+/// goes through the same `note_*` helpers as the per-lane walk, so
+/// liveness, traces, and iteration counts cannot drift.
+///
+/// Returns `None` if the backend's batch SpMV declined before anything
+/// was issued (the caller restarts the chunk per-lane from scratch);
+/// `Some(lanes)` otherwise, where any lane still live gathered out into
+/// its per-lane [`VectorFile`] (mid-solve decline, or a lone survivor
+/// not worth batching) and finishes on the caller's per-lane loop.
+fn solve_chunk_resident<D: InstDispatch>(
+    cfg: &CoordinatorConfig,
+    program: &Program,
+    exec: &mut D,
+    rhs: &[&[f64]],
+    x0: &[&[f64]],
+) -> Option<Vec<LaneState>> {
+    let mut lanes: Vec<LaneState> = (0..rhs.len())
+        .map(|k| LaneState::new_resident(program.lane_offset_beats(k as u32), cfg))
+        .collect();
+    let mut ar = BlockArenas::gather_in(rhs, x0);
+    let l = ar.lanes();
+
+    // ---- merged init round: M1 M4 M8 M5 M6 M7, commits r and p ----
+    // M1 streams the matrix once for the whole batch, straight from the
+    // x arena into the staged-ap arena — in place, nothing gathered or
+    // scattered.  This is also the batch kernel's one chance to decline
+    // cleanly: nothing has been issued yet.
+    if !exec.batch_spmv(&ar.x, &mut ar.stage_ap, l) {
+        return None;
+    }
+    // M4 with init's pre-bound alpha = 1: r = r - ap, ap on-chip.
+    ar.stage_r.copy_from_slice(&ar.r);
+    exec.block_axpy(&vec![-1.0; l], &ar.stage_ap, &mut ar.stage_r);
+    // M8 (hoisted): rr per lane.
+    let mut rr = vec![0.0; l];
+    exec.block_dots(&ar.stage_r, &ar.stage_r, &mut rr);
+    // M5: z = r / diag.
+    exec.block_left_divide(&ar.stage_r, &mut ar.stage_z, l);
+    // M6: rz per lane.
+    let mut rz = vec![0.0; l];
+    exec.block_dots(&ar.stage_r, &ar.stage_z, &mut rz);
+    // M7 on the merged init (no p yet): the beta = 0 update degenerates
+    // to the stream-through copy p = z.
+    ar.stage_p.copy_from_slice(&ar.stage_z);
+    for (j, lane) in lanes.iter_mut().enumerate() {
+        lane.slice.issue(&program.init, Scalars { alpha: 1.0, beta: 0.0 });
+        note_init(cfg, lane, rz[j], rr[j]);
+    }
+    ar.commit_r();
+    ar.commit_p();
+    retire_and_compact(&mut ar, &mut lanes);
+
+    // ---- steady-state rounds ----
+    loop {
+        let l = ar.lanes();
+        if l == 0 {
+            return Some(lanes); // every lane retired in residence
+        }
+        if l == 1 {
+            // A lone survivor has nothing left to batch over: gather it
+            // out and let the per-lane walk finish — the same
+            // single-lane short-circuit the staged pass takes.
+            gather_out(&mut ar, &mut lanes, rhs);
+            return Some(lanes);
+        }
+        // ---- phase 1: M1, M2; commits ap ----
+        if !exec.batch_spmv(&ar.p, &mut ar.stage_ap, l) {
+            // Mid-solve decline: we are at an iteration boundary, so
+            // the committed plane gathers out cleanly.
+            gather_out(&mut ar, &mut lanes, rhs);
+            return Some(lanes);
+        }
+        let mut pap = vec![0.0; l];
+        exec.block_dots(&ar.p, &ar.stage_ap, &mut pap);
+        for (j, &k) in ar.slots.iter().enumerate() {
+            let lane = &mut lanes[k];
+            lane.slice.issue(program.phase(Phase::Phase1), Scalars::default());
+            lane.alpha = lane.rz / pap[j];
+        }
+        ar.commit_ap();
+
+        // ---- phase 2: M4 M8 M5 M6; no commits ----
+        ar.stage_r.copy_from_slice(&ar.r);
+        let neg_alphas: Vec<f64> = ar.slots.iter().map(|&k| -lanes[k].alpha).collect();
+        exec.block_axpy(&neg_alphas, &ar.ap, &mut ar.stage_r);
+        let mut rr = vec![0.0; l];
+        exec.block_dots(&ar.stage_r, &ar.stage_r, &mut rr);
+        exec.block_left_divide(&ar.stage_r, &mut ar.stage_z, l);
+        let mut rz_new = vec![0.0; l];
+        exec.block_dots(&ar.stage_r, &ar.stage_z, &mut rz_new);
+        for (j, &k) in ar.slots.iter().enumerate() {
+            let lane = &mut lanes[k];
+            let scalars = Scalars { alpha: lane.alpha, beta: 0.0 };
+            lane.slice.issue(program.phase(Phase::Phase2), scalars);
+            lane.rr = rr[j];
+            lane.rz_new = rz_new[j];
+        }
+
+        // ---- phase 3 / converged exit; commits x, plus p and r when
+        // any lane runs phase 3 ----
+        // Phase 3's M4/M5 recompute phase 2's stage_r / stage_z
+        // bit-identically from the same committed inputs, and the M5
+        // write-back commits the recomputed stream (§5.3).  The arenas
+        // still hold exactly those bits, so the recompute is a no-op
+        // here — commit what is already staged.
+        let any_steady = ar.slots.iter().any(|&k| lanes[k].rr > cfg.tol);
+        if any_steady {
+            // M7: p' = z + beta·p, the old p staying committed for M3.
+            // A converged lane's column rides along with beta = 0; its
+            // committed p is dead after this round (only x leaves the
+            // arenas at retirement), so the ride-along is unobservable.
+            ar.stage_p.copy_from_slice(&ar.p);
+            let betas: Vec<f64> = ar
+                .slots
+                .iter()
+                .map(|&k| {
+                    let lane = &lanes[k];
+                    if lane.rr <= cfg.tol {
+                        0.0
+                    } else {
+                        lane.rz_new / lane.rz
+                    }
+                })
+                .collect();
+            exec.block_update_p(&betas, &ar.stage_z, &mut ar.stage_p);
+        }
+        // M3: x' = x + alpha·p_old.  The phase-3 and converged-exit
+        // trips bind the same alpha, so one batch-wide axpy serves both.
+        ar.stage_x.copy_from_slice(&ar.x);
+        let alphas: Vec<f64> = ar.slots.iter().map(|&k| lanes[k].alpha).collect();
+        exec.block_axpy(&alphas, &ar.p, &mut ar.stage_x);
+        for &k in &ar.slots {
+            let lane = &mut lanes[k];
+            if lane.rr <= cfg.tol {
+                lane.slice.issue(&program.exit, Scalars { alpha: lane.alpha, beta: 0.0 });
+                note_exit(lane);
+            } else {
+                let scalars = Scalars { alpha: lane.alpha, beta: lane.rz_new / lane.rz };
+                lane.slice.issue(program.phase(Phase::Phase3), scalars);
+                note_phase3(cfg, lane);
+            }
+        }
+        ar.commit_x();
+        if any_steady {
+            ar.commit_p();
+            ar.commit_r();
+        }
+        retire_and_compact(&mut ar, &mut lanes);
+    }
 }
 
 /// Fan one trip across the (live) lanes through the pool's indexed
@@ -868,6 +1354,39 @@ impl InstDispatch for NativeExecutor<'_> {
         }
         self.prep.spmv_block(self.scheme, xs, ys, lanes);
         true
+    }
+
+    /// The native backend serves the whole resident block family: its
+    /// vector ops run on the engine's row-range-parallel block kernels
+    /// (lane-axis-parallel for the dots), each bitwise the per-lane
+    /// module kernel per lane.  Advertised even on the Serpens stream
+    /// path — the vector plane is stream-independent — where the
+    /// declining [`NativeExecutor::batch_spmv`] above still routes the
+    /// resident request back to per-lane dispatch before any op runs.
+    fn block_vector_ops(&self) -> bool {
+        true
+    }
+
+    fn block_axpy(&mut self, alphas: &[f64], xs: &[f64], ys: &mut [f64]) {
+        crate::engine::axpy_block_parallel(alphas, xs, ys, self.prep.partition());
+    }
+
+    fn block_left_divide(&mut self, rs: &[f64], zs: &mut [f64], lanes: usize) {
+        crate::engine::left_divide_block_parallel(
+            rs,
+            self.prep.diag(),
+            zs,
+            lanes,
+            self.prep.partition(),
+        );
+    }
+
+    fn block_update_p(&mut self, betas: &[f64], zs: &[f64], ps: &mut [f64]) {
+        crate::engine::update_p_block_parallel(betas, zs, ps, self.prep.partition());
+    }
+
+    fn block_dots(&mut self, a: &[f64], b: &[f64], out: &mut [f64]) {
+        crate::engine::dot_block_parallel(a, b, out, self.prep.threads());
     }
 }
 

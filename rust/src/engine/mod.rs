@@ -39,6 +39,7 @@ pub use partition::RowPartition;
 pub use plan::PreparedMatrix;
 pub use pool::WorkerPool;
 pub use spmv::{
-    dot_delay_parallel, spmv_block_parallel, spmv_f64_parallel, spmv_parallel,
-    DOT_PARALLEL_MIN_LEN,
+    axpy_block_parallel, dot_block_parallel, dot_delay_parallel, left_divide_block_parallel,
+    spmv_block_parallel, spmv_f64_parallel, spmv_parallel, update_p_block_parallel,
+    BLOCK_VEC_PARALLEL_MIN_LEN, DOT_PARALLEL_MIN_LEN,
 };

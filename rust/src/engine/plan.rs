@@ -4,7 +4,7 @@
 
 use std::sync::{Arc, OnceLock};
 
-use crate::coordinator::CoordinatorConfig;
+use crate::coordinator::{BlockMode, CoordinatorConfig};
 use crate::precision::{apply_accumulator_model, Scheme};
 use crate::program::ProgramCache;
 use crate::solver::{
@@ -245,19 +245,22 @@ impl<'a> PreparedMatrix<'a> {
             return Vec::new();
         }
         if Self::program_family(opts) {
-            return self.solve_batch_program(rhs, opts, cache, false);
+            return self.solve_batch_program(rhs, opts, cache, BlockMode::PerLane);
         }
         self.solve_batch_workers(rhs, opts)
     }
 
-    /// [`PreparedMatrix::solve_batch`] under **block-CG SpMV**
-    /// ([`CoordinatorConfig::block_spmv`]): each batched iteration
-    /// streams the matrix **once** for every live lane — the Type-II
-    /// SpMV dispatches per batch, inputs gathered into an interleaved
-    /// lane-major block ([`PreparedMatrix::spmv_block`]) — instead of
-    /// once per lane.  The block kernel preserves each lane's
-    /// accumulation chain exactly, so results are **bitwise identical**
-    /// to [`PreparedMatrix::solve_batch`] (and hence to lone
+    /// [`PreparedMatrix::solve_batch`] under **resident block-CG**
+    /// ([`BlockMode::Resident`]): the batch's vector plane lives in
+    /// interleaved lane-major arenas for the whole solve — each
+    /// iteration streams the matrix **once** for every live lane
+    /// straight between the arenas ([`PreparedMatrix::spmv_block`], no
+    /// gather or scatter), runs the M2–M8 vector trips batch-wide on
+    /// the engine's block kernels, and commits by swapping arenas, so
+    /// steady-state iterations move zero vector elements across the
+    /// block boundary.  Every kernel preserves each lane's accumulation
+    /// chain exactly, so results are **bitwise identical** to
+    /// [`PreparedMatrix::solve_batch`] (and hence to lone
     /// [`crate::solver::jpcg_solve`] calls); the Table-7-style
     /// convergence gate in `tests/block_spmv.rs` documents the
     /// tolerance contract any future layout change must still meet.
@@ -280,7 +283,29 @@ impl<'a> PreparedMatrix<'a> {
             return Vec::new();
         }
         if Self::program_family(opts) {
-            return self.solve_batch_program(rhs, opts, cache, true);
+            return self.solve_batch_program(rhs, opts, cache, BlockMode::Resident);
+        }
+        self.solve_batch_workers(rhs, opts)
+    }
+
+    /// [`PreparedMatrix::solve_batch`] under the **staged** block-CG
+    /// SpMV ([`BlockMode::Staged`], the PR 6 path): one matrix pass per
+    /// iteration feeds every live lane, but the lane-major block is
+    /// gathered and scattered around it (`2·n·L` element moves per
+    /// iteration) and the vector sweeps stay per-lane.  Kept as the
+    /// measured baseline the resident rows pair against in
+    /// `benches/hot_paths.rs`; results are bitwise identical to every
+    /// other entry point of the program family.
+    pub fn solve_batch_block_staged(
+        &self,
+        rhs: &[Vec<f64>],
+        opts: &SolveOptions,
+    ) -> Vec<SolveResult> {
+        if rhs.is_empty() {
+            return Vec::new();
+        }
+        if Self::program_family(opts) {
+            return self.solve_batch_program(rhs, opts, None, BlockMode::Staged);
         }
         self.solve_batch_workers(rhs, opts)
     }
@@ -305,15 +330,16 @@ impl<'a> PreparedMatrix<'a> {
         cache: Option<&Arc<ProgramCache>>,
         lane_workers: usize,
     ) -> Vec<SolveResult> {
-        self.solve_batch_parallel_impl(rhs, opts, cache, lane_workers, false)
+        self.solve_batch_parallel_impl(rhs, opts, cache, lane_workers, BlockMode::PerLane)
     }
 
-    /// [`PreparedMatrix::solve_batch_parallel`] under **block-CG SpMV**
-    /// (see [`PreparedMatrix::solve_batch_block`]): the batch-wide
-    /// matrix pass runs between the trip barriers on this plan's full
-    /// thread budget, while the non-SpMV trips still fan across
-    /// `lane_workers` lanes.  Bitwise identical to every other entry
-    /// point of the program family.
+    /// [`PreparedMatrix::solve_batch_parallel`] under **resident
+    /// block-CG** (see [`PreparedMatrix::solve_batch_block`]): the
+    /// batch-wide SpMV and vector rounds run between the trip barriers
+    /// on this plan's full thread budget (the block kernels parallelize
+    /// over row ranges and dot lanes internally), while any lanes that
+    /// gather out fan across `lane_workers` workers.  Bitwise identical
+    /// to every other entry point of the program family.
     pub fn solve_batch_block_parallel(
         &self,
         rhs: &[Vec<f64>],
@@ -321,7 +347,23 @@ impl<'a> PreparedMatrix<'a> {
         cache: Option<&Arc<ProgramCache>>,
         lane_workers: usize,
     ) -> Vec<SolveResult> {
-        self.solve_batch_parallel_impl(rhs, opts, cache, lane_workers, true)
+        self.solve_batch_parallel_impl(rhs, opts, cache, lane_workers, BlockMode::Resident)
+    }
+
+    /// [`PreparedMatrix::solve_batch_parallel`] under the **staged**
+    /// block-CG SpMV (see [`PreparedMatrix::solve_batch_block_staged`]):
+    /// the batch-wide matrix pass runs between the trip barriers on this
+    /// plan's full thread budget, while the non-SpMV trips still fan
+    /// across `lane_workers` lanes.  The resident path's measured
+    /// baseline; bitwise identical to it.
+    pub fn solve_batch_block_staged_parallel(
+        &self,
+        rhs: &[Vec<f64>],
+        opts: &SolveOptions,
+        cache: Option<&Arc<ProgramCache>>,
+        lane_workers: usize,
+    ) -> Vec<SolveResult> {
+        self.solve_batch_parallel_impl(rhs, opts, cache, lane_workers, BlockMode::Staged)
     }
 
     fn solve_batch_parallel_impl(
@@ -330,7 +372,7 @@ impl<'a> PreparedMatrix<'a> {
         opts: &SolveOptions,
         cache: Option<&Arc<ProgramCache>>,
         lane_workers: usize,
-        block_spmv: bool,
+        block: BlockMode,
     ) -> Vec<SolveResult> {
         use crate::coordinator::{Coordinator, NativeExecutor};
         if rhs.is_empty() {
@@ -343,20 +385,20 @@ impl<'a> PreparedMatrix<'a> {
         // lanes never serialize on the OnceLock's first fill.
         let _ = self.vals32_for(opts.scheme);
         let lane_plan = self.reshaped(1);
-        let cfg = CoordinatorConfig { lane_workers, block_spmv, ..Self::coord_cfg(opts) };
+        let cfg = CoordinatorConfig { lane_workers, block, ..Self::coord_cfg(opts) };
         let mut coord = match cache {
             Some(cache) => Coordinator::with_cache(cfg, Arc::clone(cache)),
             None => Coordinator::new(cfg),
         };
-        // Under block dispatch the batch-wide SpMV runs on the *first*
+        // Under block dispatch the batch-wide work runs on the *first*
         // executor; give it the full-thread plan so the one matrix pass
-        // uses the machine, while the per-lane fallback work stays on
-        // serial-SpMV views.
+        // (and, resident, the block vector rounds) uses the machine,
+        // while the per-lane fallback work stays on serial-SpMV views.
         let mut execs: Vec<NativeExecutor> = rhs
             .iter()
             .enumerate()
             .map(|(k, _)| {
-                if block_spmv && k == 0 {
+                if block != BlockMode::PerLane && k == 0 {
                     NativeExecutor::with_plan(self, opts.scheme)
                 } else {
                     NativeExecutor::with_plan(&lane_plan, opts.scheme)
@@ -419,10 +461,10 @@ impl<'a> PreparedMatrix<'a> {
         rhs: &[Vec<f64>],
         opts: &SolveOptions,
         cache: Option<&Arc<ProgramCache>>,
-        block_spmv: bool,
+        block: BlockMode,
     ) -> Vec<SolveResult> {
         use crate::coordinator::{Coordinator, NativeExecutor};
-        let cfg = CoordinatorConfig { block_spmv, ..Self::coord_cfg(opts) };
+        let cfg = CoordinatorConfig { block, ..Self::coord_cfg(opts) };
         let mut coord = match cache {
             Some(cache) => Coordinator::with_cache(cfg, Arc::clone(cache)),
             None => Coordinator::new(cfg),

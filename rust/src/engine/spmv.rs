@@ -9,11 +9,37 @@
 //! without moving a single Table-7 iteration count.
 
 use crate::precision::{
-    dot_delay_buffer, spmv_scheme_rows, spmv_scheme_rows_block, Scheme, DELAY_LANES,
+    axpy_block, dot_block, dot_block_lane, dot_delay_buffer, left_divide_block, spmv_scheme_rows,
+    spmv_scheme_rows_block, update_p_block, Scheme, DELAY_LANES,
 };
 use crate::sparse::CsrMatrix;
 
 use super::RowPartition;
+
+/// Split an interleaved lane-major buffer into the partition's disjoint
+/// row blocks, each widened by the lane stride (the `mem::take` slab
+/// idiom: every split's loan lands on a dead temporary, which is the
+/// borrowck-clean way to carve a `&mut` slice in a loop).
+fn split_lane_major<'y>(
+    ys: &'y mut [f64],
+    lanes: usize,
+    part: &RowPartition,
+) -> Vec<(usize, &'y mut [f64])> {
+    let mut blocks: Vec<(usize, &mut [f64])> = Vec::with_capacity(part.num_parts());
+    let mut rest = ys;
+    let mut offset = 0usize;
+    for k in 0..part.num_parts() {
+        let range = part.range(k);
+        let slab = std::mem::take(&mut rest);
+        let (head, tail) = slab.split_at_mut((range.end - offset) * lanes);
+        if !head.is_empty() {
+            blocks.push((range.start, head));
+        }
+        rest = tail;
+        offset = range.end;
+    }
+    blocks
+}
 
 /// y = A x under `scheme`, one scoped thread per partition block.
 /// `vals32` must be the f32 view of `a.vals` (may be empty for
@@ -95,21 +121,7 @@ pub fn spmv_block_parallel(
         spmv_scheme_rows_block(a, vals32, xs, ys, 0, lanes, scheme);
         return;
     }
-    // Same mem::take slab idiom as spmv_parallel, with every row block
-    // widened by the lane stride.
-    let mut blocks: Vec<(usize, &mut [f64])> = Vec::with_capacity(part.num_parts());
-    let mut rest = ys;
-    let mut offset = 0usize;
-    for k in 0..part.num_parts() {
-        let range = part.range(k);
-        let slab = std::mem::take(&mut rest);
-        let (head, tail) = slab.split_at_mut((range.end - offset) * lanes);
-        if !head.is_empty() {
-            blocks.push((range.start, head));
-        }
-        rest = tail;
-        offset = range.end;
-    }
+    let blocks = split_lane_major(ys, lanes, part);
     std::thread::scope(|s| {
         let mut iter = blocks.into_iter();
         let first = iter.next();
@@ -118,6 +130,129 @@ pub fn spmv_block_parallel(
         }
         if let Some((row_start, y_rows)) = first {
             spmv_scheme_rows_block(a, vals32, xs, y_rows, row_start, lanes, scheme);
+        }
+    });
+}
+
+/// Below this many total elements a parallel block vector op's spawn
+/// cost outweighs the O(1)-flop-per-element work; the `*_block_parallel`
+/// element-wise wrappers stay on the serial block kernels.
+pub const BLOCK_VEC_PARALLEL_MIN_LEN: usize = 16_384;
+
+/// Block axpy over the partition's row blocks: the resident block-CG
+/// M3/M4 sweep, every lane updated from one pass over the interleaved
+/// arenas.  Element-wise ops never cross rows, so the row split cannot
+/// touch any lane's op order — per lane the output is bitwise the
+/// serial `AxpyModule` at any thread count (the sub-range cover is
+/// pinned in `precision`'s tests, the parallel grid below).
+pub fn axpy_block_parallel(alphas: &[f64], xs: &[f64], ys: &mut [f64], part: &RowPartition) {
+    debug_assert_eq!(xs.len(), ys.len());
+    let lanes = alphas.len();
+    if part.num_parts() <= 1 || ys.len() < BLOCK_VEC_PARALLEL_MIN_LEN {
+        axpy_block(alphas, xs, ys);
+        return;
+    }
+    let blocks = split_lane_major(ys, lanes, part);
+    std::thread::scope(|s| {
+        let mut iter = blocks.into_iter();
+        let first = iter.next();
+        for (row_start, y_rows) in iter {
+            let xr = &xs[row_start * lanes..row_start * lanes + y_rows.len()];
+            s.spawn(move || axpy_block(alphas, xr, y_rows));
+        }
+        if let Some((row_start, y_rows)) = first {
+            let xr = &xs[row_start * lanes..row_start * lanes + y_rows.len()];
+            axpy_block(alphas, xr, y_rows);
+        }
+    });
+}
+
+/// Block left divide (M5) over the partition's row blocks; `m` is the
+/// shared per-row Jacobi diagonal (length n).  Same bit contract as
+/// [`axpy_block_parallel`].
+pub fn left_divide_block_parallel(
+    rs: &[f64],
+    m: &[f64],
+    zs: &mut [f64],
+    lanes: usize,
+    part: &RowPartition,
+) {
+    debug_assert_eq!(rs.len(), zs.len());
+    debug_assert_eq!(rs.len(), m.len() * lanes);
+    if part.num_parts() <= 1 || zs.len() < BLOCK_VEC_PARALLEL_MIN_LEN {
+        left_divide_block(rs, m, zs, lanes);
+        return;
+    }
+    let blocks = split_lane_major(zs, lanes, part);
+    std::thread::scope(|s| {
+        let mut iter = blocks.into_iter();
+        let first = iter.next();
+        for (row_start, z_rows) in iter {
+            let rr = &rs[row_start * lanes..row_start * lanes + z_rows.len()];
+            let mr = &m[row_start..row_start + z_rows.len() / lanes];
+            s.spawn(move || left_divide_block(rr, mr, z_rows, lanes));
+        }
+        if let Some((row_start, z_rows)) = first {
+            let rr = &rs[row_start * lanes..row_start * lanes + z_rows.len()];
+            let mr = &m[row_start..row_start + z_rows.len() / lanes];
+            left_divide_block(rr, mr, z_rows, lanes);
+        }
+    });
+}
+
+/// Block update-p (M7) over the partition's row blocks.  Same bit
+/// contract as [`axpy_block_parallel`].
+pub fn update_p_block_parallel(betas: &[f64], zs: &[f64], ps: &mut [f64], part: &RowPartition) {
+    debug_assert_eq!(zs.len(), ps.len());
+    let lanes = betas.len();
+    if part.num_parts() <= 1 || ps.len() < BLOCK_VEC_PARALLEL_MIN_LEN {
+        update_p_block(betas, zs, ps);
+        return;
+    }
+    let blocks = split_lane_major(ps, lanes, part);
+    std::thread::scope(|s| {
+        let mut iter = blocks.into_iter();
+        let first = iter.next();
+        for (row_start, p_rows) in iter {
+            let zr = &zs[row_start * lanes..row_start * lanes + p_rows.len()];
+            s.spawn(move || update_p_block(betas, zr, p_rows));
+        }
+        if let Some((row_start, p_rows)) = first {
+            let zr = &zs[row_start * lanes..row_start * lanes + p_rows.len()];
+            update_p_block(betas, zr, p_rows);
+        }
+    });
+}
+
+/// Block dot (M2/M6/M8) with the *lane* axis split across up to
+/// `workers` threads — a row split would reassociate a lane's
+/// delay-buffer chain, but lanes are independent chains, so each
+/// `out[j]` is computed by exactly
+/// [`dot_block_lane`](crate::precision::dot_block_lane) no matter which
+/// worker runs it: bitwise the serial per-lane delay-buffer dot at any
+/// worker count.
+pub fn dot_block_parallel(a: &[f64], b: &[f64], out: &mut [f64], workers: usize) {
+    debug_assert_eq!(a.len(), b.len());
+    let lanes = out.len();
+    if workers <= 1 || lanes <= 1 || a.len() < DOT_PARALLEL_MIN_LEN {
+        dot_block(a, b, out);
+        return;
+    }
+    let per = lanes.div_ceil(workers.min(lanes));
+    std::thread::scope(|s| {
+        let mut chunks = out.chunks_mut(per).enumerate();
+        let first = chunks.next();
+        for (ci, chunk) in chunks {
+            s.spawn(move || {
+                for (j, o) in chunk.iter_mut().enumerate() {
+                    *o = dot_block_lane(a, b, lanes, ci * per + j);
+                }
+            });
+        }
+        if let Some((ci, chunk)) = first {
+            for (j, o) in chunk.iter_mut().enumerate() {
+                *o = dot_block_lane(a, b, lanes, ci * per + j);
+            }
         }
     });
 }
@@ -243,6 +378,51 @@ mod tests {
             for workers in [1usize, 2, 3, 8, 16] {
                 let got = dot_delay_parallel(&a, &b, workers);
                 assert_eq!(got.to_bits(), want.to_bits(), "n={n} workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_block_vector_ops_are_bitwise_serial_at_any_width() {
+        use crate::precision::{axpy_block, dot_block, left_divide_block, update_p_block};
+        // n chosen to straddle BLOCK_VEC_PARALLEL_MIN_LEN / lanes so both
+        // the serial short-circuit and the threaded split are exercised.
+        for n in [257usize, 6_000] {
+            for lanes in [1usize, 3, 8] {
+                let mk = |salt: usize| -> Vec<f64> {
+                    (0..n * lanes)
+                        .map(|i| ((i * 37 + salt) % 101) as f64 * 10f64.powi((i % 7) as i32 - 3))
+                        .collect()
+                };
+                let (xs, ys, zs, ps) = (mk(0), mk(1), mk(2), mk(3));
+                let m: Vec<f64> = (0..n).map(|i| 1.0 + ((i * 13) % 17) as f64).collect();
+                let alphas: Vec<f64> = (0..lanes).map(|k| 0.5 - 0.4 * k as f64).collect();
+                // Serial references.
+                let mut want_y = ys.clone();
+                axpy_block(&alphas, &xs, &mut want_y);
+                let mut want_z = vec![0.0; n * lanes];
+                left_divide_block(&ys, &m, &mut want_z, lanes);
+                let mut want_p = ps.clone();
+                update_p_block(&alphas, &zs, &mut want_p);
+                let mut want_d = vec![0.0; lanes];
+                dot_block(&xs, &ys, &mut want_d);
+                // Synthetic matrix only to cut a partition over n rows.
+                let a = synth::banded_spd(n, 4 * n, 1e-2, 9);
+                for threads in [1usize, 2, 8] {
+                    let part = RowPartition::nnz_balanced(&a, threads);
+                    let mut y = ys.clone();
+                    axpy_block_parallel(&alphas, &xs, &mut y, &part);
+                    assert!(y.iter().zip(&want_y).all(|(u, v)| u.to_bits() == v.to_bits()));
+                    let mut z = vec![f64::NAN; n * lanes];
+                    left_divide_block_parallel(&ys, &m, &mut z, lanes, &part);
+                    assert!(z.iter().zip(&want_z).all(|(u, v)| u.to_bits() == v.to_bits()));
+                    let mut p = ps.clone();
+                    update_p_block_parallel(&alphas, &zs, &mut p, &part);
+                    assert!(p.iter().zip(&want_p).all(|(u, v)| u.to_bits() == v.to_bits()));
+                    let mut d = vec![f64::NAN; lanes];
+                    dot_block_parallel(&xs, &ys, &mut d, threads);
+                    assert!(d.iter().zip(&want_d).all(|(u, v)| u.to_bits() == v.to_bits()));
+                }
             }
         }
     }

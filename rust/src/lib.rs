@@ -45,13 +45,22 @@
 //! instruction streams across pool workers with trip barriers
 //! preserved — bitwise identical to the sequential lane walk, which
 //! remains the oracle (`PERF.md` §9).
-//! Since PR 6 the batched SpMV is **true block-CG**:
-//! `PreparedMatrix::solve_batch_block[_parallel]` streams the matrix
-//! once per batched iteration and feeds every live lane from that one
-//! interleaved lane-major pass (`CoordinatorConfig::block_spmv`,
-//! `precision::spmv_scheme_rows_block`), with lane-grouped parallel
+//! Since PR 6 the batched SpMV is **true block-CG**: the matrix
+//! streams once per batched iteration and feeds every live lane from
+//! one interleaved lane-major pass
+//! (`precision::spmv_scheme_rows_block`), with lane-grouped parallel
 //! dots — still bitwise the per-lane walk, with the nnz traffic cut to
 //! 1/L per RHS-iteration (`PERF.md` §10).
+//! Since PR 7 that lane-major block is the **resident** vector
+//! representation: `PreparedMatrix::solve_batch_block[_parallel]`
+//! (`CoordinatorConfig::block` = `BlockMode::Resident`) keeps x/r/p/ap
+//! in lane-major arenas from program issue to converged exit, runs the
+//! vector trips batch-wide through bitwise block kernels
+//! (`precision::axpy_block` and friends), and moves **zero** vector
+//! elements across the block boundary per steady-state iteration —
+//! measured by `precision::stats::vector_element_moves` against the
+//! retained staged path (`BlockMode::Staged`, 2·n·L moves/iteration,
+//! `PERF.md` §12).
 //! The complete Type-I/II/III
 //! instruction reference, wire encodings, and the batch-axis extension
 //! live in `docs/ISA.md`; build/quickstart walkthroughs in the

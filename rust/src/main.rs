@@ -81,11 +81,12 @@ fn print_usage() {
          commands: solve suite table4 table5 table6 table7 fig9 sim program serve\n\
          common flags: --matrix <Mxx|name>  --mtx <file>  --scale <f>  --scheme <fp64|mixv1|mixv2|mixv3>\n\
          \u{20}                --matrices M1,M2  --max-iters <n>  --threads <n>  --pjrt  --out <dir>\n\
-         \u{20}                solve: --coordinator [--serpens-stream]  --batch <rhs>  --lane-workers <w>  --block-spmv\n\
+         \u{20}                solve: --coordinator [--serpens-stream]  --batch <rhs>  --lane-workers <w>\n\
+         \u{20}                       --block-spmv (resident block-CG)  --block-staged (PR 6 staged path)\n\
          \u{20}                program: --n <len>  --mode <double|single>  --batch <rhs>\n\
          \u{20}                sim: --batch <rhs>  --lane-workers <w>  (w = 0: machine default)\n\
          \u{20}                serve: --requests <n>  --matrices <k>  --tenants <t>  --max-batch <b>\n\
-         \u{20}                       --workers <w>  --seed <s>  (plus --scale/--scheme/--max-iters)"
+         \u{20}                       --workers <w>  --seed <s>  --block-spmv  (plus --scale/--scheme/--max-iters)"
     );
 }
 
@@ -170,8 +171,10 @@ fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
     if batch.is_none() && flags.contains_key("lane-workers") {
         bail!("--lane-workers configures the batched program path; pair it with --batch <rhs>");
     }
-    if batch.is_none() && flags.contains_key("block-spmv") {
-        bail!("--block-spmv configures the batched program path; pair it with --batch <rhs>");
+    for block_flag in ["block-spmv", "block-staged"] {
+        if batch.is_none() && flags.contains_key(block_flag) {
+            bail!("--{block_flag} configures the batched program path; pair it with --batch <rhs>");
+        }
     }
     println!("solving {name}: n={} nnz={} scheme={}", a.n, a.nnz(), scheme.name());
     let t0 = std::time::Instant::now();
@@ -256,14 +259,23 @@ fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
             .map(|k| (0..a.n).map(|i| 1.0 + ((i + 31 * k) % 7) as f64 / 7.0).collect())
             .collect();
         // --block-spmv streams the matrix once per batched iteration
-        // and feeds every lane from that single pass (block-CG SpMV;
-        // same bits, one nnz stream instead of one per lane).
-        let block = flags.contains_key("block-spmv");
-        let results = match (lane_workers, block) {
-            (Some(w), false) => prep.solve_batch_parallel(&rhs, &opts, None, w),
-            (Some(w), true) => prep.solve_batch_block_parallel(&rhs, &opts, None, w),
-            (None, false) => prep.solve_batch(&rhs, &opts),
-            (None, true) => prep.solve_batch_block(&rhs, &opts),
+        // and keeps the vector plane resident in lane-major arenas —
+        // zero block-boundary element moves per steady iteration (PERF
+        // §12).  --block-staged retains the PR 6 staged path: the same
+        // single nnz stream, but the block is re-materialized around
+        // every pass (2·n·L moves per iteration).  Same bits either way.
+        let resident = flags.contains_key("block-spmv");
+        let staged = flags.contains_key("block-staged");
+        if resident && staged {
+            bail!("--block-spmv (resident) and --block-staged are mutually exclusive");
+        }
+        let results = match (lane_workers, resident, staged) {
+            (Some(w), false, false) => prep.solve_batch_parallel(&rhs, &opts, None, w),
+            (Some(w), true, _) => prep.solve_batch_block_parallel(&rhs, &opts, None, w),
+            (Some(w), _, true) => prep.solve_batch_block_staged_parallel(&rhs, &opts, None, w),
+            (None, false, false) => prep.solve_batch(&rhs, &opts),
+            (None, true, _) => prep.solve_batch_block(&rhs, &opts),
+            (None, _, true) => prep.solve_batch_block_staged(&rhs, &opts),
         };
         for (k, r) in results.iter().enumerate() {
             println!(
@@ -277,8 +289,10 @@ fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
             Some(w) => format!("lane-parallel ({w} workers)"),
             None => "sequential dispatch".to_string(),
         };
-        if block {
-            dispatch.push_str(", block-CG SpMV");
+        if resident {
+            dispatch.push_str(", resident block-CG");
+        } else if staged {
+            dispatch.push_str(", staged block-CG");
         }
         println!(
             "batched program path ({dispatch}): {batch} rhs, {total_iters} rhs-iterations, wall={:?}",
@@ -488,7 +502,11 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let mut opts = SolveOptions::callipepla();
     opts.scheme = scheme;
     opts.max_iters = max_iters;
-    let mut cfg = ServiceConfig { max_batch, opts, ..Default::default() };
+    // --block-spmv runs every coalesced batch as one resident
+    // lane-major block (same per-ticket bits, one nnz stream per
+    // batched iteration, zero steady-state boundary moves).
+    let block_spmv = flags.contains_key("block-spmv");
+    let mut cfg = ServiceConfig { max_batch, block_spmv, opts, ..Default::default() };
     if workers > 0 {
         cfg.workers = workers;
     }
@@ -609,6 +627,18 @@ fn cmd_sim(flags: &HashMap<String, String>) -> Result<()> {
             bb,
             b1,
             bb / b1
+        );
+        let staged = sim::iteration::batched_iteration_cycles_mode(
+            &cfg,
+            a.n,
+            a.nnz(),
+            batch,
+            sim::iteration::BatchSpmvMode::Staged,
+        );
+        println!(
+            "staged block boundary: +{} cycles/batched-iter over the resident block path \
+             (the gather/scatter the resident arenas remove)",
+            staged.total - cyc.total
         );
         if let Some(v) = flags.get("lane-workers") {
             let workers: usize = v

@@ -42,6 +42,30 @@ pub mod stats {
     pub fn matrix_value_reads() -> u64 {
         MATRIX_VALUE_READS.with(Cell::get)
     }
+
+    thread_local! {
+        static VECTOR_ELEMENT_MOVES: Cell<u64> = const { Cell::new(0) };
+    }
+
+    /// Record `n` vector elements copied across a block-layout boundary
+    /// (per-lane vector ↔ interleaved lane-major block arena).
+    pub(crate) fn add_vector_element_moves(n: u64) {
+        VECTOR_ELEMENT_MOVES.with(|c| c.set(c.get() + n));
+    }
+
+    /// Vector elements moved across block-layout boundaries on this
+    /// thread so far: the per-pass gather/scatter of the staged block
+    /// SpMV path, plus the one-time interleave at resident-block entry
+    /// and the deinterleave at lane exit / fallback.  Steady-state
+    /// iterations of the *resident* block path contribute **zero** here
+    /// — the arenas are read and written in place and commits are whole
+    /// buffer swaps — while the staged path pays `2·n·lanes` per
+    /// iteration (pinned in `tests/block_spmv.rs`).  Take a delta around
+    /// the region under test; like [`matrix_value_reads`] it is
+    /// thread-local, so measure serial-path solves on one thread.
+    pub fn vector_element_moves() -> u64 {
+        VECTOR_ELEMENT_MOVES.with(Cell::get)
+    }
 }
 
 /// SpMV precision scheme (Table 1).
@@ -523,6 +547,102 @@ pub fn dot_with<D: DotAccumulator>(a: &[f64], b: &[f64]) -> f64 {
     d.finish()
 }
 
+// ---------------------------------------------------------------------
+// Block vector kernels (resident block-CG, M2–M8 batched).
+//
+// Same proof strategy as `spmv_scheme_rows_block`: the lane loop only
+// changes *which register* an operation lands in, never the order of a
+// single lane's own operations.  Each kernel applies, for every lane j,
+// exactly the element-order op sequence of its serial module
+// counterpart (`modules::compute`): axpy `y[i] += alpha·x[i]`, left
+// divide `z[i] = r[i]/m[i]`, update-p `p[i] = z[i] + beta·p[i]`, and the
+// 8-lane delay-buffer dot.  Every lane of a block kernel's output is
+// therefore bitwise the serial module run on that lane's deinterleaved
+// vector (pinned in the tests below), which is what keeps the resident
+// block coordinator behind the `jpcg_solve` oracle.
+//
+// All block buffers are interleaved lane-major — element i of lane j at
+// index `i * lanes + j` — matching `spmv_scheme_rows_block`.  The
+// element-wise kernels accept row sub-ranges implicitly (pass aligned
+// sub-slices), which is how the engine parallelizes them over row
+// blocks without touching per-lane op order.
+// ---------------------------------------------------------------------
+
+/// Block axpy (M3/M4): for every lane j, `ys[i·L+j] += alphas[j] · xs[i·L+j]`
+/// in element order.  `lanes = alphas.len()`; `xs`/`ys` are aligned
+/// lane-major (sub-)blocks with `len % lanes == 0`.
+pub fn axpy_block(alphas: &[f64], xs: &[f64], ys: &mut [f64]) {
+    let lanes = alphas.len();
+    assert!(lanes > 0, "a block axpy needs at least one lane");
+    assert_eq!(xs.len(), ys.len());
+    debug_assert_eq!(ys.len() % lanes, 0);
+    for (yr, xr) in ys.chunks_exact_mut(lanes).zip(xs.chunks_exact(lanes)) {
+        for ((y, x), alpha) in yr.iter_mut().zip(xr).zip(alphas) {
+            *y += alpha * x;
+        }
+    }
+}
+
+/// Block left divide (M5): for every lane j, `zs[i·L+j] = rs[i·L+j] / m[i]`
+/// in element order.  `m` is the shared (per-row, lane-invariant) Jacobi
+/// diagonal restricted to the same row range as the `rs`/`zs` sub-blocks:
+/// `rs.len() == m.len() · lanes`.
+pub fn left_divide_block(rs: &[f64], m: &[f64], zs: &mut [f64], lanes: usize) {
+    assert!(lanes > 0, "a block left-divide needs at least one lane");
+    assert_eq!(rs.len(), zs.len());
+    assert_eq!(rs.len(), m.len() * lanes);
+    for ((zr, rr), mi) in zs.chunks_exact_mut(lanes).zip(rs.chunks_exact(lanes)).zip(m) {
+        for (z, r) in zr.iter_mut().zip(rr) {
+            *z = r / mi;
+        }
+    }
+}
+
+/// Block update-p (M7): for every lane j,
+/// `ps[i·L+j] = zs[i·L+j] + betas[j] · ps[i·L+j]` in element order.
+/// `lanes = betas.len()`.
+pub fn update_p_block(betas: &[f64], zs: &[f64], ps: &mut [f64]) {
+    let lanes = betas.len();
+    assert!(lanes > 0, "a block update-p needs at least one lane");
+    assert_eq!(zs.len(), ps.len());
+    debug_assert_eq!(ps.len() % lanes, 0);
+    for (pr, zr) in ps.chunks_exact_mut(lanes).zip(zs.chunks_exact(lanes)) {
+        for ((p, z), beta) in pr.iter_mut().zip(zr).zip(betas) {
+            *p = z + beta * *p;
+        }
+    }
+}
+
+/// One lane of a block dot (M2/M6/M8): the 8-lane delay-buffer dot of
+/// lane `lane`'s deinterleaved vectors — bitwise [`dot_delay_buffer`],
+/// because the stride-`lanes` walk feeds [`DelayDot`] the same element
+/// pairs in the same order.
+pub fn dot_block_lane(a: &[f64], b: &[f64], lanes: usize, lane: usize) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert!(lane < lanes);
+    let mut d = DelayDot::default();
+    let mut k = lane;
+    while k < a.len() {
+        d.add(a[k], b[k]);
+        k += lanes;
+    }
+    d.finish()
+}
+
+/// Block dot (M2/M6/M8): `out[j]` = the delay-buffer dot of lane j of
+/// the interleaved blocks `a`/`b`.  `out.len()` sets the lane count.
+/// Lanes are independent delay-buffer chains, so the engine parallelizes
+/// this over the *lane* axis (a row split would reassociate a chain).
+pub fn dot_block(a: &[f64], b: &[f64], out: &mut [f64]) {
+    let lanes = out.len();
+    assert!(lanes > 0, "a block dot needs at least one lane");
+    assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len() % lanes, 0);
+    for (j, o) in out.iter_mut().enumerate() {
+        *o = dot_block_lane(a, b, lanes, j);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -725,6 +845,141 @@ mod tests {
             spmv_scheme_rows(&a, &v32, &x, &mut y, 0, Scheme::MixV3);
         }
         assert_eq!(stats::matrix_value_reads() - before, 3 * nnz, "per-lane path pays per lane");
+    }
+
+    #[test]
+    fn block_vector_kernels_are_bitwise_the_serial_modules_per_lane() {
+        // Every lane of every block vector kernel is bit-for-bit the
+        // serial module (`modules::compute`) run on that lane's
+        // deinterleaved vectors — the invariant that lets the resident
+        // block coordinator batch the M2–M8 sweeps without leaving the
+        // `jpcg_solve` oracle.  Magnitude spread so reassociation would
+        // flip low-order bits; lane counts cover 1 and non-dividing n.
+        use crate::modules::compute::{AxpyModule, DotModule, LeftDivideModule, UpdatePModule};
+        let n = 1003;
+        for lanes in [1usize, 2, 3, 5, 8] {
+            let lane_vec = |salt: usize| -> Vec<Vec<f64>> {
+                (0..lanes)
+                    .map(|k| {
+                        (0..n)
+                            .map(|i| {
+                                ((i * 37 + k * 11 + salt) % 101) as f64
+                                    * 10f64.powi(((i + k) % 7) as i32 - 3)
+                            })
+                            .collect()
+                    })
+                    .collect()
+            };
+            let (xs, ys, zs, ps, rs) =
+                (lane_vec(0), lane_vec(1), lane_vec(2), lane_vec(3), lane_vec(4));
+            let m: Vec<f64> = (0..n).map(|i| 1.0 + ((i * 13) % 17) as f64).collect();
+            let alphas: Vec<f64> = (0..lanes).map(|k| 0.25 - 0.75 * k as f64).collect();
+
+            // axpy
+            let xi = interleave(&xs);
+            let mut yi = interleave(&ys);
+            axpy_block(&alphas, &xi, &mut yi);
+            for (k, (x, y)) in xs.iter().zip(&ys).enumerate() {
+                let mut want = y.clone();
+                AxpyModule.run(alphas[k], x, &mut want);
+                assert!(
+                    (0..n).all(|i| yi[i * lanes + k].to_bits() == want[i].to_bits()),
+                    "axpy lane {k} of {lanes} diverged"
+                );
+            }
+
+            // left divide
+            let ri = interleave(&rs);
+            let mut zi = vec![f64::NAN; n * lanes];
+            left_divide_block(&ri, &m, &mut zi, lanes);
+            for (k, r) in rs.iter().enumerate() {
+                let mut want = vec![0.0; n];
+                LeftDivideModule.run(r, &m, &mut want);
+                assert!(
+                    (0..n).all(|i| zi[i * lanes + k].to_bits() == want[i].to_bits()),
+                    "left-divide lane {k} of {lanes} diverged"
+                );
+            }
+
+            // update p
+            let z2 = interleave(&zs);
+            let mut pi = interleave(&ps);
+            update_p_block(&alphas, &z2, &mut pi);
+            for (k, (z, p)) in zs.iter().zip(&ps).enumerate() {
+                let mut want = p.clone();
+                UpdatePModule.run(alphas[k], z, &mut want);
+                assert!(
+                    (0..n).all(|i| pi[i * lanes + k].to_bits() == want[i].to_bits()),
+                    "update-p lane {k} of {lanes} diverged"
+                );
+            }
+
+            // dot
+            let ai = interleave(&xs);
+            let bi = interleave(&ys);
+            let mut dots = vec![f64::NAN; lanes];
+            dot_block(&ai, &bi, &mut dots);
+            for (k, (x, y)) in xs.iter().zip(&ys).enumerate() {
+                assert_eq!(
+                    dots[k].to_bits(),
+                    DotModule.run(x, y).to_bits(),
+                    "dot lane {k} of {lanes} diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn block_elementwise_kernels_cover_row_subranges_bitwise() {
+        // Aligned sub-slices (the engine's row split) reproduce the
+        // one-call output exactly — element-wise ops never cross rows.
+        let (n, lanes) = (300, 5);
+        let xs: Vec<Vec<f64>> = (0..lanes)
+            .map(|k| (0..n).map(|i| (i as f64 * 0.11 + k as f64).sin()).collect())
+            .collect();
+        let ys: Vec<Vec<f64>> = (0..lanes)
+            .map(|k| (0..n).map(|i| (i as f64 * 0.17 + k as f64).cos()).collect())
+            .collect();
+        let m: Vec<f64> = (0..n).map(|i| 2.0 + (i % 5) as f64).collect();
+        let alphas: Vec<f64> = (0..lanes).map(|k| -0.5 + 0.3 * k as f64).collect();
+        let (xi, yi) = (interleave(&xs), interleave(&ys));
+
+        let mut full = yi.clone();
+        axpy_block(&alphas, &xi, &mut full);
+        let mut piecewise = yi.clone();
+        for w in [0usize, 37, 170, 299, n].windows(2) {
+            axpy_block(&alphas, &xi[w[0] * lanes..w[1] * lanes], &mut piecewise[w[0] * lanes..w[1] * lanes]);
+        }
+        assert!(full.iter().zip(&piecewise).all(|(u, v)| u.to_bits() == v.to_bits()));
+
+        let mut full_z = vec![0.0; n * lanes];
+        left_divide_block(&yi, &m, &mut full_z, lanes);
+        let mut piece_z = vec![0.0; n * lanes];
+        for w in [0usize, 37, 170, 299, n].windows(2) {
+            left_divide_block(
+                &yi[w[0] * lanes..w[1] * lanes],
+                &m[w[0]..w[1]],
+                &mut piece_z[w[0] * lanes..w[1] * lanes],
+                lanes,
+            );
+        }
+        assert!(full_z.iter().zip(&piece_z).all(|(u, v)| u.to_bits() == v.to_bits()));
+
+        let mut full_p = yi.clone();
+        update_p_block(&alphas, &xi, &mut full_p);
+        let mut piece_p = yi.clone();
+        for w in [0usize, 37, 170, 299, n].windows(2) {
+            update_p_block(&alphas, &xi[w[0] * lanes..w[1] * lanes], &mut piece_p[w[0] * lanes..w[1] * lanes]);
+        }
+        assert!(full_p.iter().zip(&piece_p).all(|(u, v)| u.to_bits() == v.to_bits()));
+    }
+
+    #[test]
+    fn vector_element_move_counter_counts_and_deltas() {
+        let before = stats::vector_element_moves();
+        stats::add_vector_element_moves(123);
+        stats::add_vector_element_moves(77);
+        assert_eq!(stats::vector_element_moves() - before, 200);
     }
 
     #[test]

@@ -95,6 +95,32 @@ impl VectorFile {
         }
     }
 
+    /// Block-resident mode: the lane's vector data lives in the
+    /// coordinator's interleaved lane-major block arenas for the whole
+    /// solve, so this file holds **no elements at all** — the per-lane
+    /// view is materialized only on fallback (executor declines the
+    /// block protocol mid-solve) or at lane exit (the converged x is
+    /// deinterleaved into `x` for the result).  The lane's bus still
+    /// issues and acknowledges every compiled instruction against this
+    /// file's addresses, so wire format, traces, and acks are identical
+    /// to the per-lane path.
+    pub fn resident() -> Self {
+        Self {
+            b: Vec::new(),
+            x: Vec::new(),
+            r: Vec::new(),
+            p: Vec::new(),
+            ap: Vec::new(),
+            stage_x: Vec::new(),
+            stage_r: Vec::new(),
+            stage_p: Vec::new(),
+            stage_ap: Vec::new(),
+            stage_z: Vec::new(),
+            block_ap_staged: false,
+            dirty: [false; 4],
+        }
+    }
+
     fn dirty_idx(v: Vector) -> usize {
         match v {
             Vector::X => 0,
@@ -175,6 +201,49 @@ pub trait InstDispatch {
     /// batching is a traffic optimization, never a rounding change.
     fn batch_spmv(&mut self, _xs: &[f64], _ys: &mut [f64], _lanes: usize) -> bool {
         false
+    }
+
+    /// Whether this backend serves the **resident block vector ops**
+    /// below — the batch-wide M2–M8 data plane of the coordinator's
+    /// resident block mode.  The coordinator probes this once per chunk
+    /// and degrades to staged / per-lane dispatch on `false` (the
+    /// default), so the four ops are only ever called on a backend that
+    /// advertised them; their defaults are unreachable.  An advertising
+    /// backend must implement all four, each producing, per lane,
+    /// bitwise its own per-lane module kernel — same contract as
+    /// [`InstDispatch::batch_spmv`].
+    fn block_vector_ops(&self) -> bool {
+        false
+    }
+
+    /// Batch-wide M3/M4 axpy over an interleaved lane-major block:
+    /// `ys[i·L + j] += alphas[j] · xs[i·L + j]` (`L = alphas.len()`).
+    fn block_axpy(&mut self, _alphas: &[f64], _xs: &[f64], _ys: &mut [f64]) {
+        unimplemented!("block_axpy called on a backend that does not advertise block_vector_ops")
+    }
+
+    /// Batch-wide M5 Jacobi left-divide: `zs[i·L + j] = rs[i·L + j] /
+    /// m[i]`, the backend supplying its own diagonal `m` (the shared
+    /// Vector::M region — one diagonal serves every lane).
+    fn block_left_divide(&mut self, _rs: &[f64], _zs: &mut [f64], _lanes: usize) {
+        unimplemented!(
+            "block_left_divide called on a backend that does not advertise block_vector_ops"
+        )
+    }
+
+    /// Batch-wide M7 direction update: `ps[i·L + j] = zs[i·L + j] +
+    /// betas[j] · ps[i·L + j]` (`L = betas.len()`).
+    fn block_update_p(&mut self, _betas: &[f64], _zs: &[f64], _ps: &mut [f64]) {
+        unimplemented!(
+            "block_update_p called on a backend that does not advertise block_vector_ops"
+        )
+    }
+
+    /// Batch-wide M2/M6/M8 dot: `out[j] = <a lane j, b lane j>` for
+    /// each of the `out.len()` lanes of two interleaved blocks, each
+    /// lane's reduction bitwise the backend's per-lane dot.
+    fn block_dots(&mut self, _a: &[f64], _b: &[f64], _out: &mut [f64]) {
+        unimplemented!("block_dots called on a backend that does not advertise block_vector_ops")
     }
 }
 
@@ -298,6 +367,33 @@ impl InstructionBus {
         exec: &mut D,
         mem: &mut VectorFile,
     ) -> DispatchReturn {
+        self.issue_reads(prog, lane_offset_beats);
+        self.bind_cmds(prog, scalars);
+        let ret = exec.dispatch(prog, &self.bound, mem);
+        self.issue_writes(prog, lane_offset_beats, Some(mem));
+        ret
+    }
+
+    /// Bookkeeping-only issue of one lane's trip for the **resident
+    /// block path**: Type-I/III reads, Type-II binds, and Type-III
+    /// write-back acks exactly as [`InstructionBus::dispatch_lane`] —
+    /// same instructions, same rebased addresses, same trace, same ack
+    /// sequence — but with no backend call and no [`VectorFile`]
+    /// commits, because the lane's data plane runs batch-wide over the
+    /// coordinator's lane-major arenas (whole-arena swaps play the
+    /// commit role there).  This is what keeps the wire format and the
+    /// §4.2 handshake observably unchanged while the element traffic
+    /// moves to the block kernels.
+    pub fn issue_lane(&mut self, prog: &PhaseProgram, scalars: Scalars, lane_offset_beats: u32) {
+        self.issue_reads(prog, lane_offset_beats);
+        self.bind_cmds(prog, scalars);
+        self.issue_writes(prog, lane_offset_beats, None);
+    }
+
+    /// Stage 1 of a trip: trace the Type-I vector-control instructions
+    /// and their Type-III read decompositions, with per-RHS addresses
+    /// rebased by the lane offset (the shared diagonal M never rebases).
+    fn issue_reads(&mut self, prog: &PhaseProgram, lane_offset_beats: u32) {
         let lane_off = |v: Vector| if v == Vector::M { 0 } else { lane_offset_beats };
         if self.record {
             for s in &prog.vec_steps {
@@ -310,6 +406,11 @@ impl InstructionBus {
                 }
             }
         }
+    }
+
+    /// Stage 2 of a trip: bind the controller's live scalars into the
+    /// Type-II batch (`self.bound`) and trace the bound instructions.
+    fn bind_cmds(&mut self, prog: &PhaseProgram, scalars: Scalars) {
         self.bound.clear();
         for step in &prog.comp_steps {
             let mut inst = step.inst;
@@ -323,18 +424,31 @@ impl InstructionBus {
             }
             self.bound.push(inst);
         }
-        let ret = exec.dispatch(prog, &self.bound, mem);
+    }
+
+    /// Stage 3 of a trip: issue the Type-III write-backs, committing the
+    /// staged vectors when a [`VectorFile`] carries the lane's data
+    /// (`None` on the resident path, where arena swaps commit instead)
+    /// and collecting the [`MemResponse`] acks either way.
+    fn issue_writes(
+        &mut self,
+        prog: &PhaseProgram,
+        lane_offset_beats: u32,
+        mut mem: Option<&mut VectorFile>,
+    ) {
+        let lane_off = |v: Vector| if v == Vector::M { 0 } else { lane_offset_beats };
         for s in &prog.vec_steps {
             if let Some(mut wr) = s.wr_inst {
                 wr.base_addr += lane_off(s.vector);
                 if self.record {
                     self.trace.record(s.mem_name, Instruction::RdWr(wr));
                 }
-                mem.commit(s.vector);
+                if let Some(m) = mem.as_deref_mut() {
+                    m.commit(s.vector);
+                }
                 self.acks.push(MemResponse { base_addr: wr.base_addr, len: wr.len });
             }
         }
-        ret
     }
 }
 
@@ -364,6 +478,15 @@ impl LaneSlice {
         Self { bus: InstructionBus::new(record), mem: VectorFile::new(b, x0), offset_beats }
     }
 
+    /// A slice for one lane of a **resident** block solve: the bus is
+    /// live (every trip is issued and acked through it) but the
+    /// [`VectorFile`] is the empty [`VectorFile::resident`] shell — the
+    /// lane's elements live in the coordinator's block arenas until
+    /// fallback or exit materializes them here.
+    pub fn new_resident(offset_beats: u32, record: bool) -> Self {
+        Self { bus: InstructionBus::new(record), mem: VectorFile::resident(), offset_beats }
+    }
+
     /// Route one compiled trip for this lane
     /// (see [`InstructionBus::dispatch_lane`]).
     pub fn trip<D: InstDispatch>(
@@ -373,6 +496,13 @@ impl LaneSlice {
         exec: &mut D,
     ) -> DispatchReturn {
         self.bus.dispatch_lane(prog, scalars, self.offset_beats, exec, &mut self.mem)
+    }
+
+    /// Bookkeeping-only issue of one compiled trip for this lane
+    /// (see [`InstructionBus::issue_lane`]): the resident block path's
+    /// per-lane half — instructions and acks without data movement.
+    pub fn issue(&mut self, prog: &PhaseProgram, scalars: Scalars) {
+        self.bus.issue_lane(prog, scalars, self.offset_beats)
     }
 }
 
@@ -450,6 +580,43 @@ mod tests {
 
         assert_eq!(slice.bus.acks(), bus.acks());
         assert_eq!(slice.bus.take_trace().issued, bus.take_trace().issued);
+    }
+
+    #[test]
+    fn issue_lane_bookkeeping_is_bitwise_the_dispatch_lane_bookkeeping() {
+        // The resident block path's contract: issuing a trip without a
+        // backend produces exactly the trace and ack sequence of a full
+        // dispatch — wire format unchanged, only the data plane moved.
+        struct Null;
+        impl InstDispatch for Null {
+            fn dispatch(
+                &mut self,
+                _p: &PhaseProgram,
+                _c: &[InstCmp],
+                _m: &mut VectorFile,
+            ) -> DispatchReturn {
+                DispatchReturn::default()
+            }
+        }
+        let prog = Program::compile_batched(64, ChannelMode::Double, 4);
+        let off = prog.lane_offset_beats(2);
+        let scalars = Scalars { alpha: 0.75, beta: -0.125 };
+        for trip in prog.all_trips() {
+            let mut full = InstructionBus::new(true);
+            let mut mem = VectorFile::new(&[1.0; 64], &[0.0; 64]);
+            full.dispatch_lane(trip, scalars, off, &mut Null, &mut mem);
+
+            let mut issue_only = InstructionBus::new(true);
+            issue_only.issue_lane(trip, scalars, off);
+
+            assert_eq!(issue_only.acks(), full.acks(), "{} acks drifted", trip.kind.label());
+            assert_eq!(
+                issue_only.take_trace().issued,
+                full.take_trace().issued,
+                "{} trace drifted",
+                trip.kind.label()
+            );
+        }
     }
 
     #[test]

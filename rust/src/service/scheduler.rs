@@ -283,6 +283,15 @@ pub struct ServiceConfig {
     /// Per-request results are bitwise unchanged at any setting — only
     /// throughput moves.
     pub lane_workers: usize,
+    /// Run batches in block mode: one resident lane-major block per
+    /// coalesced batch — a single matrix stream feeds every lane per
+    /// iteration and the vector plane never leaves the block between
+    /// issue and exit (zero steady-state element moves, PERF §12).
+    /// Falls back per the coordinator's degrade ladder (staged, then
+    /// per-lane) on backends that cannot batch, and single-lane batches
+    /// short-circuit to per-lane dispatch either way, so per-ticket
+    /// results stay bitwise unchanged at any setting.
+    pub block_spmv: bool,
     /// Solve options every request runs under.  Options outside the
     /// batched-program family (sequential dots, the XcgSolver
     /// accumulator) execute on the worker-per-RHS model path instead —
@@ -297,6 +306,7 @@ impl Default for ServiceConfig {
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
             spmv_threads: 1,
             lane_workers: 0,
+            block_spmv: false,
             opts: SolveOptions::callipepla(),
         }
     }
@@ -451,8 +461,10 @@ impl SolverService {
         let stats = Arc::clone(&self.stats);
         let opts = self.cfg.opts;
         let lane_workers = self.cfg.lane_workers;
+        let block = self.cfg.block_spmv;
         stats.batch_started();
-        self.pool.spawn(move || run_batch(id, entry, cache, stats, opts, lanes, lane_workers));
+        self.pool
+            .spawn(move || run_batch(id, entry, cache, stats, opts, lanes, lane_workers, block));
     }
 }
 
@@ -475,7 +487,10 @@ impl Drop for SolverService {
 /// [`pool::global`](crate::engine::pool::global) pool (this worker
 /// participates and drains its own queue, so a fully busy service
 /// cannot wedge on it); results are bitwise those of the sequential
-/// dispatch the pre-lane-parallel service used.
+/// dispatch the pre-lane-parallel service used.  With
+/// [`ServiceConfig::block_spmv`] the lanes instead run as one resident
+/// block (same bitwise results, one matrix stream per iteration).
+#[allow(clippy::too_many_arguments)]
 fn run_batch(
     id: MatrixId,
     entry: Arc<MatrixEntry>,
@@ -484,6 +499,7 @@ fn run_batch(
     opts: SolveOptions,
     lanes: Vec<Lane>,
     lane_workers: usize,
+    block: bool,
 ) {
     let mut bs = Vec::with_capacity(lanes.len());
     let mut tenants = Vec::with_capacity(lanes.len());
@@ -494,7 +510,12 @@ fn run_batch(
         slots.push(lane.slot);
     }
     let outcome = catch_unwind(AssertUnwindSafe(|| {
-        entry.plan().solve_batch_parallel(&bs, &opts, Some(&cache), lane_workers)
+        let plan = entry.plan();
+        if block {
+            plan.solve_batch_block_parallel(&bs, &opts, Some(&cache), lane_workers)
+        } else {
+            plan.solve_batch_parallel(&bs, &opts, Some(&cache), lane_workers)
+        }
     }));
     match outcome {
         Ok(results) => {

@@ -357,7 +357,7 @@ impl Dataflow {
     ///   lane (the block-CG matrix-traffic amortization the batch axis
     ///   exists for, implemented in the value plane by
     ///   `precision::spmv_scheme_rows_block` under
-    ///   `CoordinatorConfig::block_spmv`), so SpMV time does *not*
+    ///   `CoordinatorConfig::block`), so SpMV time does *not*
     ///   scale with the batch while the §6 PE array has headroom;
     ///   callers model the per-lane fallback by widening `spmv_busy`
     ///   (`sim::iteration::BatchSpmvMode::PerLane`);

@@ -136,20 +136,31 @@ fn iteration_vsr(cfg: &AccelSimConfig, n: usize, nnz: usize) -> IterationBreakdo
 }
 
 /// How a batched iteration's Type-II SpMV trips price in the time
-/// plane — mirroring the two execution modes the value plane actually
-/// implements for `Coordinator::solve_batch*`.
+/// plane — mirroring the three execution modes the value plane
+/// implements for `Coordinator::solve_batch*`
+/// (`CoordinatorConfig::block`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
 pub enum BatchSpmvMode {
-    /// Block-CG execution (`CoordinatorConfig::block_spmv`): the nnz
+    /// Resident block-CG execution (`BlockMode::Resident`): the nnz
     /// stream is decoded **once per batched iteration** and every
     /// active lane's y is fed from that single pass
     /// (`precision::spmv_scheme_rows_block`), so the per-lane SpMV busy
-    /// windows genuinely overlap.  This is the default and the pricing
-    /// [`batched_iteration_cycles`] has always used — previously an
-    /// *assumption* about the batch axis, now earned by the value
-    /// plane's `batch_spmv` kernel.
+    /// windows genuinely overlap — and the lane-major block is the
+    /// resident vector representation, so no elements cross the block
+    /// boundary in steady state (PERF §12).  This is the default and
+    /// the pricing [`batched_iteration_cycles`] has always used —
+    /// previously an *assumption* about the batch axis, now earned by
+    /// the value plane's `batch_spmv` kernel and resident arenas.
     #[default]
     Block,
+    /// Staged block-CG execution (`BlockMode::Staged`): one nnz pass
+    /// per iteration like [`BatchSpmvMode::Block`], but the lane-major
+    /// block is re-materialized around every pass — a gather of p and a
+    /// scatter of ap, `2·n·batch` element moves per iteration, priced
+    /// as `2·beats(n)·batch` extra phase-1 cycles.  A single-lane batch
+    /// short-circuits to per-lane dispatch in the value plane, so at
+    /// `batch == 1` this prices identically to the other modes.
+    Staged,
     /// Per-lane execution (block mode off): each lane's M1 streams the
     /// nnz arrays on its own trip, so the matrix port is time-shared
     /// and the iteration carries `batch` back-to-back SpMV busy
@@ -181,11 +192,13 @@ pub fn batched_iteration_cycles(
 
 /// [`batched_iteration_cycles`] with the SpMV execution mode explicit.
 /// [`BatchSpmvMode::Block`] reproduces it exactly;
+/// [`BatchSpmvMode::Staged`] adds the gather/scatter boundary traffic
+/// of the staged block path (`2·beats(n)·batch` phase-1 cycles);
 /// [`BatchSpmvMode::PerLane`] widens the SpMV busy window to
 /// `batch x spmv_busy_cycles` — the matrix port is time-shared across
 /// the lanes' M1 trips, so batching still amortizes the instruction
-/// stream and control overhead but not the nnz traffic.  The two modes
-/// agree at `batch == 1`.
+/// stream and control overhead but not the nnz traffic.  All three
+/// modes agree at `batch == 1`.
 pub fn batched_iteration_cycles_mode(
     cfg: &AccelSimConfig,
     n: usize,
@@ -209,7 +222,13 @@ pub fn batched_iteration_cycles_mode(
     }
     let cycles =
         |p: Phase| run_phase(Dataflow::from_batched_program(program.phase(p), program.batch, busy));
-    let p1 = cycles(Phase::Phase1) + PHASE_OVERHEAD;
+    let mut p1 = cycles(Phase::Phase1) + PHASE_OVERHEAD;
+    if mode == BatchSpmvMode::Staged && batch > 1 {
+        // Re-materializing the lane-major block around the pass: gather
+        // p in, scatter ap out — one channel beat per 8 lanes' worth of
+        // elements, per lane (mirrors the value plane's 2·n·L counter).
+        p1 += 2 * beats(n) * batch as u64;
+    }
     let p2 = cycles(Phase::Phase2) + PHASE_OVERHEAD;
     let p3 = cycles(Phase::Phase3) + PHASE_OVERHEAD;
     IterationBreakdown { phase1: p1, phase2: p2, phase3: p3, total: p1 + p2 + p3 }
@@ -688,6 +707,29 @@ mod tests {
                 per.total,
                 block.total
             );
+        }
+    }
+
+    #[test]
+    fn staged_mode_prices_the_block_boundary_traffic() {
+        let cfg = AccelSimConfig::callipepla();
+        // All three modes agree at batch 1: a single-lane batch
+        // short-circuits to per-lane dispatch in the value plane.
+        let b1 = batched_iteration_cycles_mode(&cfg, N, NNZ, 1, BatchSpmvMode::Block);
+        for mode in [BatchSpmvMode::Staged, BatchSpmvMode::PerLane] {
+            let other = batched_iteration_cycles_mode(&cfg, N, NNZ, 1, mode);
+            assert_eq!(b1.total, other.total, "{mode:?} diverged at batch 1");
+        }
+        // Staged = resident + exactly the gather/scatter beats, in
+        // phase 1 — the traffic the resident arenas remove.
+        for batch in [2, 4, 8] {
+            let res = batched_iteration_cycles_mode(&cfg, N, NNZ, batch, BatchSpmvMode::Block);
+            let staged = batched_iteration_cycles_mode(&cfg, N, NNZ, batch, BatchSpmvMode::Staged);
+            let boundary = 2 * beats(N) * batch as u64;
+            assert_eq!(staged.phase1, res.phase1 + boundary, "batch={batch} phase1");
+            assert_eq!(staged.phase2, res.phase2, "batch={batch} phase2");
+            assert_eq!(staged.phase3, res.phase3, "batch={batch} phase3");
+            assert_eq!(staged.total, res.total + boundary, "batch={batch} total");
         }
     }
 

@@ -1,8 +1,11 @@
-//! The block-CG SpMV contract: one nnz pass per batched iteration
-//! feeds every active lane (measured by the instrumented matrix-value
-//! read counter), per-lane numerics stay bitwise the serial path on
-//! every entry point, and the Table-7-style iteration-count gate holds
-//! across the synthetic matrix family.
+//! The block-CG contract: one nnz pass per batched iteration feeds
+//! every active lane (measured by the instrumented matrix-value read
+//! counter), the resident lane-major arenas move **zero** vector
+//! elements across the block boundary in steady state while the staged
+//! baseline pays `2·n·L` per iteration (measured by the vector
+//! element-move counter), per-lane numerics stay bitwise the serial
+//! path on every entry point, and the Table-7-style iteration-count
+//! gate holds across the synthetic matrix family.
 
 use callipepla::engine::PreparedMatrix;
 use callipepla::precision::{stats, AccumulatorModel, Scheme};
@@ -87,8 +90,15 @@ fn block_entry_points_are_bitwise_the_per_lane_path() {
         let serial = prep.solve_batch(&rhs, &opts);
         let block = prep.solve_batch_block(&rhs, &opts);
         let block_par = prep.solve_batch_block_parallel(&rhs, &opts, None, 2);
+        let staged = prep.solve_batch_block_staged(&rhs, &opts);
+        let staged_par = prep.solve_batch_block_staged_parallel(&rhs, &opts, None, 2);
         for k in 0..rhs.len() {
-            for (label, r) in [("block", &block[k]), ("block_par", &block_par[k])] {
+            for (label, r) in [
+                ("block", &block[k]),
+                ("block_par", &block_par[k]),
+                ("staged", &staged[k]),
+                ("staged_par", &staged_par[k]),
+            ] {
                 assert_eq!(r.iters, serial[k].iters, "rhs {k} iters ({scheme:?}, {label})");
                 assert_eq!(
                     r.final_rr.to_bits(),
@@ -136,46 +146,116 @@ fn table7_iteration_gate_holds_for_the_synth_family() {
 }
 
 /// A batch wider than the chunk-lane cap crosses the compiled-chunk
-/// seam with block mode on: each chunk restarts its own block passes
-/// and every lane must still be bitwise a lone solve.
+/// seam with block mode on: each chunk restarts its own block state
+/// (the 9-lane batch under a 4-lane cap even produces a single-lane
+/// tail chunk, exercising the L = 1 short-circuit) and every lane must
+/// still be bitwise a lone solve — in both block modes.
 #[test]
 fn block_mode_survives_the_chunk_seam() {
-    use callipepla::coordinator::{Coordinator, CoordinatorConfig, NativeExecutor};
+    use callipepla::coordinator::{BlockMode, Coordinator, CoordinatorConfig, NativeExecutor};
     let a = synth::laplace2d_shifted(200, 0.2);
     let rhs = make_rhs(a.n, 9);
     let opts = oracle_opts(Scheme::MixV3);
-    let cfg = CoordinatorConfig { max_chunk_lanes: 4, block_spmv: true, ..Default::default() };
-    let mut coord = Coordinator::new(cfg);
-    let mut exec = NativeExecutor::with_threads(&a, Scheme::MixV3, 1);
-    let refs: Vec<&[f64]> = rhs.iter().map(Vec::as_slice).collect();
-    let batch = coord.solve_batch(&mut exec, &refs, None);
-    assert_eq!(batch.len(), rhs.len());
-    for (k, b) in rhs.iter().enumerate() {
-        let lone = jpcg_solve(&a, Some(b), None, &opts);
-        assert_eq!(batch[k].iters, lone.iters, "rhs {k}");
-        assert!(bitwise_eq(&batch[k].x, &lone.x), "rhs {k} bits");
+    for block in [BlockMode::Staged, BlockMode::Resident] {
+        let cfg = CoordinatorConfig { max_chunk_lanes: 4, block, ..Default::default() };
+        let mut coord = Coordinator::new(cfg);
+        let mut exec = NativeExecutor::with_threads(&a, Scheme::MixV3, 1);
+        let refs: Vec<&[f64]> = rhs.iter().map(Vec::as_slice).collect();
+        let batch = coord.solve_batch(&mut exec, &refs, None);
+        assert_eq!(batch.len(), rhs.len());
+        for (k, b) in rhs.iter().enumerate() {
+            let lone = jpcg_solve(&a, Some(b), None, &opts);
+            assert_eq!(batch[k].iters, lone.iters, "{block:?} rhs {k}");
+            assert!(bitwise_eq(&batch[k].x, &lone.x), "{block:?} rhs {k} bits");
+        }
     }
 }
 
-/// The Serpens-stream executor declines `batch_spmv`, so a block-mode
-/// batch over it must fall back to per-lane dispatch gracefully and
-/// still match the stream-mode per-lane results bit for bit.
+/// The Serpens-stream executor declines `batch_spmv`, so both block
+/// modes over it must fall back to per-lane dispatch gracefully (the
+/// resident request bails before issuing anything) and still match the
+/// stream-mode per-lane results bit for bit.
 #[test]
 fn stream_executor_declines_block_mode_and_falls_back() {
-    use callipepla::coordinator::{Coordinator, CoordinatorConfig, NativeExecutor};
+    use callipepla::coordinator::{BlockMode, Coordinator, CoordinatorConfig, NativeExecutor};
     let a = synth::laplace2d_shifted(150, 0.2);
     let rhs = make_rhs(a.n, 3);
     let refs: Vec<&[f64]> = rhs.iter().map(Vec::as_slice).collect();
-    let solve = |block_spmv: bool| {
-        let cfg = CoordinatorConfig { block_spmv, ..Default::default() };
+    let solve = |block: BlockMode| {
+        let cfg = CoordinatorConfig { block, ..Default::default() };
         let mut coord = Coordinator::new(cfg);
         let mut exec = NativeExecutor::with_serpens_stream(&a);
         coord.solve_batch(&mut exec, &refs, None)
     };
-    let plain = solve(false);
-    let blocked = solve(true);
-    for (k, (p, b)) in plain.iter().zip(&blocked).enumerate() {
-        assert_eq!(p.iters, b.iters, "rhs {k}");
-        assert!(bitwise_eq(&p.x, &b.x), "rhs {k} bits");
+    let plain = solve(BlockMode::PerLane);
+    for block in [BlockMode::Staged, BlockMode::Resident] {
+        let blocked = solve(block);
+        for (k, (p, b)) in plain.iter().zip(&blocked).enumerate() {
+            assert_eq!(p.iters, b.iters, "{block:?} rhs {k}");
+            assert!(bitwise_eq(&p.x, &b.x), "{block:?} rhs {k} bits");
+        }
+    }
+}
+
+/// The tentpole's second measured claim: on the resident path a
+/// steady-state iteration moves **zero** vector elements across the
+/// block boundary, while the staged baseline re-materializes the block
+/// around every pass — `2·n·L` moves per iteration.  Measured as a
+/// delta between two iteration caps (tol = 0 keeps every lane busy to
+/// the cap), so batch entry and retirement — the only legitimate
+/// boundary traffic — cancel out; the resident entry + exit total is
+/// then pinned exactly.
+#[test]
+fn resident_arenas_move_zero_elements_per_steady_iteration() {
+    let a = synth::banded_spd(600, 4_800, 1e-3, 7);
+    let (n, lanes) = (a.n, 4usize);
+    let b: Vec<f64> = (0..n).map(|i| 0.5 + ((i * 11) % 17) as f64 / 17.0).collect();
+    let rhs = vec![b; lanes];
+    let prep = PreparedMatrix::new(&a, 1);
+    let moves_at = |resident: bool, max_iters: u32| {
+        let opts = SolveOptions { max_iters, tol: 0.0, ..oracle_opts(Scheme::MixV3) };
+        let before = stats::vector_element_moves();
+        let rs = if resident {
+            prep.solve_batch_block(&rhs, &opts)
+        } else {
+            prep.solve_batch_block_staged(&rhs, &opts)
+        };
+        assert!(rs.iter().all(|r| !r.converged && r.iters == max_iters), "probe must stay busy");
+        stats::vector_element_moves() - before
+    };
+    let (m1, m2) = (6u32, 14u32);
+    let per_iter = 2 * (n * lanes) as u64;
+    assert_eq!(
+        moves_at(false, m2) - moves_at(false, m1),
+        (m2 - m1) as u64 * per_iter,
+        "staged mode must pay a gather + scatter (2·n·L) per iteration"
+    );
+    assert_eq!(
+        moves_at(true, m2) - moves_at(true, m1),
+        0,
+        "resident steady-state iterations must move zero elements"
+    );
+    // Boundary traffic only: 2·n·L in at entry, n per lane out at
+    // retirement (all lanes cap together, so no compaction repack).
+    assert_eq!(moves_at(true, m1), (2 * n * lanes + n * lanes) as u64);
+}
+
+/// A single-lane batch has nothing to amortize a block over: both
+/// block modes short-circuit to per-lane dispatch — zero boundary
+/// moves — and return bitwise the per-lane batch.
+#[test]
+fn single_lane_batches_short_circuit_to_per_lane_dispatch() {
+    let a = synth::laplace2d_shifted(200, 0.2);
+    let rhs = make_rhs(a.n, 1);
+    let opts = oracle_opts(Scheme::MixV3);
+    let prep = PreparedMatrix::new(&a, 1);
+    let base = prep.solve_batch(&rhs, &opts);
+    let before = stats::vector_element_moves();
+    let resident = prep.solve_batch_block(&rhs, &opts);
+    let staged = prep.solve_batch_block_staged(&rhs, &opts);
+    assert_eq!(stats::vector_element_moves(), before, "single-lane block solves moved elements");
+    for r in [&resident[0], &staged[0]] {
+        assert_eq!(r.iters, base[0].iters);
+        assert!(bitwise_eq(&r.x, &base[0].x));
     }
 }

@@ -4,7 +4,7 @@
 //! must terminate on the fly without perturbing the rest of the batch,
 //! and a freed lane's trips must stop issuing.
 
-use callipepla::coordinator::{Coordinator, CoordinatorConfig, NativeExecutor};
+use callipepla::coordinator::{BlockMode, Coordinator, CoordinatorConfig, NativeExecutor};
 use callipepla::engine::PreparedMatrix;
 use callipepla::precision::{AccumulatorModel, Scheme};
 use callipepla::solver::{jpcg_solve, DotKind, SolveOptions};
@@ -139,10 +139,10 @@ fn early_convergence_frees_the_lane_without_perturbing_survivors() {
 
 #[test]
 fn block_kernel_retires_lanes_without_perturbing_survivors() {
-    // Satellite of the block-CG SpMV PR: a mixed-convergence batch under
-    // block mode must hand every lane the iteration count (and bits) of
-    // solving it alone with the block kernel at batch 1 — retired lanes
-    // leave the shared nnz pass without perturbing the survivors.
+    // A mixed-convergence batch under resident block mode must hand
+    // every lane the iteration count (and bits) of solving it alone —
+    // retired lanes leave the arenas (extraction + compaction, and the
+    // final survivor's gather-out) without perturbing the survivors.
     let a = synth::banded_spd(900, 7_200, 1e-3, 23);
     let scheme = Scheme::MixV3;
     let b = vec![1.0; a.n];
@@ -153,7 +153,11 @@ fn block_kernel_retires_lanes_without_perturbing_survivors() {
     let rhs: Vec<&[f64]> = vec![&b, &b, &b2];
     let x0s: Vec<&[f64]> = vec![&cold, &warm.x, &cold];
 
-    let cfg = CoordinatorConfig { block_spmv: true, record_instructions: true, ..Default::default() };
+    let cfg = CoordinatorConfig {
+        block: BlockMode::Resident,
+        record_instructions: true,
+        ..Default::default()
+    };
     let mut coord = Coordinator::new(cfg);
     let mut exec = NativeExecutor::with_threads(&a, scheme, 4);
     let batch = coord.solve_batch(&mut exec, &rhs, Some(&x0s));

@@ -217,6 +217,49 @@ fn early_converged_lanes_do_not_perturb_mixed_tenant_batches() {
     );
 }
 
+/// `ServiceConfig::block_spmv` is a pure execution-strategy switch at
+/// the serving layer: a block-mode service replaying a multi-matrix,
+/// multi-tenant trace hands every ticket bitwise the lone-solve result
+/// — including sub-`max_batch` partial batches and the single-lane
+/// tail group that short-circuits to per-lane dispatch.
+#[test]
+fn block_mode_service_tickets_are_bitwise_lone_solves() {
+    let opts = SolveOptions::callipepla();
+    let mut svc = SolverService::new(ServiceConfig {
+        max_batch: 4,
+        workers: 2,
+        block_spmv: true,
+        ..Default::default()
+    });
+    let matrices = test_matrices();
+    let ids: Vec<_> = matrices.iter().map(|a| svc.register(a.clone())).collect();
+
+    // 5 requests on matrix 0 (batches of 4 + a single-lane tail), 3 on
+    // matrix 1 (one partial batch), 1 on matrix 2 (single-lane batch).
+    let lanes_per_matrix = [5usize, 3, 1];
+    let mut tickets = Vec::new();
+    let mut expected = Vec::new();
+    for (m, &count) in lanes_per_matrix.iter().enumerate() {
+        let a = &matrices[m];
+        for k in 0..count {
+            let b: Vec<f64> =
+                (0..a.n).map(|i| 0.25 + ((i * 13 + k * 41 + m * 7) % 23) as f64 / 23.0).collect();
+            tickets.push(svc.submit(SolveRequest::new(ids[m], b.clone())));
+            expected.push((m, b));
+        }
+    }
+    let stats = svc.drain();
+    assert_eq!(stats.requests, 9);
+    assert_eq!(stats.batches, 4, "4+1 / 3 / 1 lanes coalesce into four batches");
+
+    for (ticket, (m, b)) in tickets.into_iter().zip(&expected) {
+        let res = ticket.wait();
+        let lone = jpcg_solve(&matrices[*m], Some(b), None, &opts);
+        assert_bitwise(&res, &lone, "block-mode service ticket");
+        assert!(res.converged, "block-mode request failed to converge");
+    }
+}
+
 #[test]
 fn bucket_rebased_program_matches_exact_n_program_bitwise() {
     // n = 729 (27x27 grid) lives in the 1024 bucket: the cached
