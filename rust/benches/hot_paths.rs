@@ -263,6 +263,46 @@ fn main() {
     });
     record(&mut recs, &r, None);
 
+    // Adaptive precision (PR 8): full solves to convergence on the
+    // small system, paired static-fp64 / static-mixv3 / adaptive rows.
+    // The adaptive controller starts on Mix-V3 and escalates to FP64
+    // near convergence, so its wall-clock sits between the two static
+    // envelopes while its modeled M1 nnz traffic stays close to the
+    // Mix-V3 floor (printed from the recorded PrecisionTrace).
+    {
+        use callipepla::precision::adaptive::AdaptivePolicy;
+        let mut full = SolveOptions::callipepla();
+        full.max_iters = 20_000;
+        let mut fp64_opts = full;
+        fp64_opts.scheme = Scheme::Fp64;
+        let r = bench("solve_full_static_fp64_small", 1, 3, || {
+            std::hint::black_box(prep_small.solve(None, None, &fp64_opts));
+        });
+        record(&mut recs, &r, None);
+        let r = bench("solve_full_static_mixv3_small", 1, 3, || {
+            std::hint::black_box(prep_small.solve(None, None, &full));
+        });
+        record(&mut recs, &r, None);
+        let mut ad_opts = full;
+        ad_opts.adaptive = Some(AdaptivePolicy::default());
+        let r = bench("solve_full_adaptive_small", 1, 3, || {
+            std::hint::black_box(prep_small.solve(None, None, &ad_opts));
+        });
+        record(&mut recs, &r, None);
+        let fp64 = prep_small.solve(None, None, &fp64_opts);
+        let ad = prep_small.solve(None, None, &ad_opts);
+        let small_nnz64 = small.nnz() as u64;
+        println!(
+            "    => adaptive: {} iters (fp64: {}), modeled M1 bytes {} vs fp64 {} ({:.2}x less)",
+            ad.iters,
+            fp64.iters,
+            ad.precision.modeled_m1_bytes(small_nnz64, ad.iters),
+            fp64.precision.modeled_m1_bytes(small_nnz64, fp64.iters),
+            fp64.precision.modeled_m1_bytes(small_nnz64, fp64.iters) as f64
+                / ad.precision.modeled_m1_bytes(small_nnz64, ad.iters) as f64
+        );
+    }
+
     // Coordinator-path iteration (instruction issue + module dispatch).
     let r = bench("coordinator_native_10_iters", 1, 5, || {
         let cfg = CoordinatorConfig { max_iters: 10, ..Default::default() };

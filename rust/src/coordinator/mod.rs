@@ -30,6 +30,7 @@ use std::sync::Arc;
 use crate::engine::pool::{self, WorkerPool};
 use crate::hbm::ChannelMode;
 use crate::isa::InstTrace;
+use crate::precision::adaptive::{PrecisionController, PrecisionMode, PrecisionTrace};
 use crate::precision::{stats, Scheme};
 use crate::program::{
     bucket_ceiling, DispatchReturn, HbmMemoryMap, InstDispatch, LaneSlice, Program, ProgramCache,
@@ -129,6 +130,16 @@ pub struct CoordinatorConfig {
     /// batches always run per-lane dispatch — there is no block to
     /// amortize over, so staging or residency would only add moves.
     pub block: BlockMode,
+    /// Precision governance (PR 8).  `Static` leaves the backend's own
+    /// scheme untouched — the coordinator never calls
+    /// [`InstDispatch::bind_scheme`], so static solves are bit for bit
+    /// the pre-adaptive controller.  `Adaptive` starts every lane on
+    /// the policy's start scheme and escalates lanes *independently*
+    /// from their own residual histories, re-binding the executor
+    /// before each SpMV pass; the decision sequence is a pure function
+    /// of each lane's rr sequence, so all dispatch paths emit the same
+    /// [`PrecisionTrace`].
+    pub precision: PrecisionMode,
 }
 
 impl Default for CoordinatorConfig {
@@ -142,6 +153,7 @@ impl Default for CoordinatorConfig {
             lane_workers: 0,
             max_chunk_lanes: 0,
             block: BlockMode::PerLane,
+            precision: PrecisionMode::default(),
         }
     }
 }
@@ -163,6 +175,11 @@ pub struct CoordResult {
     pub instructions: InstTrace,
     /// Type-III write acknowledgements received (§4.2).
     pub mem_acks: usize,
+    /// The precision schedule that produced `x` (PR 8): which scheme
+    /// governed each SpMV pass and why.  Static solves carry the single
+    /// pinned scheme; an adaptive schedule can be replayed bitwise with
+    /// [`PrecisionController::replay`].
+    pub precision: PrecisionTrace,
 }
 
 /// The global controller.
@@ -351,11 +368,20 @@ impl Coordinator {
         }
     }
 
-    /// Fresh per-lane controller states for one chunk.
-    fn make_lanes(&self, program: &Program, rhs: &[&[f64]], x0: &[&[f64]]) -> Vec<LaneState> {
+    /// Fresh per-lane controller states for one chunk.  `scheme_of`
+    /// names lane `k`'s executor's built-in scheme — the scheme a
+    /// static-mode lane pins (so nothing is ever re-bound).
+    fn make_lanes(
+        &self,
+        program: &Program,
+        rhs: &[&[f64]],
+        x0: &[&[f64]],
+        scheme_of: impl Fn(usize) -> Scheme,
+    ) -> Vec<LaneState> {
         let mut lanes = Vec::with_capacity(rhs.len());
         for (k, (b, xs)) in rhs.iter().zip(x0).enumerate() {
-            lanes.push(LaneState::new(b, xs, program.lane_offset_beats(k as u32), &self.cfg));
+            let ctrl = PrecisionController::for_mode(self.cfg.precision, scheme_of(k), self.cfg.tol);
+            lanes.push(LaneState::new(b, xs, program.lane_offset_beats(k as u32), &self.cfg, ctrl));
         }
         lanes
     }
@@ -389,7 +415,8 @@ impl Coordinator {
                 return lanes.into_iter().map(LaneState::into_result).collect();
             }
         }
-        let mut lanes = self.make_lanes(&program, rhs, x0);
+        let fallback = exec.active_scheme();
+        let mut lanes = self.make_lanes(&program, rhs, x0, |_| fallback);
         // Staged block-CG mode: one batch_spmv ahead of each SpMV trip
         // round stages every live lane's ap, so the M1s below consume
         // one shared matrix pass.  A backend that declines (first call
@@ -446,7 +473,8 @@ impl Coordinator {
                 return lanes.into_iter().map(LaneState::into_result).collect();
             }
         }
-        let mut lanes = self.make_lanes(&program, rhs, x0);
+        let schemes: Vec<Scheme> = execs.iter().map(|e| e.active_scheme()).collect();
+        let mut lanes = self.make_lanes(&program, rhs, x0, |k| schemes[k]);
         // Staged block-CG mode: the batch-wide SpMV runs on the first
         // lane's executor between the trip barriers, before the lanes
         // fan out; the staged-ap handshake then makes each fanned M1 a
@@ -478,6 +506,10 @@ impl Coordinator {
 struct LaneState {
     slice: LaneSlice,
     trace: ResidualTrace,
+    /// The lane's precision governor (PR 8): names the scheme every
+    /// issued Type-I word carries and — in adaptive mode — decides when
+    /// the lane escalates.  Lanes escalate independently.
+    ctrl: PrecisionController,
     rz: f64,
     rr: f64,
     /// Step length bound for the lane's current iteration (line 8).
@@ -492,21 +524,28 @@ struct LaneState {
 }
 
 impl LaneState {
-    fn new(b: &[f64], x0: &[f64], offset_beats: u32, cfg: &CoordinatorConfig) -> Self {
-        Self::with_slice(LaneSlice::new(b, x0, offset_beats, cfg.record_instructions), cfg)
+    fn new(
+        b: &[f64],
+        x0: &[f64],
+        offset_beats: u32,
+        cfg: &CoordinatorConfig,
+        ctrl: PrecisionController,
+    ) -> Self {
+        Self::with_slice(LaneSlice::new(b, x0, offset_beats, cfg.record_instructions), cfg, ctrl)
     }
 
     /// A lane whose vectors live in the coordinator's resident arenas:
     /// the [`VectorFile`] starts empty and is materialized only on
     /// gather-out or converged exit.
-    fn new_resident(offset_beats: u32, cfg: &CoordinatorConfig) -> Self {
-        Self::with_slice(LaneSlice::new_resident(offset_beats, cfg.record_instructions), cfg)
+    fn new_resident(offset_beats: u32, cfg: &CoordinatorConfig, ctrl: PrecisionController) -> Self {
+        Self::with_slice(LaneSlice::new_resident(offset_beats, cfg.record_instructions), cfg, ctrl)
     }
 
-    fn with_slice(slice: LaneSlice, cfg: &CoordinatorConfig) -> Self {
+    fn with_slice(slice: LaneSlice, cfg: &CoordinatorConfig, ctrl: PrecisionController) -> Self {
         Self {
             slice,
             trace: ResidualTrace::new(cfg.record_trace),
+            ctrl,
             rz: 0.0,
             rr: 0.0,
             alpha: 0.0,
@@ -515,6 +554,13 @@ impl LaneState {
             converged: false,
             live: true,
         }
+    }
+
+    /// The lane's issue-time scalars: alpha and beta as given, plus the
+    /// controller's current scheme as the third bound-at-issue scalar
+    /// (stamped into every Type-I word of the trip).
+    fn scalars(&self, alpha: f64, beta: f64) -> Scalars {
+        Scalars { alpha, beta, scheme: self.ctrl.current() }
     }
 
     fn into_result(mut self) -> CoordResult {
@@ -526,6 +572,7 @@ impl LaneState {
             trace: self.trace,
             instructions: self.slice.bus.take_trace(),
             mem_acks: self.slice.bus.acks().len(),
+            precision: self.ctrl.into_trace(),
         }
     }
 }
@@ -548,10 +595,23 @@ fn lane_init<D: InstDispatch>(
     lane: &mut LaneState,
     exec: &mut D,
 ) {
-    let ret = lane.slice.trip(&program.init, Scalars { alpha: 1.0, beta: 0.0 }, exec);
+    bind_lane_scheme(lane, exec);
+    let scalars = lane.scalars(1.0, 0.0);
+    let ret = lane.slice.trip(&program.init, scalars, exec);
     let rz = ret_scalar(&ret, ScalarRole::Rz);
     let rr = ret_scalar(&ret, ScalarRole::Rr);
     note_init(cfg, lane, rz, rr);
+}
+
+/// Re-bind the executor's decode width to the lane's current scheme
+/// ahead of a trip that may stream the matrix.  Static lanes skip the
+/// call entirely — the backend's built-in scheme is already the lane's
+/// pinned scheme, and never touching [`InstDispatch::bind_scheme`]
+/// keeps static solves bit for bit the pre-adaptive controller.
+fn bind_lane_scheme<D: InstDispatch>(lane: &LaneState, exec: &mut D) {
+    if lane.ctrl.is_adaptive() {
+        exec.bind_scheme(lane.ctrl.current());
+    }
 }
 
 /// Post-init scalar bookkeeping, shared between the per-lane trip path
@@ -563,6 +623,12 @@ fn note_init(cfg: &CoordinatorConfig, lane: &mut LaneState, rz: f64, rr: f64) {
     lane.trace.push(lane.rr);
     lane.converged = lane.rr <= cfg.tol;
     lane.live = !lane.converged && cfg.max_iters > 0;
+    // The controller observes a pass's rr only when the solve goes on
+    // to another pass — the same hook point as the reference solver's,
+    // so traces cannot drift between the two (tests/adaptive_precision.rs).
+    if lane.live {
+        lane.ctrl.observe(lane.rr);
+    }
 }
 
 /// Post-exit-trip bookkeeping (shared with the resident rounds).
@@ -581,23 +647,27 @@ fn note_phase3(cfg: &CoordinatorConfig, lane: &mut LaneState) {
     if lane.iters >= cfg.max_iters {
         lane.live = false;
     }
+    // Same observe gate as note_init: the final rr of a capped (or
+    // converged — note_exit never observes) solve is not observed.
+    if lane.live {
+        lane.ctrl.observe(lane.rr);
+    }
 }
 
 /// Phase-1 trip for one lane -> its pap -> its alpha (scalar unit,
 /// line 8).
 fn lane_phase1<D: InstDispatch>(program: &Program, lane: &mut LaneState, exec: &mut D) {
-    let r1 = lane.slice.trip(program.phase(Phase::Phase1), Scalars::default(), exec);
+    bind_lane_scheme(lane, exec);
+    let scalars = lane.scalars(0.0, 0.0);
+    let r1 = lane.slice.trip(program.phase(Phase::Phase1), scalars, exec);
     lane.alpha = lane.rz / ret_scalar(&r1, ScalarRole::Pap);
 }
 
 /// Phase-2 trip for one lane (its hoisted M8 rr is checked by the
 /// following trip step: Fig. 4 opt 2, per RHS).
 fn lane_phase2<D: InstDispatch>(program: &Program, lane: &mut LaneState, exec: &mut D) {
-    let r2 = lane.slice.trip(
-        program.phase(Phase::Phase2),
-        Scalars { alpha: lane.alpha, beta: 0.0 },
-        exec,
-    );
+    let scalars = lane.scalars(lane.alpha, 0.0);
+    let r2 = lane.slice.trip(program.phase(Phase::Phase2), scalars, exec);
     lane.rr = ret_scalar(&r2, ScalarRole::Rr);
     lane.rz_new = ret_scalar(&r2, ScalarRole::Rz);
 }
@@ -611,12 +681,14 @@ fn lane_phase3_or_exit<D: InstDispatch>(
     exec: &mut D,
 ) {
     if lane.rr <= cfg.tol {
-        lane.slice.trip(&program.exit, Scalars { alpha: lane.alpha, beta: 0.0 }, exec);
+        let scalars = lane.scalars(lane.alpha, 0.0);
+        lane.slice.trip(&program.exit, scalars, exec);
         note_exit(lane);
         return;
     }
     let beta = lane.rz_new / lane.rz;
-    lane.slice.trip(program.phase(Phase::Phase3), Scalars { alpha: lane.alpha, beta }, exec);
+    let scalars = lane.scalars(lane.alpha, beta);
+    lane.slice.trip(program.phase(Phase::Phase3), scalars, exec);
     note_phase3(cfg, lane);
 }
 
@@ -733,27 +805,48 @@ fn block_spmv_pass<D: InstDispatch>(
         return true; // single lane: per-lane M1 is the cheaper dispatch
     }
     let n = lanes[first].slice.mem.x.len();
-    let l = picked.len();
-    let mut xs = vec![0.0; n * l];
-    for (j, &k) in picked.iter().enumerate() {
-        let mem = &lanes[k].slice.mem;
-        let src = if use_x { &mem.x } else { &mem.p };
-        for (i, v) in src.iter().enumerate() {
-            xs[i * l + j] = *v;
+    // Lanes running different precision schemes cannot share one matrix
+    // pass — the decode width differs — so the pass runs once per
+    // *scheme group*, in [`Scheme::ALL`] order (deterministic grouping;
+    // a static batch is always one group and takes exactly the
+    // pre-adaptive single-pass path, no `bind_scheme` call).  A lone
+    // lane in its group skips staging like a lone lane in the batch:
+    // its per-lane M1 streams the same nnz bytes with zero moves (the
+    // adaptive bind in [`lane_phase1`] has set its scheme).
+    for scheme in Scheme::ALL {
+        let group: Vec<usize> =
+            picked.iter().copied().filter(|&k| lanes[k].ctrl.current() == scheme).collect();
+        if group.len() < 2 {
+            continue;
         }
-    }
-    let mut ys = vec![0.0; n * l];
-    if !exec.batch_spmv(&xs, &mut ys, l) {
-        return false;
-    }
-    for (j, &k) in picked.iter().enumerate() {
-        let mem = &mut lanes[k].slice.mem;
-        for (i, dst) in mem.stage_ap.iter_mut().enumerate() {
-            *dst = ys[i * l + j];
+        if lanes[group[0]].ctrl.is_adaptive() {
+            exec.bind_scheme(scheme);
         }
-        mem.block_ap_staged = true;
+        let l = group.len();
+        let mut xs = vec![0.0; n * l];
+        for (j, &k) in group.iter().enumerate() {
+            let mem = &lanes[k].slice.mem;
+            let src = if use_x { &mem.x } else { &mem.p };
+            for (i, v) in src.iter().enumerate() {
+                xs[i * l + j] = *v;
+            }
+        }
+        let mut ys = vec![0.0; n * l];
+        if !exec.batch_spmv(&xs, &mut ys, l) {
+            // Lanes an earlier group staged still consume their staged
+            // ap (it is exactly what their M1 would have computed); the
+            // rest fall back to per-lane streaming with everyone else.
+            return false;
+        }
+        for (j, &k) in group.iter().enumerate() {
+            let mem = &mut lanes[k].slice.mem;
+            for (i, dst) in mem.stage_ap.iter_mut().enumerate() {
+                *dst = ys[i * l + j];
+            }
+            mem.block_ap_staged = true;
+        }
+        stats::add_vector_element_moves(2 * (n * l) as u64);
     }
-    stats::add_vector_element_moves(2 * (n * l) as u64);
     true
 }
 
@@ -945,6 +1038,56 @@ fn gather_out(ar: &mut BlockArenas, lanes: &mut [LaneState], rhs: &[&[f64]]) {
     ar.slots.clear();
 }
 
+/// The steady-round batch SpMV on the resident arenas, precision-aware.
+/// When every resident lane runs the same scheme — always true in
+/// static mode, and the common case in adaptive mode — the matrix
+/// streams straight from the p arena into the staged-ap arena in place,
+/// exactly the pre-adaptive pass (zero moves; `bind_scheme` only when
+/// adaptive).  A *mixed* round — some lanes escalated, others not —
+/// cannot share a decode width, so each scheme group gathers its
+/// columns into scratch, streams its pass, and scatters back: `2·n·g`
+/// counted element moves per g-lane group, paid only on mixed rounds.
+/// Returns `false` if the backend declined (the caller gathers out).
+fn resident_batch_spmv<D: InstDispatch>(
+    ar: &mut BlockArenas,
+    lanes: &[LaneState],
+    exec: &mut D,
+) -> bool {
+    let l = ar.lanes();
+    let schemes: Vec<Scheme> = ar.slots.iter().map(|&k| lanes[k].ctrl.current()).collect();
+    if schemes.iter().all(|&s| s == schemes[0]) {
+        bind_lane_scheme(&lanes[ar.slots[0]], exec);
+        return exec.batch_spmv(&ar.p, &mut ar.stage_ap, l);
+    }
+    let n = ar.n;
+    for scheme in Scheme::ALL {
+        let cols: Vec<usize> = (0..l).filter(|&j| schemes[j] == scheme).collect();
+        if cols.is_empty() {
+            continue;
+        }
+        // Mixed rounds only arise in adaptive mode: bind unconditionally.
+        exec.bind_scheme(scheme);
+        let g = cols.len();
+        let mut xs = vec![0.0; n * g];
+        for (j2, &j) in cols.iter().enumerate() {
+            for i in 0..n {
+                xs[i * g + j2] = ar.p[i * l + j];
+            }
+        }
+        let mut ys = vec![0.0; n * g];
+        if !exec.batch_spmv(&xs, &mut ys, g) {
+            return false;
+        }
+        for (j2, &j) in cols.iter().enumerate() {
+            for i in 0..n {
+                ar.stage_ap[i * l + j] = ys[i * g + j2];
+            }
+        }
+        stats::add_vector_element_moves(2 * (n * g) as u64);
+    }
+    true
+}
+
 /// One chunk on the resident block plane.  Every round runs its
 /// arithmetic batch-wide over the arenas (the batch SpMV plus the
 /// [`InstDispatch`] block vector ops, each bitwise the per-lane module
@@ -966,8 +1109,12 @@ fn solve_chunk_resident<D: InstDispatch>(
     rhs: &[&[f64]],
     x0: &[&[f64]],
 ) -> Option<Vec<LaneState>> {
+    let fallback = exec.active_scheme();
     let mut lanes: Vec<LaneState> = (0..rhs.len())
-        .map(|k| LaneState::new_resident(program.lane_offset_beats(k as u32), cfg))
+        .map(|k| {
+            let ctrl = PrecisionController::for_mode(cfg.precision, fallback, cfg.tol);
+            LaneState::new_resident(program.lane_offset_beats(k as u32), cfg, ctrl)
+        })
         .collect();
     let mut ar = BlockArenas::gather_in(rhs, x0);
     let l = ar.lanes();
@@ -976,7 +1123,9 @@ fn solve_chunk_resident<D: InstDispatch>(
     // M1 streams the matrix once for the whole batch, straight from the
     // x arena into the staged-ap arena — in place, nothing gathered or
     // scattered.  This is also the batch kernel's one chance to decline
-    // cleanly: nothing has been issued yet.
+    // cleanly: nothing has been issued yet.  Every lane enters at the
+    // controller's start scheme, so the init pass is always uniform.
+    bind_lane_scheme(&lanes[0], exec);
     if !exec.batch_spmv(&ar.x, &mut ar.stage_ap, l) {
         return None;
     }
@@ -995,7 +1144,8 @@ fn solve_chunk_resident<D: InstDispatch>(
     // to the stream-through copy p = z.
     ar.stage_p.copy_from_slice(&ar.stage_z);
     for (j, lane) in lanes.iter_mut().enumerate() {
-        lane.slice.issue(&program.init, Scalars { alpha: 1.0, beta: 0.0 });
+        let scalars = lane.scalars(1.0, 0.0);
+        lane.slice.issue(&program.init, scalars);
         note_init(cfg, lane, rz[j], rr[j]);
     }
     ar.commit_r();
@@ -1016,7 +1166,7 @@ fn solve_chunk_resident<D: InstDispatch>(
             return Some(lanes);
         }
         // ---- phase 1: M1, M2; commits ap ----
-        if !exec.batch_spmv(&ar.p, &mut ar.stage_ap, l) {
+        if !resident_batch_spmv(&mut ar, &lanes, exec) {
             // Mid-solve decline: we are at an iteration boundary, so
             // the committed plane gathers out cleanly.
             gather_out(&mut ar, &mut lanes, rhs);
@@ -1026,7 +1176,8 @@ fn solve_chunk_resident<D: InstDispatch>(
         exec.block_dots(&ar.p, &ar.stage_ap, &mut pap);
         for (j, &k) in ar.slots.iter().enumerate() {
             let lane = &mut lanes[k];
-            lane.slice.issue(program.phase(Phase::Phase1), Scalars::default());
+            let scalars = lane.scalars(0.0, 0.0);
+            lane.slice.issue(program.phase(Phase::Phase1), scalars);
             lane.alpha = lane.rz / pap[j];
         }
         ar.commit_ap();
@@ -1042,7 +1193,7 @@ fn solve_chunk_resident<D: InstDispatch>(
         exec.block_dots(&ar.stage_r, &ar.stage_z, &mut rz_new);
         for (j, &k) in ar.slots.iter().enumerate() {
             let lane = &mut lanes[k];
-            let scalars = Scalars { alpha: lane.alpha, beta: 0.0 };
+            let scalars = lane.scalars(lane.alpha, 0.0);
             lane.slice.issue(program.phase(Phase::Phase2), scalars);
             lane.rr = rr[j];
             lane.rz_new = rz_new[j];
@@ -1084,10 +1235,11 @@ fn solve_chunk_resident<D: InstDispatch>(
         for &k in &ar.slots {
             let lane = &mut lanes[k];
             if lane.rr <= cfg.tol {
-                lane.slice.issue(&program.exit, Scalars { alpha: lane.alpha, beta: 0.0 });
+                let scalars = lane.scalars(lane.alpha, 0.0);
+                lane.slice.issue(&program.exit, scalars);
                 note_exit(lane);
             } else {
-                let scalars = Scalars { alpha: lane.alpha, beta: lane.rz_new / lane.rz };
+                let scalars = lane.scalars(lane.alpha, lane.rz_new / lane.rz);
                 lane.slice.issue(program.phase(Phase::Phase3), scalars);
                 note_phase3(cfg, lane);
             }
@@ -1356,6 +1508,21 @@ impl InstDispatch for NativeExecutor<'_> {
         true
     }
 
+    /// Adaptive re-bind (PR 8): a decode-width change, not a data move —
+    /// the prepared plan caches the f64 values and the f32 view side by
+    /// side, so switching schemes is a field write and the next SpMV
+    /// simply reads the other stream.  The Serpens replay path accepts
+    /// the bind but keeps streaming Mix-V3: its accumulation schedule
+    /// is baked at pack time (and its declining [`Self::batch_spmv`]
+    /// already keeps it off the block paths).
+    fn bind_scheme(&mut self, scheme: Scheme) {
+        self.scheme = scheme;
+    }
+
+    fn active_scheme(&self) -> Scheme {
+        self.scheme
+    }
+
     /// The native backend serves the whole resident block family: its
     /// vector ops run on the engine's row-range-parallel block kernels
     /// (lane-axis-parallel for the dots), each bitwise the per-lane
@@ -1510,6 +1677,36 @@ mod tests {
         let res = solve_native(&a, Scheme::MixV3);
         assert!(res.converged);
         assert_eq!(res.mem_acks as u32, 4 * res.iters);
+    }
+
+    #[test]
+    fn static_solves_pin_the_backend_scheme_in_the_trace() {
+        // Static mode never re-binds: the trace is the single pinned
+        // scheme the executor was built with, covering every pass.
+        let a = synth::laplace2d_shifted(400, 0.1);
+        let res = solve_native(&a, Scheme::MixV3);
+        assert_eq!(res.precision.events().len(), 1);
+        assert_eq!(res.precision.events()[0].scheme, Scheme::MixV3);
+        assert_eq!(res.precision.scheme_at(res.iters), Scheme::MixV3);
+    }
+
+    #[test]
+    fn adaptive_mode_records_a_trace_and_still_converges() {
+        use crate::precision::adaptive::AdaptivePolicy;
+        let a = synth::banded_spd(1500, 12_000, 1e-4, 21);
+        let cfg = CoordinatorConfig {
+            precision: PrecisionMode::Adaptive(AdaptivePolicy::default()),
+            ..Default::default()
+        };
+        let mut coord = Coordinator::new(cfg);
+        let mut exec = NativeExecutor::new(&a, Scheme::MixV3);
+        let b = vec![1.0; a.n];
+        let x0 = vec![0.0; a.n];
+        let res = coord.solve(&mut exec, &b, &x0);
+        assert!(res.converged, "rr={}", res.final_rr);
+        let events = res.precision.events();
+        assert_eq!(events[0].pass, 0);
+        assert_eq!(events[0].scheme, Scheme::MixV3, "lanes start on the policy's start scheme");
     }
 
     #[test]

@@ -5,6 +5,7 @@
 use std::sync::{Arc, OnceLock};
 
 use crate::coordinator::{BlockMode, CoordinatorConfig};
+use crate::precision::adaptive::PrecisionMode;
 use crate::precision::{apply_accumulator_model, Scheme};
 use crate::program::ProgramCache;
 use crate::solver::{
@@ -120,6 +121,21 @@ impl<'a> PreparedMatrix<'a> {
         }
     }
 
+    /// [`PreparedMatrix::vals32_for`] over a whole option set: an
+    /// adaptive solve can reach either end of its policy, so the f32
+    /// view is derived whenever any reachable scheme streams it.  (The
+    /// FP64 kernels ignore the slice, so handing it to every pass of a
+    /// mixed solve is free.)
+    fn vals32_for_opts(&self, opts: &SolveOptions) -> &[f32] {
+        let needs =
+            opts.scheme.matrix_f32() || opts.adaptive.is_some_and(|p| p.needs_f32());
+        if needs {
+            self.vals32()
+        } else {
+            &[]
+        }
+    }
+
     /// Cached Jacobi diagonal (zeros mapped to 1.0).
     pub fn diag(&self) -> &[f64] {
         &self.diag
@@ -180,14 +196,13 @@ impl<'a> PreparedMatrix<'a> {
         opts: &SolveOptions,
         ws: &mut SolveWorkspace,
     ) -> SolveResult {
-        let scheme = opts.scheme;
-        let vals32 = self.vals32_for(scheme);
+        let vals32 = self.vals32_for_opts(opts);
         if self.threads <= 1 {
             return jpcg_solve_cached_ws(self.a, vals32, &self.diag, b, x0, opts, ws);
         }
         let acc = opts.accumulator;
-        jpcg_solve_with_spmv(self.a.n, self.a.nnz(), &self.diag, b, x0, opts, ws, |x, y, salt| {
-            spmv_parallel(self.a, vals32, x, y, scheme, &self.partition);
+        jpcg_solve_with_spmv(self.a.n, self.a.nnz(), &self.diag, b, x0, opts, ws, |x, y, s, salt| {
+            spmv_parallel(self.a, vals32, x, y, s, &self.partition);
             apply_accumulator_model(y, acc, salt);
         })
     }
@@ -382,8 +397,9 @@ impl<'a> PreparedMatrix<'a> {
             return self.solve_batch_workers(rhs, opts);
         }
         // Force the lazy f32 derivation once, outside the fan-out, so
-        // lanes never serialize on the OnceLock's first fill.
-        let _ = self.vals32_for(opts.scheme);
+        // lanes never serialize on the OnceLock's first fill (adaptive
+        // solves may reach an f32 scheme on any lane at any pass).
+        let _ = self.vals32_for_opts(opts);
         let lane_plan = self.reshaped(1);
         let cfg = CoordinatorConfig { lane_workers, block, ..Self::coord_cfg(opts) };
         let mut coord = match cache {
@@ -427,6 +443,10 @@ impl<'a> PreparedMatrix<'a> {
             tol: opts.tol,
             max_iters: opts.max_iters,
             record_trace: opts.record_trace,
+            precision: match opts.adaptive {
+                Some(policy) => PrecisionMode::Adaptive(policy),
+                None => PrecisionMode::Static(opts.scheme),
+            },
             ..Default::default()
         }
     }
@@ -446,6 +466,7 @@ impl<'a> PreparedMatrix<'a> {
                 final_rr: r.final_rr,
                 trace: r.trace,
                 flops: 2 * nnz as u64 + 6 * n as u64 + r.iters as u64 * flops_per_iter(n, nnz),
+                precision: r.precision,
             })
             .collect()
     }
@@ -492,7 +513,7 @@ impl<'a> PreparedMatrix<'a> {
             return Vec::new();
         }
         let workers = self.threads.min(rhs.len()).max(1);
-        let vals32 = self.vals32_for(opts.scheme);
+        let vals32 = self.vals32_for_opts(opts);
         if workers == 1 {
             let mut ws = SolveWorkspace::new();
             return rhs
@@ -535,7 +556,7 @@ impl<'a> PreparedMatrix<'a> {
             return Vec::new();
         }
         let workers = self.threads.min(rhs.len()).max(1);
-        let vals32 = self.vals32_for(opts.scheme);
+        let vals32 = self.vals32_for_opts(opts);
         let chunk = rhs.len().div_ceil(workers);
         let mut out: Vec<Option<SolveResult>> = Vec::with_capacity(rhs.len());
         out.resize_with(rhs.len(), || None);

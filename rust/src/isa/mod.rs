@@ -3,8 +3,10 @@
 //! Three instruction types, all bit-packed exactly as the HLS structs:
 //!
 //! * **Type-I** `InstVCtrl` — tells a vector-control module whether to
-//!   read/write a vector, where it lives in memory, its length, and
-//!   which destination module receives the stream (`q_id`, 3 bits).
+//!   read/write a vector, where it lives in memory, its length, which
+//!   destination module receives the stream (`q_id`, 3 bits), and which
+//!   precision [`Scheme`] the trip decodes (3 bits, bound at issue time
+//!   like alpha/beta — the adaptive-precision scalar of PR 8).
 //! * **Type-II** `InstCmp` — triggers one computation module: vector
 //!   length, a double-precision scalar (the only operand a module ever
 //!   needs — modules are single-function, so there is no opcode), and
@@ -17,10 +19,14 @@
 //! from compute so prefetching overlaps execution.
 
 
+use crate::precision::Scheme;
+use std::fmt;
+
 /// Destination-queue index (ap_uint<3> in the HLS source).
 pub type QId = u8;
 
-/// Type-I: vector control instruction (5 fields, Fig. 2).
+/// Type-I: vector control instruction (Fig. 2 plus the precision
+/// scalar).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct InstVCtrl {
     /// Stream the vector in from memory this trip.
@@ -33,7 +39,29 @@ pub struct InstVCtrl {
     pub len: u32,
     /// Destination module queue for the read stream.
     pub q_id: QId,
+    /// Precision scheme the trip decodes, bound at issue time like
+    /// alpha/beta (`Scheme::wire_code`, 3-bit field; codes 4..=7 are
+    /// reserved and make [`InstVCtrl::decode`] fail explicitly).
+    pub precision: Scheme,
 }
+
+/// A wire word whose bit pattern is not a valid instruction — today
+/// that means a reserved code in the Type-I precision field.  Decoding
+/// must surface this explicitly (never panic): traces and cross-tool
+/// dumps are external inputs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DecodeError {
+    /// The reserved 3-bit precision code encountered (4..=7).
+    pub precision_code: u8,
+}
+
+impl fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "reserved Type-I precision code {} (valid: 0..=3)", self.precision_code)
+    }
+}
+
+impl std::error::Error for DecodeError {}
 
 /// Type-II: computation instruction (3 fields, Fig. 2).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -76,30 +104,42 @@ pub enum Instruction {
 // pack into u128 little-end-first in field order so the Rust encoding is
 // a stable wire format for traces and golden tests.
 //
-//   InstVCtrl: rd:1 | wr:1 | base_addr:32 | len:32 | q_id:3   (69 bits)
+//   InstVCtrl: rd:1 | wr:1 | base_addr:32 | len:32 | q_id:3
+//              | precision:3                                  (72 bits)
 //   InstCmp:   len:32 | alpha:64 | q_id:3                     (99 bits)
 //   InstRdWr:  rd:1 | wr:1 | base_addr:32 | len:32            (66 bits)
+//
+// The precision field was appended in PR 8 (the adaptive-precision
+// scalar).  Scheme::Fp64 encodes as 0, so a pre-PR-8 69-bit Type-I
+// word decodes unchanged as an Fp64 trip; codes 4..=7 are reserved and
+// decode to an explicit DecodeError.
 // ---------------------------------------------------------------------
 
 impl InstVCtrl {
-    /// Pack into the 69-bit wire word (see the layout table above).
+    /// Pack into the 72-bit wire word (see the layout table above).
     pub fn encode(&self) -> u128 {
         (self.rd as u128)
             | (self.wr as u128) << 1
             | (self.base_addr as u128) << 2
             | (self.len as u128) << 34
             | (self.q_id as u128 & 0b111) << 66
+            | (self.precision.wire_code() as u128) << 69
     }
 
-    /// Unpack a 69-bit wire word.
-    pub fn decode(bits: u128) -> Self {
-        Self {
+    /// Unpack a 72-bit wire word.  Fails — explicitly, never by panic —
+    /// on the reserved precision codes 4..=7.
+    pub fn decode(bits: u128) -> Result<Self, DecodeError> {
+        let code = (bits >> 69 & 0b111) as u8;
+        let precision =
+            Scheme::from_wire_code(code).ok_or(DecodeError { precision_code: code })?;
+        Ok(Self {
             rd: bits & 1 != 0,
             wr: bits >> 1 & 1 != 0,
             base_addr: (bits >> 2) as u32,
             len: (bits >> 34) as u32,
             q_id: (bits >> 66 & 0b111) as u8,
-        }
+            precision,
+        })
     }
 }
 
@@ -182,8 +222,17 @@ mod tests {
 
     #[test]
     fn vctrl_roundtrip() {
-        let i = InstVCtrl { rd: true, wr: false, base_addr: 0xDEAD_BEEF, len: 1_000_000, q_id: 5 };
-        assert_eq!(InstVCtrl::decode(i.encode()), i);
+        for precision in Scheme::ALL {
+            let i = InstVCtrl {
+                rd: true,
+                wr: false,
+                base_addr: 0xDEAD_BEEF,
+                len: 1_000_000,
+                q_id: 5,
+                precision,
+            };
+            assert_eq!(InstVCtrl::decode(i.encode()), Ok(i));
+        }
     }
 
     #[test]
@@ -205,8 +254,46 @@ mod tests {
 
     #[test]
     fn qid_is_three_bits() {
-        let i = InstVCtrl { rd: false, wr: false, base_addr: 0, len: 0, q_id: 7 };
-        assert_eq!(InstVCtrl::decode(i.encode()).q_id, 7);
+        let i = InstVCtrl {
+            rd: false,
+            wr: false,
+            base_addr: 0,
+            len: 0,
+            q_id: 7,
+            precision: Scheme::Fp64,
+        };
+        assert_eq!(InstVCtrl::decode(i.encode()).unwrap().q_id, 7);
+    }
+
+    #[test]
+    fn reserved_precision_codes_are_an_explicit_decode_error() {
+        // Codes 4..=7 of the precision field are not schemes: decode
+        // must return Err (never panic) and name the offending code.
+        let base = InstVCtrl {
+            rd: true,
+            wr: false,
+            base_addr: 0xDEAD_BEEF,
+            len: 1_000_000,
+            q_id: 5,
+            precision: Scheme::Fp64,
+        }
+        .encode();
+        for code in 4u8..=7 {
+            let w = base | (code as u128) << 69;
+            let err = InstVCtrl::decode(w).unwrap_err();
+            assert_eq!(err, DecodeError { precision_code: code });
+            assert!(err.to_string().contains(&code.to_string()));
+        }
+    }
+
+    #[test]
+    fn legacy_69_bit_words_decode_as_fp64_trips() {
+        // Scheme::Fp64 has wire code 0, so every pre-precision-field
+        // Type-I word is still a valid 72-bit word meaning "fp64 trip".
+        let legacy = 0x14003d09037ab6fbbd_u128; // pre-PR-8 golden
+        let d = InstVCtrl::decode(legacy).unwrap();
+        assert_eq!(d.precision, Scheme::Fp64);
+        assert_eq!(d.encode(), legacy);
     }
 
     // ------------------------------------------------------------------
@@ -218,14 +305,33 @@ mod tests {
 
     #[test]
     fn golden_vctrl_encodings() {
-        let read_only =
-            InstVCtrl { rd: true, wr: false, base_addr: 0xDEAD_BEEF, len: 1_000_000, q_id: 5 };
+        // precision = Fp64 (code 0) leaves the pre-PR-8 words intact...
+        let read_only = InstVCtrl {
+            rd: true,
+            wr: false,
+            base_addr: 0xDEAD_BEEF,
+            len: 1_000_000,
+            q_id: 5,
+            precision: Scheme::Fp64,
+        };
         assert_eq!(read_only.encode(), 0x14003d09037ab6fbbd_u128);
-        let read_write =
-            InstVCtrl { rd: true, wr: true, base_addr: 0x0600_0000, len: 16_384, q_id: 2 };
-        assert_eq!(read_write.encode(), 0x80001000018000003_u128);
-        assert_eq!(InstVCtrl::decode(0x14003d09037ab6fbbd_u128), read_only);
-        assert_eq!(InstVCtrl::decode(0x80001000018000003_u128), read_write);
+        // ...and the Mix codes land in bits 69..72.
+        let mixv3 = InstVCtrl { precision: Scheme::MixV3, ..read_only };
+        assert_eq!(mixv3.encode(), 0x74003d09037ab6fbbd_u128);
+        let mixv1 = InstVCtrl { precision: Scheme::MixV1, ..read_only };
+        assert_eq!(mixv1.encode(), 0x34003d09037ab6fbbd_u128);
+        let read_write = InstVCtrl {
+            rd: true,
+            wr: true,
+            base_addr: 0x0600_0000,
+            len: 16_384,
+            q_id: 2,
+            precision: Scheme::MixV2,
+        };
+        assert_eq!(read_write.encode(), 0x480001000018000003_u128);
+        assert_eq!(InstVCtrl::decode(0x14003d09037ab6fbbd_u128), Ok(read_only));
+        assert_eq!(InstVCtrl::decode(0x74003d09037ab6fbbd_u128), Ok(mixv3));
+        assert_eq!(InstVCtrl::decode(0x480001000018000003_u128), Ok(read_write));
     }
 
     #[test]
@@ -273,10 +379,12 @@ mod tests {
                 base_addr: rng.next_u64() as u32,
                 len: rng.next_u64() as u32,
                 q_id: (bits >> 2 & 0b111) as u8,
+                precision: Scheme::from_wire_code((bits >> 5 & 0b11) as u8)
+                    .expect("codes 0..=3 are always valid"),
             };
             let w = i.encode();
-            assert!(w < 1u128 << 69, "Type-I words are 69 bits: {w:#x}");
-            let d = InstVCtrl::decode(w);
+            assert!(w < 1u128 << 72, "Type-I words are 72 bits: {w:#x}");
+            let d = InstVCtrl::decode(w).expect("a valid scheme code must decode");
             assert_eq!(d, i);
             assert_eq!(d.encode(), w, "re-encode must reproduce the wire word");
         }
@@ -325,19 +433,37 @@ mod tests {
     }
 
     #[test]
-    fn every_in_range_wire_word_is_a_valid_instruction() {
-        // decode is total on each type's bit range and encode inverts
-        // it: random in-range words survive decode -> encode untouched.
+    fn every_in_range_wire_word_is_a_valid_instruction_or_explicit_error() {
+        // Type-II/III decode is total on the bit range and encode
+        // inverts it.  Type-I decode is total *up to* the reserved
+        // precision codes: a valid code round-trips, a reserved code is
+        // a DecodeError naming that code — never a panic, never a
+        // silent remap.
         let mut rng = Rng64::seed_from_u64(0xCA11_15A4);
         let wide = |r: &mut Rng64| (r.next_u64() as u128) << 64 | r.next_u64() as u128;
+        let (mut ok, mut reserved) = (0u32, 0u32);
         for _ in 0..PROPERTY_DRAWS {
-            let w = wide(&mut rng) & ((1u128 << 69) - 1);
-            assert_eq!(InstVCtrl::decode(w).encode(), w);
+            let w = wide(&mut rng) & ((1u128 << 72) - 1);
+            let code = (w >> 69 & 0b111) as u8;
+            match InstVCtrl::decode(w) {
+                Ok(d) => {
+                    assert!(code <= 3);
+                    assert_eq!(d.encode(), w);
+                    ok += 1;
+                }
+                Err(e) => {
+                    assert!(code > 3);
+                    assert_eq!(e.precision_code, code);
+                    reserved += 1;
+                }
+            }
             let w = wide(&mut rng) & ((1u128 << 99) - 1);
             assert_eq!(InstCmp::decode(w).encode(), w);
             let w = wide(&mut rng) & ((1u128 << 66) - 1);
             assert_eq!(InstRdWr::decode(w).encode(), w);
         }
+        // The random draw must actually have exercised both outcomes.
+        assert!(ok > 0 && reserved > 0, "ok={ok} reserved={reserved}");
     }
 
     #[test]
@@ -346,7 +472,7 @@ mod tests {
         t.record("M3", Instruction::Cmp(InstCmp { len: 1, alpha: 0.0, q_id: 0 }));
         t.record("M3", Instruction::Cmp(InstCmp { len: 2, alpha: 1.0, q_id: 0 }));
         t.record("VecCtrl-p", Instruction::VCtrl(InstVCtrl {
-            rd: true, wr: false, base_addr: 0, len: 2, q_id: 1,
+            rd: true, wr: false, base_addr: 0, len: 2, q_id: 1, precision: Scheme::MixV3,
         }));
         assert_eq!(t.count_for("M3"), 2);
         assert_eq!(t.count_for("VecCtrl-p"), 1);

@@ -61,6 +61,18 @@
 //! measured by `precision::stats::vector_element_moves` against the
 //! retained staged path (`BlockMode::Staged`, 2·n·L moves/iteration,
 //! `PERF.md` §12).
+//! Since PR 8 precision is **adaptive and replayable**: the third
+//! bound-at-issue scalar is the precision scheme itself — a 3-bit
+//! Type-I wire field stamped per lane at issue time — and
+//! `precision::adaptive` supplies a deterministic controller
+//! ([`precision::adaptive::AdaptivePolicy`]) that starts cheap
+//! (Mix-V3), watches each lane's residual history, and escalates to
+//! FP64 on stall or near convergence.  Every solve records a
+//! [`precision::adaptive::PrecisionTrace`] (pass → scheme + reason)
+//! that is serializable and replays bitwise
+//! ([`solver::jpcg_solve_replay`]); because decisions are a pure
+//! function of the rr sequence, all four dispatch paths emit identical
+//! traces (`tests/adaptive_precision.rs`, `docs/PRECISION.md`).
 //! The complete Type-I/II/III
 //! instruction reference, wire encodings, and the batch-axis extension
 //! live in `docs/ISA.md`; build/quickstart walkthroughs in the
@@ -102,6 +114,7 @@ pub mod util;
 pub mod vsr;
 
 pub use engine::PreparedMatrix;
+pub use precision::adaptive::{AdaptivePolicy, PrecisionMode, PrecisionTrace};
 pub use precision::Scheme;
 pub use solver::{jpcg_solve, SolveOptions, SolveResult};
 pub use sparse::CsrMatrix;

@@ -33,6 +33,7 @@ use anyhow::{anyhow, bail, Result};
 use callipepla::bench_harness::tables::{self, SweepConfig};
 use callipepla::coordinator::{Coordinator, CoordinatorConfig, NativeExecutor};
 use callipepla::engine::PreparedMatrix;
+use callipepla::precision::adaptive::{AdaptivePolicy, PrecisionMode, PrecisionTrace};
 use callipepla::precision::Scheme;
 #[cfg(feature = "pjrt")]
 use callipepla::runtime::{default_artifact_dir, PjrtExecutor, PjrtRuntime};
@@ -83,10 +84,13 @@ fn print_usage() {
          \u{20}                --matrices M1,M2  --max-iters <n>  --threads <n>  --pjrt  --out <dir>\n\
          \u{20}                solve: --coordinator [--serpens-stream]  --batch <rhs>  --lane-workers <w>\n\
          \u{20}                       --block-spmv (resident block-CG)  --block-staged (PR 6 staged path)\n\
+         \u{20}                       --adaptive (per-pass precision controller, docs/PRECISION.md)\n\
+         \u{20}                       --tiny (built-in small matrix, for smoke runs)\n\
          \u{20}                program: --n <len>  --mode <double|single>  --batch <rhs>\n\
          \u{20}                sim: --batch <rhs>  --lane-workers <w>  (w = 0: machine default)\n\
          \u{20}                serve: --requests <n>  --matrices <k>  --tenants <t>  --max-batch <b>\n\
-         \u{20}                       --workers <w>  --seed <s>  --block-spmv  (plus --scale/--scheme/--max-iters)"
+         \u{20}                       --workers <w>  --seed <s>  --block-spmv  --adaptive\n\
+         \u{20}                       (plus --scale/--scheme/--max-iters)"
     );
 }
 
@@ -119,6 +123,11 @@ fn flag_u32(flags: &HashMap<String, String>, key: &str, default: u32) -> u32 {
 }
 
 fn load_matrix(flags: &HashMap<String, String>) -> Result<(String, CsrMatrix)> {
+    if flags.contains_key("tiny") {
+        // A built-in small SPD system: lets smoke runs (CI) exercise a
+        // full solve without naming a matrix or touching the suite.
+        return Ok(("tiny (laplace2d 400)".to_string(), sparse::synth::laplace2d_shifted(400, 0.1)));
+    }
     if let Some(path) = flags.get("mtx") {
         let a = sparse::mtx::read_mtx(std::path::Path::new(path))?;
         return Ok((path.clone(), a));
@@ -142,10 +151,46 @@ fn parse_scheme(flags: &HashMap<String, String>) -> Result<Scheme> {
     })
 }
 
+/// Print a recorded precision schedule plus its modeled M1 traffic
+/// against the static-FP64 envelope and the trace-aware time-plane
+/// seconds.
+fn report_trace(trace: &PrecisionTrace, n: usize, nnz: usize, iters: u32) {
+    let events: Vec<String> = trace
+        .events()
+        .iter()
+        .map(|e| format!("pass {}: {} ({})", e.pass, e.scheme.name(), e.reason.name()))
+        .collect();
+    println!("  precision trace: {}", events.join(" -> "));
+    let adaptive_bytes = trace.modeled_m1_bytes(nnz as u64, iters);
+    let fp64_bytes = (iters as u64 + 1) * nnz as u64 * Scheme::Fp64.nnz_bytes();
+    let secs = sim::traced_solver_seconds(&AccelSimConfig::callipepla(), n, nnz, iters, trace);
+    println!(
+        "  modeled M1 nnz traffic: {adaptive_bytes} bytes ({:.2}x less than static fp64's \
+         {fp64_bytes}), traced time plane: {:.3} ms",
+        fp64_bytes as f64 / adaptive_bytes as f64,
+        secs * 1e3
+    );
+}
+
 fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
     let (name, a) = load_matrix(flags)?;
     let scheme = parse_scheme(flags)?;
     let max_iters = flag_u32(flags, "max-iters", 20_000);
+    // --adaptive turns on the per-pass precision controller
+    // (docs/PRECISION.md): start on the CLI scheme's family default
+    // (Mix-V3), escalate to FP64 on stall or near convergence, and
+    // record a replayable PrecisionTrace.
+    let adaptive = if flags.contains_key("adaptive") {
+        if flags.contains_key("pjrt") || flags.contains_key("serpens-stream") {
+            bail!(
+                "--adaptive binds the precision scheme per pass at issue time; the pjrt \
+                 artifacts and the serpens stream replay are compiled to one scheme"
+            );
+        }
+        Some(AdaptivePolicy::default())
+    } else {
+        None
+    };
     // --batch is its own execution path; reject malformed or conflicting
     // uses instead of silently falling through to a single solve.
     let batch = match flags.get("batch") {
@@ -212,6 +257,10 @@ fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
         let cfg = CoordinatorConfig {
             max_iters,
             record_instructions: true,
+            precision: match adaptive {
+                Some(p) => PrecisionMode::Adaptive(p),
+                None => PrecisionMode::Static(scheme),
+            },
             ..Default::default()
         };
         let mut coord = Coordinator::new(cfg);
@@ -237,6 +286,9 @@ fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
             res.mem_acks,
             t0.elapsed()
         );
+        if adaptive.is_some() {
+            report_trace(&res.precision, a.n, a.nnz(), res.iters);
+        }
     } else if let Some(batch) = batch {
         // Multi-RHS: `batch` deterministic right-hand sides through one
         // compiled batched instruction program (per-RHS results bitwise
@@ -246,6 +298,7 @@ fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
         let mut opts = SolveOptions::callipepla();
         opts.scheme = scheme;
         opts.max_iters = max_iters;
+        opts.adaptive = adaptive;
         let threads = flag_u32(flags, "threads", 0).max(1) as usize;
         let lane_workers = match flags.get("lane-workers") {
             None => None,
@@ -282,6 +335,9 @@ fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
                 "  rhs {k}: converged={} iters={} rr={:.3e}",
                 r.converged, r.iters, r.final_rr
             );
+            if adaptive.is_some() {
+                report_trace(&r.precision, a.n, a.nnz(), r.iters);
+            }
         }
         let total_iters: u64 = results.iter().map(|r| r.iters as u64).sum();
         let mut dispatch = match lane_workers {
@@ -302,6 +358,7 @@ fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
         let mut opts = SolveOptions::callipepla();
         opts.scheme = scheme;
         opts.max_iters = max_iters;
+        opts.adaptive = adaptive;
         // --threads N runs the prepared-matrix parallel engine (0/absent
         // = serial reference path); the numerics are bitwise identical.
         let threads = flag_u32(flags, "threads", 0) as usize;
@@ -320,6 +377,9 @@ fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
             res.flops,
             t0.elapsed()
         );
+        if adaptive.is_some() {
+            report_trace(&res.precision, a.n, a.nnz(), res.iters);
+        }
     }
     Ok(())
 }
@@ -502,6 +562,12 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let mut opts = SolveOptions::callipepla();
     opts.scheme = scheme;
     opts.max_iters = max_iters;
+    // --adaptive serves every ticket under the per-pass precision
+    // controller; traces are a pure function of each lane's residual
+    // sequence, so the coalesced/sequential bitwise check still holds.
+    if flags.contains_key("adaptive") {
+        opts.adaptive = Some(AdaptivePolicy::default());
+    }
     // --block-spmv runs every coalesced batch as one resident
     // lane-major block (same per-ticket bits, one nnz stream per
     // batched iteration, zero steady-state boundary moves).

@@ -1,0 +1,576 @@
+//! Adaptive mixed precision: a precision **controller**, not a fixed
+//! scheme (ROADMAP item 2).
+//!
+//! Callipepla's Mix-V3 is static — one [`Scheme`] for the whole solve
+//! (§6).  The richer design (Neko-mp's `cg_mp` `switch_iter`, and the
+//! reduced-precision FPGA CG of Korcyl & Korcyl, arXiv:1811.03683) runs
+//! early iterations cheap and escalates to FP64 only when convergence
+//! stalls or the tolerance boundary nears.  This module implements that
+//! as a *deterministic* policy over the per-iteration residual history:
+//!
+//! * [`AdaptivePolicy`] — the knobs: start scheme, escalation target,
+//!   stall detector window/ratio, and the tolerance guard band.
+//! * [`PrecisionController`] — the per-solve state machine.  It is fed
+//!   the squared residual `rr` after every SpMV pass (the value M8
+//!   already returns to the controller) and answers "which scheme does
+//!   the *next* pass decode?".  Decisions are a pure function of the
+//!   residual sequence, so every execution path — serial `jpcg_solve`,
+//!   lane-parallel dispatch, staged and resident block-CG — emits the
+//!   identical [`PrecisionTrace`] (pinned in `tests/adaptive_precision.rs`).
+//! * [`PrecisionTrace`] — the per-solve record (pass → scheme + reason),
+//!   serializable to CSV and **replayable**: a controller built with
+//!   [`PrecisionController::replay`] reproduces the recorded schedule
+//!   exactly, so a replayed solve reproduces `x` bitwise.
+//!
+//! A scheme switch is a *decode-width* change, not a data move: the f32
+//! value stream already exists beside the f64 one for the Mix schemes
+//! (`PreparedMatrix` caches both), so escalation just changes which
+//! stream M1 consumes — and what the time plane charges per nnz
+//! ([`PrecisionTrace::modeled_m1_bytes`]).
+
+use super::Scheme;
+use std::collections::VecDeque;
+
+/// Knobs of the deterministic adaptive-precision policy.
+///
+/// The controller runs `start` until **either** trigger fires, then
+/// switches to `escalate_to` for the rest of the solve (escalation is
+/// sticky — precision only ever widens, mirroring Neko-mp's one-way
+/// `switch_iter`):
+///
+/// * **Guard band** — the squared residual has come within a factor
+///   `guard_band` of the solve tolerance (`rr <= guard_band * tol`):
+///   the tolerance boundary nears, so the final approach runs at full
+///   precision and converges like a pure-FP64 solve.
+/// * **Stall** — progress over the last `stall_window` observations is
+///   less than a factor `1 / stall_ratio` (`rr > stall_ratio *
+///   rr[stall_window ago]`): reduced precision has stopped buying
+///   convergence, so keeping it only burns iterations.
+///   `stall_window = 0` disables the detector.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdaptivePolicy {
+    /// Scheme for the early, cheap iterations.
+    pub start: Scheme,
+    /// Scheme after escalation (sticky for the rest of the solve).
+    pub escalate_to: Scheme,
+    /// Stall detector lookback, in residual observations (0 = off).
+    pub stall_window: u32,
+    /// Escalate when `rr > stall_ratio * rr[stall_window ago]` — i.e.
+    /// the squared residual dropped by less than `1 - stall_ratio` over
+    /// the window.
+    pub stall_ratio: f64,
+    /// Escalate when `rr <= guard_band * tol` (tolerance approach).
+    pub guard_band: f64,
+}
+
+impl Default for AdaptivePolicy {
+    /// Callipepla-flavoured defaults: start on the shipping Mix-V3
+    /// stream (half the nnz bytes), escalate to FP64 when within 100×
+    /// of tolerance or when 8 iterations drop the squared residual by
+    /// less than 10%.
+    fn default() -> Self {
+        Self {
+            start: Scheme::MixV3,
+            escalate_to: Scheme::Fp64,
+            stall_window: 8,
+            stall_ratio: 0.9,
+            guard_band: 100.0,
+        }
+    }
+}
+
+impl AdaptivePolicy {
+    /// Does any scheme this policy can select stream f32 matrix values
+    /// (i.e. must the caller derive the f32 view of the matrix)?
+    pub fn needs_f32(&self) -> bool {
+        self.start.matrix_f32() || self.escalate_to.matrix_f32()
+    }
+}
+
+/// How a solve chooses its per-pass precision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PrecisionMode {
+    /// One fixed scheme for the whole solve (the paper's model).  In
+    /// the coordinator this mode is *inert*: the executor keeps
+    /// whatever scheme it was built with, exactly as before this mode
+    /// existed.
+    Static(Scheme),
+    /// The deterministic residual-driven controller of this module.
+    Adaptive(AdaptivePolicy),
+}
+
+impl Default for PrecisionMode {
+    fn default() -> Self {
+        PrecisionMode::Static(Scheme::default())
+    }
+}
+
+/// Why a [`PrecisionEvent`] selected its scheme.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SwitchReason {
+    /// Fixed-scheme solve: the one scheme it ran start to finish.
+    Static,
+    /// The policy's start scheme, in force from the init pass.
+    Start,
+    /// Escalated because `rr <= guard_band * tol`.
+    GuardBand,
+    /// Escalated because the stall detector fired.
+    Stall,
+}
+
+impl SwitchReason {
+    /// Short lowercase id (the CSV `reason` column).
+    pub fn name(self) -> &'static str {
+        match self {
+            SwitchReason::Static => "static",
+            SwitchReason::Start => "start",
+            SwitchReason::GuardBand => "guard-band",
+            SwitchReason::Stall => "stall",
+        }
+    }
+
+    /// Inverse of [`name`](Self::name).
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "static" => Some(SwitchReason::Static),
+            "start" => Some(SwitchReason::Start),
+            "guard-band" => Some(SwitchReason::GuardBand),
+            "stall" => Some(SwitchReason::Stall),
+            _ => None,
+        }
+    }
+}
+
+/// One precision decision: from SpMV pass `pass` (inclusive) onward,
+/// the solve decodes `scheme`.
+///
+/// Passes are numbered like the M1 trips: pass 0 is the merged-init
+/// SpMV (`A·x0`), pass k ≥ 1 is iteration k's Phase-1 SpMV.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrecisionEvent {
+    /// First SpMV pass executed under `scheme`.
+    pub pass: u32,
+    /// The scheme in force from that pass on.
+    pub scheme: Scheme,
+    /// What triggered the decision.
+    pub reason: SwitchReason,
+}
+
+/// The per-solve precision record: an ordered list of change points.
+///
+/// Serializable ([`to_csv`](Self::to_csv) / [`from_csv`](Self::from_csv))
+/// and replayable ([`PrecisionController::replay`]): re-running a solve
+/// under a recorded trace reproduces `x` bitwise, because the schedule —
+/// not the residuals — drives every decode-width choice.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct PrecisionTrace {
+    events: Vec<PrecisionEvent>,
+}
+
+impl PrecisionTrace {
+    /// Append a change point.  `pass` values must be non-decreasing
+    /// (the controller appends in pass order).
+    pub fn push(&mut self, event: PrecisionEvent) {
+        debug_assert!(
+            !self.events.last().is_some_and(|e| e.pass > event.pass),
+            "precision events must be pushed in pass order"
+        );
+        self.events.push(event);
+    }
+
+    /// The recorded change points, in pass order.
+    pub fn events(&self) -> &[PrecisionEvent] {
+        &self.events
+    }
+
+    /// Number of change points (a static solve records exactly one).
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// True if nothing was recorded.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Scheme in force for SpMV pass `pass`: the last event at or
+    /// before it.  An empty trace (or a pass before the first event)
+    /// falls back to the first event's scheme / [`Scheme::default`].
+    pub fn scheme_at(&self, pass: u32) -> Scheme {
+        let mut s = self.events.first().map_or(Scheme::default(), |e| e.scheme);
+        for e in &self.events {
+            if e.pass <= pass {
+                s = e.scheme;
+            } else {
+                break;
+            }
+        }
+        s
+    }
+
+    /// Did the solve ever switch scheme mid-flight?
+    pub fn switched(&self) -> bool {
+        self.events.len() > 1
+    }
+
+    /// Time-plane M1 traffic of a solve that ran `iters` iterations
+    /// under this schedule: passes `0..=iters` each stream `nnz` values
+    /// at the *active* scheme's [`Scheme::nnz_bytes`].  This is the
+    /// quantity the adaptive Table-7 gate compares against static FP64
+    /// (`(iters + 1) * nnz * 16`).
+    pub fn modeled_m1_bytes(&self, nnz: u64, iters: u32) -> u64 {
+        (0..=iters).map(|p| nnz * self.scheme_at(p).nnz_bytes()).sum()
+    }
+
+    /// Serialize as CSV (`pass,scheme,reason` header + one row per
+    /// change point).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("pass,scheme,reason\n");
+        for e in &self.events {
+            out.push_str(&format!("{},{},{}\n", e.pass, e.scheme.name(), e.reason.name()));
+        }
+        out
+    }
+
+    /// Parse the [`to_csv`](Self::to_csv) format (header optional).
+    /// Rejects unknown schemes/reasons and out-of-order passes.
+    pub fn from_csv(text: &str) -> Result<Self, String> {
+        let mut trace = PrecisionTrace::default();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line == "pass,scheme,reason" {
+                continue;
+            }
+            let mut cols = line.split(',');
+            let (pass, scheme, reason) = (cols.next(), cols.next(), cols.next());
+            let (Some(pass), Some(scheme), Some(reason), None) = (pass, scheme, reason, cols.next())
+            else {
+                return Err(format!("line {}: expected `pass,scheme,reason`", ln + 1));
+            };
+            let pass: u32 =
+                pass.trim().parse().map_err(|e| format!("line {}: bad pass: {e}", ln + 1))?;
+            let scheme = Scheme::from_name(scheme.trim())
+                .ok_or_else(|| format!("line {}: unknown scheme `{}`", ln + 1, scheme.trim()))?;
+            let reason = SwitchReason::from_name(reason.trim())
+                .ok_or_else(|| format!("line {}: unknown reason `{}`", ln + 1, reason.trim()))?;
+            if trace.events.last().is_some_and(|e| e.pass > pass) {
+                return Err(format!("line {}: passes must be non-decreasing", ln + 1));
+            }
+            trace.push(PrecisionEvent { pass, scheme, reason });
+        }
+        Ok(trace)
+    }
+}
+
+/// Per-solve precision state machine.
+///
+/// Protocol (identical across every execution path — this is what makes
+/// the trace deterministic):
+///
+/// 1. [`current`](Self::current) names the scheme for the next SpMV
+///    pass.  Before any observation that is the pass-0 (init) scheme.
+/// 2. After a pass's squared residual `rr` is known **and the solve
+///    continues**, the driver calls [`observe`](Self::observe) exactly
+///    once.  The controller may escalate; the change takes effect from
+///    the next pass.  The final residual of a converged / iteration-
+///    capped solve is *not* observed — no pass runs under it.
+#[derive(Debug, Clone)]
+pub struct PrecisionController {
+    current: Scheme,
+    observed: u32,
+    trace: PrecisionTrace,
+    kind: Kind,
+}
+
+#[derive(Debug, Clone)]
+enum Kind {
+    Fixed,
+    Adaptive {
+        policy: AdaptivePolicy,
+        tol: f64,
+        /// Last `stall_window` observed rr values, oldest first.
+        hist: VecDeque<f64>,
+        escalated: bool,
+    },
+    Replay { schedule: PrecisionTrace },
+}
+
+impl PrecisionController {
+    /// A controller that never switches: the static schemes of Table 1.
+    pub fn fixed(scheme: Scheme) -> Self {
+        let mut trace = PrecisionTrace::default();
+        trace.push(PrecisionEvent { pass: 0, scheme, reason: SwitchReason::Static });
+        Self { current: scheme, observed: 0, trace, kind: Kind::Fixed }
+    }
+
+    /// The residual-driven controller.  `tol` is the solve's squared-
+    /// residual tolerance (the guard band is relative to it).
+    pub fn adaptive(policy: AdaptivePolicy, tol: f64) -> Self {
+        let mut trace = PrecisionTrace::default();
+        trace.push(PrecisionEvent { pass: 0, scheme: policy.start, reason: SwitchReason::Start });
+        Self {
+            current: policy.start,
+            observed: 0,
+            trace,
+            kind: Kind::Adaptive {
+                policy,
+                tol,
+                hist: VecDeque::with_capacity(policy.stall_window as usize + 1),
+                escalated: false,
+            },
+        }
+    }
+
+    /// A controller that replays a recorded schedule instead of
+    /// deciding: pass p runs `schedule.scheme_at(p)` regardless of the
+    /// residuals.  Replaying the trace of a finished solve therefore
+    /// reproduces its results bitwise.
+    pub fn replay(schedule: &PrecisionTrace) -> Self {
+        Self {
+            current: schedule.scheme_at(0),
+            observed: 0,
+            trace: schedule.clone(),
+            kind: Kind::Replay { schedule: schedule.clone() },
+        }
+    }
+
+    /// The controller a [`PrecisionMode`] describes, given the solve
+    /// tolerance and the scheme the executor would otherwise run.
+    pub fn for_mode(mode: PrecisionMode, fallback: Scheme, tol: f64) -> Self {
+        match mode {
+            PrecisionMode::Static(_) => Self::fixed(fallback),
+            PrecisionMode::Adaptive(policy) => Self::adaptive(policy, tol),
+        }
+    }
+
+    /// Scheme the next SpMV pass must decode.
+    pub fn current(&self) -> Scheme {
+        self.current
+    }
+
+    /// Residual observations so far (== the index of the next pass).
+    pub fn observed(&self) -> u32 {
+        self.observed
+    }
+
+    /// Can this controller change scheme mid-solve (adaptive or
+    /// replay)?  Fixed controllers are inert and never require the
+    /// executor to rebind.
+    pub fn is_adaptive(&self) -> bool {
+        !matches!(self.kind, Kind::Fixed)
+    }
+
+    /// Feed the squared residual of the pass that just finished (call
+    /// only if the solve continues — see the type-level protocol).
+    pub fn observe(&mut self, rr: f64) {
+        self.observed += 1;
+        match &mut self.kind {
+            Kind::Fixed => {}
+            Kind::Replay { schedule } => {
+                self.current = schedule.scheme_at(self.observed);
+            }
+            Kind::Adaptive { policy, tol, hist, escalated } => {
+                let window = policy.stall_window as usize;
+                let stalled = window > 0
+                    && hist.len() == window
+                    && rr > policy.stall_ratio * *hist.front().expect("non-empty window");
+                if window > 0 {
+                    if hist.len() == window {
+                        hist.pop_front();
+                    }
+                    hist.push_back(rr);
+                }
+                if !*escalated {
+                    let reason = if rr <= policy.guard_band * *tol {
+                        Some(SwitchReason::GuardBand)
+                    } else if stalled {
+                        Some(SwitchReason::Stall)
+                    } else {
+                        None
+                    };
+                    if let Some(reason) = reason {
+                        *escalated = true;
+                        // A no-op escalation (escalate_to == start) is
+                        // sticky but records nothing: the schedule did
+                        // not change.
+                        if policy.escalate_to != policy.start {
+                            self.current = policy.escalate_to;
+                            self.trace.push(PrecisionEvent {
+                                pass: self.observed,
+                                scheme: policy.escalate_to,
+                                reason,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// The recorded schedule so far.
+    pub fn trace(&self) -> &PrecisionTrace {
+        &self.trace
+    }
+
+    /// Consume the controller, yielding the schedule it recorded (for
+    /// a replay controller: the schedule it replayed).
+    pub fn into_trace(self) -> PrecisionTrace {
+        self.trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_controller_never_switches_and_records_one_event() {
+        let mut c = PrecisionController::fixed(Scheme::MixV2);
+        for rr in [1e3, 1e-20, 5e2] {
+            c.observe(rr);
+            assert_eq!(c.current(), Scheme::MixV2);
+        }
+        assert!(!c.is_adaptive());
+        let t = c.into_trace();
+        assert_eq!(
+            t.events(),
+            &[PrecisionEvent { pass: 0, scheme: Scheme::MixV2, reason: SwitchReason::Static }]
+        );
+        assert!(!t.switched());
+    }
+
+    #[test]
+    fn guard_band_escalates_on_tolerance_approach() {
+        let policy = AdaptivePolicy { guard_band: 100.0, stall_window: 0, ..Default::default() };
+        let mut c = PrecisionController::adaptive(policy, 1e-10);
+        c.observe(1.0);
+        assert_eq!(c.current(), Scheme::MixV3);
+        c.observe(9.9e-9); // <= 100 * 1e-10
+        assert_eq!(c.current(), Scheme::Fp64);
+        let t = c.into_trace();
+        assert_eq!(t.len(), 2);
+        assert_eq!(
+            t.events()[1],
+            PrecisionEvent { pass: 2, scheme: Scheme::Fp64, reason: SwitchReason::GuardBand }
+        );
+        // Pass mapping: passes 0 and 1 ran MixV3, pass 2 on runs Fp64.
+        assert_eq!(t.scheme_at(0), Scheme::MixV3);
+        assert_eq!(t.scheme_at(1), Scheme::MixV3);
+        assert_eq!(t.scheme_at(2), Scheme::Fp64);
+        assert_eq!(t.scheme_at(99), Scheme::Fp64);
+    }
+
+    #[test]
+    fn stall_detector_fires_after_a_flat_window() {
+        let policy = AdaptivePolicy {
+            stall_window: 3,
+            stall_ratio: 0.5,
+            guard_band: 0.0, // guard band off
+            ..Default::default()
+        };
+        let mut c = PrecisionController::adaptive(policy, 1e-12);
+        // Healthy progress: each window of 3 drops by > 2x.
+        for rr in [8.0, 4.0, 2.0, 0.9] {
+            c.observe(rr);
+            assert_eq!(c.current(), Scheme::MixV3, "still converging at rr={rr}");
+        }
+        // Stall: 0.8 > 0.5 * rr[3 ago] = 0.5 * 4.0? No: 0.8 <= 2.0.
+        c.observe(0.8);
+        assert_eq!(c.current(), Scheme::MixV3);
+        // 0.7 > 0.5 * 0.9 = 0.45 -> stalled.
+        c.observe(0.7);
+        assert_eq!(c.current(), Scheme::Fp64);
+        let t = c.into_trace();
+        assert_eq!(
+            t.events()[1],
+            PrecisionEvent { pass: 6, scheme: Scheme::Fp64, reason: SwitchReason::Stall }
+        );
+    }
+
+    #[test]
+    fn escalation_is_sticky() {
+        let policy = AdaptivePolicy::default();
+        let mut c = PrecisionController::adaptive(policy, 1e-2);
+        c.observe(1e-3); // within guard band immediately
+        assert_eq!(c.current(), Scheme::Fp64);
+        c.observe(1e6); // residual explodes — stays escalated
+        assert_eq!(c.current(), Scheme::Fp64);
+        assert_eq!(c.into_trace().len(), 2);
+    }
+
+    #[test]
+    fn degenerate_escalation_to_start_records_nothing() {
+        let policy =
+            AdaptivePolicy { start: Scheme::Fp64, escalate_to: Scheme::Fp64, ..Default::default() };
+        let mut c = PrecisionController::adaptive(policy, 1e-2);
+        c.observe(1e-9);
+        c.observe(1e-9);
+        assert_eq!(c.current(), Scheme::Fp64);
+        let t = c.into_trace();
+        assert_eq!(t.len(), 1, "no-op escalation must not add change points");
+        assert_eq!(t.events()[0].reason, SwitchReason::Start);
+    }
+
+    #[test]
+    fn replay_reproduces_a_recorded_schedule_without_residuals() {
+        let policy = AdaptivePolicy { guard_band: 1e6, ..Default::default() };
+        let mut live = PrecisionController::adaptive(policy, 1e-8);
+        let residuals = [1.0, 0.5, 0.25, 1e-3, 1e-5];
+        let mut live_schemes = vec![live.current()];
+        for rr in residuals {
+            live.observe(rr);
+            live_schemes.push(live.current());
+        }
+        let trace = live.into_trace();
+
+        let mut rep = PrecisionController::replay(&trace);
+        let mut rep_schemes = vec![rep.current()];
+        for _ in residuals {
+            rep.observe(f64::NAN); // residuals must not matter
+            rep_schemes.push(rep.current());
+        }
+        assert_eq!(live_schemes, rep_schemes);
+        assert_eq!(rep.into_trace(), trace);
+    }
+
+    #[test]
+    fn csv_roundtrip_and_rejects() {
+        let policy = AdaptivePolicy::default();
+        let mut c = PrecisionController::adaptive(policy, 1e-10);
+        c.observe(1.0);
+        c.observe(1e-9);
+        let t = c.into_trace();
+        let csv = t.to_csv();
+        assert_eq!(PrecisionTrace::from_csv(&csv).unwrap(), t);
+        // Header optional, whitespace tolerated.
+        assert_eq!(PrecisionTrace::from_csv("0, mixv3, start\n").unwrap().len(), 1);
+        assert!(PrecisionTrace::from_csv("0,fp128,static\n").is_err());
+        assert!(PrecisionTrace::from_csv("0,fp64,because\n").is_err());
+        assert!(PrecisionTrace::from_csv("5,fp64,static\n1,mixv3,stall\n").is_err());
+        assert!(PrecisionTrace::from_csv("x,fp64,static\n").is_err());
+    }
+
+    #[test]
+    fn modeled_m1_bytes_charges_by_active_scheme() {
+        let mut t = PrecisionTrace::default();
+        t.push(PrecisionEvent { pass: 0, scheme: Scheme::MixV3, reason: SwitchReason::Start });
+        t.push(PrecisionEvent { pass: 3, scheme: Scheme::Fp64, reason: SwitchReason::Stall });
+        // 10 iterations -> passes 0..=10: 3 at 8 B/nnz + 8 at 16 B/nnz.
+        let nnz = 1000u64;
+        assert_eq!(t.modeled_m1_bytes(nnz, 10), nnz * (3 * 8 + 8 * 16));
+        // Static fp64 reference.
+        let f = PrecisionController::fixed(Scheme::Fp64).into_trace();
+        assert_eq!(f.modeled_m1_bytes(nnz, 10), nnz * 11 * 16);
+    }
+
+    #[test]
+    fn policy_f32_need_covers_both_ends() {
+        assert!(AdaptivePolicy::default().needs_f32());
+        let all64 =
+            AdaptivePolicy { start: Scheme::Fp64, escalate_to: Scheme::Fp64, ..Default::default() };
+        assert!(!all64.needs_f32());
+        let down =
+            AdaptivePolicy { start: Scheme::Fp64, escalate_to: Scheme::MixV3, ..Default::default() };
+        assert!(down.needs_f32());
+    }
+}

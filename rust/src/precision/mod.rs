@@ -16,6 +16,8 @@
 
 use crate::sparse::CsrMatrix;
 
+pub mod adaptive;
+
 /// Instrumentation for the matrix-traffic story: how many matrix values
 /// the SpMV kernels streamed on *this thread*.
 ///
@@ -108,6 +110,41 @@ impl Scheme {
     /// Does the matrix value stream hold f32?
     pub fn matrix_f32(self) -> bool {
         !matches!(self, Scheme::Fp64)
+    }
+
+    /// Inverse of [`name`](Self::name) (CLI / trace-CSV parsing).
+    pub fn from_name(name: &str) -> Option<Scheme> {
+        match name {
+            "fp64" => Some(Scheme::Fp64),
+            "mixv1" => Some(Scheme::MixV1),
+            "mixv2" => Some(Scheme::MixV2),
+            "mixv3" => Some(Scheme::MixV3),
+            _ => None,
+        }
+    }
+
+    /// This scheme's code in the 3-bit Type-I precision field (Table-1
+    /// order).  Codes 4..=7 are reserved and must decode to an explicit
+    /// error — see `isa::InstVCtrl::decode`.
+    pub const fn wire_code(self) -> u8 {
+        match self {
+            Scheme::Fp64 => 0,
+            Scheme::MixV1 => 1,
+            Scheme::MixV2 => 2,
+            Scheme::MixV3 => 3,
+        }
+    }
+
+    /// Inverse of [`wire_code`](Self::wire_code); `None` for the
+    /// reserved encodings.
+    pub const fn from_wire_code(code: u8) -> Option<Scheme> {
+        match code {
+            0 => Some(Scheme::Fp64),
+            1 => Some(Scheme::MixV1),
+            2 => Some(Scheme::MixV2),
+            3 => Some(Scheme::MixV3),
+            _ => None,
+        }
     }
 }
 

@@ -13,6 +13,7 @@
 use crate::hbm::ChannelMode;
 use crate::isa::{InstCmp, InstRdWr, InstVCtrl};
 use crate::modules::fsm::{self, Endpoint};
+use crate::precision::Scheme;
 use crate::vsr::{self, Module, Phase, Vector};
 
 use super::{
@@ -68,12 +69,16 @@ fn make_vec_step(
     let base_addr =
         if rd_to.is_some() { region.rd_addr(read_idx) } else { region.wr_addr(map.mode) };
     let q_id = rd_to.map(|m| m as u8).unwrap_or(0);
+    // The compiled word carries the default scheme; like alpha/beta,
+    // the live precision is bound per lane at issue time (the bus
+    // re-stamps this field from its `Scalars`).
     let vctrl = InstVCtrl {
         rd: rd_to.is_some(),
         wr: wr_from.is_some(),
         base_addr,
         len: n,
         q_id,
+        precision: Scheme::default(),
     };
     let rd_inst = rd_to.map(|_| InstRdWr {
         rd: true,

@@ -18,6 +18,7 @@
 
 use crate::coordinator::PhaseExecutor;
 use crate::isa::{InstCmp, InstTrace, Instruction, MemResponse};
+use crate::precision::Scheme;
 use crate::vsr::{Module, Vector};
 
 use super::{PhaseProgram, ScalarBind, TripKind};
@@ -29,6 +30,10 @@ pub struct Scalars {
     pub alpha: f64,
     /// Direction coefficient beta (Alg. 1 line 13).
     pub beta: f64,
+    /// Precision scheme this trip decodes — the third bound-at-issue
+    /// scalar (PR 8).  Stamped into every Type-I word the trip issues;
+    /// lanes of one batch may carry different schemes.
+    pub scheme: Scheme,
 }
 
 /// Scalars a trip's dot modules returned to the controller.
@@ -203,6 +208,22 @@ pub trait InstDispatch {
         false
     }
 
+    /// Rebind the precision scheme the backend's next SpMV decodes — a
+    /// decode-width change, not a data move (the f32 value stream
+    /// already exists beside the f64 one for the Mix schemes).  The
+    /// adaptive-precision coordinator calls this before a trip whose
+    /// bound scheme differs from the backend's.  The default ignores
+    /// the bind: a backend that cannot switch simply keeps its built-in
+    /// scheme (static-precision solves never call this).
+    fn bind_scheme(&mut self, _scheme: Scheme) {}
+
+    /// Scheme the backend's SpMV currently decodes.  Backends that
+    /// honor [`bind_scheme`](Self::bind_scheme) must report the live
+    /// binding; the default reports [`Scheme::default`].
+    fn active_scheme(&self) -> Scheme {
+        Scheme::default()
+    }
+
     /// Whether this backend serves the **resident block vector ops**
     /// below — the batch-wide M2–M8 data plane of the coordinator's
     /// resident block mode.  The coordinator probes this once per chunk
@@ -367,7 +388,7 @@ impl InstructionBus {
         exec: &mut D,
         mem: &mut VectorFile,
     ) -> DispatchReturn {
-        self.issue_reads(prog, lane_offset_beats);
+        self.issue_reads(prog, lane_offset_beats, scalars.scheme);
         self.bind_cmds(prog, scalars);
         let ret = exec.dispatch(prog, &self.bound, mem);
         self.issue_writes(prog, lane_offset_beats, Some(mem));
@@ -385,20 +406,23 @@ impl InstructionBus {
     /// §4.2 handshake observably unchanged while the element traffic
     /// moves to the block kernels.
     pub fn issue_lane(&mut self, prog: &PhaseProgram, scalars: Scalars, lane_offset_beats: u32) {
-        self.issue_reads(prog, lane_offset_beats);
+        self.issue_reads(prog, lane_offset_beats, scalars.scheme);
         self.bind_cmds(prog, scalars);
         self.issue_writes(prog, lane_offset_beats, None);
     }
 
     /// Stage 1 of a trip: trace the Type-I vector-control instructions
     /// and their Type-III read decompositions, with per-RHS addresses
-    /// rebased by the lane offset (the shared diagonal M never rebases).
-    fn issue_reads(&mut self, prog: &PhaseProgram, lane_offset_beats: u32) {
+    /// rebased by the lane offset (the shared diagonal M never rebases)
+    /// and the lane's live precision scheme stamped into each Type-I
+    /// word — same issue-time binding as alpha/beta in `bind_cmds`.
+    fn issue_reads(&mut self, prog: &PhaseProgram, lane_offset_beats: u32, scheme: Scheme) {
         let lane_off = |v: Vector| if v == Vector::M { 0 } else { lane_offset_beats };
         if self.record {
             for s in &prog.vec_steps {
                 let mut vctrl = s.vctrl;
                 vctrl.base_addr += lane_off(s.vector);
+                vctrl.precision = scheme;
                 self.trace.record(s.name, Instruction::VCtrl(vctrl));
                 if let Some(mut rd) = s.rd_inst {
                     rd.base_addr += lane_off(s.vector);
@@ -555,6 +579,41 @@ mod tests {
     }
 
     #[test]
+    fn issue_binds_the_precision_scheme_into_every_type_i_word() {
+        // The precision scalar is bound at issue time like alpha/beta:
+        // whatever scheme the Scalars carry is what every traced Type-I
+        // word of the trip reports, for all four schemes.
+        struct Null;
+        impl InstDispatch for Null {
+            fn dispatch(
+                &mut self,
+                _p: &PhaseProgram,
+                _c: &[InstCmp],
+                _m: &mut VectorFile,
+            ) -> DispatchReturn {
+                DispatchReturn::default()
+            }
+        }
+        let prog = Program::compile(64, ChannelMode::Double);
+        for scheme in Scheme::ALL {
+            let mut bus = InstructionBus::new(true);
+            let mut mem = VectorFile::new(&[1.0; 64], &[0.0; 64]);
+            for trip in prog.all_trips() {
+                bus.dispatch(trip, Scalars { alpha: 0.5, beta: 0.25, scheme }, &mut Null, &mut mem);
+            }
+            let trace = bus.take_trace();
+            let mut type_i = 0;
+            for (_, inst) in &trace.issued {
+                if let Instruction::VCtrl(v) = inst {
+                    assert_eq!(v.precision, scheme, "Type-I word not stamped with {scheme:?}");
+                    type_i += 1;
+                }
+            }
+            assert!(type_i > 0, "the five trips must issue Type-I words");
+        }
+    }
+
+    #[test]
     fn lane_slice_trip_is_dispatch_lane_on_the_bundled_state() {
         struct Null;
         impl InstDispatch for Null {
@@ -600,7 +659,7 @@ mod tests {
         }
         let prog = Program::compile_batched(64, ChannelMode::Double, 4);
         let off = prog.lane_offset_beats(2);
-        let scalars = Scalars { alpha: 0.75, beta: -0.125 };
+        let scalars = Scalars { alpha: 0.75, beta: -0.125, scheme: Scheme::MixV2 };
         for trip in prog.all_trips() {
             let mut full = InstructionBus::new(true);
             let mut mem = VectorFile::new(&[1.0; 64], &[0.0; 64]);
@@ -638,7 +697,13 @@ mod tests {
         let mut bus = InstructionBus::new(true);
         let mut mem = VectorFile::new(&[1.0; 64], &[0.0; 64]);
         let p3 = prog.phase(crate::vsr::Phase::Phase3);
-        bus.dispatch_lane(p3, Scalars { alpha: 0.5, beta: 0.25 }, off, &mut Null, &mut mem);
+        bus.dispatch_lane(
+            p3,
+            Scalars { alpha: 0.5, beta: 0.25, scheme: Scheme::default() },
+            off,
+            &mut Null,
+            &mut mem,
+        );
         let trace = bus.take_trace();
         for (target, inst) in &trace.issued {
             let (vector, compiled_addr) = match p3

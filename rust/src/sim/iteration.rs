@@ -445,6 +445,57 @@ pub fn solver_seconds(cfg: &AccelSimConfig, n: usize, nnz: usize, iters: u32) ->
     cycles * cfg.hbm.cycle_time()
 }
 
+/// Total modeled cycles for a solve whose per-pass precision followed a
+/// recorded [`PrecisionTrace`]: pass `p` (0 = the Alg. 1 init SpMV,
+/// `1..=iters` the Phase-1 trips) is priced with its **active scheme's**
+/// nnz stream width — `trace.scheme_at(p)` overrides `cfg.scheme` for
+/// that pass, so an adaptive solve that ran most passes in Mix-V3 and
+/// escalated to FP64 late pays the wide M1 beats only for the FP64
+/// tail.  A static trace (one event) degenerates to
+/// `(iters + 1) x iteration_cycles` of that scheme.  Per-scheme
+/// iteration cycles are memoized, so a solve with `k` distinct schemes
+/// runs `k` phase-graph simulations, not `iters + 1`.
+pub fn traced_solver_cycles(
+    cfg: &AccelSimConfig,
+    n: usize,
+    nnz: usize,
+    iters: u32,
+    trace: &crate::precision::adaptive::PrecisionTrace,
+) -> u64 {
+    // Scheme has no Hash; index the memo by its 3-bit wire code.
+    let mut per_scheme: [Option<u64>; 4] = [None; 4];
+    let mut total = 0u64;
+    for pass in 0..=iters {
+        let scheme = trace.scheme_at(pass);
+        let slot = &mut per_scheme[scheme.wire_code() as usize];
+        let cycles = match *slot {
+            Some(c) => c,
+            None => {
+                let mut pass_cfg = *cfg;
+                pass_cfg.scheme = scheme;
+                let c = iteration_cycles(&pass_cfg, n, nnz).total;
+                *slot = Some(c);
+                c
+            }
+        };
+        total += cycles;
+    }
+    total
+}
+
+/// [`traced_solver_cycles`] in seconds — the trace-aware counterpart of
+/// [`solver_seconds`].  With a single-scheme trace matching
+/// `cfg.scheme` the two agree exactly.
+pub fn traced_solver_seconds(
+    cfg: &AccelSimConfig,
+    n: usize,
+    nnz: usize,
+    iters: u32,
+    trace: &crate::precision::adaptive::PrecisionTrace,
+) -> f64 {
+    traced_solver_cycles(cfg, n, nnz, iters, trace) as f64 * cfg.hbm.cycle_time()
+}
+
 // --------------------------------------------------------------------
 // A100 GPU analytic model (§7.2.2's explanation, quantified).
 // --------------------------------------------------------------------
@@ -804,6 +855,55 @@ mod tests {
         let trace = [one, ScheduledBatch { trips: 3, ..one }];
         assert_eq!(schedule_cycles(&cfg, &trace), 13 * per_iter);
         assert_eq!(schedule_cycles(&cfg, &[]), 0);
+    }
+
+    #[test]
+    fn traced_pricing_matches_static_and_brackets_adaptive() {
+        use crate::precision::adaptive::{PrecisionEvent, PrecisionTrace, SwitchReason};
+        let cfg = AccelSimConfig::callipepla();
+        let iters = 200u32;
+
+        // A single-event trace at the config's own scheme is exactly
+        // the untraced pricing.
+        let mut static_mix = PrecisionTrace::default();
+        static_mix.push(PrecisionEvent {
+            pass: 0,
+            scheme: Scheme::MixV3,
+            reason: SwitchReason::Static,
+        });
+        let mix_cycles = traced_solver_cycles(&cfg, N, NNZ, iters, &static_mix);
+        let untraced = iteration_cycles(&cfg, N, NNZ).total * (iters as u64 + 1);
+        assert_eq!(mix_cycles, untraced);
+        let secs = traced_solver_seconds(&cfg, N, NNZ, iters, &static_mix);
+        assert!((secs - solver_seconds(&cfg, N, NNZ, iters)).abs() < 1e-12);
+
+        // Static FP64 pays the wide M1 beats every pass.
+        let mut static_fp64 = PrecisionTrace::default();
+        static_fp64.push(PrecisionEvent {
+            pass: 0,
+            scheme: Scheme::Fp64,
+            reason: SwitchReason::Static,
+        });
+        let fp64_cycles = traced_solver_cycles(&cfg, N, NNZ, iters, &static_fp64);
+        assert!(fp64_cycles > mix_cycles, "fp64={fp64_cycles} mix={mix_cycles}");
+
+        // An adaptive trace that escalates at pass 150 lands strictly
+        // between the two static envelopes.
+        let mut adaptive = static_mix.clone();
+        adaptive.push(PrecisionEvent {
+            pass: 150,
+            scheme: Scheme::Fp64,
+            reason: SwitchReason::Stall,
+        });
+        let ad_cycles = traced_solver_cycles(&cfg, N, NNZ, iters, &adaptive);
+        assert!(
+            mix_cycles < ad_cycles && ad_cycles < fp64_cycles,
+            "mix={mix_cycles} adaptive={ad_cycles} fp64={fp64_cycles}"
+        );
+        // And is exactly the per-pass sum of the two scheme prices.
+        let mix_iter = mix_cycles / (iters as u64 + 1);
+        let fp64_iter = fp64_cycles / (iters as u64 + 1);
+        assert_eq!(ad_cycles, 150 * mix_iter + 51 * fp64_iter);
     }
 
     #[test]

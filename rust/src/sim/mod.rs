@@ -20,6 +20,6 @@ pub use dataflow::{Dataflow, FifoId, NodeId, SimError, SimStats};
 pub use iteration::{
     batched_iteration_cycles, batched_iteration_cycles_mode, batched_rhs_iterations_per_second,
     iteration_cycles, lane_parallel_iteration_cycles, lane_parallel_rhs_iterations_per_second,
-    schedule_cycles, solver_seconds, AccelSimConfig, BatchSpmvMode, IterationBreakdown,
-    ScheduledBatch,
+    schedule_cycles, solver_seconds, traced_solver_cycles, traced_solver_seconds, AccelSimConfig,
+    BatchSpmvMode, IterationBreakdown, ScheduledBatch,
 };

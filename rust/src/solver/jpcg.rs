@@ -14,6 +14,7 @@
 //! matrix-derived caches (`vals_f32`, `jacobi_diag`) are injectable
 //! ([`jpcg_solve_cached`]) so repeated solves stop re-deriving them.
 
+use crate::precision::adaptive::{AdaptivePolicy, PrecisionController, PrecisionTrace};
 use crate::precision::{
     dot_with, spmv_scheme, AccumulatorModel, DelayDot, DotAccumulator, Scheme, SeqDot,
 };
@@ -47,6 +48,14 @@ pub struct SolveOptions {
     pub max_iters: u32,
     /// Record rr per iteration (Fig. 9 traces).
     pub record_trace: bool,
+    /// Adaptive precision governance (PR 8).  `None` pins
+    /// [`SolveOptions::scheme`] for the whole solve (every prior
+    /// behavior, bit for bit).  `Some(policy)` starts on the policy's
+    /// start scheme — `scheme` is then ignored — and escalates when the
+    /// residual history triggers the policy; the decision sequence is
+    /// recorded in [`SolveResult::precision`] and is a pure function of
+    /// the rr sequence.
+    pub adaptive: Option<AdaptivePolicy>,
 }
 
 impl Default for SolveOptions {
@@ -58,6 +67,7 @@ impl Default for SolveOptions {
             tol: 1e-12,
             max_iters: 20_000,
             record_trace: false,
+            adaptive: None,
         }
     }
 }
@@ -114,6 +124,11 @@ pub struct SolveResult {
     pub trace: ResidualTrace,
     /// Floating-point operations executed (throughput metric, Table 5).
     pub flops: u64,
+    /// The precision schedule that produced `x` (PR 8): which scheme
+    /// governed each SpMV pass (pass 0 = init, pass k = iteration k)
+    /// and why.  Fixed-scheme solves carry one event; an adaptive
+    /// schedule replays bitwise through [`super::jpcg_solve_replay`].
+    pub precision: PrecisionTrace,
 }
 
 /// Reusable per-solve scratch vectors (r, ap, z, p).  A batch server
@@ -156,8 +171,38 @@ pub fn jpcg_solve(
     opts: &SolveOptions,
 ) -> SolveResult {
     let m = a.jacobi_diag();
-    let vals32 = if opts.scheme.matrix_f32() { a.vals_f32() } else { Vec::new() };
+    // An adaptive solve may run mixed schemes at either end of its
+    // policy, so the f32 view is derived whenever any reachable scheme
+    // streams the matrix in f32.
+    let needs_f32 =
+        opts.scheme.matrix_f32() || opts.adaptive.is_some_and(|p| p.needs_f32());
+    let vals32 = if needs_f32 { a.vals_f32() } else { Vec::new() };
     jpcg_solve_cached(a, &vals32, &m, b, x0, opts)
+}
+
+/// Re-run a solve under a recorded precision schedule: pass `k` uses
+/// `schedule.scheme_at(k)` with **no** residual inspection, so the
+/// replay is a pure function of the schedule — it reproduces the
+/// original adaptive solve bit for bit (x, iteration count, rr trace)
+/// from the trace alone.  `opts.scheme` / `opts.adaptive` are ignored;
+/// everything else (dot model, accumulator, tol, cap) must match the
+/// recording run.
+pub fn jpcg_solve_replay(
+    a: &CsrMatrix,
+    b: Option<&[f64]>,
+    x0: Option<&[f64]>,
+    opts: &SolveOptions,
+    schedule: &PrecisionTrace,
+) -> SolveResult {
+    let m = a.jacobi_diag();
+    let needs_f32 = schedule.events().iter().any(|e| e.scheme.matrix_f32());
+    let vals32 = if needs_f32 { a.vals_f32() } else { Vec::new() };
+    let mut ws = SolveWorkspace::new();
+    let ctrl = PrecisionController::replay(schedule);
+    let acc = opts.accumulator;
+    jpcg_solve_with_spmv_ctrl(a.n, a.nnz(), &m, b, x0, opts, &mut ws, ctrl, |x, y, s, salt| {
+        spmv_scheme(a, &vals32, x, y, s, acc, salt)
+    })
 }
 
 /// [`jpcg_solve`] with the matrix-derived caches supplied by the caller:
@@ -189,19 +234,20 @@ pub fn jpcg_solve_cached_ws(
     opts: &SolveOptions,
     ws: &mut SolveWorkspace,
 ) -> SolveResult {
-    let scheme = opts.scheme;
     let acc = opts.accumulator;
-    jpcg_solve_with_spmv(a.n, a.nnz(), m, b, x0, opts, ws, |x, y, salt| {
-        spmv_scheme(a, vals32, x, y, scheme, acc, salt)
+    jpcg_solve_with_spmv(a.n, a.nnz(), m, b, x0, opts, ws, |x, y, s, salt| {
+        spmv_scheme(a, vals32, x, y, s, acc, salt)
     })
 }
 
-/// The solver loop with a pluggable SpMV: `spmv(x, y, salt)` must write
-/// y = A x under the configured scheme + accumulator model (`salt` is 0
-/// for the init pass and `iteration + 1` afterwards, feeding the
-/// PaddedUnstable perturbation).  The engine's parallel kernels and the
-/// serial path share this one loop, so their numerics cannot diverge by
-/// construction.
+/// The solver loop with a pluggable SpMV: `spmv(x, y, scheme, salt)`
+/// must write y = A x under the given scheme + the configured
+/// accumulator model (`salt` is 0 for the init pass and `iteration + 1`
+/// afterwards, feeding the PaddedUnstable perturbation; `scheme` is the
+/// precision controller's decision for this pass — constant
+/// `opts.scheme` unless `opts.adaptive` is set).  The engine's parallel
+/// kernels and the serial path share this one loop, so their numerics
+/// cannot diverge by construction.
 #[allow(clippy::too_many_arguments)]
 pub fn jpcg_solve_with_spmv<F>(
     n: usize,
@@ -214,7 +260,32 @@ pub fn jpcg_solve_with_spmv<F>(
     spmv: F,
 ) -> SolveResult
 where
-    F: FnMut(&[f64], &mut [f64], u64),
+    F: FnMut(&[f64], &mut [f64], Scheme, u64),
+{
+    let ctrl = match opts.adaptive {
+        Some(policy) => PrecisionController::adaptive(policy, opts.tol),
+        None => PrecisionController::fixed(opts.scheme),
+    };
+    jpcg_solve_with_spmv_ctrl(n, nnz, m, b, x0, opts, ws, ctrl, spmv)
+}
+
+/// [`jpcg_solve_with_spmv`] with an explicit precision controller —
+/// the seam [`jpcg_solve_replay`] uses to substitute a recorded
+/// schedule for live residual inspection.
+#[allow(clippy::too_many_arguments)]
+pub fn jpcg_solve_with_spmv_ctrl<F>(
+    n: usize,
+    nnz: usize,
+    m: &[f64],
+    b: Option<&[f64]>,
+    x0: Option<&[f64]>,
+    opts: &SolveOptions,
+    ws: &mut SolveWorkspace,
+    ctrl: PrecisionController,
+    spmv: F,
+) -> SolveResult
+where
+    F: FnMut(&[f64], &mut [f64], Scheme, u64),
 {
     let ones;
     let b = match b {
@@ -225,8 +296,8 @@ where
         }
     };
     match opts.dot {
-        DotKind::Sequential => solve_impl::<SeqDot, F>(n, nnz, m, b, x0, opts, ws, spmv),
-        DotKind::DelayBuffer => solve_impl::<DelayDot, F>(n, nnz, m, b, x0, opts, ws, spmv),
+        DotKind::Sequential => solve_impl::<SeqDot, F>(n, nnz, m, b, x0, opts, ws, ctrl, spmv),
+        DotKind::DelayBuffer => solve_impl::<DelayDot, F>(n, nnz, m, b, x0, opts, ws, ctrl, spmv),
     }
 }
 
@@ -239,11 +310,12 @@ fn solve_impl<D, F>(
     x0: Option<&[f64]>,
     opts: &SolveOptions,
     ws: &mut SolveWorkspace,
+    mut ctrl: PrecisionController,
     mut spmv: F,
 ) -> SolveResult
 where
     D: DotAccumulator,
-    F: FnMut(&[f64], &mut [f64], u64),
+    F: FnMut(&[f64], &mut [f64], Scheme, u64),
 {
     debug_assert_eq!(b.len(), n);
     debug_assert_eq!(m.len(), n);
@@ -257,7 +329,7 @@ where
     // the main loop, so it uses the same scheme/accumulator; the divide,
     // copy and both dots are one fused sweep (accumulation order per dot
     // unchanged — see precision::DotAccumulator).
-    spmv(&x, ap, 0);
+    spmv(&x, ap, ctrl.current(), 0);
     let mut rz_acc = D::default();
     let mut rr_acc = D::default();
     for i in 0..n {
@@ -272,13 +344,20 @@ where
 
     let mut trace = ResidualTrace::new(opts.record_trace);
     trace.push(rr);
+    // The controller observes a pass's rr only when the solve goes on
+    // to another pass — the final rr of a converged or capped solve is
+    // never observed.  The coordinator's note_init / note_phase3 gate
+    // identically, which is what makes the traces path-invariant.
+    if rr > opts.tol && opts.max_iters > 0 {
+        ctrl.observe(rr);
+    }
 
     let mut iters = 0u32;
     let mut flops = 2 * nnz as u64 + 6 * n as u64;
     // Line 6: for (0 <= i < N_max and rr > tau)
     while iters < opts.max_iters && rr > opts.tol {
         // --- Phase 1: M1 ap = A p ; M2 pap = p . ap --------------------
-        spmv(p, ap, iters as u64 + 1);
+        spmv(p, ap, ctrl.current(), iters as u64 + 1);
         let pap = dot_with::<D>(p, ap);
         let alpha = rz / pap;
 
@@ -308,9 +387,20 @@ where
         flops += flops_per_iter(n, nnz);
         iters += 1;
         trace.push(rr);
+        if rr > opts.tol && iters < opts.max_iters {
+            ctrl.observe(rr);
+        }
     }
 
-    SolveResult { x, iters, converged: rr <= opts.tol, final_rr: rr, trace, flops }
+    SolveResult {
+        x,
+        iters,
+        converged: rr <= opts.tol,
+        final_rr: rr,
+        trace,
+        flops,
+        precision: ctrl.into_trace(),
+    }
 }
 
 #[cfg(test)]
@@ -497,7 +587,15 @@ mod tests {
             iters += 1;
             trace.push(rr);
         }
-        SolveResult { x, iters, converged: rr <= opts.tol, final_rr: rr, trace, flops }
+        SolveResult {
+            x,
+            iters,
+            converged: rr <= opts.tol,
+            final_rr: rr,
+            trace,
+            flops,
+            precision: PrecisionTrace::default(),
+        }
     }
 
     #[test]
@@ -524,6 +622,44 @@ mod tests {
                 "solution drifted under fusion for {opts:?}"
             );
         }
+    }
+
+    #[test]
+    fn fixed_solves_record_a_single_event_schedule() {
+        let a = poisson(400);
+        let res = jpcg_solve(&a, None, None, &SolveOptions::callipepla());
+        assert_eq!(res.precision.events().len(), 1);
+        assert_eq!(res.precision.scheme_at(0), Scheme::MixV3);
+        assert_eq!(res.precision.scheme_at(res.iters), Scheme::MixV3);
+    }
+
+    #[test]
+    fn adaptive_solve_replays_bitwise_from_its_trace() {
+        let a = synth::banded_spd(1200, 9_600, 1e-5, 33);
+        let opts = SolveOptions {
+            adaptive: Some(AdaptivePolicy::default()),
+            record_trace: true,
+            ..SolveOptions::callipepla()
+        };
+        let live = jpcg_solve(&a, None, None, &opts);
+        assert!(live.converged, "rr={}", live.final_rr);
+        let replay = jpcg_solve_replay(&a, None, None, &opts, &live.precision);
+        assert_eq!(replay.iters, live.iters);
+        assert_eq!(replay.final_rr.to_bits(), live.final_rr.to_bits());
+        assert!(replay.x.iter().zip(&live.x).all(|(u, v)| u.to_bits() == v.to_bits()));
+        // The replay re-records the schedule it was fed.
+        assert_eq!(replay.precision, live.precision);
+    }
+
+    #[test]
+    fn adaptive_none_is_bitwise_the_fixed_path() {
+        // `adaptive: None` must not move a bit relative to the
+        // pre-controller solver (same loop, fixed controller inlined).
+        let a = synth::banded_spd(900, 7_200, 1e-3, 23);
+        let fixed = jpcg_solve(&a, None, None, &SolveOptions::callipepla());
+        let unfused = reference_unfused(&a, None, &SolveOptions::callipepla());
+        assert_eq!(fixed.iters, unfused.iters);
+        assert!(fixed.x.iter().zip(&unfused.x).all(|(u, v)| u.to_bits() == v.to_bits()));
     }
 
     #[test]

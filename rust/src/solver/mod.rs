@@ -11,7 +11,7 @@ pub mod jpcg;
 pub mod trace;
 
 pub use jpcg::{
-    jpcg_solve, jpcg_solve_cached, jpcg_solve_cached_ws, jpcg_solve_with_spmv, DotKind,
-    SolveOptions, SolveResult, SolveWorkspace,
+    jpcg_solve, jpcg_solve_cached, jpcg_solve_cached_ws, jpcg_solve_replay, jpcg_solve_with_spmv,
+    jpcg_solve_with_spmv_ctrl, DotKind, SolveOptions, SolveResult, SolveWorkspace,
 };
 pub use trace::ResidualTrace;

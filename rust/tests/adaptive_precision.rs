@@ -1,0 +1,227 @@
+//! The adaptive-precision correctness wall (ISSUE 8).
+//!
+//! The controller's decisions are a **pure function of the residual
+//! sequence** — no clocks, no thread ids, no dispatch-order state — so
+//! every dispatch path that produces the same rr sequence must emit the
+//! same [`PrecisionTrace`], and a recorded trace must replay the solve
+//! bitwise.  Three walls pin that:
+//!
+//! 1. **Path invariance**: randomized (matrix, policy) draws solved on
+//!    {sequential walk, lane-parallel, staged block, resident block} x
+//!    workers {1, 2, 8} produce identical traces *and* identical result
+//!    bits, lane for lane.
+//! 2. **Replay**: feeding a lane's recorded trace back through
+//!    [`jpcg_solve_replay`] reproduces x, rr, iters, and the trace
+//!    itself bitwise.
+//! 3. **Static regression pin**: with the controller off
+//!    (`opts.adaptive = None`) every scheme's solve is bitwise the
+//!    fixed-scheme path on all entry points — PR 8 must not move a bit
+//!    of existing behaviour.
+
+use callipepla::engine::PreparedMatrix;
+use callipepla::precision::adaptive::{AdaptivePolicy, PrecisionTrace, SwitchReason};
+use callipepla::precision::Scheme;
+use callipepla::solver::{jpcg_solve, jpcg_solve_replay, SolveOptions, SolveResult};
+use callipepla::sparse::{synth, CsrMatrix};
+use callipepla::util::rng::Rng64;
+
+/// Randomized draws per property wall (each draw is a full multi-path
+/// batch solve; keep the wall thorough but CI-sized).
+const PROPERTY_DRAWS: u64 = 5;
+const LANES: usize = 5;
+
+fn make_rhs(n: usize, lanes: usize) -> Vec<Vec<f64>> {
+    (0..lanes)
+        .map(|k| (0..n).map(|i| 0.5 + ((i * 13 + k * 89) % 19) as f64 / 19.0).collect())
+        .collect()
+}
+
+/// A random well-conditioned SPD system plus a random (but sane)
+/// adaptive policy — policies that can fire both the guard-band and the
+/// stall rule on systems this size.
+fn draw_case(rng: &mut Rng64) -> (CsrMatrix, AdaptivePolicy) {
+    let n = 300 + rng.gen_range(500);
+    let nnz = n * (6 + rng.gen_range(6));
+    let delta = [1e-2, 1e-3][rng.gen_range(2)];
+    let a = synth::banded_spd(n, nnz, delta, 0x5EED ^ rng.next_u64());
+    let (start, escalate_to) = [
+        (Scheme::MixV3, Scheme::Fp64),
+        (Scheme::MixV2, Scheme::Fp64),
+        (Scheme::MixV1, Scheme::MixV3),
+        (Scheme::MixV3, Scheme::MixV3), // degenerate: escalation is a no-op
+    ][rng.gen_range(4)];
+    let policy = AdaptivePolicy {
+        start,
+        escalate_to,
+        stall_window: [4, 8, 16][rng.gen_range(3)],
+        stall_ratio: [0.5, 0.9][rng.gen_range(2)],
+        guard_band: [10.0, 100.0][rng.gen_range(2)],
+    };
+    (a, policy)
+}
+
+fn bitwise_eq(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(u, v)| u.to_bits() == v.to_bits())
+}
+
+/// Full observable equality: solution bits, rr bits, iteration count,
+/// and the precision trace itself.
+fn assert_identical(want: &[SolveResult], got: &[SolveResult], what: &str) {
+    assert_eq!(want.len(), got.len(), "{what}: result count");
+    for (k, (w, g)) in want.iter().zip(got).enumerate() {
+        assert_eq!(w.iters, g.iters, "{what}: lane {k} iters");
+        assert_eq!(w.converged, g.converged, "{what}: lane {k} converged");
+        assert_eq!(w.final_rr.to_bits(), g.final_rr.to_bits(), "{what}: lane {k} rr bits");
+        assert!(bitwise_eq(&w.x, &g.x), "{what}: lane {k} solution bits");
+        assert_eq!(w.precision, g.precision, "{what}: lane {k} precision trace");
+    }
+}
+
+/// Every batch entry point the coordinator owns, against the
+/// sequential-walk oracle, at several worker counts.
+fn all_paths(prep: &PreparedMatrix, rhs: &[Vec<f64>], opts: &SolveOptions, what: &str) {
+    let seq = prep.solve_batch(rhs, opts);
+    for workers in [1usize, 2, 8] {
+        let par = prep.solve_batch_parallel(rhs, opts, None, workers);
+        assert_identical(&seq, &par, &format!("{what} lane-parallel w={workers}"));
+        let staged = prep.solve_batch_block_staged_parallel(rhs, opts, None, workers);
+        assert_identical(&seq, &staged, &format!("{what} block-staged w={workers}"));
+        let resident = prep.solve_batch_block_parallel(rhs, opts, None, workers);
+        assert_identical(&seq, &resident, &format!("{what} block-resident w={workers}"));
+    }
+    let staged = prep.solve_batch_block_staged(rhs, opts);
+    assert_identical(&seq, &staged, &format!("{what} block-staged seq"));
+    let resident = prep.solve_batch_block(rhs, opts);
+    assert_identical(&seq, &resident, &format!("{what} block-resident seq"));
+}
+
+#[test]
+fn adaptive_traces_are_invariant_across_every_dispatch_path() {
+    for draw in 0..PROPERTY_DRAWS {
+        let mut rng = Rng64::seed_from_u64(0xCA11_15A1 ^ (draw * 0x9E37));
+        let (a, policy) = draw_case(&mut rng);
+        let mut opts = SolveOptions::callipepla();
+        opts.adaptive = Some(policy);
+        opts.max_iters = 3_000;
+        let rhs = make_rhs(a.n, LANES);
+        let prep = PreparedMatrix::new(&a, 2);
+        // The oracle trace must actually be adaptive (a Start event at
+        // pass 0 under the policy's start scheme).
+        let seq = prep.solve_batch(&rhs, &opts);
+        for (k, r) in seq.iter().enumerate() {
+            let first = r.precision.events().first().expect("trace never empty");
+            assert_eq!(first.pass, 0, "draw {draw} lane {k}");
+            assert_eq!(first.scheme, policy.start, "draw {draw} lane {k}");
+            assert_eq!(first.reason, SwitchReason::Start, "draw {draw} lane {k}");
+        }
+        all_paths(&prep, &rhs, &opts, &format!("draw {draw}"));
+    }
+}
+
+#[test]
+fn lanes_escalating_at_different_passes_still_agree_across_paths() {
+    // Force a *mixed-scheme block*: per-lane rhs magnitudes spread the
+    // residual histories so lanes cross the guard band on different
+    // passes — the staged and resident block paths must regroup lanes
+    // by scheme mid-flight and still match the sequential walk bitwise.
+    let a = synth::banded_spd(900, 8_100, 1e-3, 77);
+    let mut rhs = make_rhs(a.n, LANES);
+    for (k, r) in rhs.iter_mut().enumerate() {
+        let scale = 10f64.powi(k as i32 - 2); // 1e-2 .. 1e2
+        r.iter_mut().for_each(|v| *v *= scale);
+    }
+    let mut opts = SolveOptions::callipepla();
+    opts.adaptive = Some(AdaptivePolicy::default());
+    let prep = PreparedMatrix::new(&a, 2);
+    let seq = prep.solve_batch(&rhs, &opts);
+    // The point of the setup: at least two lanes escalate on different
+    // passes (otherwise the block stays uniform and nothing is tested).
+    let switch_passes: Vec<Option<u32>> =
+        seq.iter().map(|r| r.precision.events().get(1).map(|e| e.pass)).collect();
+    let distinct: std::collections::BTreeSet<_> =
+        switch_passes.iter().flatten().copied().collect();
+    assert!(
+        distinct.len() >= 2,
+        "setup failed to produce staggered escalations: {switch_passes:?}"
+    );
+    all_paths(&prep, &rhs, &opts, "staggered escalation");
+}
+
+#[test]
+fn replay_reproduces_recorded_solves_bitwise() {
+    let mut rng = Rng64::seed_from_u64(0xCA11_15A2);
+    for draw in 0..PROPERTY_DRAWS {
+        let (a, policy) = draw_case(&mut rng);
+        let mut opts = SolveOptions::callipepla();
+        opts.adaptive = Some(policy);
+        opts.max_iters = 3_000;
+        let rhs = make_rhs(a.n, 2);
+        let prep = PreparedMatrix::new(&a, 2);
+        for (k, live) in prep.solve_batch(&rhs, &opts).iter().enumerate() {
+            let replay = jpcg_solve_replay(&a, Some(rhs[k].as_slice()), None, &opts, &live.precision);
+            let what = format!("draw {draw} lane {k}");
+            assert_eq!(live.iters, replay.iters, "{what} iters");
+            assert_eq!(live.final_rr.to_bits(), replay.final_rr.to_bits(), "{what} rr");
+            assert!(bitwise_eq(&live.x, &replay.x), "{what} solution bits");
+            assert_eq!(live.precision, replay.precision, "{what} trace");
+        }
+    }
+}
+
+#[test]
+fn replayed_csv_roundtrip_drives_the_same_solve() {
+    // Serialize a live trace to CSV, parse it back, replay from the
+    // parsed schedule: the full record/ship/re-run loop.
+    let a = synth::banded_spd(700, 6_300, 1e-3, 99);
+    let mut opts = SolveOptions::callipepla();
+    opts.adaptive = Some(AdaptivePolicy::default());
+    let live = jpcg_solve(&a, None, None, &opts);
+    assert!(live.converged);
+    let parsed = PrecisionTrace::from_csv(&live.precision.to_csv()).expect("roundtrip parses");
+    assert_eq!(parsed, live.precision);
+    let replay = jpcg_solve_replay(&a, None, None, &opts, &parsed);
+    assert!(bitwise_eq(&live.x, &replay.x), "replay-from-CSV solution bits");
+    assert_eq!(live.final_rr.to_bits(), replay.final_rr.to_bits());
+}
+
+#[test]
+fn static_mode_is_bitwise_the_fixed_paths_for_every_scheme() {
+    // The regression pin: adaptive machinery off (`opts.adaptive =
+    // None`) must leave all four schemes' results bitwise identical to
+    // the lone reference solve, on every batch entry point — and record
+    // exactly one Static event naming the scheme that ran.
+    let a = synth::banded_spd(800, 7_200, 1e-3, 55);
+    let rhs = make_rhs(a.n, 3);
+    for scheme in Scheme::ALL {
+        let mut opts = SolveOptions::callipepla();
+        opts.scheme = scheme;
+        let lone: Vec<SolveResult> =
+            rhs.iter().map(|b| jpcg_solve(&a, Some(b.as_slice()), None, &opts)).collect();
+        for r in &lone {
+            assert!(r.converged, "{scheme:?}: reference must converge");
+            assert_eq!(r.precision.len(), 1, "{scheme:?}: one event");
+            let e = r.precision.events()[0];
+            assert_eq!((e.pass, e.scheme, e.reason), (0, scheme, SwitchReason::Static));
+        }
+        let prep = PreparedMatrix::new(&a, 2);
+        let batch = prep.solve_batch(&rhs, &opts);
+        assert_identical(&lone, &batch, &format!("{scheme:?} static batch"));
+        all_paths(&prep, &rhs, &opts, &format!("{scheme:?} static"));
+    }
+}
+
+#[test]
+fn repeated_adaptive_runs_never_move_a_bit() {
+    // Scheduling noise must not reach an adaptive solve: same inputs,
+    // full worker fan-out, five runs, identical traces and bits.
+    let a = synth::banded_spd(600, 5_400, 1e-3, 11);
+    let rhs = make_rhs(a.n, 4);
+    let mut opts = SolveOptions::callipepla();
+    opts.adaptive = Some(AdaptivePolicy::default());
+    let prep = PreparedMatrix::new(&a, 2);
+    let first = prep.solve_batch_block_parallel(&rhs, &opts, None, 8);
+    for run in 1..5 {
+        let again = prep.solve_batch_block_parallel(&rhs, &opts, None, 8);
+        assert_identical(&first, &again, &format!("run {run}"));
+    }
+}

@@ -145,6 +145,53 @@ fn table7_iteration_gate_holds_for_the_synth_family() {
     }
 }
 
+/// The PR 8 adaptive gate, Table-7 style: across the synthetic matrix
+/// family, a solve under the default adaptive policy must (a) reach the
+/// same residual tolerance, (b) spend at most 10% more iterations than
+/// the static FP64 reference, and (c) stream **strictly fewer** modeled
+/// M1 nnz bytes than static FP64 — the mixed-precision bargain the
+/// paper's Table 7 sells, now enforced by CI (the bench-smoke arm runs
+/// this gate by name).
+#[test]
+fn adaptive_gate_holds_for_the_synth_family() {
+    use callipepla::precision::adaptive::AdaptivePolicy;
+    for spec in suite36().into_iter().take(4) {
+        let a = spec.generate(0.01);
+        let nnz = a.nnz() as u64;
+        let base = SolveOptions { max_iters: 5_000, ..oracle_opts(Scheme::Fp64) };
+        let fp64 = jpcg_solve(&a, None, None, &base);
+        assert!(fp64.converged, "{}: static fp64 reference must converge", spec.id);
+        let mut opts = base;
+        opts.adaptive = Some(AdaptivePolicy::default());
+        let adaptive = jpcg_solve(&a, None, None, &opts);
+        // (a) same tolerance reached.
+        assert!(
+            adaptive.converged && adaptive.final_rr <= opts.tol,
+            "{}: adaptive rr {:.3e} missed tol {:.3e}",
+            spec.id,
+            adaptive.final_rr,
+            opts.tol
+        );
+        // (b) iteration count within +10% of the static FP64 reference.
+        let cap = fp64.iters + fp64.iters.div_ceil(10);
+        assert!(
+            adaptive.iters <= cap,
+            "{}: adaptive {} iters vs fp64 {} (cap {cap})",
+            spec.id,
+            adaptive.iters,
+            fp64.iters
+        );
+        // (c) strictly fewer modeled M1 bytes than static FP64.
+        let ad_bytes = adaptive.precision.modeled_m1_bytes(nnz, adaptive.iters);
+        let fp_bytes = fp64.precision.modeled_m1_bytes(nnz, fp64.iters);
+        assert!(
+            ad_bytes < fp_bytes,
+            "{}: adaptive streamed {ad_bytes} modeled M1 bytes vs fp64 {fp_bytes}",
+            spec.id
+        );
+    }
+}
+
 /// A batch wider than the chunk-lane cap crosses the compiled-chunk
 /// seam with block mode on: each chunk restarts its own block state
 /// (the 9-lane batch under a 4-lane cap even produces a single-lane

@@ -107,8 +107,9 @@ fn prop_isa_roundtrip_random() {
             base_addr: rng.next_u64() as u32,
             len: rng.next_u64() as u32,
             q_id: (rng.next_u64() & 0b111) as u8,
+            precision: Scheme::from_wire_code((rng.next_u64() & 0b11) as u8).unwrap(),
         };
-        assert_eq!(InstVCtrl::decode(v.encode()), v);
+        assert_eq!(InstVCtrl::decode(v.encode()), Ok(v));
         let c = InstCmp {
             len: rng.next_u64() as u32,
             alpha: f64::from_bits(rng.next_u64()),
