@@ -13,7 +13,9 @@
 //!   batched iteration, block re-materialized around each pass) vs
 //!   resident (`solve_batch_block[_parallel]`: same single pass, the
 //!   lane-major block is the live representation — zero steady-state
-//!   boundary moves, PERF §12)
+//!   boundary moves, PERF §12), and the telemetry-overhead pair: the
+//!   resident row with the PR 9 recording gate off vs on (the off row
+//!   must sit within 2% of the uninstrumented row, docs/OBSERVABILITY.md)
 //! * spawn overhead on a small system: the worker batch on per-call
 //!   `thread::scope` spawns vs the persistent pool (PERF §7/§8)
 //! * coordinator-path iterations (instruction issue + module dispatch)
@@ -258,10 +260,34 @@ fn main() {
         "    => {:.1} rhs-iterations/s with resident block state",
         8.0 * 10.0 / r.median_s
     );
+    let resident_median_s = r.median_s;
     let r = bench("program_batch_8rhs_block_resident_par", 1, 3, || {
         std::hint::black_box(prep8.solve_batch_block_parallel(&rhs, &opts, None, 0));
     });
     record(&mut recs, &r, None);
+
+    // Telemetry overhead (PR 9): the resident row again with the
+    // recording gate explicitly off (every gated instrument
+    // early-returns on one relaxed load — the library's default state)
+    // and then on (counters/histograms actually record).  The off row
+    // is the instrumentation tax the hot path pays by default; the
+    // acceptance bar is <2% against the resident row above.
+    callipepla::obs::set_recording(false);
+    let r_off = bench("program_batch_8rhs_block_resident_obs_off", 1, 3, || {
+        std::hint::black_box(prep8.solve_batch_block(&rhs, &opts));
+    });
+    record(&mut recs, &r_off, None);
+    callipepla::obs::set_recording(true);
+    let r_on = bench("program_batch_8rhs_block_resident_obs_on", 1, 3, || {
+        std::hint::black_box(prep8.solve_batch_block(&rhs, &opts));
+    });
+    callipepla::obs::set_recording(false);
+    record(&mut recs, &r_on, None);
+    println!(
+        "    => telemetry overhead vs resident row: {:+.2}% gate off, {:+.2}% gate on",
+        (r_off.median_s / resident_median_s - 1.0) * 100.0,
+        (r_on.median_s / resident_median_s - 1.0) * 100.0
+    );
 
     // Adaptive precision (PR 8): full solves to convergence on the
     // small system, paired static-fp64 / static-mixv3 / adaptive rows.

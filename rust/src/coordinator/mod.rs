@@ -30,6 +30,7 @@ use std::sync::Arc;
 use crate::engine::pool::{self, WorkerPool};
 use crate::hbm::ChannelMode;
 use crate::isa::InstTrace;
+use crate::obs::catalog as obs;
 use crate::precision::adaptive::{PrecisionController, PrecisionMode, PrecisionTrace};
 use crate::precision::{stats, Scheme};
 use crate::program::{
@@ -410,6 +411,7 @@ impl Coordinator {
         let mut tried_resident = false;
         if cfg.block == BlockMode::Resident && rhs.len() > 1 && exec.block_vector_ops() {
             tried_resident = true;
+            obs::COORD_BLOCK_RESIDENT_CHUNKS.inc();
             if let Some(mut lanes) = solve_chunk_resident(&cfg, &program, exec, rhs, x0) {
                 run_lane_loop(&cfg, &program, &mut lanes, exec, false);
                 return lanes.into_iter().map(LaneState::into_result).collect();
@@ -428,6 +430,12 @@ impl Coordinator {
             BlockMode::Staged => true,
             BlockMode::Resident => !tried_resident,
         };
+        if block && !tried_resident && cfg.block == BlockMode::Resident && rhs.len() > 1 {
+            // Resident was requested but the backend lacks the block
+            // vector ops: first rung of the degrade ladder (its batch
+            // SpMV may still serve the staged pass).
+            obs::COORD_BLOCK_DEGRADE_STAGED.inc();
+        }
         if block {
             block = block_spmv_pass(&mut lanes, exec, true, false);
         }
@@ -468,6 +476,7 @@ impl Coordinator {
             && execs[0].block_vector_ops()
         {
             tried_resident = true;
+            obs::COORD_BLOCK_RESIDENT_CHUNKS.inc();
             if let Some(mut lanes) = solve_chunk_resident(&cfg, &program, &mut execs[0], rhs, x0) {
                 run_lane_loop_parallel(pool, helpers, &cfg, &program, &mut lanes, execs, false);
                 return lanes.into_iter().map(LaneState::into_result).collect();
@@ -485,6 +494,11 @@ impl Coordinator {
                 BlockMode::Staged => true,
                 BlockMode::Resident => !tried_resident,
             };
+        if block && !tried_resident && cfg.block == BlockMode::Resident && rhs.len() > 1 {
+            // Same first rung of the degrade ladder as the sequential
+            // chunk walk.
+            obs::COORD_BLOCK_DEGRADE_STAGED.inc();
+        }
         if block {
             block = block_spmv_pass(&mut lanes, &mut execs[0], true, false);
         }
@@ -618,11 +632,17 @@ fn bind_lane_scheme<D: InstDispatch>(lane: &LaneState, exec: &mut D) {
 /// and the resident batch-wide rounds (which compute rz / rr with the
 /// block kernels but must track liveness identically).
 fn note_init(cfg: &CoordinatorConfig, lane: &mut LaneState, rz: f64, rr: f64) {
+    obs::COORD_TRIPS_INIT.inc();
     lane.rz = rz;
     lane.rr = rr;
     lane.trace.push(lane.rr);
     lane.converged = lane.rr <= cfg.tol;
     lane.live = !lane.converged && cfg.max_iters > 0;
+    if lane.converged {
+        obs::COORD_LANES_CONVERGED.inc();
+    } else if !lane.live {
+        obs::COORD_LANES_CAPPED.inc();
+    }
     // The controller observes a pass's rr only when the solve goes on
     // to another pass — the same hook point as the reference solver's,
     // so traces cannot drift between the two (tests/adaptive_precision.rs).
@@ -633,6 +653,8 @@ fn note_init(cfg: &CoordinatorConfig, lane: &mut LaneState, rz: f64, rr: f64) {
 
 /// Post-exit-trip bookkeeping (shared with the resident rounds).
 fn note_exit(lane: &mut LaneState) {
+    obs::COORD_TRIPS_EXIT.inc();
+    obs::COORD_LANES_CONVERGED.inc();
     lane.iters += 1;
     lane.trace.push(lane.rr);
     lane.converged = true;
@@ -641,11 +663,13 @@ fn note_exit(lane: &mut LaneState) {
 
 /// Post-phase-3 bookkeeping (shared with the resident rounds).
 fn note_phase3(cfg: &CoordinatorConfig, lane: &mut LaneState) {
+    obs::COORD_TRIPS_PHASE3.inc();
     lane.rz = lane.rz_new;
     lane.iters += 1;
     lane.trace.push(lane.rr);
     if lane.iters >= cfg.max_iters {
         lane.live = false;
+        obs::COORD_LANES_CAPPED.inc();
     }
     // Same observe gate as note_init: the final rr of a capped (or
     // converged — note_exit never observes) solve is not observed.
@@ -657,6 +681,7 @@ fn note_phase3(cfg: &CoordinatorConfig, lane: &mut LaneState) {
 /// Phase-1 trip for one lane -> its pap -> its alpha (scalar unit,
 /// line 8).
 fn lane_phase1<D: InstDispatch>(program: &Program, lane: &mut LaneState, exec: &mut D) {
+    obs::COORD_TRIPS_PHASE1.inc();
     bind_lane_scheme(lane, exec);
     let scalars = lane.scalars(0.0, 0.0);
     let r1 = lane.slice.trip(program.phase(Phase::Phase1), scalars, exec);
@@ -666,6 +691,7 @@ fn lane_phase1<D: InstDispatch>(program: &Program, lane: &mut LaneState, exec: &
 /// Phase-2 trip for one lane (its hoisted M8 rr is checked by the
 /// following trip step: Fig. 4 opt 2, per RHS).
 fn lane_phase2<D: InstDispatch>(program: &Program, lane: &mut LaneState, exec: &mut D) {
+    obs::COORD_TRIPS_PHASE2.inc();
     let scalars = lane.scalars(lane.alpha, 0.0);
     let r2 = lane.slice.trip(program.phase(Phase::Phase2), scalars, exec);
     lane.rr = ret_scalar(&r2, ScalarRole::Rr);
@@ -836,6 +862,7 @@ fn block_spmv_pass<D: InstDispatch>(
             // Lanes an earlier group staged still consume their staged
             // ap (it is exactly what their M1 would have computed); the
             // rest fall back to per-lane streaming with everyone else.
+            obs::COORD_BLOCK_DEGRADE_PER_LANE.inc();
             return false;
         }
         for (j, &k) in group.iter().enumerate() {
@@ -1127,6 +1154,7 @@ fn solve_chunk_resident<D: InstDispatch>(
     // controller's start scheme, so the init pass is always uniform.
     bind_lane_scheme(&lanes[0], exec);
     if !exec.batch_spmv(&ar.x, &mut ar.stage_ap, l) {
+        obs::COORD_BLOCK_DEGRADE_PER_LANE.inc();
         return None;
     }
     // M4 with init's pre-bound alpha = 1: r = r - ap, ap on-chip.
@@ -1162,6 +1190,7 @@ fn solve_chunk_resident<D: InstDispatch>(
             // A lone survivor has nothing left to batch over: gather it
             // out and let the per-lane walk finish — the same
             // single-lane short-circuit the staged pass takes.
+            obs::COORD_BLOCK_GATHER_OUT_LANES.inc();
             gather_out(&mut ar, &mut lanes, rhs);
             return Some(lanes);
         }
@@ -1169,6 +1198,8 @@ fn solve_chunk_resident<D: InstDispatch>(
         if !resident_batch_spmv(&mut ar, &lanes, exec) {
             // Mid-solve decline: we are at an iteration boundary, so
             // the committed plane gathers out cleanly.
+            obs::COORD_BLOCK_DEGRADE_PER_LANE.inc();
+            obs::COORD_BLOCK_GATHER_OUT_LANES.add(l as u64);
             gather_out(&mut ar, &mut lanes, rhs);
             return Some(lanes);
         }
@@ -1177,6 +1208,7 @@ fn solve_chunk_resident<D: InstDispatch>(
         for (j, &k) in ar.slots.iter().enumerate() {
             let lane = &mut lanes[k];
             let scalars = lane.scalars(0.0, 0.0);
+            obs::COORD_TRIPS_PHASE1.inc();
             lane.slice.issue(program.phase(Phase::Phase1), scalars);
             lane.alpha = lane.rz / pap[j];
         }
@@ -1194,6 +1226,7 @@ fn solve_chunk_resident<D: InstDispatch>(
         for (j, &k) in ar.slots.iter().enumerate() {
             let lane = &mut lanes[k];
             let scalars = lane.scalars(lane.alpha, 0.0);
+            obs::COORD_TRIPS_PHASE2.inc();
             lane.slice.issue(program.phase(Phase::Phase2), scalars);
             lane.rr = rr[j];
             lane.rz_new = rz_new[j];

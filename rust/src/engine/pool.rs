@@ -24,6 +24,8 @@
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use crate::obs::catalog as obs;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
@@ -50,6 +52,7 @@ impl ScopeState {
         let job = self.queue.lock().expect("scope queue poisoned").pop_front();
         let Some(job) = job else { return false };
         if catch_unwind(AssertUnwindSafe(job)).is_err() {
+            obs::POOL_PANICS_RECOVERED.inc();
             self.panicked.store(true, Ordering::SeqCst);
         }
         self.finish_one();
@@ -132,7 +135,10 @@ impl WorkerPool {
                     // A panicking fire-and-forget job must not kill the
                     // worker; the submitter observes failure through its
                     // own completion channel (e.g. service tickets).
-                    let _ = catch_unwind(AssertUnwindSafe(job));
+                    obs::POOL_JOBS.inc();
+                    if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                        obs::POOL_PANICS_RECOVERED.inc();
+                    }
                 }
                 Task::Scope(scope) => while scope.run_one() {},
             }
@@ -182,6 +188,7 @@ impl WorkerPool {
         if jobs.is_empty() {
             return;
         }
+        obs::POOL_SCOPED_FANOUTS.inc();
         let n = jobs.len();
         // SAFETY: the 'env borrows captured by the jobs outlive this
         // call, and this function does not return (or unwind — nothing
@@ -236,6 +243,7 @@ impl WorkerPool {
         if count == 0 {
             return;
         }
+        obs::POOL_SCOPED_FANOUTS.inc();
         let invite = self.workers.min(helpers).min(count.saturating_sub(1));
         if invite == 0 {
             for i in 0..count {

@@ -22,6 +22,7 @@
 //!
 //! | Layer | Where | Paper section |
 //! |---|---|---|
+//! | telemetry plane | [`obs`] (metric registry + catalog, deterministic event trace, Prometheus/JSON exposition) | §7 measurement discipline |
 //! | service layer | [`service`] (matrix registry, bucketed program cache, coalescing batch scheduler) | serving extension of §4 |
 //! | L3 coordinator | [`coordinator`] (controller + native interpreter) | §3, §4.3, Fig. 4 |
 //! | instruction program | [`program`] (HBM memory map, compiled trips, bus), [`isa`], [`modules`], [`vsr`] | §4–§5 |
@@ -73,6 +74,14 @@
 //! ([`solver::jpcg_solve_replay`]); because decisions are a pure
 //! function of the rr sequence, all four dispatch paths emit identical
 //! traces (`tests/adaptive_precision.rs`, `docs/PRECISION.md`).
+//! Since PR 9 the stack has a unified **telemetry plane** ([`obs`]):
+//! a dependency-free metrics registry (the `precision::stats` counter
+//! walls now read through it), new instruments across the coordinator,
+//! engine pool, program cache, and scheduler, a deterministic
+//! event trace stamped with logical clocks (byte-identical across
+//! replays — `tests/observability.rs`), and Prometheus/JSON exposition
+//! through `serve --metrics-dump` / `--stats-json` and
+//! `solve --profile` (`docs/OBSERVABILITY.md`).
 //! The complete Type-I/II/III
 //! instruction reference, wire encodings, and the batch-axis extension
 //! live in `docs/ISA.md`; build/quickstart walkthroughs in the
@@ -102,6 +111,7 @@ pub mod hbm;
 pub mod isa;
 pub mod metrics;
 pub mod modules;
+pub mod obs;
 pub mod precision;
 pub mod program;
 #[cfg(feature = "pjrt")]

@@ -22,7 +22,10 @@
 //! service layer (registry + bucketed program cache + coalescing
 //! scheduler, `docs/SERVICE.md`) and reports end-to-end RHS-iterations/s
 //! against the no-coalescing baseline, plus the time-plane pricing of
-//! the same trace.
+//! the same trace.  `serve --metrics-dump` additionally emits the whole
+//! telemetry registry in Prometheus text form and `--stats-json` the
+//! full `ServiceStats` as JSON; `solve --profile` prints the registry
+//! counter deltas for one solve (`docs/OBSERVABILITY.md`).
 //!
 //! (Arg parsing is hand-rolled: clap is not available offline.)
 
@@ -86,10 +89,12 @@ fn print_usage() {
          \u{20}                       --block-spmv (resident block-CG)  --block-staged (PR 6 staged path)\n\
          \u{20}                       --adaptive (per-pass precision controller, docs/PRECISION.md)\n\
          \u{20}                       --tiny (built-in small matrix, for smoke runs)\n\
+         \u{20}                       --profile (telemetry counter deltas, docs/OBSERVABILITY.md)\n\
          \u{20}                program: --n <len>  --mode <double|single>  --batch <rhs>\n\
          \u{20}                sim: --batch <rhs>  --lane-workers <w>  (w = 0: machine default)\n\
          \u{20}                serve: --requests <n>  --matrices <k>  --tenants <t>  --max-batch <b>\n\
          \u{20}                       --workers <w>  --seed <s>  --block-spmv  --adaptive\n\
+         \u{20}                       --metrics-dump (Prometheus text)  --stats-json\n\
          \u{20}                       (plus --scale/--scheme/--max-iters)"
     );
 }
@@ -172,10 +177,53 @@ fn report_trace(trace: &PrecisionTrace, n: usize, nnz: usize, iters: u32) {
     );
 }
 
+/// Print the solve's telemetry-plane breakdown (`--profile`): deltas of
+/// the `callipepla_*` registry counters across the run just finished —
+/// per-phase trip counts, lane retirements, the precision plane's data
+/// movement, and the program-bus / pool activity (docs/OBSERVABILITY.md).
+fn report_profile(before: &callipepla::obs::Snapshot, after: &callipepla::obs::Snapshot) {
+    let d = |name: &str| after.counter(name).saturating_sub(before.counter(name));
+    println!("profile (telemetry-plane counter deltas):");
+    println!(
+        "  trips: init={} phase1={} phase2={} phase3={} exit={}",
+        d("callipepla_coord_init_trips_total"),
+        d("callipepla_coord_phase1_trips_total"),
+        d("callipepla_coord_phase2_trips_total"),
+        d("callipepla_coord_phase3_trips_total"),
+        d("callipepla_coord_exit_trips_total"),
+    );
+    println!(
+        "  lanes: converged={} iteration-capped={}",
+        d("callipepla_coord_lanes_converged_total"),
+        d("callipepla_coord_lanes_iteration_capped_total"),
+    );
+    println!(
+        "  precision plane: matrix_value_reads={} vector_element_moves={} escalations={}",
+        d("callipepla_precision_matrix_value_reads_total"),
+        d("callipepla_precision_vector_element_moves_total"),
+        d("callipepla_precision_escalations_total"),
+    );
+    println!(
+        "  program bus: trips_issued={} write_acks={}   pool: jobs={} scoped_fanouts={}",
+        d("callipepla_program_trips_issued_total"),
+        d("callipepla_program_write_acks_total"),
+        d("callipepla_pool_jobs_total"),
+        d("callipepla_pool_scoped_fanouts_total"),
+    );
+}
+
 fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
     let (name, a) = load_matrix(flags)?;
     let scheme = parse_scheme(flags)?;
     let max_iters = flag_u32(flags, "max-iters", 20_000);
+    // --profile turns the recording gate on for this run and reports the
+    // registry counter deltas once the solve finishes.
+    let profile_before = if flags.contains_key("profile") {
+        callipepla::obs::set_recording(true);
+        Some(callipepla::obs::snapshot())
+    } else {
+        None
+    };
     // --adaptive turns on the per-pass precision controller
     // (docs/PRECISION.md): start on the CLI scheme's family default
     // (Mix-V3), escalate to FP64 on stall or near convergence, and
@@ -381,6 +429,11 @@ fn cmd_solve(flags: &HashMap<String, String>) -> Result<()> {
             report_trace(&res.precision, a.n, a.nnz(), res.iters);
         }
     }
+    if let Some(before) = profile_before {
+        let after = callipepla::obs::snapshot();
+        callipepla::obs::set_recording(false);
+        report_profile(&before, &after);
+    }
     Ok(())
 }
 
@@ -572,6 +625,14 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     // lane-major block (same per-ticket bits, one nnz stream per
     // batched iteration, zero steady-state boundary moves).
     let block_spmv = flags.contains_key("block-spmv");
+    // --metrics-dump opens the recording gate for the replay and prints
+    // the Prometheus text exposition after the drain; --stats-json
+    // serializes the full ServiceStats (records included) as JSON.
+    let metrics_dump = flags.contains_key("metrics-dump");
+    let stats_json = flags.contains_key("stats-json");
+    if metrics_dump {
+        callipepla::obs::set_recording(true);
+    }
     let mut cfg = ServiceConfig { max_batch, block_spmv, opts, ..Default::default() };
     if workers > 0 {
         cfg.workers = workers;
@@ -644,6 +705,17 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         stats.modeled_cycles(&sim_cfg),
         stats.modeled_rhs_iterations_per_second(&sim_cfg)
     );
+    if stats_json {
+        println!("{}", stats.to_json());
+    }
+    if metrics_dump {
+        // Land the modeled time plane on the sim gauges so the dump
+        // shows it next to the value-plane counters, then emit the
+        // whole registry in Prometheus text form.
+        stats.export_time_plane_gauges(&sim_cfg);
+        println!("{}", callipepla::obs::prometheus_dump());
+        callipepla::obs::set_recording(false);
+    }
     if !identical {
         bail!("coalesced results diverged from the sequential baseline");
     }

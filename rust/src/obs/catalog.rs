@@ -1,0 +1,267 @@
+//! The crate's metric catalog: every instrument, declared in one place
+//! and registered into [`crate::obs::registry::global`] on first use.
+//!
+//! Names follow Prometheus conventions — `callipepla_<family>_<what>`
+//! with `_total` on counters — and the family prefix names the layer
+//! that owns the site: `service` (scheduler + program cache), `coord`
+//! (controller trips, retirements, block degrade ladder), `precision`
+//! (value-plane traffic + escalations), `pool` (engine worker pool),
+//! `program` (instruction bus), and `sim` (time-plane gauges).  The
+//! full human-readable catalog lives in `docs/OBSERVABILITY.md`; a test
+//! there is pinned against [`all`] so the doc and the code cannot
+//! drift silently.
+
+use std::cell::Cell;
+
+use super::registry::{Counter, Gauge, Histogram, LocalCounter, Metric};
+
+// ---------------- service family (scheduler + program cache) --------
+
+/// Requests accepted by [`crate::service::SolverService::submit`].
+pub static SERVICE_REQUESTS: Counter =
+    Counter::new("callipepla_service_requests_total", "RHS requests accepted by the service");
+
+/// Batches dispatched to the pool.
+pub static SERVICE_BATCHES: Counter =
+    Counter::new("callipepla_service_batches_total", "Batches dispatched to the engine pool");
+
+/// Flushes forced by a full per-matrix queue.
+pub static SERVICE_FLUSH_BATCH_FULL: Counter = Counter::new(
+    "callipepla_service_flush_batch_full_total",
+    "Dispatches triggered by a full per-matrix batch",
+);
+
+/// Flushes from an explicit `flush`/`drain`.
+pub static SERVICE_FLUSH_DRAINED: Counter = Counter::new(
+    "callipepla_service_flush_queue_drained_total",
+    "Dispatches triggered by an explicit flush or drain",
+);
+
+/// Batches whose solve panicked (tickets failed, worker recovered).
+pub static SERVICE_BATCH_PANICS: Counter = Counter::new(
+    "callipepla_service_batch_panics_total",
+    "Batches failed by a panic in the solve (tickets err, pool recovers)",
+);
+
+/// Lanes per dispatched batch.
+pub static SERVICE_COALESCE_WIDTH: Histogram = Histogram::new(
+    "callipepla_service_coalesce_width_lanes",
+    "Lanes coalesced into each dispatched batch",
+);
+
+/// Logical queue wait per lane: submissions accepted between a
+/// request's submit and its dispatch (a logical clock, never wall
+/// time — deterministic across replays).
+pub static SERVICE_QUEUE_WAIT: Histogram = Histogram::new(
+    "callipepla_service_queue_wait_submissions",
+    "Submissions accepted between a request's submit and its dispatch",
+);
+
+/// Batched-program cache hits ([`crate::program::ProgramCache`]).
+pub static SERVICE_CACHE_HITS: Counter =
+    Counter::new("callipepla_service_program_cache_hits_total", "Program cache hits");
+
+/// Batched-program cache misses (compiles).
+pub static SERVICE_CACHE_MISSES: Counter = Counter::new(
+    "callipepla_service_program_cache_misses_total",
+    "Program cache misses (programs compiled)",
+);
+
+// ---------------- coordinator family --------------------------------
+
+/// Merged-init trips issued (per lane; both dispatch paths).
+pub static COORD_TRIPS_INIT: Counter =
+    Counter::new("callipepla_coord_init_trips_total", "Merged-init trips issued");
+
+/// Phase-1 (SpMV) trips issued.
+pub static COORD_TRIPS_PHASE1: Counter =
+    Counter::new("callipepla_coord_phase1_trips_total", "Phase-1 (SpMV) trips issued");
+
+/// Phase-2 trips issued.
+pub static COORD_TRIPS_PHASE2: Counter =
+    Counter::new("callipepla_coord_phase2_trips_total", "Phase-2 trips issued");
+
+/// Phase-3 trips issued.
+pub static COORD_TRIPS_PHASE3: Counter =
+    Counter::new("callipepla_coord_phase3_trips_total", "Phase-3 trips issued");
+
+/// Converged-exit trips issued.
+pub static COORD_TRIPS_EXIT: Counter =
+    Counter::new("callipepla_coord_exit_trips_total", "Converged-exit trips issued");
+
+/// Lanes retired converged (at init or via the exit trip).
+pub static COORD_LANES_CONVERGED: Counter =
+    Counter::new("callipepla_coord_lanes_converged_total", "Lanes retired converged");
+
+/// Lanes retired at the iteration cap.
+pub static COORD_LANES_CAPPED: Counter = Counter::new(
+    "callipepla_coord_lanes_iteration_capped_total",
+    "Lanes retired at the iteration cap",
+);
+
+/// Chunks that entered resident block mode.
+pub static COORD_BLOCK_RESIDENT_CHUNKS: Counter = Counter::new(
+    "callipepla_coord_block_resident_chunks_total",
+    "Chunks that entered resident block mode",
+);
+
+/// Resident requests degraded to the staged pass (backend lacks the
+/// block vector ops; its batch SpMV may still serve).
+pub static COORD_BLOCK_DEGRADE_STAGED: Counter = Counter::new(
+    "callipepla_coord_block_degrade_to_staged_total",
+    "Resident requests degraded to the staged block pass",
+);
+
+/// Block mode dropped to per-lane SpMV (batch kernel declined).
+pub static COORD_BLOCK_DEGRADE_PER_LANE: Counter = Counter::new(
+    "callipepla_coord_block_degrade_to_per_lane_total",
+    "Block mode dropped to per-lane SpMV (batch kernel declined)",
+);
+
+/// Lanes gathered out of the resident arenas mid-solve.
+pub static COORD_BLOCK_GATHER_OUT_LANES: Counter = Counter::new(
+    "callipepla_coord_block_gather_out_lanes_total",
+    "Lanes gathered out of the resident arenas mid-solve",
+);
+
+// ---------------- precision family ----------------------------------
+
+thread_local! {
+    static MATRIX_VALUE_READS_CELL: Cell<u64> = const { Cell::new(0) };
+    static VECTOR_ELEMENT_MOVES_CELL: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Matrix values decoded by the value plane (the PR 6 counter wall;
+/// `precision::stats::matrix_value_reads` reads the thread-local view).
+pub static PRECISION_MATRIX_VALUE_READS: LocalCounter = LocalCounter::new(
+    "callipepla_precision_matrix_value_reads_total",
+    "Matrix values decoded by the value plane",
+    &MATRIX_VALUE_READS_CELL,
+);
+
+/// Vector elements moved across the block boundary (the PR 7 wall;
+/// `precision::stats::vector_element_moves` reads the thread-local
+/// view).
+pub static PRECISION_VECTOR_ELEMENT_MOVES: LocalCounter = LocalCounter::new(
+    "callipepla_precision_vector_element_moves_total",
+    "Vector elements moved across the block boundary",
+    &VECTOR_ELEMENT_MOVES_CELL,
+);
+
+/// Adaptive-precision escalations committed by the controller.
+pub static PRECISION_ESCALATIONS: Counter = Counter::new(
+    "callipepla_precision_escalations_total",
+    "Adaptive-precision escalations committed by the controller",
+);
+
+// ---------------- pool family ---------------------------------------
+
+/// One-shot jobs run by pool workers ([`crate::engine::WorkerPool`]).
+pub static POOL_JOBS: Counter =
+    Counter::new("callipepla_pool_jobs_total", "One-shot jobs run by pool workers");
+
+/// Non-empty scoped runs (`run_scoped*` / `run_scoped_indexed`).
+pub static POOL_SCOPED_FANOUTS: Counter =
+    Counter::new("callipepla_pool_scoped_fanouts_total", "Scoped-run fan-outs through the pool");
+
+/// Panics caught by a worker (the worker survives; scoped panics
+/// re-raise at the caller after the scope drains).
+pub static POOL_PANICS_RECOVERED: Counter =
+    Counter::new("callipepla_pool_panics_recovered_total", "Panics caught by pool workers");
+
+// ---------------- program family (instruction bus) ------------------
+
+/// Compiled trips issued on an instruction bus (dispatch and
+/// bookkeeping-only resident issues both count — same wire format).
+pub static PROGRAM_TRIPS_ISSUED: Counter =
+    Counter::new("callipepla_program_trips_issued_total", "Compiled trips issued on a bus");
+
+/// Type-III write-back acknowledgements collected (§4.2 handshake).
+pub static PROGRAM_WRITE_ACKS: Counter =
+    Counter::new("callipepla_program_write_acks_total", "Type-III write-back acks collected");
+
+// ---------------- sim family (time plane) ---------------------------
+
+/// Modeled accelerator cycles for the service's replayed trace
+/// ([`crate::service::ServiceStats::modeled_cycles`]).
+pub static SIM_MODELED_TRACE_CYCLES: Gauge = Gauge::new(
+    "callipepla_sim_modeled_trace_cycles",
+    "Modeled accelerator cycles for the replayed trace",
+);
+
+/// Modeled RHS-iteration throughput of the replayed trace.
+pub static SIM_MODELED_RHS_ITERS_PER_SECOND: Gauge = Gauge::new(
+    "callipepla_sim_modeled_rhs_iters_per_second",
+    "Modeled RHS iterations per second for the replayed trace",
+);
+
+/// Every instrument in the crate, in declaration order.  This is what
+/// [`crate::obs::registry::global`] registers; keep it in sync with the
+/// statics above (the `catalog_covers_every_family` test counts it).
+pub fn all() -> Vec<Metric> {
+    vec![
+        Metric::Counter(&SERVICE_REQUESTS),
+        Metric::Counter(&SERVICE_BATCHES),
+        Metric::Counter(&SERVICE_FLUSH_BATCH_FULL),
+        Metric::Counter(&SERVICE_FLUSH_DRAINED),
+        Metric::Counter(&SERVICE_BATCH_PANICS),
+        Metric::Histogram(&SERVICE_COALESCE_WIDTH),
+        Metric::Histogram(&SERVICE_QUEUE_WAIT),
+        Metric::Counter(&SERVICE_CACHE_HITS),
+        Metric::Counter(&SERVICE_CACHE_MISSES),
+        Metric::Counter(&COORD_TRIPS_INIT),
+        Metric::Counter(&COORD_TRIPS_PHASE1),
+        Metric::Counter(&COORD_TRIPS_PHASE2),
+        Metric::Counter(&COORD_TRIPS_PHASE3),
+        Metric::Counter(&COORD_TRIPS_EXIT),
+        Metric::Counter(&COORD_LANES_CONVERGED),
+        Metric::Counter(&COORD_LANES_CAPPED),
+        Metric::Counter(&COORD_BLOCK_RESIDENT_CHUNKS),
+        Metric::Counter(&COORD_BLOCK_DEGRADE_STAGED),
+        Metric::Counter(&COORD_BLOCK_DEGRADE_PER_LANE),
+        Metric::Counter(&COORD_BLOCK_GATHER_OUT_LANES),
+        Metric::Local(&PRECISION_MATRIX_VALUE_READS),
+        Metric::Local(&PRECISION_VECTOR_ELEMENT_MOVES),
+        Metric::Counter(&PRECISION_ESCALATIONS),
+        Metric::Counter(&POOL_JOBS),
+        Metric::Counter(&POOL_SCOPED_FANOUTS),
+        Metric::Counter(&POOL_PANICS_RECOVERED),
+        Metric::Counter(&PROGRAM_TRIPS_ISSUED),
+        Metric::Counter(&PROGRAM_WRITE_ACKS),
+        Metric::Gauge(&SIM_MODELED_TRACE_CYCLES),
+        Metric::Gauge(&SIM_MODELED_RHS_ITERS_PER_SECOND),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+
+    #[test]
+    fn catalog_names_are_unique_and_cover_every_family() {
+        let metrics = all();
+        let names: BTreeSet<&str> = metrics.iter().map(|m| m.name()).collect();
+        assert_eq!(names.len(), metrics.len(), "duplicate metric name in the catalog");
+        for family in ["service", "coord", "precision", "pool", "program", "sim"] {
+            let prefix = format!("callipepla_{family}_");
+            assert!(
+                names.iter().any(|n| n.starts_with(&prefix)),
+                "catalog is missing the {family} family"
+            );
+        }
+        for m in &metrics {
+            assert!(m.name().starts_with("callipepla_"), "{} lacks the crate prefix", m.name());
+            assert!(!m.help().is_empty(), "{} lacks a help line", m.name());
+        }
+    }
+
+    #[test]
+    fn local_counters_track_both_views() {
+        let before_local = PRECISION_MATRIX_VALUE_READS.local();
+        let before_total = PRECISION_MATRIX_VALUE_READS.total();
+        PRECISION_MATRIX_VALUE_READS.add(7);
+        assert_eq!(PRECISION_MATRIX_VALUE_READS.local() - before_local, 7);
+        assert!(PRECISION_MATRIX_VALUE_READS.total() - before_total >= 7);
+    }
+}

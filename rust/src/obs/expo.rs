@@ -1,0 +1,168 @@
+//! Exposition: render one registry [`Snapshot`] as Prometheus text or
+//! JSON.
+//!
+//! Both renderers consume the same snapshot, so the two surfaces can
+//! never disagree about a value; and because a snapshot is name-sorted,
+//! both outputs are deterministic given deterministic counters (which
+//! the logical-clock rules of [`crate::obs::trace`] guarantee for
+//! everything the replay tests cover).
+//!
+//! ```
+//! use callipepla::obs::{render_json, render_prometheus, Sample, SampleValue, Snapshot};
+//! let snap = Snapshot {
+//!     samples: vec![Sample {
+//!         name: "callipepla_demo_total",
+//!         help: "demo",
+//!         value: SampleValue::Counter(3),
+//!     }],
+//! };
+//! assert!(render_prometheus(&snap).contains("callipepla_demo_total 3"));
+//! assert!(render_json(&snap).contains("\"callipepla_demo_total\""));
+//! ```
+
+use std::fmt::Write;
+
+use super::registry::{Sample, SampleValue, Snapshot};
+use crate::util::json::ObjWriter;
+
+/// Render a snapshot as Prometheus text exposition (`# HELP` / `# TYPE`
+/// headers, histograms as cumulative `_bucket{le=...}` series plus
+/// `_sum` / `_count`).
+pub fn render_prometheus(snap: &Snapshot) -> String {
+    let mut out = String::new();
+    for s in &snap.samples {
+        let _ = writeln!(out, "# HELP {} {}", s.name, s.help);
+        match &s.value {
+            SampleValue::Counter(v) => {
+                let _ = writeln!(out, "# TYPE {} counter", s.name);
+                let _ = writeln!(out, "{} {v}", s.name);
+            }
+            SampleValue::Gauge(v) => {
+                let _ = writeln!(out, "# TYPE {} gauge", s.name);
+                let _ = writeln!(out, "{} {v}", s.name);
+            }
+            SampleValue::Histogram { buckets, sum, count } => {
+                let _ = writeln!(out, "# TYPE {} histogram", s.name);
+                for (le, cum) in buckets {
+                    match le {
+                        Some(b) => {
+                            let _ = writeln!(out, "{}_bucket{{le=\"{b}\"}} {cum}", s.name);
+                        }
+                        None => {
+                            let _ = writeln!(out, "{}_bucket{{le=\"+Inf\"}} {cum}", s.name);
+                        }
+                    }
+                }
+                let _ = writeln!(out, "{}_sum {sum}", s.name);
+                let _ = writeln!(out, "{}_count {count}", s.name);
+            }
+        }
+    }
+    out
+}
+
+fn json_sample(s: &Sample) -> String {
+    let mut w = ObjWriter::new();
+    w.field_str("name", s.name);
+    w.field_str("help", s.help);
+    match &s.value {
+        SampleValue::Counter(v) => {
+            w.field_str("kind", "counter");
+            w.field_raw("value", &v.to_string());
+        }
+        SampleValue::Gauge(v) => {
+            w.field_str("kind", "gauge");
+            w.field_num("value", *v);
+        }
+        SampleValue::Histogram { buckets, sum, count } => {
+            w.field_str("kind", "histogram");
+            w.field_raw("sum", &sum.to_string());
+            w.field_raw("count", &count.to_string());
+            let mut arr = String::from("[");
+            for (i, (le, cum)) in buckets.iter().enumerate() {
+                if i > 0 {
+                    arr.push(',');
+                }
+                let mut b = ObjWriter::new();
+                match le {
+                    Some(v) => b.field_str("le", &v.to_string()),
+                    None => b.field_str("le", "+Inf"),
+                }
+                b.field_raw("count", &cum.to_string());
+                arr.push_str(&b.finish());
+            }
+            arr.push(']');
+            w.field_raw("buckets", &arr);
+        }
+    }
+    w.finish()
+}
+
+/// Render a snapshot as one JSON object: `{"metrics":[...]}`, each
+/// entry carrying `name`, `help`, `kind`, and the kind's value fields.
+/// Round-trips through [`crate::util::json::Json::parse`].
+pub fn render_json(snap: &Snapshot) -> String {
+    let mut arr = String::from("[");
+    for (i, s) in snap.samples.iter().enumerate() {
+        if i > 0 {
+            arr.push(',');
+        }
+        arr.push_str(&json_sample(s));
+    }
+    arr.push(']');
+    let mut w = ObjWriter::new();
+    w.field_raw("metrics", &arr);
+    w.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn demo_snapshot() -> Snapshot {
+        Snapshot {
+            samples: vec![
+                Sample {
+                    name: "callipepla_a_total",
+                    help: "a counter",
+                    value: SampleValue::Counter(42),
+                },
+                Sample { name: "callipepla_b", help: "a gauge", value: SampleValue::Gauge(2.5) },
+                Sample {
+                    name: "callipepla_c_width",
+                    help: "a histogram",
+                    value: SampleValue::Histogram {
+                        buckets: vec![(Some(0), 0), (Some(1), 2), (None, 3)],
+                        sum: 9,
+                        count: 3,
+                    },
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn prometheus_text_has_headers_series_and_histogram_tail() {
+        let text = render_prometheus(&demo_snapshot());
+        assert!(text.contains("# HELP callipepla_a_total a counter"));
+        assert!(text.contains("# TYPE callipepla_a_total counter"));
+        assert!(text.contains("callipepla_a_total 42"));
+        assert!(text.contains("callipepla_b 2.5"));
+        assert!(text.contains("callipepla_c_width_bucket{le=\"1\"} 2"));
+        assert!(text.contains("callipepla_c_width_bucket{le=\"+Inf\"} 3"));
+        assert!(text.contains("callipepla_c_width_sum 9"));
+        assert!(text.contains("callipepla_c_width_count 3"));
+    }
+
+    #[test]
+    fn json_roundtrips_and_carries_every_sample() {
+        let text = render_json(&demo_snapshot());
+        let parsed = Json::parse(&text).expect("exposition JSON must parse");
+        let metrics = parsed.get("metrics").and_then(Json::as_arr).expect("metrics array");
+        assert_eq!(metrics.len(), 3);
+        assert_eq!(metrics[0].get("kind").and_then(Json::as_str), Some("counter"));
+        assert_eq!(metrics[0].get("value").and_then(Json::as_f64), Some(42.0));
+        assert_eq!(metrics[2].get("count").and_then(Json::as_f64), Some(3.0));
+    }
+}

@@ -1,0 +1,38 @@
+//! The telemetry plane (PR 9): one dependency-free observability
+//! subsystem for the whole solver stack.
+//!
+//! Three layers:
+//!
+//! 1. **[`registry`]** — atomic instruments (counters, gauges,
+//!    fixed-log2-bucket histograms, and the thread-local-backed
+//!    [`LocalCounter`] that absorbed `precision::stats`) registered by
+//!    static name in [`catalog`].  With recording off (the default)
+//!    every gated instrument is one relaxed load and a branch, which is
+//!    what keeps the instrumented hot paths inside the <2% bench gate.
+//! 2. **[`trace`]** — the deterministic event log: structured events
+//!    stamped with logical clocks (pass index, flush sequence — never
+//!    wall time), byte-identical across replays of the same schedule.
+//! 3. **[`expo`]** — Prometheus-text and JSON renderers over one
+//!    registry [`Snapshot`], wired into `serve --metrics-dump`,
+//!    `serve --stats-json`, and `solve --profile`.
+//!
+//! The metric catalog, clock rules, and exposition formats are
+//! documented in `docs/OBSERVABILITY.md`.
+
+pub mod catalog;
+pub mod expo;
+pub mod registry;
+pub mod trace;
+
+pub use expo::{render_json, render_prometheus};
+pub use registry::{
+    global, recording, set_recording, snapshot, Counter, Gauge, Histogram, LocalCounter, Metric,
+    Registry, Sample, SampleValue, Snapshot,
+};
+pub use trace::{first_divergence, Event, EventKind, EventLog, EventSink, FlushReason};
+
+/// Prometheus text for the global registry — the `serve --metrics-dump`
+/// body.
+pub fn prometheus_dump() -> String {
+    render_prometheus(&snapshot())
+}

@@ -1,0 +1,433 @@
+//! The metrics registry: atomic instruments registered by static name.
+//!
+//! Three ordinary instruments — [`Counter`], [`Gauge`], and the
+//! fixed-log2-bucket [`Histogram`] — plus [`LocalCounter`], the
+//! registry-backed replacement for the `precision::stats` thread-local
+//! counters (see its docs for the dual local/total view).  Instruments
+//! live as `static` items next to the code they instrument (the crate
+//! catalog is [`crate::obs::catalog`]) and cost one relaxed atomic load
+//! and a predictable branch when recording is off — the default — so
+//! the instrumented hot paths stay bitwise and within noise of their
+//! uninstrumented timings (`benches/hot_paths.rs` pins this with the
+//! `*_obs_off` / `*_obs_on` row pair).
+//!
+//! A [`Snapshot`] is one consistent-enough read of every registered
+//! instrument, sorted by name, and is the sole input to the exposition
+//! renderers in [`crate::obs::expo`] — Prometheus text and JSON render
+//! the same snapshot, so the two surfaces can never disagree.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::thread::LocalKey;
+
+/// Process-global recording switch.  Off by default: every gated
+/// instrument ([`Counter`], [`Gauge`], [`Histogram`]) early-returns on
+/// a relaxed load, which is the "no sink installed" near-zero-cost
+/// path.  [`LocalCounter`] ignores this switch — its thread-local delta
+/// semantics are load-bearing for the counter-wall tests.
+static RECORDING: AtomicBool = AtomicBool::new(false);
+
+/// Turn metric recording on or off (process-global).  `serve
+/// --metrics-dump`, `solve --profile`, and the observability tests turn
+/// it on; everything else runs with the switch off.
+pub fn set_recording(on: bool) {
+    RECORDING.store(on, Ordering::Relaxed);
+}
+
+/// Whether gated instruments are currently recording.
+pub fn recording() -> bool {
+    RECORDING.load(Ordering::Relaxed)
+}
+
+/// A monotonically increasing counter (`*_total` by convention).
+#[derive(Debug)]
+pub struct Counter {
+    name: &'static str,
+    help: &'static str,
+    value: AtomicU64,
+}
+
+impl Counter {
+    /// A new counter; `name` must be unique across the catalog.
+    pub const fn new(name: &'static str, help: &'static str) -> Self {
+        Self { name, help, value: AtomicU64::new(0) }
+    }
+
+    /// Add one (no-op while recording is off).
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n` (no-op while recording is off).
+    pub fn add(&self, n: u64) {
+        if recording() {
+            self.value.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+
+    /// The registered name.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+/// A last-write-wins gauge holding an `f64` (stored as bits).
+#[derive(Debug)]
+pub struct Gauge {
+    name: &'static str,
+    help: &'static str,
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    /// A new gauge; `name` must be unique across the catalog.
+    pub const fn new(name: &'static str, help: &'static str) -> Self {
+        Self { name, help, bits: AtomicU64::new(0) }
+    }
+
+    /// Set the gauge (no-op while recording is off).
+    pub fn set(&self, v: f64) {
+        if recording() {
+            self.bits.store(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+
+    /// The registered name.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+/// Bucket count for [`Histogram`]: slot 0 holds zero observations, slot
+/// `i` in `1..=31` holds `2^(i-1) ..= 2^i - 1`, and the last slot is
+/// the `+Inf` overflow.
+pub const HIST_BUCKETS: usize = 33;
+
+/// A histogram over `u64` observations with fixed log2 buckets — no
+/// configuration, so every histogram in the catalog shares one bucket
+/// layout and snapshots render without per-instrument schema.
+#[derive(Debug)]
+pub struct Histogram {
+    name: &'static str,
+    help: &'static str,
+    buckets: [AtomicU64; HIST_BUCKETS],
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    /// A new histogram; `name` must be unique across the catalog.
+    pub const fn new(name: &'static str, help: &'static str) -> Self {
+        // A `const` item is the MSRV-stable way to array-repeat a
+        // non-`Copy` zero (each array element gets its own atomic; the
+        // const is never read back, so interior mutability is moot).
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Self {
+            name,
+            help,
+            buckets: [ZERO; HIST_BUCKETS],
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    /// The log2 bucket slot an observation lands in.
+    pub fn slot(v: u64) -> usize {
+        (64 - v.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+    }
+
+    /// The inclusive upper bound of slot `i`, or `None` for `+Inf`.
+    pub fn upper_bound(i: usize) -> Option<u64> {
+        if i + 1 < HIST_BUCKETS {
+            Some((1u64 << i) - 1)
+        } else {
+            None
+        }
+    }
+
+    /// Record one observation (no-op while recording is off).
+    pub fn observe(&self, v: u64) {
+        if recording() {
+            self.buckets[Self::slot(v)].fetch_add(1, Ordering::Relaxed);
+            self.sum.fetch_add(v, Ordering::Relaxed);
+            self.count.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Observations recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all observations.
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// The registered name.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+/// The registry-backed form of the `precision::stats` counters: a
+/// thread-local cell (the delta-semantics view the PR 6/7 counter walls
+/// read through `matrix_value_reads()` / `vector_element_moves()`) plus
+/// a process-global total (the exposition view).  `add` bumps both and
+/// is **not** gated on [`recording`] — the counter walls measure real
+/// traffic deltas and must keep counting with no sink installed, and
+/// the thread-local bump already dominates the cost.
+#[derive(Debug)]
+pub struct LocalCounter {
+    name: &'static str,
+    help: &'static str,
+    cell: &'static LocalKey<Cell<u64>>,
+    total: AtomicU64,
+}
+
+impl LocalCounter {
+    /// A new local counter over the given thread-local cell.
+    pub const fn new(
+        name: &'static str,
+        help: &'static str,
+        cell: &'static LocalKey<Cell<u64>>,
+    ) -> Self {
+        Self { name, help, cell, total: AtomicU64::new(0) }
+    }
+
+    /// Add `n` to both the calling thread's cell and the global total.
+    pub fn add(&self, n: u64) {
+        self.cell.with(|c| c.set(c.get() + n));
+        self.total.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// The calling thread's cumulative count (delta semantics: callers
+    /// subtract two reads around the work they meter).
+    pub fn local(&self) -> u64 {
+        self.cell.with(Cell::get)
+    }
+
+    /// The process-wide cumulative count (what the exposition renders).
+    pub fn total(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    /// The registered name.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+/// A `'static` reference to any registered instrument.
+#[derive(Debug, Clone, Copy)]
+pub enum Metric {
+    /// A [`Counter`].
+    Counter(&'static Counter),
+    /// A [`LocalCounter`] (rendered as a counter from its total).
+    Local(&'static LocalCounter),
+    /// A [`Gauge`].
+    Gauge(&'static Gauge),
+    /// A [`Histogram`].
+    Histogram(&'static Histogram),
+}
+
+impl Metric {
+    /// The instrument's registered name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Metric::Counter(c) => c.name,
+            Metric::Local(c) => c.name,
+            Metric::Gauge(g) => g.name,
+            Metric::Histogram(h) => h.name,
+        }
+    }
+
+    /// The instrument's help line.
+    pub fn help(&self) -> &'static str {
+        match self {
+            Metric::Counter(c) => c.help,
+            Metric::Local(c) => c.help,
+            Metric::Gauge(g) => g.help,
+            Metric::Histogram(h) => h.help,
+        }
+    }
+}
+
+/// One instrument's value as read at snapshot time.
+#[derive(Debug, Clone)]
+pub enum SampleValue {
+    /// Counter (or local-counter total) value.
+    Counter(u64),
+    /// Gauge value.
+    Gauge(f64),
+    /// Histogram buckets as `(upper_bound, cumulative_count)` pairs —
+    /// the last entry is the `+Inf` bucket (`upper_bound == None`) —
+    /// plus the sum and count.
+    Histogram {
+        /// Cumulative per-bucket counts.
+        buckets: Vec<(Option<u64>, u64)>,
+        /// Sum of observations.
+        sum: u64,
+        /// Number of observations.
+        count: u64,
+    },
+}
+
+/// One named sample in a [`Snapshot`].
+#[derive(Debug, Clone)]
+pub struct Sample {
+    /// Instrument name.
+    pub name: &'static str,
+    /// Instrument help line.
+    pub help: &'static str,
+    /// The value read at snapshot time.
+    pub value: SampleValue,
+}
+
+/// A point-in-time read of every registered instrument, sorted by name
+/// so both renderers emit deterministic output.
+#[derive(Debug, Clone, Default)]
+pub struct Snapshot {
+    /// The samples, sorted by name.
+    pub samples: Vec<Sample>,
+}
+
+impl Snapshot {
+    /// Look up a sample by name.
+    pub fn get(&self, name: &str) -> Option<&Sample> {
+        self.samples.iter().find(|s| s.name == name)
+    }
+
+    /// A counter's value by name (0 when absent or not a counter) —
+    /// the convenient form for before/after deltas in tests and
+    /// `solve --profile`.
+    pub fn counter(&self, name: &str) -> u64 {
+        match self.get(name).map(|s| &s.value) {
+            Some(SampleValue::Counter(v)) => *v,
+            _ => 0,
+        }
+    }
+}
+
+/// The instrument registry: a name-keyed list of [`Metric`] references.
+#[derive(Debug, Default)]
+pub struct Registry {
+    metrics: Mutex<Vec<Metric>>,
+}
+
+impl Registry {
+    /// An empty registry (tests; production code uses [`global`]).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register an instrument.  A duplicate name is ignored — the first
+    /// registration wins, so re-registering the catalog is harmless.
+    pub fn register(&self, m: Metric) {
+        let mut v = self.metrics.lock().unwrap();
+        if v.iter().all(|e| e.name() != m.name()) {
+            v.push(m);
+        }
+    }
+
+    /// Read every instrument into a name-sorted [`Snapshot`].
+    pub fn snapshot(&self) -> Snapshot {
+        let metrics = self.metrics.lock().unwrap();
+        let mut samples: Vec<Sample> = metrics
+            .iter()
+            .map(|m| {
+                let value = match m {
+                    Metric::Counter(c) => SampleValue::Counter(c.get()),
+                    Metric::Local(c) => SampleValue::Counter(c.total()),
+                    Metric::Gauge(g) => SampleValue::Gauge(g.get()),
+                    Metric::Histogram(h) => {
+                        let mut cum = 0u64;
+                        let buckets = (0..HIST_BUCKETS)
+                            .map(|i| {
+                                cum += h.buckets[i].load(Ordering::Relaxed);
+                                (Histogram::upper_bound(i), cum)
+                            })
+                            .collect();
+                        SampleValue::Histogram { buckets, sum: h.sum(), count: h.count() }
+                    }
+                };
+                Sample { name: m.name(), help: m.help(), value }
+            })
+            .collect();
+        samples.sort_by_key(|s| s.name);
+        Snapshot { samples }
+    }
+}
+
+/// The process-global registry, pre-loaded with the crate catalog
+/// ([`crate::obs::catalog::all`]) on first use.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(|| {
+        let r = Registry::new();
+        for m in crate::obs::catalog::all() {
+            r.register(m);
+        }
+        r
+    })
+}
+
+/// A snapshot of the global registry — the input both `serve
+/// --metrics-dump` and `solve --profile` render.
+pub fn snapshot() -> Snapshot {
+    global().snapshot()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log2_slots_and_bounds() {
+        assert_eq!(Histogram::slot(0), 0);
+        assert_eq!(Histogram::slot(1), 1);
+        assert_eq!(Histogram::slot(2), 2);
+        assert_eq!(Histogram::slot(3), 2);
+        assert_eq!(Histogram::slot(4), 3);
+        assert_eq!(Histogram::slot(u64::MAX), HIST_BUCKETS - 1);
+        assert_eq!(Histogram::upper_bound(0), Some(0));
+        assert_eq!(Histogram::upper_bound(1), Some(1));
+        assert_eq!(Histogram::upper_bound(2), Some(3));
+        assert_eq!(Histogram::upper_bound(HIST_BUCKETS - 1), None);
+    }
+
+    #[test]
+    fn gated_instruments_are_inert_until_recording() {
+        static C: Counter = Counter::new("test_gate_total", "gate test");
+        // Tests share the process-global switch; force it off locally.
+        let was = recording();
+        set_recording(false);
+        C.inc();
+        assert_eq!(C.get(), 0, "counter must not move while recording is off");
+        set_recording(true);
+        C.add(3);
+        assert_eq!(C.get(), 3);
+        set_recording(was);
+    }
+
+    #[test]
+    fn duplicate_registration_is_idempotent() {
+        static C: Counter = Counter::new("test_dup_total", "dup test");
+        let r = Registry::new();
+        r.register(Metric::Counter(&C));
+        r.register(Metric::Counter(&C));
+        assert_eq!(r.snapshot().samples.len(), 1);
+    }
+}

@@ -1,0 +1,317 @@
+//! The deterministic event trace: structured events stamped with
+//! *logical* clocks — pass index, trip index, scheduler flush sequence
+//! — and never wall time, thread ids, or pointers.
+//!
+//! That stamping rule is the whole design: two replays of the same
+//! request trace produce byte-identical rendered logs
+//! (`tests/observability.rs` pins this, the way the counter walls pin
+//! traffic), and a genuine schedule change — a different flush order, a
+//! different coalescing — shows up as a textual diff.  Completion
+//! events arrive from pool workers in nondeterministic order, so
+//! [`EventLog::render`] canonicalizes: events sort by `(seq, kind
+//! rank, lane)` before rendering.  The rendered order is canonical,
+//! not causal — it is a comparison key, not a timeline.
+//!
+//! ```
+//! use callipepla::obs::{Event, EventKind, EventLog, FlushReason};
+//! let mut log = EventLog::default();
+//! log.push(Event {
+//!     seq: 0,
+//!     lane: 0,
+//!     kind: EventKind::Flush { matrix: 0, lanes: 4, reason: FlushReason::BatchFull },
+//! });
+//! log.push(Event { seq: 0, lane: 0, kind: EventKind::Submit { matrix: 0, tenant: 3 } });
+//! // Submit ranks ahead of Flush at equal seq, whatever the push order.
+//! assert!(log.render().starts_with("submit"));
+//! ```
+
+use std::sync::Mutex;
+
+use crate::solver::SolveResult;
+
+/// Why the scheduler cut a batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlushReason {
+    /// A per-matrix pending group reached `max_batch` lanes.
+    BatchFull,
+    /// An explicit `flush`/`drain` swept the queues.
+    QueueDrained,
+}
+
+impl FlushReason {
+    /// Stable label used in rendered logs and metric docs.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FlushReason::BatchFull => "batch-full",
+            FlushReason::QueueDrained => "queue-drained",
+        }
+    }
+}
+
+/// What happened.  Service-side kinds (`Submit`/`Flush`/`BatchDone`)
+/// are stamped with scheduler clocks; per-solve kinds
+/// (`Pass`/`LaneDone`) with pass-index clocks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A request joined its matrix's pending group.  `seq` is the
+    /// submission index (requests accepted so far).
+    Submit {
+        /// Registry slot of the matrix.
+        matrix: usize,
+        /// The submitting tenant.
+        tenant: u32,
+    },
+    /// The scheduler cut a batch.  `seq` is the flush sequence.
+    Flush {
+        /// Registry slot of the matrix.
+        matrix: usize,
+        /// Lanes coalesced into the batch.
+        lanes: u32,
+        /// What triggered the cut.
+        reason: FlushReason,
+    },
+    /// A dispatched batch finished.  `seq` is the flush sequence of its
+    /// dispatch — the clock that makes completions comparable even
+    /// though workers finish in nondeterministic order.
+    BatchDone {
+        /// Registry slot of the matrix.
+        matrix: usize,
+        /// Lanes the batch carried.
+        lanes: u32,
+        /// RHS-iterations the batch retired.
+        rhs_iters: u64,
+    },
+    /// One matrix pass of one lane's solve.  `seq` is the pass index.
+    Pass {
+        /// The precision scheme the pass streamed under.
+        scheme: &'static str,
+    },
+    /// A lane's solve finished.  `seq` is the final pass index.
+    LaneDone {
+        /// Main-loop iterations executed.
+        iters: u32,
+        /// Whether rr reached the threshold.
+        converged: bool,
+        /// Bit pattern of the final rr — bitwise, not approximate, so
+        /// a seq-vs-parallel pair must agree exactly.
+        rr_bits: u64,
+    },
+}
+
+impl EventKind {
+    /// Tie-break rank at equal `seq` (stable across kinds that share a
+    /// clock domain: submit before flush, pass before lane-done).
+    fn rank(&self) -> u8 {
+        match self {
+            EventKind::Submit { .. } | EventKind::Pass { .. } => 0,
+            EventKind::Flush { .. } | EventKind::LaneDone { .. } => 1,
+            EventKind::BatchDone { .. } => 2,
+        }
+    }
+}
+
+/// One logged event: a logical-clock stamp plus its [`EventKind`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    /// Primary logical clock (submission index, flush sequence, or
+    /// pass index — see the kind's docs).
+    pub seq: u64,
+    /// Secondary clock: the lane index (0 for service-wide events).
+    pub lane: u32,
+    /// What happened.
+    pub kind: EventKind,
+}
+
+impl Event {
+    fn render_line(&self, out: &mut String) {
+        use std::fmt::Write;
+        match self.kind {
+            EventKind::Submit { matrix, tenant } => {
+                let _ = writeln!(out, "submit seq={} matrix=A{matrix} tenant={tenant}", self.seq);
+            }
+            EventKind::Flush { matrix, lanes, reason } => {
+                let _ = writeln!(
+                    out,
+                    "flush seq={} matrix=A{matrix} lanes={lanes} reason={}",
+                    self.seq,
+                    reason.name()
+                );
+            }
+            EventKind::BatchDone { matrix, lanes, rhs_iters } => {
+                let _ = writeln!(
+                    out,
+                    "done seq={} matrix=A{matrix} lanes={lanes} rhs_iters={rhs_iters}",
+                    self.seq
+                );
+            }
+            EventKind::Pass { scheme } => {
+                let _ = writeln!(out, "pass seq={} lane={} scheme={scheme}", self.seq, self.lane);
+            }
+            EventKind::LaneDone { iters, converged, rr_bits } => {
+                let _ = writeln!(
+                    out,
+                    "lane_done seq={} lane={} iters={iters} converged={converged} \
+                     rr=0x{rr_bits:016x}",
+                    self.seq,
+                    self.lane
+                );
+            }
+        }
+    }
+}
+
+/// An append-only log of [`Event`]s with a canonical byte-stable
+/// rendering.
+#[derive(Debug, Clone, Default)]
+pub struct EventLog {
+    events: Vec<Event>,
+}
+
+impl EventLog {
+    /// Append one event.
+    pub fn push(&mut self, e: Event) {
+        self.events.push(e);
+    }
+
+    /// The events in insertion order.
+    pub fn events(&self) -> &[Event] {
+        &self.events
+    }
+
+    /// Number of events logged.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Whether the log is empty.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The canonical text form: one line per event, sorted by
+    /// `(seq, kind rank, lane)`.  Two runs of the same schedule render
+    /// byte-identically; any schedule difference renders differently.
+    pub fn render(&self) -> String {
+        let mut order: Vec<&Event> = self.events.iter().collect();
+        order.sort_by_key(|e| (e.seq, e.kind.rank(), e.lane));
+        let mut out = String::new();
+        for e in order {
+            e.render_line(&mut out);
+        }
+        out
+    }
+
+    /// The value-plane event log of a finished batch: per-lane `pass`
+    /// events (passes `0..=iters`, the [`PrecisionTrace`] pass
+    /// convention of `modeled_m1_bytes`) and a closing `lane_done`
+    /// carrying the bit pattern of the final rr.  Bitwise-equal result
+    /// sets — e.g. a sequential and a lane-parallel run of the same
+    /// batch — therefore produce byte-identical logs.
+    ///
+    /// [`PrecisionTrace`]: crate::precision::PrecisionTrace
+    pub fn from_solves(results: &[SolveResult]) -> Self {
+        let mut log = EventLog::default();
+        for (k, r) in results.iter().enumerate() {
+            for pass in 0..=r.iters {
+                log.push(Event {
+                    seq: pass as u64,
+                    lane: k as u32,
+                    kind: EventKind::Pass { scheme: r.precision.scheme_at(pass).name() },
+                });
+            }
+            log.push(Event {
+                seq: r.iters as u64,
+                lane: k as u32,
+                kind: EventKind::LaneDone {
+                    iters: r.iters,
+                    converged: r.converged,
+                    rr_bits: r.final_rr.to_bits(),
+                },
+            });
+        }
+        log
+    }
+}
+
+/// First line (1-based) where two rendered logs differ — `None` when
+/// byte-identical.  A missing line (one log is a prefix of the other)
+/// counts as a difference at the first absent line.
+pub fn first_divergence(a: &str, b: &str) -> Option<usize> {
+    let mut la = a.lines();
+    let mut lb = b.lines();
+    let mut n = 0;
+    loop {
+        n += 1;
+        match (la.next(), lb.next()) {
+            (None, None) => return None,
+            (x, y) if x == y => {}
+            _ => return Some(n),
+        }
+    }
+}
+
+/// A shared, thread-safe event sink the service writes through.
+/// Install one with [`crate::service::SolverService::record_events`];
+/// the scheduler pushes `submit`/`flush` events from the caller thread
+/// and `done` events from pool workers (stamped with the dispatch's
+/// flush sequence, so rendering stays canonical).
+#[derive(Debug, Default)]
+pub struct EventSink {
+    log: Mutex<EventLog>,
+}
+
+impl EventSink {
+    /// Append one event.
+    pub fn push(&self, e: Event) {
+        self.log.lock().expect("event sink poisoned").push(e);
+    }
+
+    /// Render the canonical text form of everything logged so far.
+    pub fn render(&self) -> String {
+        self.log.lock().expect("event sink poisoned").render()
+    }
+
+    /// Take the log, leaving the sink empty.
+    pub fn take(&self) -> EventLog {
+        std::mem::take(&mut *self.log.lock().expect("event sink poisoned"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_is_insertion_order_independent() {
+        let a = Event { seq: 0, lane: 0, kind: EventKind::Submit { matrix: 0, tenant: 1 } };
+        let b = Event {
+            seq: 0,
+            lane: 0,
+            kind: EventKind::Flush { matrix: 0, lanes: 2, reason: FlushReason::BatchFull },
+        };
+        let c = Event {
+            seq: 0,
+            lane: 0,
+            kind: EventKind::BatchDone { matrix: 0, lanes: 2, rhs_iters: 7 },
+        };
+        let mut fwd = EventLog::default();
+        let mut rev = EventLog::default();
+        for e in [a, b, c] {
+            fwd.push(e);
+        }
+        for e in [c, b, a] {
+            rev.push(e);
+        }
+        assert_eq!(fwd.render(), rev.render());
+        assert_eq!(first_divergence(&fwd.render(), &rev.render()), None);
+    }
+
+    #[test]
+    fn divergence_points_at_the_first_differing_line() {
+        let a = "x\ny\nz\n";
+        let b = "x\nY\nz\n";
+        assert_eq!(first_divergence(a, b), Some(2));
+        assert_eq!(first_divergence(a, "x\ny\n"), Some(3));
+        assert_eq!(first_divergence(a, a), None);
+    }
+}

@@ -395,6 +395,7 @@ impl PrecisionController {
                         // not change.
                         if policy.escalate_to != policy.start {
                             self.current = policy.escalate_to;
+                            crate::obs::catalog::PRECISION_ESCALATIONS.inc();
                             self.trace.push(PrecisionEvent {
                                 pass: self.observed,
                                 scheme: policy.escalate_to,

@@ -28,31 +28,29 @@ pub mod adaptive;
 /// process.  Multithreaded kernel runs split their increments across
 /// the worker threads, so treat the counter as a serial-path probe.
 pub mod stats {
-    use std::cell::Cell;
-
-    thread_local! {
-        static MATRIX_VALUE_READS: Cell<u64> = const { Cell::new(0) };
-    }
+    use crate::obs::catalog::{PRECISION_MATRIX_VALUE_READS, PRECISION_VECTOR_ELEMENT_MOVES};
 
     /// Record `n` streamed matrix values (one per nnz touched).
     pub(crate) fn add_matrix_value_reads(n: u64) {
-        MATRIX_VALUE_READS.with(|c| c.set(c.get() + n));
+        PRECISION_MATRIX_VALUE_READS.add(n);
     }
 
     /// Matrix values streamed by SpMV kernels on this thread so far.
     /// Take a delta around the region under test.
+    ///
+    /// Since PR 9 the counter lives on the telemetry plane
+    /// ([`crate::obs::catalog::PRECISION_MATRIX_VALUE_READS`], a
+    /// [`crate::obs::LocalCounter`] that also keeps a process-global
+    /// total for exposition); this function remains the thread-local
+    /// delta view the counter-wall tests were written against.
     pub fn matrix_value_reads() -> u64 {
-        MATRIX_VALUE_READS.with(Cell::get)
-    }
-
-    thread_local! {
-        static VECTOR_ELEMENT_MOVES: Cell<u64> = const { Cell::new(0) };
+        PRECISION_MATRIX_VALUE_READS.local()
     }
 
     /// Record `n` vector elements copied across a block-layout boundary
     /// (per-lane vector ↔ interleaved lane-major block arena).
     pub(crate) fn add_vector_element_moves(n: u64) {
-        VECTOR_ELEMENT_MOVES.with(|c| c.set(c.get() + n));
+        PRECISION_VECTOR_ELEMENT_MOVES.add(n);
     }
 
     /// Vector elements moved across block-layout boundaries on this
@@ -64,9 +62,10 @@ pub mod stats {
     /// buffer swaps — while the staged path pays `2·n·lanes` per
     /// iteration (pinned in `tests/block_spmv.rs`).  Take a delta around
     /// the region under test; like [`matrix_value_reads`] it is
-    /// thread-local, so measure serial-path solves on one thread.
+    /// thread-local, so measure serial-path solves on one thread (the
+    /// registry total aggregates across threads for exposition).
     pub fn vector_element_moves() -> u64 {
-        VECTOR_ELEMENT_MOVES.with(Cell::get)
+        PRECISION_VECTOR_ELEMENT_MOVES.local()
     }
 }
 

@@ -417,6 +417,10 @@ impl InstructionBus {
     /// and the lane's live precision scheme stamped into each Type-I
     /// word — same issue-time binding as alpha/beta in `bind_cmds`.
     fn issue_reads(&mut self, prog: &PhaseProgram, lane_offset_beats: u32, scheme: Scheme) {
+        // Every trip — full dispatch or bookkeeping-only resident issue
+        // — passes through here exactly once, so this is the one count
+        // site for issued trips.
+        crate::obs::catalog::PROGRAM_TRIPS_ISSUED.inc();
         let lane_off = |v: Vector| if v == Vector::M { 0 } else { lane_offset_beats };
         if self.record {
             for s in &prog.vec_steps {
@@ -470,6 +474,7 @@ impl InstructionBus {
                 if let Some(m) = mem.as_deref_mut() {
                     m.commit(s.vector);
                 }
+                crate::obs::catalog::PROGRAM_WRITE_ACKS.inc();
                 self.acks.push(MemResponse { base_addr: wr.base_addr, len: wr.len });
             }
         }

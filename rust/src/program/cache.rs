@@ -133,8 +133,10 @@ impl ProgramCache {
         });
         if compiled_here {
             self.misses.fetch_add(1, Ordering::Relaxed);
+            crate::obs::catalog::SERVICE_CACHE_MISSES.inc();
         } else {
             self.hits.fetch_add(1, Ordering::Relaxed);
+            crate::obs::catalog::SERVICE_CACHE_HITS.inc();
         }
         Arc::clone(program)
     }

@@ -33,8 +33,16 @@
 //!   same serving trace via
 //!   [`sim::schedule_cycles`](crate::sim::schedule_cycles).
 //!
+//! Since PR 9 the scheduler also feeds the telemetry plane
+//! ([`crate::obs`]): `callipepla_service_*` instruments (flush reasons,
+//! coalesce width, logical queue wait, cache traffic) and — once a sink
+//! is installed with [`SolverService::record_events`] — a deterministic
+//! event trace of the schedule, stamped with submission/flush logical
+//! clocks and byte-identical across replays of the same request trace.
+//!
 //! Design notes, the flush policy, and the bucket sizing rule live in
-//! `docs/SERVICE.md`; the CLI front-end is `callipepla serve`.
+//! `docs/SERVICE.md` (telemetry in `docs/OBSERVABILITY.md`); the CLI
+//! front-end is `callipepla serve`.
 //!
 //! ```
 //! use callipepla::service::{ServiceConfig, SolveRequest, SolverService};

@@ -28,10 +28,13 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::engine::WorkerPool;
+use crate::obs::catalog as obs;
+use crate::obs::{Event, EventKind, EventSink, FlushReason};
 use crate::program::ProgramCache;
 use crate::sim::{schedule_cycles, AccelSimConfig, ScheduledBatch};
 use crate::solver::{SolveOptions, SolveResult};
 use crate::sparse::CsrMatrix;
+use crate::util::json::ObjWriter;
 
 use super::registry::{MatrixEntry, MatrixId, MatrixRegistry};
 
@@ -178,6 +181,21 @@ impl BatchRecord {
     pub fn scheduled(&self) -> ScheduledBatch {
         ScheduledBatch { n: self.n, nnz: self.nnz, lanes: self.lanes, trips: self.max_iters as u64 }
     }
+
+    /// Serialize as one JSON object — an entry of the `records` array
+    /// in [`ServiceStats::to_json`].
+    pub fn to_json(&self) -> String {
+        let tenants: Vec<String> = self.tenants.iter().map(u32::to_string).collect();
+        let mut w = ObjWriter::new();
+        w.field_str("matrix", &self.matrix.to_string());
+        w.field_raw("n", &self.n.to_string());
+        w.field_raw("nnz", &self.nnz.to_string());
+        w.field_raw("lanes", &self.lanes.to_string());
+        w.field_raw("tenants", &format!("[{}]", tenants.join(",")));
+        w.field_raw("max_iters", &self.max_iters.to_string());
+        w.field_raw("rhs_iters", &self.rhs_iters.to_string());
+        w.finish()
+    }
 }
 
 /// Shared mutable scheduler state the workers report into.
@@ -260,6 +278,34 @@ impl ServiceStats {
         }
         self.rhs_iterations as f64 / (cycles as f64 * cfg.hbm.cycle_time())
     }
+
+    /// Serialize the full snapshot — per-batch `records` included, in
+    /// their stored order — as one JSON object.  This is the
+    /// `serve --stats-json` body; the shape is pinned in
+    /// `tests/observability.rs`, so extend it there too.
+    pub fn to_json(&self) -> String {
+        let records: Vec<String> = self.records.iter().map(BatchRecord::to_json).collect();
+        let mut w = ObjWriter::new();
+        w.field_raw("requests", &self.requests.to_string());
+        w.field_raw("batches", &self.batches.to_string());
+        w.field_raw("rhs_iterations", &self.rhs_iterations.to_string());
+        w.field_raw("cache_hits", &self.cache_hits.to_string());
+        w.field_raw("cache_misses", &self.cache_misses.to_string());
+        w.field_raw("compiled_programs", &self.compiled_programs.to_string());
+        w.field_raw("records", &format!("[{}]", records.join(",")));
+        w.finish()
+    }
+
+    /// Push the snapshot's time-plane figures onto the telemetry plane
+    /// ([`crate::sim::export_modeled_gauges`]) so `serve
+    /// --metrics-dump` shows modeled cycles and throughput next to the
+    /// value-plane counters.
+    pub fn export_time_plane_gauges(&self, cfg: &AccelSimConfig) {
+        crate::sim::export_modeled_gauges(
+            self.modeled_cycles(cfg),
+            self.modeled_rhs_iterations_per_second(cfg),
+        );
+    }
 }
 
 /// Service configuration.
@@ -318,6 +364,10 @@ struct Lane {
     b: Vec<f64>,
     tenant: u32,
     slot: Arc<Completion>,
+    /// Submission index (0-based) when the request was accepted — the
+    /// logical clock behind the queue-wait histogram and the `submit`
+    /// trace events.
+    seq: u64,
 }
 
 /// The solver service: registry + program cache + coalescing queue +
@@ -348,6 +398,11 @@ pub struct SolverService {
     pending: Vec<Vec<Lane>>,
     stats: Arc<StatsInner>,
     submitted: u64,
+    /// Batches dispatched so far — the flush-sequence logical clock
+    /// stamped onto `flush`/`done` trace events.
+    flushes: u64,
+    /// Installed event sink ([`SolverService::record_events`]).
+    events: Option<Arc<EventSink>>,
 }
 
 impl SolverService {
@@ -363,7 +418,19 @@ impl SolverService {
             pending: Vec::new(),
             stats: Arc::new(StatsInner::default()),
             submitted: 0,
+            flushes: 0,
+            events: None,
         }
+    }
+
+    /// Install (or return the already-installed) deterministic event
+    /// sink.  From here on the scheduler logs `submit` and `flush`
+    /// events from the caller thread and `done` events from the batch
+    /// workers, all stamped with logical clocks — render the sink after
+    /// [`SolverService::drain`] for a byte-stable transcript of the
+    /// schedule (see `docs/OBSERVABILITY.md`).
+    pub fn record_events(&mut self) -> Arc<EventSink> {
+        Arc::clone(self.events.get_or_insert_with(|| Arc::new(EventSink::default())))
     }
 
     /// Admit a matrix (derives its solve state once — see
@@ -400,12 +467,21 @@ impl SolverService {
             "right-hand side length must match matrix {} (n = {n})",
             req.matrix
         );
+        let seq = self.submitted;
         self.submitted += 1;
+        obs::SERVICE_REQUESTS.inc();
+        if let Some(sink) = &self.events {
+            sink.push(Event {
+                seq,
+                lane: 0,
+                kind: EventKind::Submit { matrix: req.matrix.index(), tenant: req.tenant },
+            });
+        }
         let slot = Completion::new();
         let ticket = SolveTicket { slot: Arc::clone(&slot) };
-        self.pending[req.matrix.index()].push(Lane { b: req.b, tenant: req.tenant, slot });
+        self.pending[req.matrix.index()].push(Lane { b: req.b, tenant: req.tenant, slot, seq });
         if self.pending[req.matrix.index()].len() >= self.cfg.max_batch {
-            self.dispatch(req.matrix);
+            self.dispatch(req.matrix, FlushReason::BatchFull);
         }
         ticket
     }
@@ -415,7 +491,7 @@ impl SolverService {
     pub fn flush(&mut self) {
         for id in self.registry.ids().collect::<Vec<_>>() {
             while !self.pending[id.index()].is_empty() {
-                self.dispatch(id);
+                self.dispatch(id, FlushReason::QueueDrained);
             }
         }
     }
@@ -448,23 +524,47 @@ impl SolverService {
     }
 
     /// Cut one batch (up to `max_batch` oldest lanes) off a matrix's
-    /// pending group and hand it to the pool.
-    fn dispatch(&mut self, id: MatrixId) {
+    /// pending group and hand it to the pool.  Runs on the caller
+    /// thread, so the flush sequence it stamps is a deterministic
+    /// function of the request sequence.
+    fn dispatch(&mut self, id: MatrixId, reason: FlushReason) {
         let group = &mut self.pending[id.index()];
         if group.is_empty() {
             return;
         }
         let take = group.len().min(self.cfg.max_batch);
         let lanes: Vec<Lane> = group.drain(..take).collect();
+        let flush_seq = self.flushes;
+        self.flushes += 1;
+        obs::SERVICE_BATCHES.inc();
+        match reason {
+            FlushReason::BatchFull => obs::SERVICE_FLUSH_BATCH_FULL.inc(),
+            FlushReason::QueueDrained => obs::SERVICE_FLUSH_DRAINED.inc(),
+        }
+        obs::SERVICE_COALESCE_WIDTH.observe(lanes.len() as u64);
+        for lane in &lanes {
+            // Logical queue wait: submissions accepted after this lane
+            // joined its group (never wall time).
+            obs::SERVICE_QUEUE_WAIT.observe(self.submitted - 1 - lane.seq);
+        }
+        if let Some(sink) = &self.events {
+            sink.push(Event {
+                seq: flush_seq,
+                lane: 0,
+                kind: EventKind::Flush { matrix: id.index(), lanes: lanes.len() as u32, reason },
+            });
+        }
         let entry = Arc::clone(self.registry.entry(id));
         let cache = Arc::clone(&self.cache);
         let stats = Arc::clone(&self.stats);
         let opts = self.cfg.opts;
         let lane_workers = self.cfg.lane_workers;
         let block = self.cfg.block_spmv;
+        let events = self.events.clone();
         stats.batch_started();
-        self.pool
-            .spawn(move || run_batch(id, entry, cache, stats, opts, lanes, lane_workers, block));
+        self.pool.spawn(move || {
+            run_batch(id, entry, cache, stats, opts, lanes, lane_workers, block, flush_seq, events)
+        });
     }
 }
 
@@ -500,6 +600,8 @@ fn run_batch(
     lanes: Vec<Lane>,
     lane_workers: usize,
     block: bool,
+    flush_seq: u64,
+    events: Option<Arc<EventSink>>,
 ) {
     let mut bs = Vec::with_capacity(lanes.len());
     let mut tenants = Vec::with_capacity(lanes.len());
@@ -529,12 +631,28 @@ fn run_batch(
                 max_iters: results.iter().map(|r| r.iters).max().unwrap_or(0),
                 rhs_iters: results.iter().map(|r| r.iters as u64).sum(),
             };
+            if let Some(sink) = &events {
+                // Stamped with the dispatch's flush sequence: workers
+                // finish in nondeterministic order, but the rendered
+                // log sorts on this clock, so the transcript does not
+                // depend on completion timing.
+                sink.push(Event {
+                    seq: flush_seq,
+                    lane: 0,
+                    kind: EventKind::BatchDone {
+                        matrix: id.index(),
+                        lanes: record.lanes,
+                        rhs_iters: record.rhs_iters,
+                    },
+                });
+            }
             for (slot, res) in slots.iter().zip(results) {
                 slot.fulfill(res);
             }
             stats.batch_finished(Some(record));
         }
         Err(_) => {
+            obs::SERVICE_BATCH_PANICS.inc();
             for slot in &slots {
                 slot.fail("the batch job executing this request panicked");
             }

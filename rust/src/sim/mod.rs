@@ -16,6 +16,17 @@
 pub mod dataflow;
 pub mod iteration;
 
+/// Export a modeled schedule's time-plane figures to the telemetry
+/// plane ([`crate::obs`]): modeled cycles and RHS-iteration throughput
+/// land on the `callipepla_sim_*` gauges, so `serve --metrics-dump`
+/// shows the time plane next to the value-plane counters (both derive
+/// from the same compiled program — the invariant this module exists
+/// to keep).  No-op while recording is off, like every gauge.
+pub fn export_modeled_gauges(cycles: u64, rhs_iters_per_second: f64) {
+    crate::obs::catalog::SIM_MODELED_TRACE_CYCLES.set(cycles as f64);
+    crate::obs::catalog::SIM_MODELED_RHS_ITERS_PER_SECOND.set(rhs_iters_per_second);
+}
+
 pub use dataflow::{Dataflow, FifoId, NodeId, SimError, SimStats};
 pub use iteration::{
     batched_iteration_cycles, batched_iteration_cycles_mode, batched_rhs_iterations_per_second,

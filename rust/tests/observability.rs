@@ -1,0 +1,240 @@
+//! Telemetry-plane oracle tests (ISSUE 9 acceptance criteria).
+//!
+//! * Two replays of the same request trace render **byte-identical**
+//!   event logs — the trace is stamped with logical clocks only
+//!   (submission index, flush sequence, pass index), never wall time,
+//!   thread ids, or completion ordering.
+//! * A sequential and a lane-parallel run of the same batch produce
+//!   byte-identical value-plane logs ([`EventLog::from_solves`]):
+//!   dispatch strategy is invisible to the trace because the results
+//!   are bitwise identical.
+//! * A genuine schedule change — a different flush order — *is*
+//!   visible: the rendered logs diverge.
+//! * `ServiceStats::to_json` (the `serve --stats-json` body) has a
+//!   pinned shape that round-trips through `util::json`.
+//! * The Prometheus exposition covers the service / coordinator /
+//!   precision / pool / program / sim metric families, and the JSON
+//!   exposition parses.
+
+use callipepla::obs::{self, first_divergence, EventLog};
+use callipepla::service::{
+    replay_coalesced, synth_trace, ServiceConfig, SolveRequest, SolverService, TraceConfig,
+};
+use callipepla::sim::AccelSimConfig;
+use callipepla::solver::SolveOptions;
+use callipepla::sparse::{synth, CsrMatrix};
+use callipepla::util::json::Json;
+use callipepla::PreparedMatrix;
+
+fn test_matrices() -> Vec<CsrMatrix> {
+    vec![
+        synth::laplace2d_shifted(100, 0.2),
+        synth::laplace2d_shifted(180, 0.15),
+        synth::banded_spd(260, 2_600, 1e-3, 5),
+    ]
+}
+
+/// A deterministic per-request right-hand side (distinct per `phase`).
+fn ramp_rhs(n: usize, phase: usize) -> Vec<f64> {
+    (0..n).map(|i| 1.0 + ((i + phase) % 5) as f64 / 5.0).collect()
+}
+
+/// One full coalesced replay of the canonical trace, returning the
+/// rendered event log.
+fn replay_rendered_log() -> String {
+    let mut svc =
+        SolverService::new(ServiceConfig { max_batch: 4, workers: 3, ..Default::default() });
+    let sink = svc.record_events();
+    let ids: Vec<_> = test_matrices().into_iter().map(|a| svc.register(a)).collect();
+    let cfg = TraceConfig { requests: 48, tenants: 6, ..Default::default() };
+    let trace = synth_trace(svc.registry(), &ids, &cfg);
+    let _ = replay_coalesced(&mut svc, &trace);
+    svc.drain();
+    sink.render()
+}
+
+#[test]
+fn replayed_trace_event_log_is_byte_identical_across_runs() {
+    let a = replay_rendered_log();
+    let b = replay_rendered_log();
+    assert!(!a.is_empty(), "the sink must have recorded the schedule");
+    for needle in ["submit seq=", "flush seq=", "done seq="] {
+        assert!(a.contains(needle), "log must contain {needle:?} events:\n{a}");
+    }
+    assert_eq!(
+        first_divergence(&a, &b),
+        None,
+        "two replays of the same trace diverged:\n--- run 1 ---\n{a}\n--- run 2 ---\n{b}"
+    );
+    assert_eq!(a, b, "renders compare equal line-wise but not byte-wise");
+}
+
+#[test]
+fn sequential_and_lane_parallel_batches_render_identical_value_plane_logs() {
+    let a = synth::laplace2d_shifted(250, 0.1);
+    let opts = SolveOptions::callipepla();
+    let rhs: Vec<Vec<f64>> = (0..6).map(|k| ramp_rhs(a.n, 17 * k)).collect();
+    let prep = PreparedMatrix::new(&a, 2);
+    let seq = prep.solve_batch(&rhs, &opts);
+    let par = prep.solve_batch_parallel(&rhs, &opts, None, 0);
+    let log_seq = EventLog::from_solves(&seq).render();
+    let log_par = EventLog::from_solves(&par).render();
+    assert!(log_seq.contains("pass seq=0"), "per-pass events missing:\n{log_seq}");
+    assert!(log_seq.contains("lane_done seq="), "lane retirements missing:\n{log_seq}");
+    assert_eq!(
+        first_divergence(&log_seq, &log_par),
+        None,
+        "dispatch strategy leaked into the value-plane log"
+    );
+    assert_eq!(log_seq, log_par);
+}
+
+#[test]
+fn flush_order_mutation_shows_up_as_a_log_diff() {
+    let a = synth::laplace2d_shifted(120, 0.2);
+    let run = |flush_mid: bool| {
+        let mut svc =
+            SolverService::new(ServiceConfig { max_batch: 8, workers: 2, ..Default::default() });
+        let sink = svc.record_events();
+        let id = svc.register(a.clone());
+        let mut tickets = Vec::new();
+        for k in 0..6u32 {
+            let req = SolveRequest { matrix: id, b: ramp_rhs(a.n, 3 * k as usize), tenant: k };
+            tickets.push(svc.submit(req));
+            if flush_mid && k == 2 {
+                svc.flush(); // cut a 3-lane batch mid-trace
+            }
+        }
+        svc.drain();
+        for t in tickets {
+            t.wait();
+        }
+        sink.render()
+    };
+    let baseline = run(false);
+    let mutated = run(true);
+    assert!(
+        first_divergence(&baseline, &mutated).is_some(),
+        "a changed flush order must change the rendered log:\n{baseline}"
+    );
+}
+
+#[test]
+fn stats_json_shape_is_pinned() {
+    let a = synth::laplace2d_shifted(150, 0.15);
+    let mut svc =
+        SolverService::new(ServiceConfig { max_batch: 4, workers: 2, ..Default::default() });
+    let id = svc.register(a.clone());
+    let tickets: Vec<_> = (0..5u32)
+        .map(|k| svc.submit(SolveRequest { matrix: id, b: ramp_rhs(a.n, k as usize), tenant: k }))
+        .collect();
+    let stats = svc.drain();
+    for t in tickets {
+        t.wait();
+    }
+
+    let text = stats.to_json();
+    let j = Json::parse(&text).expect("stats JSON must parse");
+    assert_eq!(j.get("requests").and_then(Json::as_usize), Some(5));
+    assert_eq!(j.get("batches").and_then(Json::as_usize), Some(stats.batches as usize));
+    assert_eq!(
+        j.get("rhs_iterations").and_then(Json::as_usize),
+        Some(stats.rhs_iterations as usize)
+    );
+    assert_eq!(j.get("cache_hits").and_then(Json::as_usize), Some(stats.cache_hits as usize));
+    assert_eq!(j.get("cache_misses").and_then(Json::as_usize), Some(stats.cache_misses as usize));
+    assert_eq!(
+        j.get("compiled_programs").and_then(Json::as_usize),
+        Some(stats.compiled_programs as usize)
+    );
+    let records = j.get("records").and_then(Json::as_arr).expect("records array");
+    assert_eq!(records.len(), stats.records.len());
+    assert!(!records.is_empty(), "the drained run must have executed batches");
+    for (rec, json) in stats.records.iter().zip(records) {
+        assert_eq!(
+            json.get("matrix").and_then(Json::as_str),
+            Some(rec.matrix.to_string().as_str())
+        );
+        assert_eq!(json.get("n").and_then(Json::as_usize), Some(rec.n));
+        assert_eq!(json.get("nnz").and_then(Json::as_usize), Some(rec.nnz));
+        assert_eq!(json.get("lanes").and_then(Json::as_usize), Some(rec.lanes as usize));
+        assert_eq!(json.get("max_iters").and_then(Json::as_usize), Some(rec.max_iters as usize));
+        assert_eq!(json.get("rhs_iters").and_then(Json::as_usize), Some(rec.rhs_iters as usize));
+        let tenants: Vec<u32> = json
+            .get("tenants")
+            .and_then(Json::as_arr)
+            .expect("tenants array")
+            .iter()
+            .map(|t| t.as_usize().expect("tenant id") as u32)
+            .collect();
+        assert_eq!(tenants, rec.tenants);
+    }
+}
+
+#[test]
+fn prometheus_dump_covers_the_required_metric_families() {
+    // Open the recording gate for this run (shared process-global
+    // state, so every assertion below is ">= / > 0", never "==").
+    obs::set_recording(true);
+    let a = synth::laplace2d_shifted(150, 0.15);
+    let mut svc =
+        SolverService::new(ServiceConfig { max_batch: 4, workers: 2, ..Default::default() });
+    let id = svc.register(a.clone());
+    let tickets: Vec<_> = (0..4u32)
+        .map(|k| svc.submit(SolveRequest { matrix: id, b: ramp_rhs(a.n, k as usize), tenant: k }))
+        .collect();
+    let stats = svc.drain();
+    for t in tickets {
+        t.wait();
+    }
+    stats.export_time_plane_gauges(&AccelSimConfig::callipepla());
+    obs::set_recording(false);
+
+    let text = obs::prometheus_dump();
+    for family in [
+        "callipepla_service_requests_total",
+        "callipepla_service_coalesce_width_lanes",
+        "callipepla_service_queue_wait_submissions",
+        "callipepla_coord_phase1_trips_total",
+        "callipepla_precision_matrix_value_reads_total",
+        "callipepla_pool_jobs_total",
+        "callipepla_program_trips_issued_total",
+        "callipepla_sim_modeled_trace_cycles",
+    ] {
+        assert!(text.contains(&format!("# HELP {family} ")), "missing HELP for {family}");
+        assert!(text.contains(&format!("# TYPE {family} ")), "missing TYPE for {family}");
+    }
+
+    let snap = obs::snapshot();
+    assert!(snap.counter("callipepla_service_requests_total") >= 4);
+    assert!(snap.counter("callipepla_service_batches_total") >= 1);
+    assert!(snap.counter("callipepla_coord_phase1_trips_total") > 0);
+    assert!(snap.counter("callipepla_coord_init_trips_total") > 0);
+    // LocalCounter totals are ungated — the counter walls always count.
+    assert!(snap.counter("callipepla_precision_matrix_value_reads_total") > 0);
+    assert!(snap.counter("callipepla_pool_jobs_total") > 0);
+    assert!(snap.counter("callipepla_program_trips_issued_total") > 0);
+
+    // The JSON exposition of the same snapshot parses and carries the
+    // same instrument names.
+    let json = obs::render_json(&snap);
+    let parsed = Json::parse(&json).expect("metrics JSON must parse");
+    let metrics = parsed.get("metrics").and_then(Json::as_arr).expect("metrics array");
+    let has_requests = metrics
+        .iter()
+        .any(|m| m.get("name").and_then(Json::as_str) == Some("callipepla_service_requests_total"));
+    assert!(has_requests, "JSON exposition must list the service request counter");
+}
+
+#[test]
+fn docs_catalog_lists_every_registered_instrument() {
+    let doc_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/OBSERVABILITY.md");
+    let doc = std::fs::read_to_string(doc_path).expect("docs/OBSERVABILITY.md must exist");
+    for metric in callipepla::obs::catalog::all() {
+        assert!(
+            doc.contains(metric.name()),
+            "docs/OBSERVABILITY.md is missing `{}` — update the metric catalog table",
+            metric.name()
+        );
+    }
+}
