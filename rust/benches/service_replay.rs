@@ -15,12 +15,20 @@
 //!   `ServiceConfig::block_spmv` on: every batch runs as one resident
 //!   lane-major block (one nnz stream per batched iteration, zero
 //!   steady-state boundary moves), bitwise the same per-ticket results.
+//! * `service_replay_1k_capacity_deadline` — the production-knob
+//!   scenario (ROADMAP item 4 acceptance): 1024 requests over 32
+//!   matrices under a registry budgeted to a third of the working set
+//!   (LRU eviction + readmission churn) with logical-clock deadline
+//!   flushes.  Before timing, the row proves the guarantees: two
+//!   independent runs of the trace render byte-identical event logs,
+//!   every ticket is bitwise a lone solve, and the row's JSON carries
+//!   the p99 logical queue wait (bounded by the deadline).
 //!
-//! Iterations are capped (10 per request) so the rows measure the
-//! serving machinery at a fixed, path-identical amount of numerical
-//! work.  `--json` writes `BENCH_service_replay.json` (median seconds +
-//! RHS-iterations/s per row); `--tiny` shrinks the matrices for the CI
-//! `service-smoke` arm.
+//! Iterations are capped (10 per request; 3 on the 1k row) so the rows
+//! measure the serving machinery at a fixed, path-identical amount of
+//! numerical work.  `--json` writes `BENCH_service_replay.json` (median
+//! seconds + RHS-iterations/s per row); `--tiny` shrinks the matrices
+//! for the CI `service-smoke` arm.
 
 use callipepla::bench_harness::timing::{bench, BenchResult};
 use callipepla::service::{
@@ -35,9 +43,10 @@ struct Rec {
     median_s: f64,
     mean_s: f64,
     rhs_iters_per_s: f64,
+    queue_wait_p99: Option<u64>,
 }
 
-fn record(recs: &mut Vec<Rec>, r: &BenchResult, rhs_iters: u64) {
+fn record(recs: &mut Vec<Rec>, r: &BenchResult, rhs_iters: u64, queue_wait_p99: Option<u64>) {
     let per_s = rhs_iters as f64 / r.median_s;
     println!("{}   {per_s:.1} rhs-iters/s end-to-end", r.report());
     recs.push(Rec {
@@ -45,6 +54,7 @@ fn record(recs: &mut Vec<Rec>, r: &BenchResult, rhs_iters: u64) {
         median_s: r.median_s,
         mean_s: r.mean_s,
         rhs_iters_per_s: per_s,
+        queue_wait_p99,
     });
 }
 
@@ -84,12 +94,12 @@ fn main() {
     let r = bench("service_replay_64req_8rhs", 1, runs, || {
         std::hint::black_box(replay_coalesced(&mut svc, &trace));
     });
-    record(&mut recs, &r, rhs_iters);
+    record(&mut recs, &r, rhs_iters, None);
 
     let r = bench("service_coalesce_vs_sequential", 1, runs, || {
         std::hint::black_box(replay_sequential(svc.registry(), &trace, &opts));
     });
-    record(&mut recs, &r, rhs_iters);
+    record(&mut recs, &r, rhs_iters, None);
 
     // The same coalesced trace on a block-mode service: batches execute
     // as resident lane-major blocks.  Guard that the serving layer's
@@ -108,8 +118,93 @@ fn main() {
     let r = bench("service_replay_64req_8rhs_block", 1, runs, || {
         std::hint::black_box(replay_coalesced(&mut blk_svc, &blk_trace));
     });
-    record(&mut recs, &r, rhs_iters);
+    record(&mut recs, &r, rhs_iters, None);
     blk_svc.drain();
+
+    // The production-knob row: 1024 requests over 32 matrices, registry
+    // budgeted to a third of the working set, deadline flushes on the
+    // submission clock.  Guarantees first, timing second.
+    let prod_base = if tiny { 64 } else { 256 };
+    let prod_sizes: Vec<usize> = (0..32).map(|k| prod_base + (prod_base / 8) * k).collect();
+    let mut prod_opts = SolveOptions::callipepla();
+    prod_opts.max_iters = 3;
+    let deadline = 24u64;
+    let build_prod = |capacity_beats: u64| {
+        let mut svc = SolverService::new(ServiceConfig {
+            max_batch: 8,
+            deadline,
+            capacity_beats,
+            opts: prod_opts,
+            ..Default::default()
+        });
+        let ids: Vec<_> = prod_sizes
+            .iter()
+            .map(|&n| svc.register(synth::laplace2d_shifted(n, 0.1)))
+            .collect();
+        (svc, ids)
+    };
+    // Size the budget off the actual footprints: one unbounded pass to
+    // measure, then rebuild at a third of the working set.
+    let (probe, probe_ids) = build_prod(0);
+    let working_set: u64 =
+        probe_ids.iter().map(|&id| probe.registry().entry(id).footprint_beats()).sum();
+    drop(probe);
+    let capacity = working_set / 3;
+    let prod_trace_cfg = TraceConfig { requests: 1024, tenants: 8, ..Default::default() };
+
+    let run_prod = || {
+        let (mut svc, ids) = build_prod(capacity);
+        let sink = svc.record_events();
+        let trace = synth_trace(svc.registry(), &ids, &prod_trace_cfg);
+        let outcome = replay_coalesced(&mut svc, &trace);
+        let stats = svc.drain();
+        (outcome, stats, sink.render(), trace, svc)
+    };
+    let (prod_warm, prod_stats, log_a, prod_trace, prod_svc) = run_prod();
+    let (_, _, log_b, _, _) = run_prod();
+    assert_eq!(
+        callipepla::obs::first_divergence(&log_a, &log_b),
+        None,
+        "capacity+deadline replays must render byte-identical event logs"
+    );
+    assert!(
+        prod_stats.registry.evictions > 0 && prod_stats.registry.readmissions > 0,
+        "the third-of-working-set budget must actually churn the registry"
+    );
+    assert!(
+        prod_stats.records.iter().any(|rec| rec.reason.name() == "deadline"),
+        "the deadline threshold must actually cut batches"
+    );
+    // Every ticket bitwise a lone solve, through eviction churn and
+    // all.  The baseline resolves the trace's ids against the registry
+    // that minted them (ids are registry-tagged), readmitting evicted
+    // entries on demand under the same capacity budget.
+    let prod_seq = replay_sequential(prod_svc.registry(), &prod_trace, &prod_opts);
+    let prod_bitwise = prod_warm.results.iter().zip(&prod_seq.results).all(|(a, b)| {
+        a.iters == b.iters && a.x.iter().zip(&b.x).all(|(u, v)| u.to_bits() == v.to_bits())
+    });
+    assert!(prod_bitwise, "capacity+deadline service changed per-ticket bits");
+    let p99 = prod_stats.queue_wait_quantile(0.99);
+    assert!(
+        p99 <= deadline + 8,
+        "p99 logical queue wait {p99} must stay bounded by deadline {deadline} + max_batch"
+    );
+    println!(
+        "capacity+deadline: {} batches ({} deadline cuts), {} evictions / {} readmissions, \
+         p99 queue wait {p99}",
+        prod_stats.batches,
+        prod_stats.records.iter().filter(|rec| rec.reason.name() == "deadline").count(),
+        prod_stats.registry.evictions,
+        prod_stats.registry.readmissions
+    );
+    let prod_runs = if tiny { 2 } else { 3 };
+    let r = bench("service_replay_1k_capacity_deadline", 1, prod_runs, || {
+        let (mut svc, ids) = build_prod(capacity);
+        let trace = synth_trace(svc.registry(), &ids, &prod_trace_cfg);
+        std::hint::black_box(replay_coalesced(&mut svc, &trace));
+        svc.drain();
+    });
+    record(&mut recs, &r, prod_warm.rhs_iterations, Some(p99));
 
     let stats = svc.drain();
     println!(
@@ -131,9 +226,13 @@ fn main() {
              \"max_batch\": 8, \"rhs_iterations\": {rhs_iters} }},\n  \"results\": [\n"
         ));
         for (k, rec) in recs.iter().enumerate() {
+            let p99 = match rec.queue_wait_p99 {
+                Some(v) => format!(", \"queue_wait_p99\": {v}"),
+                None => String::new(),
+            };
             out.push_str(&format!(
                 "    {{ \"name\": \"{}\", \"median_s\": {:e}, \"mean_s\": {:e}, \
-                 \"rhs_iters_per_s\": {:.4} }}{}\n",
+                 \"rhs_iters_per_s\": {:.4}{p99} }}{}\n",
                 rec.name,
                 rec.median_s,
                 rec.mean_s,

@@ -22,7 +22,11 @@
 //! service layer (registry + bucketed program cache + coalescing
 //! scheduler, `docs/SERVICE.md`) and reports end-to-end RHS-iterations/s
 //! against the no-coalescing baseline, plus the time-plane pricing of
-//! the same trace.  `serve --metrics-dump` additionally emits the whole
+//! the same trace.  `serve --http <port>` instead binds the
+//! dependency-free HTTP front door (POST `/solve`, GET `/metrics` and
+//! `/stats` — `docs/SERVICE.md` §10); `--deadline`, `--capacity-beats`,
+//! `--pending-limit`, and `--tenant-quota` set the production knobs in
+//! either mode.  `serve --metrics-dump` additionally emits the whole
 //! telemetry registry in Prometheus text form and `--stats-json` the
 //! full `ServiceStats` as JSON; `solve --profile` prints the registry
 //! counter deltas for one solve (`docs/OBSERVABILITY.md`).
@@ -94,6 +98,10 @@ fn print_usage() {
          \u{20}                sim: --batch <rhs>  --lane-workers <w>  (w = 0: machine default)\n\
          \u{20}                serve: --requests <n>  --matrices <k>  --tenants <t>  --max-batch <b>\n\
          \u{20}                       --workers <w>  --seed <s>  --block-spmv  --adaptive\n\
+         \u{20}                       --deadline <subs>  (logical-clock flush deadline, 0 = off)\n\
+         \u{20}                       --capacity-beats <beats>  (registry LRU budget, 0 = unbounded)\n\
+         \u{20}                       --pending-limit <lanes>  --tenant-quota <lanes>  (backpressure)\n\
+         \u{20}                       --http <port>  --http-max-conns <n>  (HTTP front door)\n\
          \u{20}                       --metrics-dump (Prometheus text)  --stats-json\n\
          \u{20}                       (plus --scale/--scheme/--max-iters)"
     );
@@ -630,10 +638,30 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     // serializes the full ServiceStats (records included) as JSON.
     let metrics_dump = flags.contains_key("metrics-dump");
     let stats_json = flags.contains_key("stats-json");
+    // Production knobs (docs/SERVICE.md §8–§10): the logical-clock
+    // deadline flush, the capacity-bounded registry, bounded admission,
+    // and the HTTP front door.
+    let deadline: u64 = flags.get("deadline").and_then(|v| v.parse().ok()).unwrap_or(0);
+    let capacity_beats: u64 =
+        flags.get("capacity-beats").and_then(|v| v.parse().ok()).unwrap_or(0);
+    let pending_limit = flag_u32(flags, "pending-limit", 0) as usize;
+    let tenant_quota = flag_u32(flags, "tenant-quota", 0) as usize;
+    let http_port = flags.get("http").and_then(|v| v.parse::<u16>().ok());
+    let http_max_conns: u64 =
+        flags.get("http-max-conns").and_then(|v| v.parse().ok()).unwrap_or(0);
     if metrics_dump {
         callipepla::obs::set_recording(true);
     }
-    let mut cfg = ServiceConfig { max_batch, block_spmv, opts, ..Default::default() };
+    let mut cfg = ServiceConfig {
+        max_batch,
+        block_spmv,
+        deadline,
+        pending_limit,
+        tenant_quota,
+        capacity_beats,
+        opts,
+        ..Default::default()
+    };
     if workers > 0 {
         cfg.workers = workers;
     }
@@ -650,6 +678,37 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             id
         })
         .collect();
+
+    // --http turns the replay harness into a live ingress: bind the
+    // dependency-free front door and serve until POST /shutdown (or
+    // --http-max-conns requests).  Recording is forced on so GET
+    // /metrics reflects traffic.
+    if let Some(port) = http_port {
+        callipepla::obs::set_recording(true);
+        let listener = std::net::TcpListener::bind(("127.0.0.1", port))
+            .map_err(|e| anyhow!("cannot bind 127.0.0.1:{port}: {e}"))?;
+        let addr = listener.local_addr()?;
+        println!(
+            "front door on http://{addr}  (POST /solve /submit /flush /shutdown; \
+             GET /healthz /metrics /stats)"
+        );
+        let served = callipepla::service::serve_http(&mut svc, &listener, http_max_conns)?;
+        let stats = svc.drain();
+        println!(
+            "front door closed after {served} HTTP requests: {} accepted, {} rejected, \
+             {} batches, {} rhs-iterations",
+            stats.requests, stats.rejected, stats.batches, stats.rhs_iterations
+        );
+        if stats_json {
+            println!("{}", stats.to_json());
+        }
+        if metrics_dump {
+            stats.export_time_plane_gauges(&AccelSimConfig::callipepla());
+            println!("{}", callipepla::obs::prometheus_dump());
+        }
+        callipepla::obs::set_recording(false);
+        return Ok(());
+    }
 
     let trace_cfg = TraceConfig { requests, tenants, rate: 1.0, seed };
     let trace = synth_trace(svc.registry(), &ids, &trace_cfg);

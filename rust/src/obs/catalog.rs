@@ -37,6 +37,20 @@ pub static SERVICE_FLUSH_DRAINED: Counter = Counter::new(
     "Dispatches triggered by an explicit flush or drain",
 );
 
+/// Flushes forced by the logical-clock deadline
+/// ([`crate::service::ServiceConfig::deadline`]).
+pub static SERVICE_FLUSH_DEADLINE: Counter = Counter::new(
+    "callipepla_service_flush_deadline_total",
+    "Dispatches triggered by the submissions-since-join deadline",
+);
+
+/// Submissions rejected before joining a queue (backpressure, tenant
+/// quota, unknown/foreign id, wrong-length RHS).
+pub static SERVICE_SUBMIT_REJECTED: Counter = Counter::new(
+    "callipepla_service_submit_rejected_total",
+    "Submissions rejected by validation, backpressure, or tenant quota",
+);
+
 /// Batches whose solve panicked (tickets failed, worker recovered).
 pub static SERVICE_BATCH_PANICS: Counter = Counter::new(
     "callipepla_service_batch_panics_total",
@@ -49,12 +63,14 @@ pub static SERVICE_COALESCE_WIDTH: Histogram = Histogram::new(
     "Lanes coalesced into each dispatched batch",
 );
 
-/// Logical queue wait per lane: submissions accepted between a
-/// request's submit and its dispatch (a logical clock, never wall
-/// time — deterministic across replays).
+/// Logical queue wait per lane: submissions **to the lane's own
+/// matrix** accepted between its submit and its dispatch (a per-matrix
+/// logical clock, never wall time — deterministic across replays, and
+/// a lane on an idle matrix no longer inherits inflated wait from
+/// other matrices' traffic).
 pub static SERVICE_QUEUE_WAIT: Histogram = Histogram::new(
     "callipepla_service_queue_wait_submissions",
-    "Submissions accepted between a request's submit and its dispatch",
+    "Same-matrix submissions accepted between a request's submit and its dispatch",
 );
 
 /// Batched-program cache hits ([`crate::program::ProgramCache`]).
@@ -65,6 +81,34 @@ pub static SERVICE_CACHE_HITS: Counter =
 pub static SERVICE_CACHE_MISSES: Counter = Counter::new(
     "callipepla_service_program_cache_misses_total",
     "Program cache misses (programs compiled)",
+);
+
+/// Compiled programs dropped by
+/// [`ProgramCache::evict_bucket`](crate::program::ProgramCache::evict_bucket)
+/// when a bucket's last resident matrix was evicted.
+pub static SERVICE_CACHE_EVICTIONS: Counter = Counter::new(
+    "callipepla_service_program_cache_evictions_total",
+    "Compiled programs dropped with their bucket's last resident matrix",
+);
+
+/// Registry evictions (derived solve state dropped under the capacity
+/// budget; the host matrix is retained).
+pub static SERVICE_REGISTRY_EVICTIONS: Counter = Counter::new(
+    "callipepla_service_registry_evictions_total",
+    "Matrix entries evicted from the registry's resident set",
+);
+
+/// Registry readmissions (derived state rebuilt on demand — bitwise
+/// identical to the evicted state).
+pub static SERVICE_REGISTRY_READMISSIONS: Counter = Counter::new(
+    "callipepla_service_registry_readmissions_total",
+    "Matrix entries re-derived on demand after eviction",
+);
+
+/// HTTP requests handled by the front door (every status).
+pub static SERVICE_HTTP_REQUESTS: Counter = Counter::new(
+    "callipepla_service_http_requests_total",
+    "HTTP requests handled by the serve front door",
 );
 
 // ---------------- coordinator family --------------------------------
@@ -204,11 +248,17 @@ pub fn all() -> Vec<Metric> {
         Metric::Counter(&SERVICE_BATCHES),
         Metric::Counter(&SERVICE_FLUSH_BATCH_FULL),
         Metric::Counter(&SERVICE_FLUSH_DRAINED),
+        Metric::Counter(&SERVICE_FLUSH_DEADLINE),
+        Metric::Counter(&SERVICE_SUBMIT_REJECTED),
         Metric::Counter(&SERVICE_BATCH_PANICS),
         Metric::Histogram(&SERVICE_COALESCE_WIDTH),
         Metric::Histogram(&SERVICE_QUEUE_WAIT),
         Metric::Counter(&SERVICE_CACHE_HITS),
         Metric::Counter(&SERVICE_CACHE_MISSES),
+        Metric::Counter(&SERVICE_CACHE_EVICTIONS),
+        Metric::Counter(&SERVICE_REGISTRY_EVICTIONS),
+        Metric::Counter(&SERVICE_REGISTRY_READMISSIONS),
+        Metric::Counter(&SERVICE_HTTP_REQUESTS),
         Metric::Counter(&COORD_TRIPS_INIT),
         Metric::Counter(&COORD_TRIPS_PHASE1),
         Metric::Counter(&COORD_TRIPS_PHASE2),

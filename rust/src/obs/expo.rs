@@ -25,6 +25,10 @@ use std::fmt::Write;
 use super::registry::{Sample, SampleValue, Snapshot};
 use crate::util::json::ObjWriter;
 
+/// The `Content-Type` the Prometheus text exposition is served under
+/// (what the HTTP front door's `/metrics` handler sends).
+pub const PROMETHEUS_CONTENT_TYPE: &str = "text/plain; version=0.0.4; charset=utf-8";
+
 /// Render a snapshot as Prometheus text exposition (`# HELP` / `# TYPE`
 /// headers, histograms as cumulative `_bucket{le=...}` series plus
 /// `_sum` / `_count`).

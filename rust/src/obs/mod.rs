@@ -24,7 +24,7 @@ pub mod expo;
 pub mod registry;
 pub mod trace;
 
-pub use expo::{render_json, render_prometheus};
+pub use expo::{render_json, render_prometheus, PROMETHEUS_CONTENT_TYPE};
 pub use registry::{
     global, recording, set_recording, snapshot, Counter, Gauge, Histogram, LocalCounter, Metric,
     Registry, Sample, SampleValue, Snapshot,

@@ -36,6 +36,11 @@ pub enum FlushReason {
     BatchFull,
     /// An explicit `flush`/`drain` swept the queues.
     QueueDrained,
+    /// The group's oldest lane aged past the deadline threshold —
+    /// measured on the *submission-count* logical clock
+    /// ([`ServiceConfig::deadline`](crate::service::ServiceConfig::deadline)),
+    /// never wall time, so deadline cuts replay byte-identically.
+    Deadline,
 }
 
 impl FlushReason {
@@ -44,6 +49,7 @@ impl FlushReason {
         match self {
             FlushReason::BatchFull => "batch-full",
             FlushReason::QueueDrained => "queue-drained",
+            FlushReason::Deadline => "deadline",
         }
     }
 }

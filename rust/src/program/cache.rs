@@ -151,6 +151,32 @@ impl ProgramCache {
         self.misses.load(Ordering::Relaxed)
     }
 
+    /// Drop every cached program compiled for one bucket ceiling (all
+    /// channel modes and lane buckets), returning how many compiled
+    /// programs were evicted.  The registry's eviction hook calls this
+    /// when the *last resident matrix* of a bucket is evicted — a
+    /// bucket program with no remaining tenant is dead weight.
+    /// In-flight executions are untouched: they hold their own
+    /// `Arc<Program>`, and a later request simply recompiles (bitwise
+    /// the same program — compilation is a pure function of the key).
+    pub fn evict_bucket(&self, bucket: u32) -> usize {
+        let mut map = self.map.lock().expect("program cache poisoned");
+        let mut compiled = 0;
+        map.retain(|key, slot| {
+            if key.0 != bucket {
+                return true;
+            }
+            if slot.get().is_some() {
+                compiled += 1;
+            }
+            false
+        });
+        if compiled > 0 {
+            crate::obs::catalog::SERVICE_CACHE_EVICTIONS.add(compiled as u64);
+        }
+        compiled
+    }
+
     /// Distinct compiled programs held.
     pub fn len(&self) -> usize {
         let map = self.map.lock().expect("program cache poisoned");
@@ -205,6 +231,23 @@ mod tests {
         let d = cache.get_batched(700, ChannelMode::Double, 9);
         assert_eq!(d.batch, 16);
         assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn evict_bucket_drops_only_that_bucket() {
+        let cache = ProgramCache::new();
+        let a = cache.get_batched(700, ChannelMode::Double, 3); // (1024, Double, 4)
+        let _ = cache.get_batched(700, ChannelMode::Single, 3); // (1024, Single, 4)
+        let _ = cache.get_batched(2000, ChannelMode::Double, 3); // (2048, Double, 4)
+        assert_eq!(cache.len(), 3);
+        assert_eq!(cache.evict_bucket(1024), 2, "both 1024 modes evicted");
+        assert_eq!(cache.len(), 1);
+        // The held Arc survives; a re-request recompiles the same key.
+        assert_eq!(a.n, 1024);
+        let b = cache.get_batched(700, ChannelMode::Double, 3);
+        assert!(!Arc::ptr_eq(&a, &b), "fresh compile after eviction");
+        assert_eq!((b.n, b.batch), (a.n, a.batch));
+        assert_eq!(cache.evict_bucket(4096), 0, "empty bucket is a no-op");
     }
 
     #[test]

@@ -1,0 +1,373 @@
+//! The HTTP front door: a dependency-free ingress over
+//! [`SolverService`] built on `std::net::TcpListener` — no async
+//! runtime, no HTTP crate, one connection at a time.
+//!
+//! The split matters more than the sockets: [`handle_request`] is the
+//! whole route table as a pure(-ish) function from `(method, path,
+//! body)` to an [`HttpResponse`], so every route — including the 400 /
+//! 404 / 429 edges — is unit-testable without binding a port
+//! (`tests/front_door.rs`), and [`serve_http`] is only the socket
+//! plumbing around it.  A sequential accept loop is the right shape
+//! here for the same reason the scheduler runs its flush sweep on the
+//! caller thread: admissions stay a deterministic function of arrival
+//! order, which keeps the replay guarantees of `docs/SERVICE.md`
+//! intact even when requests arrive over the wire.
+//!
+//! Routes:
+//!
+//! | method & path    | behavior |
+//! |------------------|----------|
+//! | `GET /healthz`   | liveness: `ok` |
+//! | `GET /metrics`   | Prometheus text exposition of the global registry |
+//! | `GET /stats`     | [`ServiceStats::to_json`] snapshot |
+//! | `POST /solve`    | submit + flush that matrix + wait: the solution vector, bitwise a lone [`jpcg_solve`](crate::solver::jpcg_solve) |
+//! | `POST /submit`   | submit only (`202`): joins the coalescing window, result discarded |
+//! | `POST /flush`    | queue-drained flush of every pending group |
+//! | `POST /shutdown` | stop the accept loop after this response |
+//!
+//! Solve/submit bodies are JSON: `{"matrix": <index>, "b": [..],
+//! "tenant": <id>}` — `matrix` indexes this service's admission order
+//! ([`SolverService::matrix_ids`]), `b` defaults to all-ones, `tenant`
+//! to 0.  Typed rejections map onto status codes: validation errors
+//! ([`SubmitError::Registry`], [`SubmitError::WrongRhsLength`], parse
+//! failures) are 400s; load shedding ([`SubmitError::QueueFull`],
+//! [`SubmitError::TenantQuotaExceeded`]) is a 429 the client should
+//! back off and retry — the backpressure contract the bounded queue
+//! ([`ServiceConfig::pending_limit`](super::ServiceConfig::pending_limit))
+//! exists to enforce.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+
+use crate::obs::catalog as obs;
+use crate::obs::{prometheus_dump, PROMETHEUS_CONTENT_TYPE};
+use crate::util::json::{Json, ObjWriter};
+
+use super::scheduler::{SolveRequest, SolverService, SubmitError};
+
+/// Largest request body the parser will read (16 MiB — a dense f64 RHS
+/// for n = 10^6 serialized as text fits; anything bigger is a client
+/// bug and the connection is dropped instead of allocated for).
+pub const MAX_BODY_BYTES: usize = 16 << 20;
+
+const JSON: &str = "application/json";
+const TEXT: &str = "text/plain; charset=utf-8";
+
+/// One rendered response: status, content type, body, and whether the
+/// accept loop should stop after sending it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HttpResponse {
+    /// HTTP status code.
+    pub status: u16,
+    /// `Content-Type` header value.
+    pub content_type: &'static str,
+    /// Response body.
+    pub body: String,
+    /// Set by `POST /shutdown`: send this response, then return from
+    /// [`serve_http`].
+    pub shutdown: bool,
+}
+
+impl HttpResponse {
+    fn new(status: u16, content_type: &'static str, body: String) -> Self {
+        Self { status, content_type, body, shutdown: false }
+    }
+
+    fn error(status: u16, msg: &str) -> Self {
+        let mut w = ObjWriter::new();
+        w.field_str("error", msg);
+        Self::new(status, JSON, w.finish())
+    }
+
+    fn reason(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            202 => "Accepted",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            413 => "Payload Too Large",
+            429 => "Too Many Requests",
+            500 => "Internal Server Error",
+            _ => "Unknown",
+        }
+    }
+
+    /// Serialize as an HTTP/1.1 response (always `Connection: close`;
+    /// one request per connection keeps the loop stateless).
+    pub fn render(&self) -> String {
+        format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+            self.status,
+            self.reason(),
+            self.content_type,
+            self.body.len(),
+            self.body
+        )
+    }
+}
+
+/// A parsed solve/submit body.
+struct SolveBody {
+    matrix_index: usize,
+    b: Option<Vec<f64>>,
+    tenant: u32,
+}
+
+fn parse_solve_body(body: &str) -> Result<SolveBody, String> {
+    let doc = if body.trim().is_empty() {
+        return Err("a JSON body with a \"matrix\" field is required".into());
+    } else {
+        Json::parse(body).map_err(|e| format!("body is not valid JSON: {e}"))?
+    };
+    let matrix_index = doc
+        .get("matrix")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| "\"matrix\" must be a number (admission index)".to_string())?;
+    if matrix_index < 0.0 || matrix_index.fract() != 0.0 {
+        return Err("\"matrix\" must be a non-negative integer".into());
+    }
+    let b = match doc.get("b") {
+        None | Some(Json::Null) => None,
+        Some(Json::Arr(vals)) => {
+            let mut out = Vec::with_capacity(vals.len());
+            for v in vals {
+                out.push(v.as_f64().ok_or_else(|| "\"b\" must contain only numbers".to_string())?);
+            }
+            Some(out)
+        }
+        Some(_) => return Err("\"b\" must be an array of numbers".into()),
+    };
+    let tenant = match doc.get("tenant") {
+        None | Some(Json::Null) => 0,
+        Some(v) => {
+            let t = v.as_f64().ok_or_else(|| "\"tenant\" must be a number".to_string())?;
+            if t < 0.0 || t.fract() != 0.0 {
+                return Err("\"tenant\" must be a non-negative integer".into());
+            }
+            t as u32
+        }
+    };
+    Ok(SolveBody { matrix_index: matrix_index as usize, b, tenant })
+}
+
+fn submit_status(e: &SubmitError) -> u16 {
+    match e {
+        // Load shedding: the request was well-formed, the service is
+        // full — retryable, so 429.
+        SubmitError::QueueFull { .. } | SubmitError::TenantQuotaExceeded { .. } => 429,
+        // Validation: resubmitting the same request cannot succeed.
+        SubmitError::Registry(_) | SubmitError::WrongRhsLength { .. } => 400,
+    }
+}
+
+/// Build the request, run the shared submit path, and hand back either
+/// the accepted ticket-and-request or the mapped error response.
+fn try_submit_body(
+    svc: &mut SolverService,
+    body: &str,
+) -> Result<(super::scheduler::SolveTicket, super::MatrixId), HttpResponse> {
+    let parsed = parse_solve_body(body).map_err(|msg| HttpResponse::error(400, &msg))?;
+    let id = match svc.matrix_ids().get(parsed.matrix_index) {
+        Some(id) => *id,
+        None => {
+            return Err(HttpResponse::error(
+                400,
+                &format!(
+                    "matrix index {} is out of range ({} matrices admitted)",
+                    parsed.matrix_index,
+                    svc.matrix_ids().len()
+                ),
+            ));
+        }
+    };
+    let b = match parsed.b {
+        Some(b) => b,
+        None => {
+            let n = match svc.registry().try_entry(id) {
+                Ok(e) => e.n(),
+                Err(e) => return Err(HttpResponse::error(400, &e.to_string())),
+            };
+            vec![1.0; n]
+        }
+    };
+    let req = SolveRequest { matrix: id, b, tenant: parsed.tenant };
+    match svc.try_submit(req) {
+        Ok(ticket) => Ok((ticket, id)),
+        Err(e) => Err(HttpResponse::error(submit_status(&e), &e.to_string())),
+    }
+}
+
+fn solve_response(svc: &mut SolverService, body: &str) -> HttpResponse {
+    let (ticket, id) = match try_submit_body(svc, body) {
+        Ok(pair) => pair,
+        Err(resp) => return resp,
+    };
+    // Synchronous path: cut only this matrix's group so one caller's
+    // wait does not disturb other matrices' coalescing windows, then
+    // block on the ticket.
+    svc.flush_matrix(id);
+    let res = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| ticket.wait())) {
+        Ok(res) => res,
+        Err(_) => return HttpResponse::error(500, "the batch executing this request failed"),
+    };
+    let x: Vec<String> = res.x.iter().map(|v| v.to_string()).collect();
+    let mut w = ObjWriter::new();
+    w.field_str("matrix", &id.to_string());
+    w.field_raw("converged", if res.converged { "true" } else { "false" });
+    w.field_raw("iters", &res.iters.to_string());
+    w.field_num("final_rr", res.final_rr);
+    w.field_raw("x", &format!("[{}]", x.join(",")));
+    HttpResponse::new(200, JSON, w.finish())
+}
+
+fn submit_response(svc: &mut SolverService, body: &str) -> HttpResponse {
+    match try_submit_body(svc, body) {
+        // Fire-and-forget: the ticket drops here; the lane still rides
+        // its coalescing window and fulfills into the dropped slot.
+        Ok((_ticket, id)) => {
+            let mut w = ObjWriter::new();
+            w.field_raw("accepted", "true");
+            w.field_str("matrix", &id.to_string());
+            w.field_raw("pending", &svc.pending_lanes().to_string());
+            HttpResponse { status: 202, content_type: JSON, body: w.finish(), shutdown: false }
+        }
+        Err(resp) => resp,
+    }
+}
+
+/// The route table: map one parsed request onto the service.  Pure of
+/// sockets — `tests/front_door.rs` drives every route (including the
+/// error edges) through this directly.
+pub fn handle_request(
+    svc: &mut SolverService,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> HttpResponse {
+    obs::SERVICE_HTTP_REQUESTS.inc();
+    // Route target only — ignore any query string.
+    let route = path.split('?').next().unwrap_or(path);
+    match (method, route) {
+        ("GET", "/healthz") => HttpResponse::new(200, TEXT, "ok\n".into()),
+        ("GET", "/metrics") => {
+            HttpResponse::new(200, PROMETHEUS_CONTENT_TYPE, prometheus_dump())
+        }
+        ("GET", "/stats") => HttpResponse::new(200, JSON, svc.stats().to_json()),
+        ("POST", "/solve") => solve_response(svc, body),
+        ("POST", "/submit") => submit_response(svc, body),
+        ("POST", "/flush") => {
+            svc.flush();
+            let mut w = ObjWriter::new();
+            w.field_raw("flushed", "true");
+            w.field_raw("pending", &svc.pending_lanes().to_string());
+            HttpResponse::new(200, JSON, w.finish())
+        }
+        ("POST", "/shutdown") => {
+            let mut w = ObjWriter::new();
+            w.field_raw("shutting_down", "true");
+            HttpResponse { status: 200, content_type: JSON, body: w.finish(), shutdown: true }
+        }
+        ("GET" | "POST", _) => HttpResponse::error(404, &format!("no route for {route}")),
+        _ => HttpResponse::error(405, &format!("method {method} is not supported")),
+    }
+}
+
+/// Read one HTTP/1.1 request off a connection: request line, headers
+/// (only `Content-Length` matters), body.  Returns `None` on a
+/// malformed request (the connection is just dropped — a front door,
+/// not a proxy).
+fn read_request(stream: &mut TcpStream) -> Option<(String, String, String)> {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).ok()?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next()?.to_string();
+    let path = parts.next()?.to_string();
+    let mut content_length = 0usize;
+    loop {
+        let mut header = String::new();
+        reader.read_line(&mut header).ok()?;
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = header.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().ok()?;
+            }
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        return None;
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).ok()?;
+    Some((method, path, String::from_utf8(body).ok()?))
+}
+
+/// Serve the front door on an already-bound listener: accept one
+/// connection at a time, answer one request per connection, stop on
+/// `POST /shutdown` or after `max_requests` requests (`0` =
+/// unlimited).  Returns the number of requests answered.
+///
+/// Sequential on purpose: every admission decision (backpressure,
+/// quota, deadline sweep) happens in arrival order on this thread, so
+/// the schedule an HTTP trace produces is as deterministic as one
+/// produced by in-process submission.  Solve execution still fans out
+/// on the service's worker pool underneath.
+pub fn serve_http(
+    svc: &mut SolverService,
+    listener: &TcpListener,
+    max_requests: u64,
+) -> std::io::Result<u64> {
+    let mut served = 0u64;
+    for stream in listener.incoming() {
+        let mut stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let Some((method, path, body)) = read_request(&mut stream) else {
+            continue;
+        };
+        let resp = handle_request(svc, &method, &path, &body);
+        let _ = stream.write_all(resp.render().as_bytes());
+        let _ = stream.flush();
+        served += 1;
+        if resp.shutdown || (max_requests > 0 && served >= max_requests) {
+            break;
+        }
+    }
+    Ok(served)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn responses_render_with_status_line_and_length() {
+        let r = HttpResponse::new(200, TEXT, "ok\n".into());
+        let text = r.render();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Content-Length: 3\r\n"));
+        assert!(text.ends_with("\r\n\r\nok\n"));
+        assert!(HttpResponse::error(429, "full").render().starts_with("HTTP/1.1 429 Too Many"));
+    }
+
+    #[test]
+    fn solve_bodies_parse_with_defaults_and_reject_garbage() {
+        let ok = parse_solve_body(r#"{"matrix": 2, "b": [1.0, 2.5], "tenant": 7}"#).unwrap();
+        assert_eq!(ok.matrix_index, 2);
+        assert_eq!(ok.b.as_deref(), Some(&[1.0, 2.5][..]));
+        assert_eq!(ok.tenant, 7);
+        let defaults = parse_solve_body(r#"{"matrix": 0}"#).unwrap();
+        assert!(defaults.b.is_none());
+        assert_eq!(defaults.tenant, 0);
+        assert!(parse_solve_body("").is_err());
+        assert!(parse_solve_body("not json").is_err());
+        assert!(parse_solve_body(r#"{"b": [1.0]}"#).is_err(), "matrix is required");
+        assert!(parse_solve_body(r#"{"matrix": -1}"#).is_err());
+        assert!(parse_solve_body(r#"{"matrix": 0, "b": ["x"]}"#).is_err());
+    }
+}

@@ -12,7 +12,11 @@
 //! * [`MatrixRegistry`] — admit a matrix once, derive its
 //!   [`PreparedMatrix`](crate::engine::PreparedMatrix) state once,
 //!   share it (`Arc`-held entries, zero-copy plan views) for every
-//!   solve that follows.
+//!   solve that follows.  Under a capacity budget
+//!   ([`MatrixRegistry::with_capacity`], in HBM beats) derived state is
+//!   LRU-evicted and readmitted on demand — bitwise-invisibly, with
+//!   pinning for latency-critical matrices and `Arc` lifetimes keeping
+//!   in-flight batches safe.
 //! * a **bucketed program cache**
 //!   ([`ProgramCache`](crate::program::ProgramCache)) — one compiled
 //!   [`Program`](crate::program::Program) per (size bucket, channel
@@ -21,10 +25,18 @@
 //! * the **coalescing scheduler** ([`SolverService`]) — a submission
 //!   queue that groups pending right-hand sides by matrix into lanes of
 //!   one batched program (up to `max_batch`), flushing deterministically
-//!   on batch-full or queue-drain; per-request [`SolveTicket`]
-//!   completion handles; at most ⌈requests / max_batch⌉ program
-//!   executions per matrix.  Every result stays **bitwise identical**
-//!   to a lone [`jpcg_solve`](crate::solver::jpcg_solve) call.
+//!   on batch-full, queue-drain, or a *logical-clock* latency deadline
+//!   ([`ServiceConfig::deadline`]); typed admission control
+//!   ([`SubmitError`]: validation, a bounded pending queue, per-tenant
+//!   quotas); per-request [`SolveTicket`] completion handles; at most
+//!   ⌈requests / max_batch⌉ program executions per matrix.  Every
+//!   result stays **bitwise identical** to a lone
+//!   [`jpcg_solve`](crate::solver::jpcg_solve) call.
+//! * the **HTTP front door** ([`http`]) — a dependency-free
+//!   `TcpListener` ingress (`callipepla serve --http <port>`): POST
+//!   `/solve`/`/submit`, `/metrics` (Prometheus text), `/stats`
+//!   (the [`ServiceStats::to_json`] snapshot), with rejections mapped
+//!   to 400 (validation) and 429 (backpressure, quota).
 //! * execution on the persistent
 //!   [`WorkerPool`](crate::engine::WorkerPool) (no per-solve thread
 //!   spawns), with [`replay`] providing the synthetic multi-tenant
@@ -55,14 +67,20 @@
 //! assert!(ticket.wait().converged);
 //! ```
 
+pub mod http;
 pub mod registry;
 pub mod replay;
 pub mod scheduler;
 
-pub use registry::{MatrixEntry, MatrixId, MatrixRegistry};
+pub use http::{handle_request, serve_http, HttpResponse};
+pub use registry::{
+    footprint_beats, EvictionNotice, MatrixEntry, MatrixId, MatrixRegistry, RegistryError,
+    RegistryStats,
+};
 pub use replay::{
     replay_coalesced, replay_sequential, synth_trace, ReplayOutcome, TraceConfig, TracedRequest,
 };
 pub use scheduler::{
     BatchRecord, ServiceConfig, ServiceStats, SolveRequest, SolveTicket, SolverService,
+    SubmitError,
 };

@@ -1,5 +1,6 @@
-//! The matrix registry: admit a matrix once, derive its solve state
-//! once, serve it forever.
+//! The matrix registry: admit a matrix once, keep its derived solve
+//! state **resident** while it earns its memory windows, evict it when
+//! it does not — without ever changing a result bit.
 //!
 //! A serving deployment sees many solves against few matrices (the
 //! reservoir-simulation and lattice-QCD deployments of arXiv:2101.01745
@@ -7,30 +8,154 @@
 //! needs besides the right-hand side — the Jacobi diagonal, the
 //! nnz-balanced row partition, the lazy f32 value view — is derived at
 //! admission and shared from then on.  Entries are `Arc`-held so worker
-//! threads keep a matrix alive for as long as its batches run.
+//! threads keep a matrix alive for as long as its batches run, even
+//! across an eviction of the registry's own reference.
+//!
+//! **The registry is a managed resource** (ROADMAP item 4a).  The HBM
+//! memory map gives every resident matrix a concrete footprint in
+//! 64-byte beats ([`footprint_beats`]); [`MatrixRegistry::with_capacity`]
+//! bounds the sum.  Admission and [`MatrixRegistry::try_entry`] evict
+//! the least-recently-used unpinned resident entries to make room, and
+//! an evicted matrix is *readmitted on demand*: the host-side
+//! [`CsrMatrix`] is always retained, and [`MatrixEntry::new`] is a pure
+//! function of it, so the rederived diagonal, partition, and f32 view
+//! are bit-for-bit the originals — eviction and readmission are
+//! invisible to results (pinned in the tests below and in
+//! `tests/front_door.rs`).  [`MatrixRegistry::pin`] exempts an entry
+//! from eviction (and [`MatrixRegistry::unpin`] re-admits it to the LRU
+//! pool); a capacity that cannot be met even after evicting everything
+//! evictable is a typed [`RegistryError::CapacityExhausted`].
+//!
+//! **Ids are stamped.**  A [`MatrixId`] carries a per-registry tag, so
+//! an id minted by one registry can never silently resolve to another
+//! registry's matrix that happens to share the slot index — resolution
+//! through a foreign id is a typed [`RegistryError::ForeignId`]
+//! (or a clear panic through the [`MatrixRegistry::entry`] wrapper).
 
-use std::sync::{Arc, OnceLock};
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::engine::{PreparedMatrix, RowPartition};
+use crate::obs::catalog as obs;
+use crate::program::cache::bucket_ceiling;
 use crate::sparse::CsrMatrix;
 
-/// Handle to an admitted matrix (index into the registry, stable for
-/// the registry's lifetime).
+/// Source of per-registry id tags: every registry in the process gets a
+/// distinct one, so foreign-id detection works across services too.
+static NEXT_REGISTRY_TAG: AtomicU32 = AtomicU32::new(1);
+
+/// Handle to an admitted matrix: a slot index (stable for the
+/// registry's lifetime, eviction included) stamped with the minting
+/// registry's tag.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
-pub struct MatrixId(pub(crate) u32);
+pub struct MatrixId {
+    pub(crate) tag: u32,
+    pub(crate) slot: u32,
+}
 
 impl MatrixId {
     /// The registry slot this id names.
     pub fn index(self) -> usize {
-        self.0 as usize
+        self.slot as usize
     }
 }
 
 impl std::fmt::Display for MatrixId {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "A{}", self.0)
+        write!(f, "A{}", self.slot)
     }
 }
+
+/// The modeled HBM footprint of one resident matrix, in 64-byte beats:
+/// six vector windows (x, r, p, ap, z, and the Jacobi diagonal — eight
+/// f64 per beat) plus the fp64 nonzero value stream and the lazy fp32
+/// view (sixteen f32 per beat).  This is the unit
+/// [`MatrixRegistry::with_capacity`] budgets in — the same beat
+/// currency the memory map and the time plane already price.
+pub fn footprint_beats(n: usize, nnz: usize) -> u64 {
+    let vec_beats = (n as u64).div_ceil(8);
+    6 * vec_beats + (nnz as u64).div_ceil(8) + (nnz as u64).div_ceil(16)
+}
+
+/// Why an id failed to resolve (or a matrix failed to become resident).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RegistryError {
+    /// The id was minted by a *different* registry: slot indices are
+    /// meaningless across registries, so resolution refuses instead of
+    /// silently returning whatever matrix shares the index.
+    ForeignId {
+        /// The offending id.
+        id: MatrixId,
+        /// Tag of the registry asked to resolve it.
+        registry_tag: u32,
+    },
+    /// The tag matches but the slot was never admitted here.
+    UnknownId {
+        /// The offending id.
+        id: MatrixId,
+        /// Matrices admitted so far.
+        admitted: usize,
+    },
+    /// The capacity budget cannot hold this matrix even after evicting
+    /// every unpinned resident entry.
+    CapacityExhausted {
+        /// The matrix that needed room.
+        id: MatrixId,
+        /// Beats it needs.
+        needed: u64,
+        /// Beats currently free (after evicting everything evictable).
+        free: u64,
+        /// The configured capacity.
+        capacity: u64,
+    },
+}
+
+impl std::fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RegistryError::ForeignId { id, registry_tag } => write!(
+                f,
+                "matrix id {id} was minted by registry #{} and cannot resolve on registry \
+                 #{registry_tag} — ids are only valid on the registry (service) that admitted \
+                 the matrix",
+                id.tag
+            ),
+            RegistryError::UnknownId { id, admitted } => write!(
+                f,
+                "matrix id {id} names slot {} but only {admitted} matrices are admitted",
+                id.slot
+            ),
+            RegistryError::CapacityExhausted { id, needed, free, capacity } => write!(
+                f,
+                "matrix {id} needs {needed} beats but only {free} of {capacity} are \
+                 reclaimable (pinned entries hold the rest)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for RegistryError {}
+
+/// What the registry tells its eviction hook (the service wires this to
+/// [`ProgramCache::evict_bucket`](crate::program::ProgramCache::evict_bucket)
+/// so bucket programs with no remaining resident tenant are dropped
+/// with the matrix).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EvictionNotice {
+    /// The evicted matrix.
+    pub id: MatrixId,
+    /// Its vector length.
+    pub n: usize,
+    /// Its program-cache bucket ceiling.
+    pub bucket: u32,
+    /// Whether another *resident* matrix still shares that bucket (if
+    /// so, the bucket's compiled programs are still earning their keep).
+    pub bucket_still_resident: bool,
+}
+
+/// Callback invoked (on the evicting caller's thread, registry lock
+/// held) for every eviction.
+pub type EvictHook = Box<dyn Fn(&EvictionNotice) + Send + Sync>;
 
 /// One admitted matrix plus its derived solve state.  [`MatrixEntry::plan`]
 /// hands out borrowing [`PreparedMatrix`] views whose caches are the
@@ -47,7 +172,9 @@ pub struct MatrixEntry {
 
 impl MatrixEntry {
     /// Derive the solve state for `a` with an SpMV thread budget of
-    /// `threads` (>= 1) per plan view.
+    /// `threads` (>= 1) per plan view.  This is a *pure* function of
+    /// `(a, threads)` — the property that makes registry eviction and
+    /// readmission bitwise-invisible to results.
     pub fn new(a: Arc<CsrMatrix>, threads: usize) -> Self {
         let threads = threads.max(1);
         let diag = Arc::new(a.jacobi_diag());
@@ -70,6 +197,11 @@ impl MatrixEntry {
         self.a.nnz()
     }
 
+    /// The modeled HBM beats this entry occupies while resident.
+    pub fn footprint_beats(&self) -> u64 {
+        footprint_beats(self.n(), self.nnz())
+    }
+
     /// A [`PreparedMatrix`] view over this entry's shared caches —
     /// nothing is re-derived or copied.
     pub fn plan(&self) -> PreparedMatrix<'_> {
@@ -83,54 +215,328 @@ impl MatrixEntry {
     }
 }
 
-/// Append-only registry of admitted matrices.
+/// One registry slot: the always-retained host matrix plus the
+/// (evictable) resident derived state.
+#[derive(Debug)]
+struct Slot {
+    a: Arc<CsrMatrix>,
+    threads: usize,
+    /// The derived state while resident; `None` after eviction.
+    resident: Option<Arc<MatrixEntry>>,
+    pinned: bool,
+    /// LRU clock value of the last touch (admission or resolution).
+    last_touch: u64,
+    /// Cached [`footprint_beats`] of this matrix.
+    footprint: u64,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    slots: Vec<Slot>,
+    /// Monotone touch clock driving LRU order (caller-thread only, so
+    /// eviction order is a deterministic function of the call sequence).
+    clock: u64,
+    used_beats: u64,
+    evictions: u64,
+    readmissions: u64,
+}
+
+/// A point-in-time view of the registry's residency bookkeeping.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RegistryStats {
+    /// Matrices admitted (slots, resident or not).
+    pub admitted: usize,
+    /// Slots currently resident.
+    pub resident: usize,
+    /// Slots currently pinned.
+    pub pinned: usize,
+    /// Beats held by resident entries.
+    pub used_beats: u64,
+    /// The configured budget (0 = unbounded).
+    pub capacity_beats: u64,
+    /// Evictions performed so far.
+    pub evictions: u64,
+    /// On-demand readmissions performed so far.
+    pub readmissions: u64,
+}
+
+/// Registry of admitted matrices with LRU residency management.
+///
+/// Slots are append-only (ids stay stable forever) but the *derived
+/// state* behind a slot comes and goes under the capacity budget; see
+/// the [module docs](self) for the eviction/readmission contract.
 ///
 /// ```
 /// use callipepla::service::MatrixRegistry;
 /// use callipepla::sparse::synth;
 ///
-/// let mut reg = MatrixRegistry::new();
+/// let mut reg = MatrixRegistry::new(); // unbounded capacity
 /// let id = reg.admit(synth::laplace2d_shifted(100, 0.2), 1);
 /// assert_eq!(reg.entry(id).n(), reg.entry(id).matrix().n);
 /// assert_eq!(reg.len(), 1);
+/// assert!(reg.is_resident(id));
 /// ```
-#[derive(Debug, Default)]
 pub struct MatrixRegistry {
-    entries: Vec<Arc<MatrixEntry>>,
+    tag: u32,
+    capacity_beats: u64,
+    inner: Mutex<Inner>,
+    evict_hook: Option<EvictHook>,
+}
+
+impl std::fmt::Debug for MatrixRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let stats = self.stats();
+        f.debug_struct("MatrixRegistry")
+            .field("tag", &self.tag)
+            .field("stats", &stats)
+            .field("evict_hook", &self.evict_hook.is_some())
+            .finish()
+    }
+}
+
+impl Default for MatrixRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl MatrixRegistry {
-    /// An empty registry.
+    /// An empty registry with an unbounded capacity budget.
     pub fn new() -> Self {
-        Self::default()
+        Self::with_capacity(0)
     }
 
-    /// Admit a matrix: derive its solve state once, get a stable id.
+    /// An empty registry budgeting resident entries to `capacity_beats`
+    /// HBM beats (`0` = unbounded).  Admission and resolution evict
+    /// least-recently-used unpinned entries to stay under budget.
+    pub fn with_capacity(capacity_beats: u64) -> Self {
+        Self {
+            tag: NEXT_REGISTRY_TAG.fetch_add(1, Ordering::Relaxed),
+            capacity_beats,
+            inner: Mutex::new(Inner::default()),
+            evict_hook: None,
+        }
+    }
+
+    /// Install the eviction callback (the service points this at the
+    /// program cache).  At most one hook; installing replaces.
+    pub fn set_evict_hook(&mut self, hook: EvictHook) {
+        self.evict_hook = Some(hook);
+    }
+
+    /// The configured capacity budget in beats (0 = unbounded).
+    pub fn capacity_beats(&self) -> u64 {
+        self.capacity_beats
+    }
+
+    /// Admit a matrix: derive its solve state, get a stable id.  A
+    /// budget that cannot hold it even after evicting everything
+    /// evictable is a typed error (the slot is still *admitted* — the
+    /// host matrix is retained and a later `try_entry` retries once
+    /// room frees up).
+    pub fn try_admit(
+        &mut self,
+        a: CsrMatrix,
+        threads: usize,
+    ) -> Result<MatrixId, RegistryError> {
+        let a = Arc::new(a);
+        let footprint = footprint_beats(a.n, a.nnz());
+        let mut inner = self.inner.lock().expect("registry poisoned");
+        let slot_ix = inner.slots.len();
+        let id = MatrixId {
+            tag: self.tag,
+            slot: u32::try_from(slot_ix).expect("registry ids fit u32"),
+        };
+        inner.slots.push(Slot {
+            a,
+            threads: threads.max(1),
+            resident: None,
+            pinned: false,
+            last_touch: 0,
+            footprint,
+        });
+        self.make_resident(&mut inner, slot_ix, false)?;
+        Ok(id)
+    }
+
+    /// Admit a matrix, panicking if the capacity budget cannot hold it
+    /// (the pre-eviction API; use [`MatrixRegistry::try_admit`] to get
+    /// the typed error instead).
     pub fn admit(&mut self, a: CsrMatrix, threads: usize) -> MatrixId {
-        let id = MatrixId(u32::try_from(self.entries.len()).expect("registry ids fit u32"));
-        self.entries.push(Arc::new(MatrixEntry::new(Arc::new(a), threads)));
-        id
+        self.try_admit(a, threads)
+            .unwrap_or_else(|e| panic!("matrix admission failed: {e}"))
     }
 
-    /// The entry behind an id (panics on a foreign id — ids are only
-    /// minted by [`MatrixRegistry::admit`] on this registry).
-    pub fn entry(&self, id: MatrixId) -> &Arc<MatrixEntry> {
-        &self.entries[id.index()]
+    /// Resolve an id to its (resident) entry, readmitting the derived
+    /// state on demand if it was evicted — bitwise-invisible, see the
+    /// [module docs](self).  The returned `Arc` keeps the entry alive
+    /// for the caller even if the registry evicts it again.
+    pub fn try_entry(&self, id: MatrixId) -> Result<Arc<MatrixEntry>, RegistryError> {
+        let mut inner = self.inner.lock().expect("registry poisoned");
+        let slot = self.check(id, inner.slots.len())?;
+        self.make_resident(&mut inner, slot, true)
+    }
+
+    /// Resolve an id to its entry, panicking with a clear diagnostic on
+    /// a foreign or unknown id (the typed form is
+    /// [`MatrixRegistry::try_entry`]).
+    pub fn entry(&self, id: MatrixId) -> Arc<MatrixEntry> {
+        self.try_entry(id)
+            .unwrap_or_else(|e| panic!("matrix id resolution failed: {e}"))
+    }
+
+    /// Pin an entry: make it resident (readmitting if needed) and
+    /// exempt it from eviction until [`MatrixRegistry::unpin`].
+    pub fn pin(&self, id: MatrixId) -> Result<(), RegistryError> {
+        let mut inner = self.inner.lock().expect("registry poisoned");
+        let slot = self.check(id, inner.slots.len())?;
+        self.make_resident(&mut inner, slot, true)?;
+        inner.slots[slot].pinned = true;
+        Ok(())
+    }
+
+    /// Return a pinned entry to the LRU pool (no-op if not pinned).
+    pub fn unpin(&self, id: MatrixId) -> Result<(), RegistryError> {
+        let mut inner = self.inner.lock().expect("registry poisoned");
+        let slot = self.check(id, inner.slots.len())?;
+        inner.slots[slot].pinned = false;
+        Ok(())
+    }
+
+    /// Whether an id's derived state is currently resident.
+    pub fn is_resident(&self, id: MatrixId) -> bool {
+        let inner = self.inner.lock().expect("registry poisoned");
+        self.check(id, inner.slots.len())
+            .map(|slot| inner.slots[slot].resident.is_some())
+            .unwrap_or(false)
     }
 
     /// Ids in admission order.
     pub fn ids(&self) -> impl Iterator<Item = MatrixId> + '_ {
-        (0..self.entries.len() as u32).map(MatrixId)
+        let len = self.inner.lock().expect("registry poisoned").slots.len() as u32;
+        let tag = self.tag;
+        (0..len).map(move |slot| MatrixId { tag, slot })
     }
 
-    /// Number of admitted matrices.
+    /// Number of admitted matrices (resident or not).
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.inner.lock().expect("registry poisoned").slots.len()
     }
 
     /// Whether nothing has been admitted.
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.len() == 0
+    }
+
+    /// The current residency bookkeeping.
+    pub fn stats(&self) -> RegistryStats {
+        let inner = self.inner.lock().expect("registry poisoned");
+        RegistryStats {
+            admitted: inner.slots.len(),
+            resident: inner.slots.iter().filter(|s| s.resident.is_some()).count(),
+            pinned: inner.slots.iter().filter(|s| s.pinned).count(),
+            used_beats: inner.used_beats,
+            capacity_beats: self.capacity_beats,
+            evictions: inner.evictions,
+            readmissions: inner.readmissions,
+        }
+    }
+
+    /// Validate an id against this registry.
+    fn check(&self, id: MatrixId, admitted: usize) -> Result<usize, RegistryError> {
+        if id.tag != self.tag {
+            return Err(RegistryError::ForeignId { id, registry_tag: self.tag });
+        }
+        if id.index() >= admitted {
+            return Err(RegistryError::UnknownId { id, admitted });
+        }
+        Ok(id.index())
+    }
+
+    /// Make a slot resident (touching its LRU stamp), evicting to make
+    /// room under the budget.  `readmit` marks on-demand rederivations
+    /// (everything but first admission) for the stats.
+    fn make_resident(
+        &self,
+        inner: &mut Inner,
+        slot: usize,
+        readmit: bool,
+    ) -> Result<Arc<MatrixEntry>, RegistryError> {
+        inner.clock += 1;
+        let now = inner.clock;
+        inner.slots[slot].last_touch = now;
+        if let Some(entry) = &inner.slots[slot].resident {
+            return Ok(Arc::clone(entry));
+        }
+        let need = inner.slots[slot].footprint;
+        self.ensure_room(inner, need, slot)?;
+        let entry = Arc::new(MatrixEntry::new(
+            Arc::clone(&inner.slots[slot].a),
+            inner.slots[slot].threads,
+        ));
+        inner.slots[slot].resident = Some(Arc::clone(&entry));
+        inner.used_beats += need;
+        if readmit {
+            inner.readmissions += 1;
+            obs::SERVICE_REGISTRY_READMISSIONS.inc();
+        }
+        Ok(entry)
+    }
+
+    /// Evict LRU unpinned entries (never `exempt`) until `need` beats
+    /// fit under the budget.
+    fn ensure_room(
+        &self,
+        inner: &mut Inner,
+        need: u64,
+        exempt: usize,
+    ) -> Result<(), RegistryError> {
+        if self.capacity_beats == 0 {
+            return Ok(());
+        }
+        while inner.used_beats + need > self.capacity_beats {
+            let victim = inner
+                .slots
+                .iter()
+                .enumerate()
+                .filter(|(i, s)| *i != exempt && s.resident.is_some() && !s.pinned)
+                .min_by_key(|(i, s)| (s.last_touch, *i))
+                .map(|(i, _)| i);
+            match victim {
+                Some(v) => self.evict(inner, v),
+                None => {
+                    return Err(RegistryError::CapacityExhausted {
+                        id: MatrixId { tag: self.tag, slot: exempt as u32 },
+                        needed: need,
+                        free: self.capacity_beats.saturating_sub(inner.used_beats),
+                        capacity: self.capacity_beats,
+                    })
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Drop one slot's resident state (in-flight batches keep their
+    /// `Arc`s; only the registry's reference goes) and notify the hook.
+    fn evict(&self, inner: &mut Inner, v: usize) {
+        inner.slots[v].resident = None;
+        inner.used_beats -= inner.slots[v].footprint;
+        inner.evictions += 1;
+        obs::SERVICE_REGISTRY_EVICTIONS.inc();
+        if let Some(hook) = &self.evict_hook {
+            let n = inner.slots[v].a.n;
+            let bucket = bucket_ceiling(n as u32);
+            let bucket_still_resident = inner.slots.iter().enumerate().any(|(i, s)| {
+                i != v && s.resident.is_some() && bucket_ceiling(s.a.n as u32) == bucket
+            });
+            hook(&EvictionNotice {
+                id: MatrixId { tag: self.tag, slot: v as u32 },
+                n,
+                bucket,
+                bucket_still_resident,
+            });
+        }
     }
 }
 
@@ -139,6 +545,7 @@ mod tests {
     use super::*;
     use crate::solver::{jpcg_solve, SolveOptions};
     use crate::sparse::synth;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
 
     #[test]
     fn entry_plans_share_caches_and_solve_bitwise() {
@@ -165,5 +572,146 @@ mod tests {
         assert_ne!(a, b);
         assert_eq!(reg.ids().collect::<Vec<_>>(), vec![a, b]);
         assert_eq!(reg.entry(b).n(), reg.entry(b).matrix().n);
+    }
+
+    #[test]
+    fn foreign_ids_are_rejected_not_misresolved() {
+        let mut reg1 = MatrixRegistry::new();
+        let mut reg2 = MatrixRegistry::new();
+        let id1 = reg1.admit(synth::laplace2d_shifted(100, 0.2), 1);
+        let _id2 = reg2.admit(synth::laplace2d_shifted(150, 0.2), 1);
+        // Slot 0 is in range on reg2 — the pre-fix code would silently
+        // hand back reg2's 150-element matrix here.
+        match reg2.try_entry(id1) {
+            Err(RegistryError::ForeignId { id, .. }) => assert_eq!(id, id1),
+            other => panic!("expected ForeignId, got {other:?}"),
+        }
+        let panic = catch_unwind(AssertUnwindSafe(|| reg2.entry(id1)))
+            .expect_err("entry() must panic on a foreign id");
+        let msg = panic
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()).unwrap());
+        assert!(msg.contains("minted by registry"), "diagnostic names the cause: {msg}");
+    }
+
+    #[test]
+    fn unknown_slots_are_a_typed_error() {
+        let mut reg = MatrixRegistry::new();
+        let id = reg.admit(synth::laplace2d_shifted(100, 0.2), 1);
+        let bogus = MatrixId { tag: id.tag, slot: 7 };
+        assert_eq!(
+            reg.try_entry(bogus),
+            Err(RegistryError::UnknownId { id: bogus, admitted: 1 })
+        );
+    }
+
+    #[test]
+    fn lru_eviction_and_readmission_are_bitwise_invisible() {
+        let a = synth::laplace2d_shifted(100, 0.2);
+        let b = synth::laplace2d_shifted(150, 0.2);
+        let fp = footprint_beats(a.n, a.nnz()).max(footprint_beats(b.n, b.nnz()));
+        // Budget for one matrix at a time: every switch evicts.
+        let mut reg = MatrixRegistry::with_capacity(fp);
+        let opts = SolveOptions::callipepla();
+        let ra = jpcg_solve(&a, None, None, &opts);
+        let id_a = reg.admit(a, 1);
+        let id_b = reg.admit(b, 1); // evicts A
+        assert!(!reg.is_resident(id_a));
+        assert!(reg.is_resident(id_b));
+        // Resolving A readmits it (evicting B) and solves bitwise.
+        let entry_a = reg.entry(id_a);
+        assert!(!reg.is_resident(id_b));
+        let res = entry_a.plan().solve(None, None, &opts);
+        assert_eq!(res.iters, ra.iters);
+        assert!(res.x.iter().zip(&ra.x).all(|(u, v)| u.to_bits() == v.to_bits()));
+        let stats = reg.stats();
+        assert_eq!(stats.evictions, 2);
+        assert_eq!(stats.readmissions, 1);
+        assert!(stats.used_beats <= stats.capacity_beats);
+    }
+
+    #[test]
+    fn lru_order_prefers_the_least_recently_touched_victim() {
+        let a = synth::laplace2d_shifted(100, 0.2);
+        let fp = footprint_beats(a.n, a.nnz());
+        // Room for exactly two 100-element matrices.
+        let mut reg = MatrixRegistry::with_capacity(2 * fp);
+        let id_a = reg.admit(synth::laplace2d_shifted(100, 0.2), 1);
+        let id_b = reg.admit(a, 1);
+        let _ = reg.entry(id_a); // A is now more recent than B
+        let id_c = reg.admit(synth::laplace2d_shifted(100, 0.2), 1);
+        assert!(reg.is_resident(id_a), "recently-touched A survives");
+        assert!(!reg.is_resident(id_b), "LRU B is the victim");
+        assert!(reg.is_resident(id_c));
+    }
+
+    #[test]
+    fn pinned_entries_never_evict_and_can_exhaust_capacity() {
+        let a = synth::laplace2d_shifted(100, 0.2);
+        let fp = footprint_beats(a.n, a.nnz());
+        let mut reg = MatrixRegistry::with_capacity(fp);
+        let id_a = reg.admit(a, 1);
+        reg.pin(id_a).unwrap();
+        // Nothing evictable: the second admission is a typed error …
+        match reg.try_admit(synth::laplace2d_shifted(100, 0.2), 1) {
+            Err(RegistryError::CapacityExhausted { .. }) => {}
+            other => panic!("expected CapacityExhausted, got {other:?}"),
+        }
+        assert!(reg.is_resident(id_a));
+        // … and the slot is still admitted: unpinning A lets the
+        // now-evictable space serve the other slot on demand.
+        reg.unpin(id_a).unwrap();
+        let id_b = reg.ids().nth(1).unwrap();
+        let entry_b = reg.entry(id_b);
+        assert_eq!(entry_b.n(), 100);
+        assert!(!reg.is_resident(id_a));
+    }
+
+    #[test]
+    fn in_flight_arcs_outlive_eviction() {
+        let a = synth::laplace2d_shifted(100, 0.2);
+        let fp = footprint_beats(a.n, a.nnz());
+        let mut reg = MatrixRegistry::with_capacity(fp);
+        let id_a = reg.admit(a, 1);
+        let held = reg.entry(id_a); // what a dispatched batch holds
+        let _id_b = reg.admit(synth::laplace2d_shifted(100, 0.2), 1); // evicts A
+        assert!(!reg.is_resident(id_a));
+        // The held entry still plans and solves: eviction only dropped
+        // the registry's reference.
+        let res = held.plan().solve(None, None, &SolveOptions::callipepla());
+        assert!(res.converged);
+    }
+
+    #[test]
+    fn evict_hook_reports_bucket_sharing() {
+        use std::sync::atomic::AtomicUsize;
+        let notices = Arc::new(Mutex::new(Vec::new()));
+        let fired = Arc::new(AtomicUsize::new(0));
+        let a = synth::laplace2d_shifted(100, 0.2);
+        let fp = footprint_beats(a.n, a.nnz());
+        let mut reg = MatrixRegistry::with_capacity(2 * fp);
+        let sink = Arc::clone(&notices);
+        let count = Arc::clone(&fired);
+        reg.set_evict_hook(Box::new(move |n| {
+            sink.lock().unwrap().push(*n);
+            count.fetch_add(1, Ordering::Relaxed);
+        }));
+        let id_a = reg.admit(a, 1);
+        let _id_b = reg.admit(synth::laplace2d_shifted(100, 0.2), 1);
+        let _id_c = reg.admit(synth::laplace2d_shifted(100, 0.2), 1); // evicts A
+        assert_eq!(fired.load(Ordering::Relaxed), 1);
+        let seen = notices.lock().unwrap();
+        assert_eq!(seen[0].id, id_a);
+        assert_eq!(seen[0].bucket, 1024);
+        assert!(seen[0].bucket_still_resident, "B still holds the 1024 bucket");
+    }
+
+    #[test]
+    fn footprint_model_counts_vectors_and_both_value_streams() {
+        // 1024 elements: 128 beats per vector window; nnz f64 at 8 per
+        // beat, f32 at 16 per beat.
+        assert_eq!(footprint_beats(1024, 4096), 6 * 128 + 512 + 256);
+        assert_eq!(footprint_beats(1, 1), 6 + 1 + 1);
     }
 }

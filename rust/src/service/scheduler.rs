@@ -5,13 +5,25 @@
 //! **Coalescing rule.**  Pending requests are grouped *per matrix* in
 //! per-matrix submission order and cut into batches of at most
 //! `max_batch` lanes.  A group flushes when it reaches `max_batch`
-//! (batch-full) or when the caller drains the queue
-//! ([`SolverService::flush`] / [`SolverService::drain`]) — there is no
-//! timer, so batch composition is a pure function of the per-matrix
-//! request sequence: the same request set produces the same batches
-//! (and, since every lane is bitwise a lone
+//! (batch-full), when the caller drains the queue
+//! ([`SolverService::flush`] / [`SolverService::drain`]), or — with
+//! [`ServiceConfig::deadline`] set — when its oldest lane has waited
+//! through that many subsequent submissions (deadline).  The deadline
+//! is a **logical clock**, never a wall timer: batch composition stays
+//! a pure function of the request sequence, so the same request set
+//! produces the same batches (and, since every lane is bitwise a lone
 //! [`jpcg_solve`](crate::solver::jpcg_solve), bitwise the same results)
-//! no matter how arrivals from different tenants interleave.
+//! no matter how arrivals from different tenants interleave or how
+//! fast they come.
+//!
+//! **Admission control.**  [`SolverService::try_submit`] rejects with a
+//! typed [`SubmitError`] instead of panicking: unknown/foreign ids and
+//! wrong-length right-hand sides (validation), a full pending queue
+//! ([`ServiceConfig::pending_limit`] — the backpressure the HTTP front
+//! door maps to 429), and per-tenant quotas
+//! ([`ServiceConfig::tenant_quota`]).  [`SolverService::submit`] is the
+//! panicking wrapper for in-process callers that consider rejection a
+//! bug.
 //!
 //! **Execution.**  A flushed batch becomes one fire-and-forget job on
 //! the service's [`WorkerPool`]: build a zero-copy plan view from the
@@ -22,8 +34,12 @@
 //! [`ServiceConfig::lane_workers`] — bitwise the sequential dispatch,
 //! PERF §9), fulfill each lane's [`SolveTicket`].  One job per batch
 //! means at most ⌈requests / max_batch⌉ program executions per matrix
-//! — the serving-layer amortization the ROADMAP asked for.
+//! — the serving-layer amortization the ROADMAP asked for.  The job
+//! holds its own `Arc<MatrixEntry>`, so a registry eviction mid-batch
+//! (capacity pressure, see [`MatrixRegistry`]) never touches a running
+//! solve.
 
+use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex};
 
@@ -36,7 +52,7 @@ use crate::solver::{SolveOptions, SolveResult};
 use crate::sparse::CsrMatrix;
 use crate::util::json::ObjWriter;
 
-use super::registry::{MatrixEntry, MatrixId, MatrixRegistry};
+use super::registry::{MatrixEntry, MatrixId, MatrixRegistry, RegistryError, RegistryStats};
 
 /// One queued solve: a right-hand side against an admitted matrix.
 /// (`x0` is always zero in the serving path, the paper's setup.)
@@ -46,9 +62,9 @@ pub struct SolveRequest {
     pub matrix: MatrixId,
     /// The right-hand side (length must match the matrix).
     pub b: Vec<f64>,
-    /// Submitting tenant — a label carried into the batch records so
-    /// traces and fairness studies can attribute lanes; never affects
-    /// scheduling or results.
+    /// Submitting tenant — a label carried into the batch records and
+    /// counted against [`ServiceConfig::tenant_quota`]; never affects
+    /// scheduling order or results.
     pub tenant: u32,
 }
 
@@ -56,6 +72,69 @@ impl SolveRequest {
     /// A request from the anonymous tenant 0.
     pub fn new(matrix: MatrixId, b: Vec<f64>) -> Self {
         Self { matrix, b, tenant: 0 }
+    }
+}
+
+/// Why [`SolverService::try_submit`] refused a request.  The HTTP front
+/// door maps validation errors to 400 and load errors to 429.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SubmitError {
+    /// The matrix id did not resolve (foreign/unknown id, or a capacity
+    /// budget that cannot make it resident).
+    Registry(RegistryError),
+    /// The right-hand side length does not match the matrix.
+    WrongRhsLength {
+        /// The target matrix.
+        matrix: MatrixId,
+        /// Its vector length.
+        expected: usize,
+        /// The submitted length.
+        got: usize,
+    },
+    /// The bounded pending queue is full
+    /// ([`ServiceConfig::pending_limit`]) — retry after a flush.
+    QueueFull {
+        /// Lanes currently pending.
+        pending: usize,
+        /// The configured bound.
+        limit: usize,
+    },
+    /// The tenant already has its quota of pending lanes
+    /// ([`ServiceConfig::tenant_quota`]).
+    TenantQuotaExceeded {
+        /// The over-quota tenant.
+        tenant: u32,
+        /// Its pending lanes.
+        pending: usize,
+        /// The configured quota.
+        quota: usize,
+    },
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Registry(e) => write!(f, "{e}"),
+            SubmitError::WrongRhsLength { matrix, expected, got } => write!(
+                f,
+                "right-hand side length {got} does not match matrix {matrix} (n = {expected})"
+            ),
+            SubmitError::QueueFull { pending, limit } => {
+                write!(f, "pending queue is full ({pending} lanes, limit {limit})")
+            }
+            SubmitError::TenantQuotaExceeded { tenant, pending, quota } => write!(
+                f,
+                "tenant {tenant} has {pending} pending lanes (quota {quota})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+impl From<RegistryError> for SubmitError {
+    fn from(e: RegistryError) -> Self {
+        SubmitError::Registry(e)
     }
 }
 
@@ -83,9 +162,16 @@ impl Completion {
         Arc::new(Self { state: Mutex::new(CompletionState::Pending), cv: Condvar::new() })
     }
 
+    /// Deliver the result.  Terminal states are sticky in **both**
+    /// directions: a slot that already failed (service dropped, racing
+    /// failure path) keeps its diagnostic — a late fulfill must not
+    /// resurrect it — and a delivered/taken result is never overwritten.
     fn fulfill(&self, res: SolveResult) {
-        *self.state.lock().expect("completion poisoned") = CompletionState::Done(res);
-        self.cv.notify_all();
+        let mut s = self.state.lock().expect("completion poisoned");
+        if matches!(*s, CompletionState::Pending) {
+            *s = CompletionState::Done(res);
+            self.cv.notify_all();
+        }
     }
 
     fn fail(&self, why: &'static str) {
@@ -168,6 +254,12 @@ pub struct BatchRecord {
     pub lanes: u32,
     /// Tenants the lanes belonged to, in lane order.
     pub tenants: Vec<u32>,
+    /// What cut the batch (batch-full, queue-drained, deadline).
+    pub reason: FlushReason,
+    /// Per-lane logical queue waits, in lane order: same-matrix
+    /// submissions accepted between each lane's submit and the
+    /// dispatch (the per-matrix clock of the queue-wait histogram).
+    pub waits: Vec<u64>,
     /// Slowest lane's iteration count (how long the batch held the
     /// device).
     pub max_iters: u32,
@@ -186,12 +278,15 @@ impl BatchRecord {
     /// in [`ServiceStats::to_json`].
     pub fn to_json(&self) -> String {
         let tenants: Vec<String> = self.tenants.iter().map(u32::to_string).collect();
+        let waits: Vec<String> = self.waits.iter().map(u64::to_string).collect();
         let mut w = ObjWriter::new();
         w.field_str("matrix", &self.matrix.to_string());
         w.field_raw("n", &self.n.to_string());
         w.field_raw("nnz", &self.nnz.to_string());
         w.field_raw("lanes", &self.lanes.to_string());
         w.field_raw("tenants", &format!("[{}]", tenants.join(",")));
+        w.field_str("reason", self.reason.name());
+        w.field_raw("waits", &format!("[{}]", waits.join(",")));
         w.field_raw("max_iters", &self.max_iters.to_string());
         w.field_raw("rhs_iters", &self.rhs_iters.to_string());
         w.finish()
@@ -237,6 +332,9 @@ impl StatsInner {
 pub struct ServiceStats {
     /// Requests submitted so far.
     pub requests: u64,
+    /// Submissions rejected by [`SolverService::try_submit`]
+    /// (validation, backpressure, quota).
+    pub rejected: u64,
     /// Batches executed (== program executions issued by the service).
     pub batches: u64,
     /// RHS-iterations retired across all executed batches.
@@ -247,6 +345,9 @@ pub struct ServiceStats {
     pub cache_misses: u64,
     /// Distinct compiled programs held by the cache.
     pub compiled_programs: usize,
+    /// The registry's residency bookkeeping (admitted/resident/pinned,
+    /// beats used, evictions, readmissions).
+    pub registry: RegistryStats,
     /// Every executed batch, in completion order (sort by matrix/lane
     /// content for deterministic comparisons).
     pub records: Vec<BatchRecord>,
@@ -257,6 +358,21 @@ impl ServiceStats {
     /// ⌈requests(matrix) / max_batch⌉.
     pub fn executions_for(&self, id: MatrixId) -> u64 {
         self.records.iter().filter(|r| r.matrix == id).count() as u64
+    }
+
+    /// The `q`-quantile (0 < q <= 1) of the per-lane logical queue
+    /// waits across every recorded batch — `queue_wait_quantile(0.99)`
+    /// is the bounded-p99 figure the replay bench reports.  Returns 0
+    /// for an empty record set.
+    pub fn queue_wait_quantile(&self, q: f64) -> u64 {
+        let mut waits: Vec<u64> =
+            self.records.iter().flat_map(|r| r.waits.iter().copied()).collect();
+        if waits.is_empty() {
+            return 0;
+        }
+        waits.sort_unstable();
+        let rank = ((waits.len() as f64 * q).ceil() as usize).clamp(1, waits.len());
+        waits[rank - 1]
     }
 
     /// Modeled cycles for the recorded trace on the given accelerator
@@ -281,17 +397,23 @@ impl ServiceStats {
 
     /// Serialize the full snapshot — per-batch `records` included, in
     /// their stored order — as one JSON object.  This is the
-    /// `serve --stats-json` body; the shape is pinned in
-    /// `tests/observability.rs`, so extend it there too.
+    /// `serve --stats-json` body and the front door's `/stats` body;
+    /// the shape is pinned in `tests/observability.rs`, so extend it
+    /// there too.
     pub fn to_json(&self) -> String {
         let records: Vec<String> = self.records.iter().map(BatchRecord::to_json).collect();
         let mut w = ObjWriter::new();
         w.field_raw("requests", &self.requests.to_string());
+        w.field_raw("rejected", &self.rejected.to_string());
         w.field_raw("batches", &self.batches.to_string());
         w.field_raw("rhs_iterations", &self.rhs_iterations.to_string());
         w.field_raw("cache_hits", &self.cache_hits.to_string());
         w.field_raw("cache_misses", &self.cache_misses.to_string());
         w.field_raw("compiled_programs", &self.compiled_programs.to_string());
+        w.field_raw("resident_matrices", &self.registry.resident.to_string());
+        w.field_raw("registry_evictions", &self.registry.evictions.to_string());
+        w.field_raw("registry_readmissions", &self.registry.readmissions.to_string());
+        w.field_raw("queue_wait_p99", &self.queue_wait_quantile(0.99).to_string());
         w.field_raw("records", &format!("[{}]", records.join(",")));
         w.finish()
     }
@@ -338,6 +460,26 @@ pub struct ServiceConfig {
     /// short-circuit to per-lane dispatch either way, so per-ticket
     /// results stay bitwise unchanged at any setting.
     pub block_spmv: bool,
+    /// Latency-bounded flush threshold on the **submission-count
+    /// logical clock**: a pending group is cut once its oldest lane has
+    /// seen this many subsequent submissions (any matrix) accepted.
+    /// `0` disables the deadline.  Because the clock is submissions
+    /// rather than wall time, deadline cuts are deterministic and
+    /// replay byte-identically (recorded as
+    /// [`FlushReason::Deadline`]).
+    pub deadline: u64,
+    /// Bound on total pending (unflushed) lanes; a submission past it
+    /// is rejected with [`SubmitError::QueueFull`] — the backpressure
+    /// the HTTP front door maps to 429.  `0` = unbounded.
+    pub pending_limit: usize,
+    /// Per-tenant bound on pending lanes
+    /// ([`SubmitError::TenantQuotaExceeded`] past it).  `0` =
+    /// unbounded.
+    pub tenant_quota: usize,
+    /// Registry capacity budget in HBM beats
+    /// ([`MatrixRegistry::with_capacity`]); resident derived state is
+    /// LRU-evicted to stay under it.  `0` = unbounded.
+    pub capacity_beats: u64,
     /// Solve options every request runs under.  Options outside the
     /// batched-program family (sequential dots, the XcgSolver
     /// accumulator) execute on the worker-per-RHS model path instead —
@@ -353,6 +495,10 @@ impl Default for ServiceConfig {
             spmv_threads: 1,
             lane_workers: 0,
             block_spmv: false,
+            deadline: 0,
+            pending_limit: 0,
+            tenant_quota: 0,
+            capacity_beats: 0,
             opts: SolveOptions::callipepla(),
         }
     }
@@ -364,10 +510,13 @@ struct Lane {
     b: Vec<f64>,
     tenant: u32,
     slot: Arc<Completion>,
-    /// Submission index (0-based) when the request was accepted — the
-    /// logical clock behind the queue-wait histogram and the `submit`
-    /// trace events.
+    /// Global submission index (0-based) when the request was accepted
+    /// — the clock behind `submit` trace events and the deadline.
     seq: u64,
+    /// Per-matrix submission index — the clock behind the queue-wait
+    /// histogram (so idle-matrix lanes don't inherit other matrices'
+    /// traffic).
+    mseq: u64,
 }
 
 /// The solver service: registry + program cache + coalescing queue +
@@ -396,8 +545,20 @@ pub struct SolverService {
     pool: WorkerPool,
     /// Pending lanes per matrix id (indexed by registry slot).
     pending: Vec<Vec<Lane>>,
+    /// Per-matrix submission counts (the queue-wait clock), indexed by
+    /// registry slot.
+    msubmitted: Vec<u64>,
+    /// This service's ids in admission order (slot-indexed — the
+    /// deadline sweep and `flush` iterate these without re-deriving
+    /// them from the registry).
+    matrix_ids: Vec<MatrixId>,
     stats: Arc<StatsInner>,
     submitted: u64,
+    rejected: u64,
+    /// Total pending (unflushed) lanes across all groups.
+    pending_lanes: usize,
+    /// Pending lanes per tenant (entries removed at zero).
+    pending_per_tenant: HashMap<u32, usize>,
     /// Batches dispatched so far — the flush-sequence logical clock
     /// stamped onto `flush`/`done` trace events.
     flushes: u64,
@@ -406,18 +567,34 @@ pub struct SolverService {
 }
 
 impl SolverService {
-    /// Start a service: spawns the worker pool, creates an empty
-    /// registry and program cache.
+    /// Start a service: spawns the worker pool, creates the program
+    /// cache and a registry budgeted to
+    /// [`ServiceConfig::capacity_beats`], and wires the registry's
+    /// eviction hook to drop bucket programs whose last resident
+    /// matrix went with the eviction.
     pub fn new(cfg: ServiceConfig) -> Self {
         assert!(cfg.max_batch >= 1, "a batch needs at least one lane");
+        let cache = Arc::new(ProgramCache::new());
+        let mut registry = MatrixRegistry::with_capacity(cfg.capacity_beats);
+        let hook_cache = Arc::clone(&cache);
+        registry.set_evict_hook(Box::new(move |notice| {
+            if !notice.bucket_still_resident {
+                hook_cache.evict_bucket(notice.bucket);
+            }
+        }));
         Self {
             cfg,
-            registry: MatrixRegistry::new(),
-            cache: Arc::new(ProgramCache::new()),
+            registry,
+            cache,
             pool: WorkerPool::new(cfg.workers),
             pending: Vec::new(),
+            msubmitted: Vec::new(),
+            matrix_ids: Vec::new(),
             stats: Arc::new(StatsInner::default()),
             submitted: 0,
+            rejected: 0,
+            pending_lanes: 0,
+            pending_per_tenant: HashMap::new(),
             flushes: 0,
             events: None,
         }
@@ -434,16 +611,30 @@ impl SolverService {
     }
 
     /// Admit a matrix (derives its solve state once — see
-    /// [`MatrixRegistry`]).
+    /// [`MatrixRegistry`]).  Panics if the capacity budget cannot hold
+    /// it even after evicting everything evictable.
     pub fn register(&mut self, a: CsrMatrix) -> MatrixId {
         let id = self.registry.admit(a, self.cfg.spmv_threads);
         self.pending.push(Vec::new());
+        self.msubmitted.push(0);
+        self.matrix_ids.push(id);
         id
     }
 
     /// The matrix registry.
     pub fn registry(&self) -> &MatrixRegistry {
         &self.registry
+    }
+
+    /// Pin a matrix resident (exempt from eviction) until
+    /// [`SolverService::unpin`].
+    pub fn pin(&self, id: MatrixId) -> Result<(), RegistryError> {
+        self.registry.pin(id)
+    }
+
+    /// Return a pinned matrix to the LRU pool.
+    pub fn unpin(&self, id: MatrixId) -> Result<(), RegistryError> {
+        self.registry.unpin(id)
     }
 
     /// The shared bucketed program cache.
@@ -456,17 +647,71 @@ impl SolverService {
         &self.cfg
     }
 
+    /// This service's matrix ids in admission order (what the HTTP
+    /// front door indexes client-supplied matrix numbers into).
+    pub fn matrix_ids(&self) -> &[MatrixId] {
+        &self.matrix_ids
+    }
+
+    /// Requests accepted so far (the global submission clock).
+    pub fn submitted(&self) -> u64 {
+        self.submitted
+    }
+
+    /// Lanes currently pending (unflushed).
+    pub fn pending_lanes(&self) -> usize {
+        self.pending_lanes
+    }
+
     /// Queue one solve.  The request joins its matrix's pending group;
-    /// a full group (`max_batch` lanes) flushes immediately.  The
-    /// returned ticket resolves once the batch has executed.
-    pub fn submit(&mut self, req: SolveRequest) -> SolveTicket {
-        let n = self.registry.entry(req.matrix).n();
-        assert_eq!(
-            req.b.len(),
-            n,
-            "right-hand side length must match matrix {} (n = {n})",
-            req.matrix
-        );
+    /// a full group (`max_batch` lanes) flushes immediately, and — with
+    /// a deadline configured — groups whose oldest lane aged past the
+    /// threshold flush right after.  The returned ticket resolves once
+    /// the batch has executed.
+    ///
+    /// Rejections (validation, backpressure, quota) come back as typed
+    /// [`SubmitError`]s; [`SolverService::submit`] is the panicking
+    /// wrapper.
+    pub fn try_submit(&mut self, req: SolveRequest) -> Result<SolveTicket, SubmitError> {
+        // Load shedding first — it must not depend on (or pay for)
+        // registry residency work.
+        if self.cfg.pending_limit > 0 && self.pending_lanes >= self.cfg.pending_limit {
+            self.reject();
+            return Err(SubmitError::QueueFull {
+                pending: self.pending_lanes,
+                limit: self.cfg.pending_limit,
+            });
+        }
+        if self.cfg.tenant_quota > 0 {
+            let held = self.pending_per_tenant.get(&req.tenant).copied().unwrap_or(0);
+            if held >= self.cfg.tenant_quota {
+                self.reject();
+                return Err(SubmitError::TenantQuotaExceeded {
+                    tenant: req.tenant,
+                    pending: held,
+                    quota: self.cfg.tenant_quota,
+                });
+            }
+        }
+        // Validation: resolve the id (readmitting an evicted entry on
+        // demand) and check the RHS length against it.
+        let entry = match self.registry.try_entry(req.matrix) {
+            Ok(e) => e,
+            Err(e) => {
+                self.reject();
+                return Err(SubmitError::Registry(e));
+            }
+        };
+        let n = entry.n();
+        if req.b.len() != n {
+            self.reject();
+            return Err(SubmitError::WrongRhsLength {
+                matrix: req.matrix,
+                expected: n,
+                got: req.b.len(),
+            });
+        }
+        drop(entry);
         let seq = self.submitted;
         self.submitted += 1;
         obs::SERVICE_REQUESTS.inc();
@@ -477,22 +722,76 @@ impl SolverService {
                 kind: EventKind::Submit { matrix: req.matrix.index(), tenant: req.tenant },
             });
         }
+        let mseq = self.msubmitted[req.matrix.index()];
+        self.msubmitted[req.matrix.index()] += 1;
+        self.pending_lanes += 1;
+        *self.pending_per_tenant.entry(req.tenant).or_insert(0) += 1;
         let slot = Completion::new();
         let ticket = SolveTicket { slot: Arc::clone(&slot) };
-        self.pending[req.matrix.index()].push(Lane { b: req.b, tenant: req.tenant, slot, seq });
+        self.pending[req.matrix.index()].push(Lane {
+            b: req.b,
+            tenant: req.tenant,
+            slot,
+            seq,
+            mseq,
+        });
         if self.pending[req.matrix.index()].len() >= self.cfg.max_batch {
             self.dispatch(req.matrix, FlushReason::BatchFull);
         }
-        ticket
+        self.flush_deadlines();
+        Ok(ticket)
+    }
+
+    /// Queue one solve, panicking on rejection (the in-process API;
+    /// see [`SolverService::try_submit`] for the typed form the HTTP
+    /// front door uses).
+    pub fn submit(&mut self, req: SolveRequest) -> SolveTicket {
+        self.try_submit(req).unwrap_or_else(|e| panic!("solve submission rejected: {e}"))
+    }
+
+    fn reject(&mut self) {
+        self.rejected += 1;
+        obs::SERVICE_SUBMIT_REJECTED.inc();
+    }
+
+    /// Cut every group whose oldest lane has aged past the deadline
+    /// threshold, in matrix-admission order (deterministic — the sweep
+    /// runs on the caller thread right after each accepted submission).
+    fn flush_deadlines(&mut self) {
+        let d = self.cfg.deadline;
+        if d == 0 {
+            return;
+        }
+        for ix in 0..self.matrix_ids.len() {
+            let id = self.matrix_ids[ix];
+            while self.pending[ix].first().is_some_and(|l| self.submitted - 1 - l.seq >= d) {
+                self.dispatch(id, FlushReason::Deadline);
+            }
+        }
     }
 
     /// Queue-drained flush: dispatch every pending partial batch, in
     /// matrix-admission order (deterministic).
     pub fn flush(&mut self) {
-        for id in self.registry.ids().collect::<Vec<_>>() {
-            while !self.pending[id.index()].is_empty() {
+        for ix in 0..self.matrix_ids.len() {
+            let id = self.matrix_ids[ix];
+            while !self.pending[ix].is_empty() {
                 self.dispatch(id, FlushReason::QueueDrained);
             }
+        }
+    }
+
+    /// Flush one matrix's pending group (all of it, in `max_batch`
+    /// cuts) without touching other groups — what the front door's
+    /// synchronous `/solve` path uses so one caller's flush doesn't
+    /// disturb other matrices' coalescing windows.
+    pub fn flush_matrix(&mut self, id: MatrixId) {
+        assert!(
+            self.matrix_ids.get(id.index()) == Some(&id),
+            "matrix id {id} was not registered on this service"
+        );
+        while !self.pending[id.index()].is_empty() {
+            self.dispatch(id, FlushReason::QueueDrained);
         }
     }
 
@@ -514,11 +813,13 @@ impl SolverService {
         let records = self.stats.records.lock().expect("stats poisoned").clone();
         ServiceStats {
             requests: self.submitted,
+            rejected: self.rejected,
             batches: records.len() as u64,
             rhs_iterations: records.iter().map(|r| r.rhs_iters).sum(),
             cache_hits: self.cache.hits(),
             cache_misses: self.cache.misses(),
             compiled_programs: self.cache.len(),
+            registry: self.registry.stats(),
             records,
         }
     }
@@ -534,18 +835,32 @@ impl SolverService {
         }
         let take = group.len().min(self.cfg.max_batch);
         let lanes: Vec<Lane> = group.drain(..take).collect();
+        self.pending_lanes -= lanes.len();
+        for lane in &lanes {
+            if let Some(held) = self.pending_per_tenant.get_mut(&lane.tenant) {
+                *held -= 1;
+                if *held == 0 {
+                    self.pending_per_tenant.remove(&lane.tenant);
+                }
+            }
+        }
         let flush_seq = self.flushes;
         self.flushes += 1;
         obs::SERVICE_BATCHES.inc();
         match reason {
             FlushReason::BatchFull => obs::SERVICE_FLUSH_BATCH_FULL.inc(),
             FlushReason::QueueDrained => obs::SERVICE_FLUSH_DRAINED.inc(),
+            FlushReason::Deadline => obs::SERVICE_FLUSH_DEADLINE.inc(),
         }
         obs::SERVICE_COALESCE_WIDTH.observe(lanes.len() as u64);
-        for lane in &lanes {
-            // Logical queue wait: submissions accepted after this lane
-            // joined its group (never wall time).
-            obs::SERVICE_QUEUE_WAIT.observe(self.submitted - 1 - lane.seq);
+        // Logical queue wait on the *per-matrix* clock: submissions to
+        // this matrix accepted after each lane joined its group.  A
+        // lane on an idle matrix therefore waits 0, no matter how much
+        // traffic other matrices saw in between.
+        let now_m = self.msubmitted[id.index()];
+        let waits: Vec<u64> = lanes.iter().map(|l| now_m - 1 - l.mseq).collect();
+        for w in &waits {
+            obs::SERVICE_QUEUE_WAIT.observe(*w);
         }
         if let Some(sink) = &self.events {
             sink.push(Event {
@@ -554,17 +869,22 @@ impl SolverService {
                 kind: EventKind::Flush { matrix: id.index(), lanes: lanes.len() as u32, reason },
             });
         }
-        let entry = Arc::clone(self.registry.entry(id));
-        let cache = Arc::clone(&self.cache);
-        let stats = Arc::clone(&self.stats);
-        let opts = self.cfg.opts;
-        let lane_workers = self.cfg.lane_workers;
-        let block = self.cfg.block_spmv;
-        let events = self.events.clone();
-        stats.batch_started();
-        self.pool.spawn(move || {
-            run_batch(id, entry, cache, stats, opts, lanes, lane_workers, block, flush_seq, events)
-        });
+        let job = BatchJob {
+            id,
+            entry: self.registry.entry(id),
+            cache: Arc::clone(&self.cache),
+            stats: Arc::clone(&self.stats),
+            opts: self.cfg.opts,
+            lanes,
+            lane_workers: self.cfg.lane_workers,
+            block: self.cfg.block_spmv,
+            flush_seq,
+            reason,
+            waits,
+            events: self.events.clone(),
+        };
+        job.stats.batch_started();
+        self.pool.spawn(move || job.run());
     }
 }
 
@@ -581,17 +901,18 @@ impl Drop for SolverService {
     }
 }
 
-/// Execute one coalesced batch on a pool worker: plan view → cached
-/// bucket program → lane-parallel dispatch → per-lane results →
-/// tickets.  The lane fan-out rides the process-wide
-/// [`pool::global`](crate::engine::pool::global) pool (this worker
-/// participates and drains its own queue, so a fully busy service
-/// cannot wedge on it); results are bitwise those of the sequential
-/// dispatch the pre-lane-parallel service used.  With
+/// One dispatched batch, self-contained for the pool: plan view →
+/// cached bucket program → lane-parallel dispatch → per-lane results →
+/// tickets.  The job owns its `Arc<MatrixEntry>`, so a registry
+/// eviction while it runs changes nothing; the lane fan-out rides the
+/// process-wide [`pool::global`](crate::engine::pool::global) pool
+/// (this worker participates and drains its own queue, so a fully busy
+/// service cannot wedge on it); results are bitwise those of the
+/// sequential dispatch the pre-lane-parallel service used.  With
 /// [`ServiceConfig::block_spmv`] the lanes instead run as one resident
 /// block (same bitwise results, one matrix stream per iteration).
-#[allow(clippy::too_many_arguments)]
-fn run_batch(
+#[derive(Debug)]
+struct BatchJob {
     id: MatrixId,
     entry: Arc<MatrixEntry>,
     cache: Arc<ProgramCache>,
@@ -601,62 +922,143 @@ fn run_batch(
     lane_workers: usize,
     block: bool,
     flush_seq: u64,
+    reason: FlushReason,
+    waits: Vec<u64>,
     events: Option<Arc<EventSink>>,
-) {
-    let mut bs = Vec::with_capacity(lanes.len());
-    let mut tenants = Vec::with_capacity(lanes.len());
-    let mut slots = Vec::with_capacity(lanes.len());
-    for lane in lanes {
-        bs.push(lane.b);
-        tenants.push(lane.tenant);
-        slots.push(lane.slot);
+}
+
+impl BatchJob {
+    fn run(self) {
+        let BatchJob {
+            id,
+            entry,
+            cache,
+            stats,
+            opts,
+            lanes,
+            lane_workers,
+            block,
+            flush_seq,
+            reason,
+            waits,
+            events,
+        } = self;
+        let mut bs = Vec::with_capacity(lanes.len());
+        let mut tenants = Vec::with_capacity(lanes.len());
+        let mut slots = Vec::with_capacity(lanes.len());
+        for lane in lanes {
+            bs.push(lane.b);
+            tenants.push(lane.tenant);
+            slots.push(lane.slot);
+        }
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            let plan = entry.plan();
+            if block {
+                plan.solve_batch_block_parallel(&bs, &opts, Some(&cache), lane_workers)
+            } else {
+                plan.solve_batch_parallel(&bs, &opts, Some(&cache), lane_workers)
+            }
+        }));
+        match outcome {
+            Ok(results) => {
+                debug_assert_eq!(results.len(), slots.len());
+                let record = BatchRecord {
+                    matrix: id,
+                    n: entry.n(),
+                    nnz: entry.nnz(),
+                    lanes: slots.len() as u32,
+                    tenants,
+                    reason,
+                    waits,
+                    max_iters: results.iter().map(|r| r.iters).max().unwrap_or(0),
+                    rhs_iters: results.iter().map(|r| r.iters as u64).sum(),
+                };
+                if let Some(sink) = &events {
+                    // Stamped with the dispatch's flush sequence:
+                    // workers finish in nondeterministic order, but the
+                    // rendered log sorts on this clock, so the
+                    // transcript does not depend on completion timing.
+                    sink.push(Event {
+                        seq: flush_seq,
+                        lane: 0,
+                        kind: EventKind::BatchDone {
+                            matrix: id.index(),
+                            lanes: record.lanes,
+                            rhs_iters: record.rhs_iters,
+                        },
+                    });
+                }
+                for (slot, res) in slots.iter().zip(results) {
+                    slot.fulfill(res);
+                }
+                stats.batch_finished(Some(record));
+            }
+            Err(_) => {
+                obs::SERVICE_BATCH_PANICS.inc();
+                for slot in &slots {
+                    slot.fail("the batch job executing this request panicked");
+                }
+                stats.batch_finished(None);
+            }
+        }
     }
-    let outcome = catch_unwind(AssertUnwindSafe(|| {
-        let plan = entry.plan();
-        if block {
-            plan.solve_batch_block_parallel(&bs, &opts, Some(&cache), lane_workers)
-        } else {
-            plan.solve_batch_parallel(&bs, &opts, Some(&cache), lane_workers)
-        }
-    }));
-    match outcome {
-        Ok(results) => {
-            debug_assert_eq!(results.len(), slots.len());
-            let record = BatchRecord {
-                matrix: id,
-                n: entry.n(),
-                nnz: entry.nnz(),
-                lanes: slots.len() as u32,
-                tenants,
-                max_iters: results.iter().map(|r| r.iters).max().unwrap_or(0),
-                rhs_iters: results.iter().map(|r| r.iters as u64).sum(),
-            };
-            if let Some(sink) = &events {
-                // Stamped with the dispatch's flush sequence: workers
-                // finish in nondeterministic order, but the rendered
-                // log sorts on this clock, so the transcript does not
-                // depend on completion timing.
-                sink.push(Event {
-                    seq: flush_seq,
-                    lane: 0,
-                    kind: EventKind::BatchDone {
-                        matrix: id.index(),
-                        lanes: record.lanes,
-                        rhs_iters: record.rhs_iters,
-                    },
-                });
-            }
-            for (slot, res) in slots.iter().zip(results) {
-                slot.fulfill(res);
-            }
-            stats.batch_finished(Some(record));
-        }
-        Err(_) => {
-            obs::SERVICE_BATCH_PANICS.inc();
-            for slot in &slots {
-                slot.fail("the batch job executing this request panicked");
-            }
-            stats.batch_finished(None);
-        }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::jpcg_solve;
+    use crate::sparse::synth;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    fn tiny_result() -> SolveResult {
+        jpcg_solve(
+            &synth::laplace2d_shifted(16, 0.5),
+            None,
+            None,
+            &SolveOptions { max_iters: 3, ..SolveOptions::callipepla() },
+        )
+    }
+
+    #[test]
+    fn fail_then_fulfill_keeps_the_failure_sticky() {
+        // The race this pins: the service drops (failing queued slots)
+        // while a worker is about to deliver — whichever terminal state
+        // lands first must win in *both* orders.
+        let slot = Completion::new();
+        slot.fail("service dropped before the request's batch was flushed");
+        slot.fulfill(tiny_result());
+        let ticket = SolveTicket { slot };
+        let panic = catch_unwind(AssertUnwindSafe(|| ticket.try_take()))
+            .expect_err("a failed slot must stay failed after a late fulfill");
+        let msg = panic.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("service dropped"), "original diagnostic survives: {msg}");
+    }
+
+    #[test]
+    fn fulfill_then_fail_keeps_the_result() {
+        let slot = Completion::new();
+        slot.fulfill(tiny_result());
+        slot.fail("late failure must not clobber a delivered result");
+        let ticket = SolveTicket { slot };
+        let res = ticket.try_take().expect("result survives the late fail");
+        let expect: Vec<u64> = tiny_result().x.iter().map(|v| v.to_bits()).collect();
+        let got: Vec<u64> = res.x.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, expect, "the delivered result is the solver's, bit for bit");
+    }
+
+    #[test]
+    fn double_fulfill_keeps_the_first_result() {
+        let slot = Completion::new();
+        let first = tiny_result();
+        let first_bits: Vec<u64> = first.x.iter().map(|v| v.to_bits()).collect();
+        slot.fulfill(first);
+        let mut second = tiny_result();
+        second.x.iter_mut().for_each(|v| *v = 0.0);
+        slot.fulfill(second);
+        let ticket = SolveTicket { slot };
+        let res = ticket.try_take().expect("first result delivered");
+        let bits: Vec<u64> = res.x.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits, first_bits);
     }
 }

@@ -858,6 +858,34 @@ mod tests {
     }
 
     #[test]
+    fn deadline_narrowed_batches_price_worse_per_rhs_iteration() {
+        // The latency/throughput trade the scheduler's deadline flush
+        // (ServiceConfig::deadline) makes, priced on the time plane: a
+        // deadline that cuts one full batch of 8 into two of 4 retires
+        // the same RHS-iterations but pays the fixed per-trip costs
+        // (invoke overhead, fill/drain) twice, so the narrowed schedule
+        // is strictly more cycles — sub-linear lane scaling is the whole
+        // reason coalescing wide is worth waiting for.
+        let cfg = AccelSimConfig::callipepla();
+        let wide = [ScheduledBatch { n: N, nnz: NNZ, lanes: 8, trips: 10 }];
+        let narrowed = [
+            ScheduledBatch { n: N, nnz: NNZ, lanes: 4, trips: 10 },
+            ScheduledBatch { n: N, nnz: NNZ, lanes: 4, trips: 10 },
+        ];
+        let wide_cycles = schedule_cycles(&cfg, &wide);
+        let narrowed_cycles = schedule_cycles(&cfg, &narrowed);
+        assert!(
+            narrowed_cycles > wide_cycles,
+            "narrowed={narrowed_cycles} wide={wide_cycles}"
+        );
+        // But both beat serving the lanes one at a time — a deadline
+        // flush still coalesces, it just bounds how long it waits.
+        let singles: Vec<ScheduledBatch> =
+            (0..8).map(|_| ScheduledBatch { n: N, nnz: NNZ, lanes: 1, trips: 10 }).collect();
+        assert!(narrowed_cycles < schedule_cycles(&cfg, &singles));
+    }
+
+    #[test]
     fn traced_pricing_matches_static_and_brackets_adaptive() {
         use crate::precision::adaptive::{PrecisionEvent, PrecisionTrace, SwitchReason};
         let cfg = AccelSimConfig::callipepla();

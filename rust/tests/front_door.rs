@@ -1,0 +1,332 @@
+//! Production-hardening oracle tests (ROADMAP item 4 / ISSUE 10):
+//! the capacity-bounded registry, the logical-clock deadline flush,
+//! typed admission control, and the HTTP front door.
+//!
+//! * Matrix ids are registry-tagged: submitting another service's id is
+//!   a typed error, never a silent mis-resolution.
+//! * LRU eviction and readmission under a capacity budget are
+//!   bitwise-invisible — every ticket through the churn still matches a
+//!   lone `jpcg_solve`, in-flight batches keep their `Arc`s, pinned
+//!   entries never leave residency.
+//! * Deadline flushes ride the submission-count logical clock: two runs
+//!   of the same request sequence render byte-identical event logs and
+//!   bitwise-identical results.
+//! * Backpressure (bounded pending queue) and per-tenant quotas reject
+//!   with typed errors the front door maps to 429; validation errors
+//!   map to 400.
+//! * Every HTTP route works through the socket-free `handle_request`
+//!   seam, and one real `TcpListener` round-trip proves the wire path.
+
+use callipepla::obs::{first_divergence, FlushReason, PROMETHEUS_CONTENT_TYPE};
+use callipepla::service::{
+    footprint_beats, handle_request, serve_http, RegistryError, ServiceConfig, SolveRequest,
+    SolverService, SubmitError,
+};
+use callipepla::solver::{jpcg_solve, SolveOptions, SolveResult};
+use callipepla::sparse::{synth, CsrMatrix};
+use callipepla::util::json::Json;
+
+fn ramp_rhs(n: usize, phase: usize) -> Vec<f64> {
+    (0..n).map(|i| 1.0 + ((i + phase) % 5) as f64 / 5.0).collect()
+}
+
+fn assert_bitwise(a: &SolveResult, b: &SolveResult, what: &str) {
+    assert_eq!(a.iters, b.iters, "{what}: iteration counts differ");
+    assert_eq!(a.final_rr.to_bits(), b.final_rr.to_bits(), "{what}: final rr differs");
+    assert!(
+        a.x.len() == b.x.len() && a.x.iter().zip(&b.x).all(|(u, v)| u.to_bits() == v.to_bits()),
+        "{what}: solution bits differ"
+    );
+}
+
+#[test]
+fn foreign_ids_from_another_service_are_a_typed_rejection() {
+    let a = synth::laplace2d_shifted(100, 0.2);
+    let mut svc1 = SolverService::new(ServiceConfig::default());
+    let mut svc2 = SolverService::new(ServiceConfig::default());
+    let id1 = svc1.register(a.clone());
+    let id2 = svc2.register(a.clone());
+
+    // Same slot number, different registry — before the tag this
+    // resolved silently to svc2's own matrix.
+    assert_eq!(id1.index(), id2.index());
+    let err = svc2
+        .try_submit(SolveRequest::new(id1, vec![1.0; 100]))
+        .expect_err("a foreign id must not resolve");
+    match &err {
+        SubmitError::Registry(RegistryError::ForeignId { .. }) => {}
+        other => panic!("expected a ForeignId rejection, got {other:?}"),
+    }
+    assert!(err.to_string().contains("minted by registry"), "diagnostic names the tag: {err}");
+    // The legitimate id still works on its own service.
+    let t = svc2.submit(SolveRequest::new(id2, vec![1.0; 100]));
+    svc2.flush();
+    assert!(t.wait().converged);
+    assert_eq!(svc2.stats().rejected, 1);
+}
+
+#[test]
+fn eviction_churn_under_load_is_bitwise_invisible_and_respects_pins() {
+    let matrices: Vec<CsrMatrix> = vec![
+        synth::laplace2d_shifted(100, 0.2),
+        synth::laplace2d_shifted(180, 0.15),
+        synth::laplace2d_shifted(260, 0.1),
+        synth::laplace2d_shifted(330, 0.08),
+    ];
+    let fps: Vec<u64> = matrices.iter().map(|a| footprint_beats(a.n, a.nnz())).collect();
+    // Room for the pinned matrix plus two of the largest: any single
+    // readmission always fits, but the full working set never does.
+    let capacity = fps[0] + 2 * fps.iter().copied().max().unwrap();
+    assert!(capacity < fps.iter().sum::<u64>(), "the budget must force eviction");
+
+    let mut svc = SolverService::new(ServiceConfig {
+        max_batch: 2,
+        workers: 2,
+        capacity_beats: capacity,
+        ..Default::default()
+    });
+    let ids: Vec<_> = matrices.iter().map(|a| svc.register(a.clone())).collect();
+    svc.pin(ids[0]).expect("pinning an admitted matrix");
+
+    // Round-robin across all four matrices: every submission after the
+    // first few readmits something the previous ones evicted, while
+    // batches from earlier rounds are still in flight on the pool.
+    let opts = SolveOptions::callipepla();
+    let mut tickets = Vec::new();
+    let mut expected = Vec::new();
+    for round in 0..6usize {
+        for (m, a) in matrices.iter().enumerate() {
+            let b = ramp_rhs(a.n, round * 7 + m);
+            tickets.push(svc.submit(SolveRequest::new(ids[m], b.clone())));
+            expected.push((m, b));
+        }
+    }
+    let stats = svc.drain();
+    assert!(stats.registry.evictions > 0, "the budget must have evicted");
+    assert!(stats.registry.readmissions > 0, "evicted matrices must have come back");
+    assert!(
+        svc.registry().is_resident(ids[0]),
+        "the pinned matrix never leaves residency through the churn"
+    );
+    for (ticket, (m, b)) in tickets.into_iter().zip(&expected) {
+        let res = ticket.wait();
+        let lone = jpcg_solve(&matrices[*m], Some(b), None, &opts);
+        assert_bitwise(&res, &lone, "ticket through eviction churn");
+    }
+}
+
+#[test]
+fn deadline_flushes_are_deterministic_and_bitwise() {
+    let matrices =
+        [synth::laplace2d_shifted(100, 0.2), synth::laplace2d_shifted(180, 0.15)];
+    let run = || {
+        let mut svc = SolverService::new(ServiceConfig {
+            max_batch: 8,
+            workers: 2,
+            deadline: 5,
+            ..Default::default()
+        });
+        let sink = svc.record_events();
+        let ids: Vec<_> = matrices.iter().map(|a| svc.register(a.clone())).collect();
+        let tickets: Vec<_> = (0..24usize)
+            .map(|k| {
+                let m = k % 2;
+                svc.submit(SolveRequest {
+                    matrix: ids[m],
+                    b: ramp_rhs(matrices[m].n, k),
+                    tenant: (k % 3) as u32,
+                })
+            })
+            .collect();
+        let stats = svc.drain();
+        let results: Vec<SolveResult> = tickets.into_iter().map(|t| t.wait()).collect();
+        (sink.render(), stats, results)
+    };
+    let (log_a, stats_a, results_a) = run();
+    let (log_b, _, results_b) = run();
+
+    assert!(
+        stats_a.records.iter().any(|r| r.reason == FlushReason::Deadline),
+        "a 5-submission deadline under max_batch 8 must cut batches"
+    );
+    assert!(log_a.contains("reason=deadline"), "deadline cuts are named in the log:\n{log_a}");
+    assert_eq!(
+        first_divergence(&log_a, &log_b),
+        None,
+        "deadline flushes must replay byte-identically:\n--- a ---\n{log_a}\n--- b ---\n{log_b}"
+    );
+    let opts = SolveOptions::callipepla();
+    for (k, (ra, rb)) in results_a.iter().zip(&results_b).enumerate() {
+        assert_bitwise(ra, rb, "deadline run-to-run");
+        let m = k % 2;
+        let lone = jpcg_solve(&matrices[m], Some(&ramp_rhs(matrices[m].n, k)), None, &opts);
+        assert_bitwise(ra, &lone, "deadline-cut ticket vs lone solve");
+    }
+    // Deadline waits are bounded by the threshold on every lane.
+    assert!(stats_a.queue_wait_quantile(1.0) <= 5, "no lane outwaits the deadline");
+}
+
+#[test]
+fn backpressure_and_tenant_quotas_reject_with_typed_errors() {
+    let a = synth::laplace2d_shifted(100, 0.2);
+    let mut svc = SolverService::new(ServiceConfig {
+        max_batch: 8,
+        workers: 1,
+        pending_limit: 2,
+        tenant_quota: 1,
+        ..Default::default()
+    });
+    let id = svc.register(a.clone());
+    svc.pin(id).expect("pin under load");
+
+    let t0 = svc.submit(SolveRequest { matrix: id, b: ramp_rhs(a.n, 0), tenant: 0 });
+    // Tenant 0 is at quota while its first lane is still pending.
+    match svc.try_submit(SolveRequest { matrix: id, b: ramp_rhs(a.n, 1), tenant: 0 }) {
+        Err(SubmitError::TenantQuotaExceeded { tenant: 0, pending: 1, quota: 1 }) => {}
+        other => panic!("expected a quota rejection, got {other:?}"),
+    }
+    // Validation rejections are typed too and never count a request
+    // (checked before the queue fills — load shedding outranks
+    // validation once the bound trips).
+    match svc.try_submit(SolveRequest { matrix: id, b: vec![1.0; 7], tenant: 3 }) {
+        Err(SubmitError::WrongRhsLength { expected, got: 7, .. }) => assert_eq!(expected, a.n),
+        other => panic!("expected a length rejection, got {other:?}"),
+    }
+    let t1 = svc.submit(SolveRequest { matrix: id, b: ramp_rhs(a.n, 2), tenant: 1 });
+    // The queue bound trips before any per-tenant bookkeeping.
+    match svc.try_submit(SolveRequest { matrix: id, b: ramp_rhs(a.n, 3), tenant: 2 }) {
+        Err(SubmitError::QueueFull { pending: 2, limit: 2 }) => {}
+        other => panic!("expected a queue-full rejection, got {other:?}"),
+    }
+
+    // Draining clears the backlog and the gate reopens.
+    svc.flush();
+    let opts = SolveOptions::callipepla();
+    assert_bitwise(&t0.wait(), &jpcg_solve(&a, Some(&ramp_rhs(a.n, 0)), None, &opts), "t0");
+    assert_bitwise(&t1.wait(), &jpcg_solve(&a, Some(&ramp_rhs(a.n, 2)), None, &opts), "t1");
+    let t2 = svc.submit(SolveRequest { matrix: id, b: ramp_rhs(a.n, 4), tenant: 2 });
+    svc.flush();
+    assert!(t2.wait().converged);
+    let stats = svc.drain();
+    assert_eq!(stats.requests, 3);
+    assert_eq!(stats.rejected, 3);
+}
+
+#[test]
+fn http_routes_cover_solve_metrics_stats_and_the_error_edges() {
+    let a = synth::laplace2d_shifted(100, 0.2);
+    let mut svc = SolverService::new(ServiceConfig {
+        max_batch: 8,
+        workers: 1,
+        pending_limit: 2,
+        ..Default::default()
+    });
+    svc.register(a.clone());
+
+    let health = handle_request(&mut svc, "GET", "/healthz", "");
+    assert_eq!((health.status, health.body.as_str()), (200, "ok\n"));
+
+    // The synchronous solve path: default all-ones RHS, response x is
+    // bitwise the lone solve (f64 Display round-trips exactly).
+    let resp = handle_request(&mut svc, "POST", "/solve", r#"{"matrix": 0}"#);
+    assert_eq!(resp.status, 200, "body: {}", resp.body);
+    let j = Json::parse(&resp.body).expect("solve response must parse");
+    assert_eq!(j.get("converged"), Some(&Json::Bool(true)));
+    let x: Vec<f64> = j
+        .get("x")
+        .and_then(Json::as_arr)
+        .expect("x array")
+        .iter()
+        .map(|v| v.as_f64().expect("x value"))
+        .collect();
+    let lone = jpcg_solve(&a, Some(&vec![1.0; a.n]), None, &SolveOptions::callipepla());
+    assert_eq!(x.len(), lone.x.len());
+    assert!(
+        x.iter().zip(&lone.x).all(|(u, v)| u.to_bits() == v.to_bits()),
+        "HTTP solution diverged from the lone solve"
+    );
+
+    // Validation edges: 400s.
+    for bad in [
+        "not json",
+        r#"{"b": [1.0]}"#,
+        r#"{"matrix": 9}"#,
+        r#"{"matrix": 0, "b": [1.0, 2.0]}"#,
+    ] {
+        let resp = handle_request(&mut svc, "POST", "/solve", bad);
+        assert_eq!(resp.status, 400, "body {bad:?} must be a 400, got {}", resp.status);
+        assert!(Json::parse(&resp.body).expect("error body parses").get("error").is_some());
+    }
+
+    // Backpressure edge: fire-and-forget submissions fill the bounded
+    // queue, then the door answers 429 until a flush drains it.
+    for _ in 0..2 {
+        let resp = handle_request(&mut svc, "POST", "/submit", r#"{"matrix": 0}"#);
+        assert_eq!(resp.status, 202, "body: {}", resp.body);
+    }
+    let resp = handle_request(&mut svc, "POST", "/submit", r#"{"matrix": 0}"#);
+    assert_eq!(resp.status, 429, "the bounded queue must shed load: {}", resp.body);
+    let resp = handle_request(&mut svc, "POST", "/flush", "");
+    assert_eq!(resp.status, 200);
+    let j = Json::parse(&resp.body).expect("flush body parses");
+    assert_eq!(j.get("pending").and_then(Json::as_usize), Some(0));
+
+    // Observability surfaces.
+    let metrics = handle_request(&mut svc, "GET", "/metrics", "");
+    assert_eq!((metrics.status, metrics.content_type), (200, PROMETHEUS_CONTENT_TYPE));
+    for family in [
+        "callipepla_service_http_requests_total",
+        "callipepla_service_submit_rejected_total",
+        "callipepla_service_flush_deadline_total",
+        "callipepla_service_registry_evictions_total",
+    ] {
+        assert!(metrics.body.contains(family), "metrics dump is missing {family}");
+    }
+    let stats = handle_request(&mut svc, "GET", "/stats", "");
+    let j = Json::parse(&stats.body).expect("stats body parses");
+    assert_eq!(j.get("rejected").and_then(Json::as_usize), Some(1));
+
+    // Routing edges and the shutdown signal.
+    assert_eq!(handle_request(&mut svc, "GET", "/nope", "").status, 404);
+    assert_eq!(handle_request(&mut svc, "DELETE", "/solve", "").status, 405);
+    let bye = handle_request(&mut svc, "POST", "/shutdown", "");
+    assert!(bye.shutdown && bye.status == 200);
+    svc.drain();
+}
+
+#[test]
+fn the_front_door_answers_over_a_real_socket() {
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+
+    let a = synth::laplace2d_shifted(100, 0.2);
+    let mut svc = SolverService::new(ServiceConfig { workers: 1, ..Default::default() });
+    svc.register(a);
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind an ephemeral port");
+    let addr = listener.local_addr().expect("local addr");
+
+    let client = std::thread::spawn(move || {
+        let mut read_one = |req: &str| {
+            let mut s = TcpStream::connect(addr).expect("connect");
+            s.write_all(req.as_bytes()).expect("send");
+            let mut resp = String::new();
+            s.read_to_string(&mut resp).expect("recv");
+            resp
+        };
+        let health = read_one("GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n");
+        let body = r#"{"matrix": 0}"#;
+        let solve = read_one(&format!(
+            "POST /solve HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        ));
+        (health, solve)
+    });
+    let served = serve_http(&mut svc, &listener, 2).expect("serve");
+    assert_eq!(served, 2);
+    let (health, solve) = client.join().expect("client thread");
+    assert!(health.starts_with("HTTP/1.1 200 OK"), "health: {health}");
+    assert!(health.ends_with("ok\n"), "health body: {health}");
+    assert!(solve.starts_with("HTTP/1.1 200 OK"), "solve: {solve}");
+    assert!(solve.contains("\"converged\":true"), "solve body: {solve}");
+    svc.drain();
+}

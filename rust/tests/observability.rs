@@ -136,6 +136,17 @@ fn stats_json_shape_is_pinned() {
     let text = stats.to_json();
     let j = Json::parse(&text).expect("stats JSON must parse");
     assert_eq!(j.get("requests").and_then(Json::as_usize), Some(5));
+    assert_eq!(j.get("rejected").and_then(Json::as_usize), Some(0));
+    assert_eq!(
+        j.get("resident_matrices").and_then(Json::as_usize),
+        Some(stats.registry.resident)
+    );
+    assert_eq!(j.get("registry_evictions").and_then(Json::as_usize), Some(0));
+    assert_eq!(j.get("registry_readmissions").and_then(Json::as_usize), Some(0));
+    assert_eq!(
+        j.get("queue_wait_p99").and_then(Json::as_usize),
+        Some(stats.queue_wait_quantile(0.99) as usize)
+    );
     assert_eq!(j.get("batches").and_then(Json::as_usize), Some(stats.batches as usize));
     assert_eq!(
         j.get("rhs_iterations").and_then(Json::as_usize),
@@ -160,6 +171,15 @@ fn stats_json_shape_is_pinned() {
         assert_eq!(json.get("lanes").and_then(Json::as_usize), Some(rec.lanes as usize));
         assert_eq!(json.get("max_iters").and_then(Json::as_usize), Some(rec.max_iters as usize));
         assert_eq!(json.get("rhs_iters").and_then(Json::as_usize), Some(rec.rhs_iters as usize));
+        assert_eq!(json.get("reason").and_then(Json::as_str), Some(rec.reason.name()));
+        let waits: Vec<u64> = json
+            .get("waits")
+            .and_then(Json::as_arr)
+            .expect("waits array")
+            .iter()
+            .map(|w| w.as_usize().expect("wait value") as u64)
+            .collect();
+        assert_eq!(waits, rec.waits);
         let tenants: Vec<u32> = json
             .get("tenants")
             .and_then(Json::as_arr)
@@ -169,6 +189,52 @@ fn stats_json_shape_is_pinned() {
             .collect();
         assert_eq!(tenants, rec.tenants);
     }
+}
+
+/// The queue-wait clock is *per matrix*: a lane's recorded wait counts
+/// only same-matrix submissions accepted between its submit and its
+/// dispatch, so an idle matrix's lanes are not charged for other
+/// matrices' traffic (the bug the global-clock histogram had).
+#[test]
+fn queue_wait_counts_same_matrix_submissions_only() {
+    let a = synth::laplace2d_shifted(100, 0.2);
+    let b = synth::laplace2d_shifted(180, 0.15);
+    let mut svc =
+        SolverService::new(ServiceConfig { max_batch: 4, workers: 2, ..Default::default() });
+    let id_a = svc.register(a.clone());
+    let id_b = svc.register(b.clone());
+
+    // Three lanes park on A, then heavy traffic floods B (two full
+    // batches), then the drain cuts A's partial group.
+    let mut tickets = Vec::new();
+    for k in 0..3usize {
+        tickets.push(svc.submit(SolveRequest::new(id_a, ramp_rhs(a.n, k))));
+    }
+    for k in 0..8usize {
+        tickets.push(svc.submit(SolveRequest::new(id_b, ramp_rhs(b.n, k))));
+    }
+    let stats = svc.drain();
+    for t in tickets {
+        t.wait();
+    }
+
+    let a_rec = stats
+        .records
+        .iter()
+        .find(|r| r.matrix == id_a)
+        .expect("A's partial group flushed on drain");
+    // On the per-matrix clock A's oldest lane waited through exactly
+    // its two same-matrix successors; the global clock would have
+    // charged it the eight B submissions too (wait 10).
+    assert_eq!(a_rec.waits, vec![2, 1, 0]);
+    for rec in stats.records.iter().filter(|r| r.matrix == id_b) {
+        assert!(
+            rec.waits.iter().all(|&w| w < 8),
+            "B's batch-full lanes wait less than one full window: {:?}",
+            rec.waits
+        );
+    }
+    assert!(stats.queue_wait_quantile(0.99) <= 7, "p99 rides the per-matrix clock");
 }
 
 #[test]
@@ -195,6 +261,12 @@ fn prometheus_dump_covers_the_required_metric_families() {
         "callipepla_service_requests_total",
         "callipepla_service_coalesce_width_lanes",
         "callipepla_service_queue_wait_submissions",
+        "callipepla_service_flush_deadline_total",
+        "callipepla_service_submit_rejected_total",
+        "callipepla_service_registry_evictions_total",
+        "callipepla_service_registry_readmissions_total",
+        "callipepla_service_program_cache_evictions_total",
+        "callipepla_service_http_requests_total",
         "callipepla_coord_phase1_trips_total",
         "callipepla_precision_matrix_value_reads_total",
         "callipepla_pool_jobs_total",
